@@ -1,0 +1,69 @@
+//! Fleet power-efficiency report (paper Table 6) and latency CDFs
+//! (paper Fig. 6) for the Multi-Tenancy jobs.
+//!
+//! Run with: cargo run --release --example fleet_report
+
+use anyhow::{anyhow, Result};
+
+use dnnscaler::coordinator::job::PAPER_JOBS;
+use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::Method;
+use dnnscaler::gpusim::GpuSim;
+use dnnscaler::metrics::report::{f1, f2};
+use dnnscaler::metrics::{Table, WeightedCdf};
+
+fn main() -> Result<()> {
+    let runner = JobRunner::new(RunConfig::windows(40, 20));
+    let mut t = Table::new(
+        "Power & efficiency, MT jobs (Table 6)",
+        &["job", "dnn", "P_scaler(W)", "P_clipper(W)", "thr_s", "thr_c", "eff_s", "eff_c", "eff gain"],
+    );
+    let mut cdf_jobs: Vec<(u32, WeightedCdf, WeightedCdf, f64)> = Vec::new();
+    for job in PAPER_JOBS {
+        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 300 + job.id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d1).map_err(|e| anyhow!(e.to_string()))?;
+        if s.method != Some(Method::MultiTenancy) {
+            continue;
+        }
+        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 400 + job.id as u64).unwrap();
+        let c = runner.run_clipper(job, &mut d2).map_err(|e| anyhow!(e.to_string()))?;
+        let eff_s = s.throughput / s.power_w;
+        let eff_c = c.throughput / c.power_w;
+        t.row(&[
+            job.id.to_string(),
+            job.dnn.into(),
+            f1(s.power_w),
+            f1(c.power_w),
+            f1(s.throughput),
+            f1(c.throughput),
+            f2(eff_s),
+            f2(eff_c),
+            f2(eff_s / eff_c),
+        ]);
+        if [1u32, 5, 14, 29].contains(&job.id) {
+            cdf_jobs.push((
+                job.id,
+                WeightedCdf::from_samples(&s.latencies),
+                WeightedCdf::from_samples(&c.latencies),
+                job.slo_ms,
+            ));
+        }
+    }
+    print!("{}", t.render());
+
+    println!("\nLatency CDFs for four jobs (Fig. 6): p50/p90/p95/p99 in ms, SLO marked");
+    for (id, mut s_cdf, mut c_cdf, slo) in cdf_jobs {
+        println!("  job {id} (SLO {slo} ms)");
+        for (name, cdf) in [("dnnscaler", &mut s_cdf), ("clipper", &mut c_cdf)] {
+            println!(
+                "    {name:<10} p50={:>8.2} p90={:>8.2} p95={:>8.2} p99={:>8.2}  frac<=SLO {:.3}",
+                cdf.quantile(0.50).unwrap(),
+                cdf.quantile(0.90).unwrap(),
+                cdf.quantile(0.95).unwrap(),
+                cdf.quantile(0.99).unwrap(),
+                cdf.fraction_below(slo),
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT pipeline: lower each (model, batch size) pair to HLO text artifacts.
+
+This is the only place python touches the serving system: `make artifacts`
+runs it once; the rust coordinator then loads `artifacts/*.hlo.txt` through
+the PJRT C API and never calls back into python.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` 0.1.6 crate) rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. Lowered
+with ``return_tuple=True``; the rust side unwraps with ``to_tuple1()``.
+
+Params are closed over as HLO constants (deterministic PRNG seed per model
+name), so each artifact is a pure ``f(input) -> logits`` function of one
+tensor — the uniform contract rust/src/runtime relies on.
+
+Usage (from the Makefile):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+# Models exported for the real-execution path (each family represented;
+# the full 19-model spectrum lives in gpusim's calibrated profiles).
+DEFAULT_MODELS = ["mobv1-025", "mobv1-1", "incv1", "incv4", "resv2-50", "textcnn"]
+DEFAULT_BATCH_SIZES = [1, 2, 4, 8]
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides weight tensors as ``constant({...})`` and the xla_extension
+    0.5.1 text parser silently zero-fills them — the model would load and
+    run but emit all-zero logits.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_model(name: str, batch_size: int, out_dir: str) -> dict:
+    """Lower one (model, BS) pair; returns its manifest entry."""
+    params, apply_fn, example = zoo.build(name, batch_size)
+
+    def fn(x):
+        return apply_fn(params, x)
+
+    lowered = jax.jit(fn).lower(example)
+    hlo = to_hlo_text(lowered)
+    fname = f"{name}_bs{batch_size}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    out_shape = jax.eval_shape(fn, example)
+
+    spec = zoo.ZOO[name]
+    return {
+        "model": name,
+        "family": spec.family,
+        "paper_analogue": spec.paper_analogue,
+        "batch_size": batch_size,
+        "input_shape": [batch_size, *spec.input_shape],
+        "output_shape": list(out_shape.shape),
+        "dtype": "f32",
+        "param_count": zoo.param_count(params),
+        "flops_per_batch": flops,
+        "flops_per_inference": flops / batch_size if batch_size else 0.0,
+        "path": fname,
+    }
+
+
+def main(argv: List[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=DEFAULT_MODELS)
+    ap.add_argument("--batch-sizes", nargs="*", type=int, default=DEFAULT_BATCH_SIZES)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for name in args.models:
+        if name not in zoo.ZOO:
+            raise SystemExit(f"unknown model {name!r}; have {zoo.list_models()}")
+        for bs in args.batch_sizes:
+            entry = export_model(name, bs, args.out_dir)
+            entries.append(entry)
+            print(
+                f"exported {entry['path']:28s} params={entry['param_count']:>9d} "
+                f"flops/inf={entry['flops_per_inference']:.3e}"
+            )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "num_classes": zoo.NUM_CLASSES,
+        "entries": entries,
+    }
+    # Manifest written last: it is the Makefile's freshness stamp.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

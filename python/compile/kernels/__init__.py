@@ -1,0 +1,2 @@
+"""L1: Pallas kernels for the zoo hot-spot (GEMM tile + conv mappings)."""
+from . import conv2d, matmul, ref  # noqa: F401

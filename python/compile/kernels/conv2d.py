@@ -1,0 +1,136 @@
+"""Convolutions lowered onto the Pallas GEMM tile (im2col mapping).
+
+On TPU the canonical conv mapping is im2col -> MXU GEMM (the GPU analogue
+is implicit-GEMM cuDNN kernels). Patch extraction is plain XLA
+(``conv_general_dilated_patches``); the FLOPs-dominant contraction runs
+through :func:`kernels.matmul.matmul_bias_act`, so every conv in the model
+zoo exercises the L1 kernel.
+
+Depthwise convolutions (Mobilenet family) contract only kh*kw elements per
+output — far too skinny to feed a 128x128 systolic array — so they stay on
+the XLA grouped-conv path, exactly as they bypass GEMM on real TPUs. The
+pointwise 1x1 convs that carry ~90% of a separable block's FLOPs do go
+through the Pallas tile.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .matmul import matmul_bias_act
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """NHWC conv via im2col + Pallas GEMM.
+
+    Args:
+      x: ``[N, H, W, C]``.
+      w: ``[KH, KW, C, OC]``.
+      b: ``[OC]`` or None.
+      stride: (sh, sw).
+      padding: "SAME" or "VALID".
+      act: fused epilogue activation.
+
+    Returns:
+      ``[N, HO, WO, OC]`` f32.
+    """
+    n, h, wd, c = x.shape
+    kh, kw, c2, oc = w.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch: x{x.shape} w{w.shape}")
+
+    # Patches arrive as [N, HO, WO, C*KH*KW] with channel-major ordering
+    # (feature dim is C x KH x KW, C fastest-varying last per lax docs:
+    # spatial dims unrolled with channels innermost along axis -1 ordering
+    # [c, kh, kw] -> index c*kh*kw). We reorder w to match.
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, ho, wo, feat = patches.shape
+    assert feat == c * kh * kw
+    # conv_general_dilated_patches orders features as [C, KH, KW].
+    w_mat = jnp.transpose(w, (2, 0, 1, 3)).reshape(c * kh * kw, oc)
+    out = matmul_bias_act(patches.reshape(n * ho * wo, feat), w_mat, b, act=act)
+    return out.reshape(n, ho, wo, oc)
+
+
+def depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """NHWC depthwise conv (XLA grouped-conv path; see module docstring).
+
+    Args:
+      x: ``[N, H, W, C]``.
+      w: ``[KH, KW, C, 1]`` (multiplier 1).
+    """
+    n, h, wd, c = x.shape
+    kh, kw, c2, mult = w.shape
+    if c != c2 or mult != 1:
+        raise ValueError(f"bad depthwise shapes: x{x.shape} w{w.shape}")
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        jnp.transpose(w, (0, 1, 3, 2)).astype(jnp.float32),  # HWIO, I=1
+        window_strides=stride,
+        padding=padding,
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "gelu":
+        out = jax.nn.gelu(out)
+    elif act == "tanh":
+        out = jnp.tanh(out)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out
+
+
+def conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """1-D conv (text/speech stacks) as a H=1 2-D conv over the GEMM tile.
+
+    Args:
+      x: ``[N, L, C]``.
+      w: ``[K, C, OC]``.
+    """
+    out = conv2d(
+        x[:, None, :, :],
+        w[None, :, :, :],
+        b,
+        stride=(1, stride),
+        padding=padding,
+        act=act,
+    )
+    return out[:, 0, :, :]

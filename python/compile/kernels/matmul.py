@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation epilogue.
+
+This is the compute hot-spot of every model in the zoo (dense layers and
+im2col'd convolutions all funnel through it), mirroring how the paper's
+DNNs funnel through cuDNN GEMM kernels on the Tesla P40.
+
+TPU adaptation of the paper's GPU hot path (DESIGN.md §4):
+  * the grid is (M/bm, N/bn, K/bk) — the BlockSpecs express the HBM->VMEM
+    schedule that a CUDA implementation would express with threadblocks;
+  * tiles default to 128x128 to align with the MXU systolic array;
+  * bias + activation are fused into the final K-step epilogue so the
+    output tile never round-trips to HBM between GEMM and elementwise.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which both the pytest
+oracle checks and the rust runtime execute. Real-TPU characteristics are
+estimated analytically (see ``vmem_bytes`` / ``mxu_utilization_estimate``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation names supported by the fused epilogue.
+ACTIVATIONS = ("none", "relu", "gelu", "tanh")
+
+# MXU-aligned default tile sizes.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _apply_act(x: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {act!r} (supported: {ACTIVATIONS})")
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (bm, bn) output tile; grid axis 2 walks the K dimension.
+
+    The output block is revisited across K steps and used as the f32
+    accumulator; bias + activation run once, fused on the last K step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, default: int) -> int:
+    """Shrink the default tile for small matrices (power-of-two, >= 8)."""
+    if dim >= default:
+        return default
+    return max(8, 1 << max(3, math.ceil(math.log2(max(dim, 1)))))
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: str = "none",
+    bm: int = 0,
+    bn: int = 0,
+    bk: int = 0,
+) -> jax.Array:
+    """``act(x @ w + b)`` via the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` input (any float dtype; accumulation is f32).
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias, or ``None`` for no bias.
+      act: one of ``ACTIVATIONS``.
+      bm/bn/bk: tile-size overrides (0 = auto: 128 shrunk for small dims).
+
+    Returns:
+      ``[M, N]`` in f32.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    if b is None:
+        b = jnp.zeros((n,), jnp.float32)
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm = bm or _pick_block(m, DEFAULT_BM)
+    bn = bn or _pick_block(n, DEFAULT_BN)
+    bk = bk or _pick_block(k, DEFAULT_BK)
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """Static VMEM footprint of one grid step (f32): x, w, bias, out tiles.
+
+    Used by DESIGN.md §8 / EXPERIMENTS.md §Perf to check the schedule fits
+    a TPU core's ~16 MiB VMEM with room for double-buffering.
+    """
+    return 4 * (bm * bk + bk * bn + bn + bm * bn)
+
+
+def mxu_utilization_estimate(
+    m: int, k: int, n: int, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK
+) -> float:
+    """Fraction of MXU work that is useful (non-padding) for an (m,k,n) GEMM.
+
+    The MXU processes full bm x bn x bk tiles; padding rows/cols are wasted
+    lanes. This is the structural utilization bound — the quantity we
+    optimize in the §Perf pass (interpret-mode wallclock is *not* a proxy).
+    """
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    useful = m * k * n
+    issued = mp * kp * np_
+    return useful / issued if issued else 0.0

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has a reference implementation here written
+with nothing but jnp/lax primitives; pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between the
+Pallas path and these oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_bias_act_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.matmul.matmul_bias_act."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return _act(out, act)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.conv2d.conv2d (direct lax conv, no im2col)."""
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return _act(out, act)
+
+
+def depthwise_conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.conv2d.depthwise_conv2d."""
+    c = x.shape[-1]
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        jnp.transpose(w, (0, 1, 3, 2)).astype(jnp.float32),
+        window_strides=stride,
+        padding=padding,
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return _act(out, act)
+
+
+def conv1d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.conv2d.conv1d."""
+    out = conv2d_ref(
+        x[:, None, :, :],
+        w[None, :, :, :],
+        b,
+        stride=(1, stride),
+        padding=padding,
+        act=act,
+    )
+    return out[:, 0, :, :]

@@ -1,0 +1,397 @@
+"""L2: the DNN model zoo (JAX, build-time only).
+
+The paper exercises 19 DNNs spanning the compute-vs-data-movement spectrum
+(Table 1/3): tiny depthwise-separable nets (Mobilenet) that are copy/launch
+bound, mid-size inception stacks, heavy residual nets (ResNetV2-152), plus
+an NLP TextCNN, a video-saliency CNN and a speech RNN. We reproduce that
+*spectrum* with six parameterized families sized for CPU-PJRT execution
+(DESIGN.md §3: the real-execution path proves the stack composes; the
+paper's GPU economics live in the rust `gpusim` substrate).
+
+Every FLOPs-dominant contraction funnels through the L1 Pallas GEMM tile
+(`kernels.matmul` / `kernels.conv2d`), mirroring how the paper's models
+funnel through cuDNN GEMM.
+
+All models are pure functions: ``init(rng) -> params``,
+``apply(params, x) -> logits [N, NUM_CLASSES]`` with f32 inputs of shape
+``[N, *input_shape]`` — a uniform contract the rust runtime relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv1d, conv2d, depthwise_conv2d
+from .kernels.matmul import matmul_bias_act
+
+NUM_CLASSES = 16
+
+# ---------------------------------------------------------------------------
+# Param init helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    k1, _ = jax.random.split(rng)
+    fan_in = kh * kw * cin
+    w = jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+    b = jnp.zeros((cout,), jnp.float32)
+    return {"w": w, "b": b}
+
+
+def _dense_init(rng, cin, cout):
+    k1, _ = jax.random.split(rng)
+    w = jax.random.normal(k1, (cin, cout), jnp.float32) * (2.0 / cin) ** 0.5
+    b = jnp.zeros((cout,), jnp.float32)
+    return {"w": w, "b": b}
+
+
+def _dw_init(rng, k, c):
+    w = jax.random.normal(rng, (k, k, c, 1), jnp.float32) * (2.0 / (k * k)) ** 0.5
+    b = jnp.zeros((c,), jnp.float32)
+    return {"w": w, "b": b}
+
+
+def _gap(x):
+    """Global average pool NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _dense(p, x, act="none"):
+    return matmul_bias_act(x, p["w"], p["b"], act=act)
+
+
+def _head(rng, cin):
+    return _dense_init(rng, cin, NUM_CLASSES)
+
+
+# ---------------------------------------------------------------------------
+# Family: mobile (Mobilenet-V1/V2 analogue — copy-bound, few params)
+# ---------------------------------------------------------------------------
+
+
+def _ch(base: int, width: float) -> int:
+    return max(4, int(base * width))
+
+
+def mobile_init(rng, *, width: float, blocks: int, expand: int = 1):
+    keys = jax.random.split(rng, blocks * 3 + 2)
+    c0 = _ch(16, width)
+    params = {"stem": _conv_init(keys[0], 3, 3, 3, c0)}
+    cin = c0
+    chans = [_ch(16 * (2 ** min(i // 2, 3)), width) for i in range(blocks)]
+    for i, cout in enumerate(chans):
+        blk = {}
+        mid = cin * expand
+        if expand > 1:
+            blk["expand"] = _conv_init(keys[3 * i + 1], 1, 1, cin, mid)
+        blk["dw"] = _dw_init(keys[3 * i + 2], 3, mid)
+        blk["pw"] = _conv_init(keys[3 * i + 3], 1, 1, mid, cout)
+        params[f"block{i}"] = blk
+        cin = cout
+    params["head"] = _head(keys[-1], cin)
+    return params
+
+
+def mobile_apply(params, x, *, width: float, blocks: int, expand: int = 1):
+    del width
+    h = conv2d(x, params["stem"]["w"], params["stem"]["b"], stride=(2, 2), act="relu")
+    for i in range(blocks):
+        blk = params[f"block{i}"]
+        r = h
+        if expand > 1:
+            h = conv2d(h, blk["expand"]["w"], blk["expand"]["b"], act="relu")
+        stride = (2, 2) if i % 2 == 1 else (1, 1)
+        h = depthwise_conv2d(h, blk["dw"]["w"], blk["dw"]["b"], stride=stride, act="relu")
+        h = conv2d(h, blk["pw"]["w"], blk["pw"]["b"], act="none")
+        if expand > 1 and stride == (1, 1) and r.shape == h.shape:
+            h = h + r  # inverted-residual skip (V2)
+        h = jnp.maximum(h, 0.0)
+    return _dense(params["head"], _gap(h))
+
+
+# ---------------------------------------------------------------------------
+# Family: incept (Inception-V1..V4 / [P]NASNet analogue — mixed profile)
+# ---------------------------------------------------------------------------
+
+
+def _incept_block_init(rng, cin, cout):
+    k = jax.random.split(rng, 5)
+    c4 = max(4, cout // 4)
+    return {
+        "b1": _conv_init(k[0], 1, 1, cin, c4),
+        "b3r": _conv_init(k[1], 1, 1, cin, c4),
+        "b3": _conv_init(k[2], 3, 3, c4, c4),
+        "b5r": _conv_init(k[3], 1, 1, cin, c4),
+        "b5": _conv_init(k[4], 3, 3, c4, c4 * 2),  # stacked-3x3 "5x5" branch
+    }
+
+
+def incept_init(rng, *, width: float, blocks: int):
+    keys = jax.random.split(rng, blocks + 2)
+    c0 = _ch(24, width)
+    params = {"stem": _conv_init(keys[0], 3, 3, 3, c0)}
+    cin = c0
+    for i in range(blocks):
+        cout = max(16, _ch(24 * (1 + i // 2), width))
+        params[f"block{i}"] = _incept_block_init(keys[i + 1], cin, cout)
+        c4 = max(4, cout // 4)
+        cin = c4 + c4 + 2 * c4  # concat of branches
+    params["head"] = _head(keys[-1], cin)
+    return params
+
+
+def incept_apply(params, x, *, width: float, blocks: int):
+    del width
+    h = conv2d(x, params["stem"]["w"], params["stem"]["b"], stride=(2, 2), act="relu")
+    for i in range(blocks):
+        blk = params[f"block{i}"]
+        b1 = conv2d(h, blk["b1"]["w"], blk["b1"]["b"], act="relu")
+        b3 = conv2d(h, blk["b3r"]["w"], blk["b3r"]["b"], act="relu")
+        b3 = conv2d(b3, blk["b3"]["w"], blk["b3"]["b"], act="relu")
+        b5 = conv2d(h, blk["b5r"]["w"], blk["b5r"]["b"], act="relu")
+        b5 = conv2d(b5, blk["b5"]["w"], blk["b5"]["b"], act="relu")
+        h = jnp.concatenate([b1, b3, b5], axis=-1)
+        if i % 2 == 1:  # spatial reduction every other block
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+            )
+    return _dense(params["head"], _gap(h))
+
+
+# ---------------------------------------------------------------------------
+# Family: resnet (ResNetV2-50/101/152 analogue — compute-bound, many params)
+# ---------------------------------------------------------------------------
+
+
+def resnet_init(rng, *, width: float, blocks: int):
+    keys = jax.random.split(rng, blocks + 2)
+    c0 = _ch(32, width)
+    params = {"stem": _conv_init(keys[0], 3, 3, 3, c0)}
+    cin = c0
+    for i in range(blocks):
+        cout = _ch(32 * (2 ** min(i // 3, 2)), width)
+        k = jax.random.split(keys[i + 1], 4)
+        mid = max(8, cout // 2)
+        params[f"block{i}"] = {
+            "reduce": _conv_init(k[0], 1, 1, cin, mid),
+            "conv": _conv_init(k[1], 3, 3, mid, mid),
+            "expand": _conv_init(k[2], 1, 1, mid, cout),
+            "proj": _conv_init(k[3], 1, 1, cin, cout) if cin != cout else None,
+        }
+        cin = cout
+    params["head"] = _head(keys[-1], cin)
+    return params
+
+
+def resnet_apply(params, x, *, width: float, blocks: int):
+    del width
+    h = conv2d(x, params["stem"]["w"], params["stem"]["b"], stride=(2, 2), act="relu")
+    for i in range(blocks):
+        blk = params[f"block{i}"]
+        r = h
+        y = conv2d(h, blk["reduce"]["w"], blk["reduce"]["b"], act="relu")
+        y = conv2d(y, blk["conv"]["w"], blk["conv"]["b"], act="relu")
+        y = conv2d(y, blk["expand"]["w"], blk["expand"]["b"], act="none")
+        if blk["proj"] is not None:
+            r = conv2d(r, blk["proj"]["w"], blk["proj"]["b"], act="none")
+        h = jnp.maximum(y + r, 0.0)
+    return _dense(params["head"], _gap(h))
+
+
+# ---------------------------------------------------------------------------
+# Family: textcnn (Kim-2014 sentence classifier — TextClassif in the paper)
+# ---------------------------------------------------------------------------
+# Input is pre-embedded tokens [N, L, E] (f32) so the rust side feeds plain
+# float tensors; the embedding lookup is not latency-relevant here.
+
+
+def textcnn_init(rng, *, seq_len: int, embed: int, filters: int):
+    k = jax.random.split(rng, 5)
+    return {
+        "conv3": {"w": jax.random.normal(k[0], (3, embed, filters)) * 0.1, "b": jnp.zeros((filters,))},
+        "conv4": {"w": jax.random.normal(k[1], (4, embed, filters)) * 0.1, "b": jnp.zeros((filters,))},
+        "conv5": {"w": jax.random.normal(k[2], (5, embed, filters)) * 0.1, "b": jnp.zeros((filters,))},
+        "fc": _dense_init(k[3], filters * 3, filters),
+        "head": _head(k[4], filters),
+    }
+
+
+def textcnn_apply(params, x, *, seq_len: int, embed: int, filters: int):
+    del seq_len, embed, filters
+    feats = []
+    for name in ("conv3", "conv4", "conv5"):
+        h = conv1d(x, params[name]["w"], params[name]["b"], act="relu")
+        feats.append(jnp.max(h, axis=1))  # max-over-time pooling
+    h = jnp.concatenate(feats, axis=-1)
+    h = _dense(params["fc"], h, act="relu")
+    return _dense(params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# Family: videonet (DeePVS video-saliency analogue — per-frame CNN + fuse)
+# ---------------------------------------------------------------------------
+
+
+def videonet_init(rng, *, frames: int, size: int, width: float):
+    k = jax.random.split(rng, 4)
+    c0, c1 = _ch(16, width), _ch(32, width)
+    return {
+        "conv1": _conv_init(k[0], 3, 3, 3, c0),
+        "conv2": _conv_init(k[1], 3, 3, c0, c1),
+        "temporal": _dense_init(k[2], c1 * frames, c1),
+        "head": _head(k[3], c1),
+    }
+
+
+def videonet_apply(params, x, *, frames: int, size: int, width: float):
+    del width
+    n = x.shape[0]
+    h = x.reshape(n * frames, size, size, 3)
+    h = conv2d(h, params["conv1"]["w"], params["conv1"]["b"], stride=(2, 2), act="relu")
+    h = conv2d(h, params["conv2"]["w"], params["conv2"]["b"], stride=(2, 2), act="relu")
+    h = _gap(h).reshape(n, -1)  # [N, frames*c1]
+    h = _dense(params["temporal"], h, act="relu")
+    return _dense(params["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# Family: speechnet (DeepSpeech2 analogue — conv stack + recurrent scan)
+# ---------------------------------------------------------------------------
+
+
+def speechnet_init(rng, *, steps: int, feat: int, hidden: int):
+    k = jax.random.split(rng, 5)
+    return {
+        "conv1": {"w": jax.random.normal(k[0], (5, feat, hidden)) * 0.05, "b": jnp.zeros((hidden,))},
+        "conv2": {"w": jax.random.normal(k[1], (5, hidden, hidden)) * 0.05, "b": jnp.zeros((hidden,))},
+        "rnn_x": _dense_init(k[2], hidden, hidden),
+        "rnn_h": _dense_init(k[3], hidden, hidden),
+        "head": _head(k[4], hidden),
+    }
+
+
+def speechnet_apply(params, x, *, steps: int, feat: int, hidden: int):
+    del steps, feat
+    h = conv1d(x, params["conv1"]["w"], params["conv1"]["b"], stride=2, act="relu")
+    h = conv1d(h, params["conv2"]["w"], params["conv2"]["b"], stride=2, act="relu")
+    n, t, c = h.shape
+
+    # Vanilla-RNN scan over time; both projections hit the Pallas GEMM tile.
+    def step(carry, xt):
+        new = jnp.tanh(
+            matmul_bias_act(xt, params["rnn_x"]["w"], params["rnn_x"]["b"])
+            + matmul_bias_act(carry, params["rnn_h"]["w"], params["rnn_h"]["b"])
+        )
+        return new, None
+
+    h0 = jnp.zeros((n, hidden), jnp.float32)
+    hT, _ = jax.lax.scan(step, h0, jnp.transpose(h, (1, 0, 2)))
+    return _dense(params["head"], hT)
+
+
+# ---------------------------------------------------------------------------
+# Zoo registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A zoo entry: name, family, per-sample input shape and builders."""
+
+    name: str
+    family: str
+    input_shape: Tuple[int, ...]
+    init: Callable
+    apply: Callable  # apply(params, x[N,*input_shape]) -> [N, NUM_CLASSES]
+    paper_analogue: str
+    seed: int = 0
+
+
+def _spec(name, family, input_shape, init_fn, apply_fn, analogue, **cfg) -> ModelSpec:
+    return ModelSpec(
+        name=name,
+        family=family,
+        input_shape=input_shape,
+        init=functools.partial(init_fn, **cfg),
+        apply=functools.partial(apply_fn, **cfg),
+        paper_analogue=analogue,
+    )
+
+
+IMG = (32, 32, 3)
+
+ZOO: Dict[str, ModelSpec] = {
+    s.name: s
+    for s in [
+        _spec("mobv1-025", "mobile", IMG, mobile_init, mobile_apply,
+              "Mobilenet-V1-0.25", width=0.25, blocks=4),
+        _spec("mobv1-05", "mobile", IMG, mobile_init, mobile_apply,
+              "Mobilenet-V1-0.5", width=0.5, blocks=4),
+        _spec("mobv1-1", "mobile", IMG, mobile_init, mobile_apply,
+              "Mobilenet-V1-1.0", width=1.0, blocks=4),
+        _spec("mobv2-1", "mobile", IMG, mobile_init, mobile_apply,
+              "Mobilenet-V2-1.0", width=1.0, blocks=4, expand=4),
+        _spec("mobv2-14", "mobile", IMG, mobile_init, mobile_apply,
+              "Mobilenet-V2-1.4", width=1.4, blocks=4, expand=4),
+        _spec("incv1", "incept", IMG, incept_init, incept_apply,
+              "Inception-V1", width=0.5, blocks=2),
+        _spec("incv2", "incept", IMG, incept_init, incept_apply,
+              "Inception-V2", width=0.75, blocks=3),
+        _spec("incv3", "incept", IMG, incept_init, incept_apply,
+              "Inception-V3", width=1.0, blocks=4),
+        _spec("incv4", "incept", IMG, incept_init, incept_apply,
+              "Inception-V4", width=1.5, blocks=6),
+        _spec("nas-mob", "incept", IMG, incept_init, incept_apply,
+              "NASNET-Mobile", width=0.5, blocks=3),
+        _spec("nas-large", "incept", IMG, incept_init, incept_apply,
+              "NASNET-Large", width=2.0, blocks=6),
+        _spec("pnas-mob", "incept", IMG, incept_init, incept_apply,
+              "PNASNET-Mobile", width=0.6, blocks=3),
+        _spec("pnas-large", "incept", IMG, incept_init, incept_apply,
+              "PNASNET-Large", width=2.2, blocks=6),
+        _spec("resv2-50", "resnet", IMG, resnet_init, resnet_apply,
+              "ResNet-V2-50", width=1.0, blocks=4),
+        _spec("resv2-101", "resnet", IMG, resnet_init, resnet_apply,
+              "ResNet-V2-101", width=1.0, blocks=8),
+        _spec("resv2-152", "resnet", IMG, resnet_init, resnet_apply,
+              "ResNet-V2-152", width=1.0, blocks=12),
+        _spec("textcnn", "textcnn", (64, 32), textcnn_init, textcnn_apply,
+              "TextClassif (Kim 2014)", seq_len=64, embed=32, filters=64),
+        _spec("deepvs", "videonet", (4, 16, 16, 3), videonet_init, videonet_apply,
+              "DeePVS", frames=4, size=16, width=1.0),
+        _spec("deepspeech", "speechnet", (64, 32), speechnet_init, speechnet_apply,
+              "DeepSpeech2", steps=64, feat=32, hidden=64),
+    ]
+}
+
+
+def param_count(params) -> int:
+    """Total trainable parameters in a param tree (None leaves allowed)."""
+    leaves = [p for p in jax.tree_util.tree_leaves(params) if p is not None]
+    return int(sum(p.size for p in leaves))
+
+
+def build(name: str, batch_size: int):
+    """Instantiate a zoo model: returns (params, apply_fn, example_input).
+
+    ``apply_fn(params, x)`` is the function that gets AOT-lowered; aot.py
+    closes the params over as HLO constants so the rust side only feeds the
+    input tensor.
+    """
+    spec = ZOO[name]
+    # hash() is salted per-process; use a stable digest for reproducibility.
+    seed = sum(ord(c) * 31**i for i, c in enumerate(spec.name)) % (2**31)
+    rng = jax.random.PRNGKey(seed + spec.seed)
+    params = spec.init(rng)
+    example = jnp.zeros((batch_size, *spec.input_shape), jnp.float32)
+    return params, spec.apply, example
+
+
+def list_models() -> List[str]:
+    return sorted(ZOO)

@@ -1,0 +1,7 @@
+"""Make `compile` importable whether pytest runs from python/ or the repo
+root (the Makefile uses the former, the top-level CI command the latter)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

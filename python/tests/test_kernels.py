@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/activations; every case asserts allclose
+between the interpret-mode Pallas path and ref.py. This is the CORE
+numeric signal — the same HLO the rust runtime executes comes from these
+kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv2d import conv1d, conv2d, depthwise_conv2d
+from compile.kernels.matmul import (
+    ACTIVATIONS,
+    matmul_bias_act,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(ACTIVATIONS),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, act, dtype, with_bias, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), dtype)
+    w = _rand(rng, (k, n), dtype)
+    b = _rand(rng, (n,), dtype) if with_bias else None
+    got = matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act_ref(x, w, b, act=act)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2 if dtype == jnp.bfloat16 else TOL["rtol"], atol=3e-2 if dtype == jnp.bfloat16 else TOL["atol"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_matmul_tile_size_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on the chosen block decomposition."""
+    rng = np.random.default_rng(m * 1000 + k * 100 + n)
+    x = _rand(rng, (m, k), jnp.float32)
+    w = _rand(rng, (k, n), jnp.float32)
+    got = matmul_bias_act(x, w, None, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_bias_act_ref(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((2, 3))
+    w = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        matmul_bias_act(x, w)
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((2,)), w)
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((2, 4)), w, jnp.zeros((3,)))
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((2, 4)), w, act="swish")
+
+
+def test_matmul_zero_and_identity():
+    x = jnp.eye(16, dtype=jnp.float32)
+    w = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
+    np.testing.assert_allclose(np.asarray(matmul_bias_act(x, w)), np.asarray(w), **TOL)
+    z = jnp.zeros((5, 16))
+    np.testing.assert_allclose(np.asarray(matmul_bias_act(z, w)), 0.0, **TOL)
+
+
+def test_relu_epilogue_clamps():
+    x = -jnp.ones((4, 4))
+    w = jnp.ones((4, 4))
+    out = matmul_bias_act(x, w, None, act="relu")
+    assert float(jnp.min(out)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# conv kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 14),
+    c=st.integers(1, 8),
+    oc=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(n, hw, c, oc, k, stride, padding, seed):
+    if padding == "VALID" and hw < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, hw, hw, c), jnp.float32)
+    w = _rand(rng, (k, k, c, oc), jnp.float32)
+    b = _rand(rng, (oc,), jnp.float32)
+    got = conv2d(x, w, b, stride=(stride, stride), padding=padding, act="relu")
+    want = ref.conv2d_ref(x, w, b, stride=(stride, stride), padding=padding, act="relu")
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    hw=st.integers(4, 12),
+    c=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_depthwise_matches_ref(n, hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, hw, hw, c), jnp.float32)
+    w = _rand(rng, (3, 3, c, 1), jnp.float32)
+    got = depthwise_conv2d(x, w, None, stride=(stride, stride))
+    want = ref.depthwise_conv2d_ref(x, w, None, stride=(stride, stride))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    length=st.integers(5, 32),
+    c=st.integers(1, 8),
+    oc=st.integers(1, 8),
+    k=st.sampled_from([3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv1d_matches_ref(n, length, c, oc, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, length, c), jnp.float32)
+    w = _rand(rng, (k, c, oc), jnp.float32)
+    got = conv1d(x, w, None, stride=stride)
+    want = ref.conv1d_ref(x, w, None, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_conv2d_channel_mismatch_raises():
+    with pytest.raises(ValueError):
+        conv2d(jnp.zeros((1, 4, 4, 3)), jnp.zeros((3, 3, 5, 2)))
+    with pytest.raises(ValueError):
+        depthwise_conv2d(jnp.zeros((1, 4, 4, 3)), jnp.zeros((3, 3, 3, 2)))
+
+
+# ---------------------------------------------------------------------------
+# TPU-structure estimators (the §Perf quantities)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_fits_core():
+    # Default 128x128x128 schedule must fit 16 MiB with double-buffering.
+    assert 2 * vmem_bytes() < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = mxu_utilization_estimate(130, 128, 128)
+    assert 0.0 < u < 1.0
+    assert mxu_utilization_estimate(1, 1, 1, 128, 128, 128) < 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 512), k=st.integers(1, 512), n=st.integers(1, 512))
+def test_mxu_utilization_in_unit_interval(m, k, n):
+    u = mxu_utilization_estimate(m, k, n)
+    assert 0.0 < u <= 1.0

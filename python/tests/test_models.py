@@ -1,0 +1,77 @@
+"""L2 model-zoo contract tests: shapes, determinism, spectrum ordering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as zoo
+
+FAST_MODELS = ["mobv1-025", "mobv1-1", "incv1", "resv2-50", "textcnn", "deepvs", "deepspeech"]
+
+
+@pytest.mark.parametrize("name", zoo.list_models())
+def test_registry_entry_wellformed(name):
+    spec = zoo.ZOO[name]
+    assert spec.name == name
+    assert spec.family in {"mobile", "incept", "resnet", "textcnn", "videonet", "speechnet"}
+    assert len(spec.input_shape) in (2, 3, 4)
+    assert spec.paper_analogue
+
+
+@pytest.mark.parametrize("name", FAST_MODELS)
+@pytest.mark.parametrize("bs", [1, 3])
+def test_apply_output_contract(name, bs):
+    params, apply_fn, x = zoo.build(name, bs)
+    y = jax.jit(apply_fn)(params, x)
+    assert y.shape == (bs, zoo.NUM_CLASSES)
+    assert y.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("name", ["mobv1-1", "textcnn"])
+def test_build_is_deterministic(name):
+    p1, apply_fn, _ = zoo.build(name, 1)
+    p2, _, _ = zoo.build(name, 1)
+    l1 = [x for x in jax.tree_util.tree_leaves(p1) if x is not None]
+    l2 = [x for x in jax.tree_util.tree_leaves(p2) if x is not None]
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batch_consistency():
+    """Row i of a batched run equals the single-sample run (no cross-batch leakage)."""
+    params, apply_fn, _ = zoo.build("mobv1-1", 4)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 32, 32, 3)).astype(np.float32))
+    y_batch = jax.jit(apply_fn)(params, x)
+    for i in range(4):
+        y_one = jax.jit(apply_fn)(params, x[i : i + 1])
+        np.testing.assert_allclose(
+            np.asarray(y_batch[i]), np.asarray(y_one[0]), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_param_spectrum_ordering():
+    """The zoo preserves the paper's size ordering (Table 1): mobile <
+    inception-v1-class < inception-v4-class < resnet-152-class."""
+
+    def count(name):
+        p, _, _ = zoo.build(name, 1)
+        return zoo.param_count(p)
+
+    assert count("mobv1-025") < count("mobv1-1")
+    assert count("mobv1-1") < count("incv4")
+    assert count("incv1") < count("incv4")
+    assert count("resv2-50") < count("resv2-101") < count("resv2-152")
+    assert count("incv4") < count("resv2-152")
+
+
+def test_param_count_handles_none_leaves():
+    assert zoo.param_count({"a": jnp.zeros((2, 3)), "b": None}) == 6
+    assert zoo.param_count({}) == 0
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        zoo.build("vgg-999", 1)

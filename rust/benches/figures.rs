@@ -1,0 +1,405 @@
+//! Bench harness regenerating every FIGURE of the paper's evaluation
+//! (DESIGN.md §6). Each `figN` prints the figure's series as a table and
+//! writes the raw data to `reports/figN*.csv`.
+//!
+//! Run all:      cargo bench --bench figures
+//! Run one:      cargo bench --bench figures -- fig5
+//!
+//! Shapes, not absolutes, are the acceptance criterion (DESIGN.md §7) —
+//! the harness prints the paper's reference numbers next to ours where
+//! the paper gives them.
+
+use std::io::Write as _;
+
+use dnnscaler::coordinator::job::{paper_job, JobSpec, SteadyKnob, PAPER_JOBS};
+use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::scaler_mt::MtScaler;
+use dnnscaler::coordinator::Method;
+use dnnscaler::gpusim::{Dataset, GpuSim};
+use dnnscaler::metrics::report::{csv_writer, f1, f2};
+use dnnscaler::metrics::{Table, WeightedCdf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let filter: Vec<&str> =
+        args.iter().map(|s| s.as_str()).filter(|s| s.starts_with("fig")).collect();
+    let run = |name: &str| filter.is_empty() || filter.contains(&name);
+
+    std::fs::create_dir_all("reports").ok();
+    if run("fig1") {
+        fig1();
+    }
+    if run("fig2") {
+        fig2();
+    }
+    if run("fig5") {
+        fig5();
+    }
+    if run("fig6") {
+        fig6();
+    }
+    if run("fig7") {
+        fig7();
+    }
+    if run("fig8") {
+        fig8();
+    }
+    if run("fig9") {
+        fig9();
+    }
+    if run("fig10") {
+        fig10();
+    }
+    if run("fig11") {
+        fig11();
+    }
+    if run("fig12") {
+        fig12();
+    }
+    println!("\nfigures done — raw series in reports/");
+}
+
+/// Fig. 1: throughput & latency vs BS (a, c) and vs MTL (b, d) for the
+/// four preliminary DNNs.
+fn fig1() {
+    let dnns = ["inc-v1", "inc-v4", "mobv1-1", "resv2-152"];
+    let mut w = csv_writer("reports/fig1.csv", "dnn,knob,value,throughput,latency_ms").unwrap();
+    let mut t = Table::new(
+        "Fig 1(a,c): Batching sweep (throughput inf/s | latency ms)",
+        &["bs", "inc-v1", "inc-v4", "mobv1-1", "resv2-152"],
+    );
+    for bs in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+        let mut row = vec![bs.to_string()];
+        for d in dnns {
+            let sim = GpuSim::for_paper_dnn(d, Dataset::ImageNet, 0).unwrap();
+            let thr = sim.throughput(bs, 1);
+            let lat = sim.mean_batch_latency_ms(bs, 1);
+            writeln!(w, "{d},bs,{bs},{thr:.2},{lat:.2}").unwrap();
+            row.push(format!("{:.0} | {:.0}", thr, lat));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+
+    let mut t = Table::new(
+        "Fig 1(b,d): Multi-Tenancy sweep (throughput inf/s | latency ms)",
+        &["mtl", "inc-v1", "inc-v4", "mobv1-1", "resv2-152"],
+    );
+    for n in 1..=8u32 {
+        let mut row = vec![n.to_string()];
+        for d in dnns {
+            let sim = GpuSim::for_paper_dnn(d, Dataset::ImageNet, 0).unwrap();
+            let thr = sim.throughput(1, n);
+            let lat = sim.mean_batch_latency_ms(1, n);
+            writeln!(w, "{d},mtl,{n},{thr:.2},{lat:.2}").unwrap();
+            row.push(format!("{:.0} | {:.0}", thr, lat));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    println!(
+        "shape check: batching gain 1->128: inc-v4 {:.1}x resv2-152 {:.1}x (paper: large), \
+         inc-v1 {:.2}x mobv1-1 {:.2}x (paper: negligible)",
+        gain("inc-v4", true),
+        gain("resv2-152", true),
+        gain("inc-v1", true),
+        gain("mobv1-1", true)
+    );
+    println!(
+        "             MT gain 1->8: inc-v1 {:.1}x mobv1-1 {:.1}x (paper: large), \
+         inc-v4 {:.2}x resv2-152 {:.2}x (paper: negligible)\n",
+        gain("inc-v1", false),
+        gain("mobv1-1", false),
+        gain("inc-v4", false),
+        gain("resv2-152", false)
+    );
+}
+
+fn gain(dnn: &str, batching: bool) -> f64 {
+    let sim = GpuSim::for_paper_dnn(dnn, Dataset::ImageNet, 0).unwrap();
+    if batching {
+        sim.throughput(128, 1) / sim.throughput(1, 1)
+    } else {
+        sim.throughput(1, 8) / sim.throughput(1, 1)
+    }
+}
+
+/// Fig. 2: SM utilization vs co-located instances for MobV1-1 and Inc-V4.
+fn fig2() {
+    let mut w = csv_writer("reports/fig2.csv", "dnn,mtl,sm_util").unwrap();
+    let mut t =
+        Table::new("Fig 2: SM utilization vs co-location", &["mtl", "mobv1-1", "inc-v4"]);
+    for n in 1..=4u32 {
+        let mut row = vec![n.to_string()];
+        for d in ["mobv1-1", "inc-v4"] {
+            let sim = GpuSim::for_paper_dnn(d, Dataset::ImageNet, 0).unwrap();
+            let u = sim.sm_utilization(1, n);
+            writeln!(w, "{d},{n},{u:.3}").unwrap();
+            row.push(format!("{:.0}%", u * 100.0));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    println!("shape check (paper): mobilenet climbs steeply with instances; inc-v4 starts high and flattens\n");
+}
+
+/// Fig. 5: DNNScaler vs Clipper throughput on all 30 jobs.
+fn fig5() {
+    let runner = JobRunner::new(RunConfig::windows(40, 20));
+    let mut w = csv_writer(
+        "reports/fig5.csv",
+        "job,dnn,method,paper_method,dnnscaler_thr,clipper_thr,speedup",
+    )
+    .unwrap();
+    let mut t = Table::new(
+        "Fig 5: throughput, DNNScaler vs Clipper (30 jobs)",
+        &["job", "dnn", "method(paper)", "dnnscaler", "clipper", "speedup"],
+    );
+    let mut gains = Vec::new();
+    let mut hits = 0;
+    for job in PAPER_JOBS {
+        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + job.id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
+        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 200 + job.id as u64).unwrap();
+        let c = runner.run_clipper(job, &mut d2).unwrap();
+        let gain = s.throughput / c.throughput;
+        gains.push(gain);
+        let m = s.method.unwrap();
+        if m == job.paper_method {
+            hits += 1;
+        }
+        writeln!(
+            w,
+            "{},{},{},{},{:.2},{:.2},{:.3}",
+            job.id,
+            job.dnn,
+            m.short(),
+            job.paper_method.short(),
+            s.throughput,
+            c.throughput,
+            gain
+        )
+        .unwrap();
+        t.row(&[
+            job.id.to_string(),
+            job.dnn.into(),
+            format!("{}({})", m.short(), job.paper_method.short()),
+            f1(s.throughput),
+            f1(c.throughput),
+            f2(gain),
+        ]);
+    }
+    print!("{}", t.render());
+    let mean = gains.iter().sum::<f64>() / gains.len() as f64;
+    let max = gains.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "method agreement {hits}/30 | mean gain {:.2}x (paper avg 218%) | max {:.1}x (paper 14x)\n",
+        mean, max
+    );
+}
+
+/// Fig. 6: latency CDFs for four jobs under both systems.
+fn fig6() {
+    let runner = JobRunner::new(RunConfig::windows(40, 20));
+    let mut w = csv_writer("reports/fig6.csv", "job,system,quantile,latency_ms").unwrap();
+    for id in [1u32, 5, 14, 29] {
+        let job = paper_job(id).unwrap();
+        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 300 + id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
+        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 400 + id as u64).unwrap();
+        let c = runner.run_clipper(job, &mut d2).unwrap();
+        println!("Fig 6, job {id} ({}, SLO {} ms):", job.dnn, job.slo_ms);
+        for (sys, out) in [("dnnscaler", &s), ("clipper", &c)] {
+            let mut cdf = WeightedCdf::from_samples(&out.latencies);
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                writeln!(w, "{id},{sys},{q},{:.3}", cdf.quantile(q).unwrap()).unwrap();
+            }
+            println!(
+                "  {sys:<10} p50 {:>8.2}  p95 {:>8.2}  p99 {:>8.2}  frac<=SLO {:.3}",
+                cdf.quantile(0.5).unwrap(),
+                cdf.quantile(0.95).unwrap(),
+                cdf.quantile(0.99).unwrap(),
+                cdf.fraction_below(job.slo_ms)
+            );
+        }
+    }
+    println!("shape check (paper): ~95% of requests at or below the SLO line for the steady system\n");
+}
+
+/// Fig. 7: batch-size convergence trace, DNNScaler vs Clipper (2 jobs).
+fn fig7() {
+    let mut w = csv_writer("reports/fig7.csv", "job,system,window,bs,p95_ms").unwrap();
+    for id in [3u32, 12] {
+        let job = paper_job(id).unwrap();
+        let runner = JobRunner::new(RunConfig::windows(25, 20));
+        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 500 + id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
+        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 600 + id as u64).unwrap();
+        let c = runner.run_clipper(job, &mut d2).unwrap();
+        println!("Fig 7, job {id} ({}): BS trace (window: dnnscaler/clipper)", job.dnn);
+        let mut s_settle = None;
+        let mut c_settle = None;
+        for i in 0..s.trace.len() {
+            writeln!(w, "{id},dnnscaler,{i},{},{:.2}", s.trace[i].bs, s.trace[i].p95_ms).unwrap();
+            writeln!(w, "{id},clipper,{i},{},{:.2}", c.trace[i].bs, c.trace[i].p95_ms).unwrap();
+            if s_settle.is_none() && s.trace[i].bs == s.steady_bs {
+                s_settle = Some(i);
+            }
+            if c_settle.is_none() && c.trace[i].bs == c.steady_bs {
+                c_settle = Some(i);
+            }
+            if i < 14 {
+                println!("  w{i:02}: {:>4} / {:>4}", s.trace[i].bs, c.trace[i].bs);
+            }
+        }
+        println!(
+            "  settled: dnnscaler w{:?} (bs={}), clipper w{:?} (bs={}) — binary search reaches the knee first",
+            s_settle, s.steady_bs, c_settle, c.steady_bs
+        );
+    }
+    println!();
+}
+
+/// Fig. 8: Multi-Tenancy traces — matrix-completion seed then AIMD trim.
+fn fig8() {
+    let mut w = csv_writer("reports/fig8.csv", "job,window,mtl,p95_ms,slo_ms").unwrap();
+    for id in [2u32, 14] {
+        let job = paper_job(id).unwrap();
+        let runner = JobRunner::new(RunConfig::windows(25, 20));
+        let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d).unwrap();
+        println!(
+            "Fig 8, job {id} ({}, SLO {} ms): MTL trace (seeded by matrix completion at w0)",
+            job.dnn, job.slo_ms
+        );
+        for r in s.trace.iter().take(14) {
+            writeln!(w, "{id},{},{},{:.2},{}", r.window, r.mtl, r.p95_ms, r.slo_ms).unwrap();
+            println!("  w{:02}: bs={:<2} mtl={:<2} p95={:>8.2}", r.window, r.bs, r.mtl, r.p95_ms);
+        }
+        println!("  steady mtl={} (paper: {:?})", s.steady_mtl, job.paper_steady);
+    }
+    println!("shape check (paper): job-2-like seeds high then trims; job-14-like rides at MTL=10\n");
+}
+
+/// Figs. 9 & 10 share the SLO-step machinery.
+fn sensitivity(fig: &str, dnn: &'static str, slo0: f64, slo1: f64) {
+    let job = JobSpec {
+        id: 0,
+        dnn,
+        dataset: Dataset::ImageNet,
+        slo_ms: slo0,
+        paper_method: Method::Batching,
+        paper_steady: SteadyKnob::Bs(1),
+    };
+    let cfg = RunConfig {
+        windows: 40,
+        rounds_per_window: 20,
+        slo_schedule: vec![(20, slo1)],
+        ..Default::default()
+    };
+    let mut sim = GpuSim::for_paper_dnn(dnn, Dataset::ImageNet, 900).unwrap();
+    let out = JobRunner::new(cfg).run_dnnscaler(&job, &mut sim).unwrap();
+    let mut w =
+        csv_writer(&format!("reports/{fig}.csv"), "window,slo_ms,bs,mtl,p95_ms,throughput")
+            .unwrap();
+    for r in &out.trace {
+        writeln!(
+            w,
+            "{},{},{},{},{:.2},{:.2}",
+            r.window, r.slo_ms, r.bs, r.mtl, r.p95_ms, r.throughput
+        )
+        .unwrap();
+    }
+    let before = &out.trace[19];
+    let after = out.trace.last().unwrap();
+    println!(
+        "{fig}: {dnn} SLO {slo0} -> {slo1} ms | knob before (bs={} mtl={}) after (bs={} mtl={}) | p95 after {:.1} <= {:.0}: {}",
+        before.bs,
+        before.mtl,
+        after.bs,
+        after.mtl,
+        after.p95_ms,
+        slo1,
+        after.p95_ms <= slo1
+    );
+}
+
+fn fig9() {
+    sensitivity("fig9a", "inc-v4", 400.0, 150.0);
+    sensitivity("fig9b", "inc-v4", 150.0, 400.0);
+    println!();
+}
+
+fn fig10() {
+    sensitivity("fig10a", "inc-v1", 60.0, 30.0);
+    sensitivity("fig10b", "inc-v1", 25.0, 60.0);
+    println!();
+}
+
+/// Fig. 11: Batching vs (forced) Multi-Tenancy on six batching jobs.
+fn fig11() {
+    let runner = JobRunner::new(RunConfig::windows(30, 20));
+    let mut w = csv_writer("reports/fig11.csv", "job,batching_thr,mt_thr").unwrap();
+    let mut t = Table::new(
+        "Fig 11: Batching (DNNScaler's pick) vs forced Multi-Tenancy",
+        &["job", "dnn", "batching thr", "MT thr", "batching wins"],
+    );
+    for id in [3u32, 7, 12, 16, 22, 28] {
+        let job = paper_job(id).unwrap();
+        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 1100 + id as u64).unwrap();
+        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
+        // Force the MT scaler on the same job.
+        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 1200 + id as u64).unwrap();
+        let mut mt = MtScaler::unseeded(1, 10);
+        let m = runner.serve(job, &mut d2, &mut mt).unwrap();
+        writeln!(w, "{id},{:.2},{:.2}", s.throughput, m.throughput).unwrap();
+        t.row(&[
+            id.to_string(),
+            job.dnn.into(),
+            f1(s.throughput),
+            f1(m.throughput),
+            (s.throughput > m.throughput).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("shape check (paper): Batching wins on every one of these jobs\n");
+}
+
+/// Fig. 12: combining Batching and Multi-Tenancy.
+fn fig12() {
+    let mut w = csv_writer("reports/fig12.csv", "dnn,bs,mtl,throughput,latency_ms").unwrap();
+    let mut t = Table::new(
+        "Fig 12 (left): BS=8 constant, MTL swept — throughput (gain vs MTL=1)",
+        &["mtl", "resv2-152", "pnas-large"],
+    );
+    for n in 1..=4u32 {
+        let mut row = vec![n.to_string()];
+        for d in ["resv2-152", "pnas-large"] {
+            let sim = GpuSim::for_paper_dnn(d, Dataset::ImageNet, 0).unwrap();
+            let thr = sim.throughput(8, n);
+            writeln!(w, "{d},8,{n},{thr:.2},{:.2}", sim.mean_batch_latency_ms(8, n)).unwrap();
+            row.push(format!("{:.0} ({:.2}x)", thr, thr / sim.throughput(8, 1)));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    let mut t = Table::new(
+        "Fig 12 (right): MTL=5 constant, BS swept — throughput (gain vs BS=1)",
+        &["bs", "mobv1-1", "mobv1-025"],
+    );
+    for bs in [1u32, 2, 4, 8] {
+        let mut row = vec![bs.to_string()];
+        for d in ["mobv1-1", "mobv1-025"] {
+            let sim = GpuSim::for_paper_dnn(d, Dataset::ImageNet, 0).unwrap();
+            let thr = sim.throughput(bs, 5);
+            writeln!(w, "{d},{bs},5,{thr:.2},{:.2}", sim.mean_batch_latency_ms(bs, 5)).unwrap();
+            row.push(format!("{:.0} ({:.2}x)", thr, thr / sim.throughput(1, 5)));
+        }
+        t.row(&row);
+    }
+    print!("{}", t.render());
+    println!(
+        "shape check (paper): resv2-152 gains at MTL=2 then flattens; pnas-large loses; \
+         mobv1-1 gains from batching on top of MT; mobv1-025 does not\n"
+    );
+}

@@ -1,0 +1,179 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable, DESIGN.md §8).
+//!
+//! Custom harness (offline build — no criterion): each case is run with
+//! adaptive iteration counts and reports ns/op plus derived rates. The
+//! serving-relevant targets:
+//!
+//! * simulator batch execution — drives every figure regeneration, must
+//!   sustain >= 1M simulated batches/s;
+//! * controller decisions (batch scaler, MT scaler, clipper) — must be
+//!   sub-microsecond so L3 is never the bottleneck;
+//! * matrix completion — one-shot per job, budget ~ms;
+//! * windowed p95 — per control window;
+//! * real PJRT execution — the end-to-end request path.
+//!
+//! Run: cargo bench --bench hotpath   (optionally: -- sim ctrl mc window real)
+
+use std::time::Instant;
+
+use dnnscaler::coordinator::clipper::Clipper;
+use dnnscaler::coordinator::latency::LatencyWindow;
+use dnnscaler::coordinator::matcomp::LatencyLibrary;
+use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::scaler_batching::BatchScaler;
+use dnnscaler::coordinator::scaler_mt::MtScaler;
+use dnnscaler::coordinator::Controller;
+use dnnscaler::device::Device;
+use dnnscaler::gpusim::{Dataset, GpuSim};
+use dnnscaler::linalg::{svd, Mat};
+
+/// Time `f` adaptively; returns ns/op.
+fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    let mut calib = 0u64;
+    while t0.elapsed().as_millis() < 20 {
+        f();
+        calib += 1;
+    }
+    let iters = (calib * 10).clamp(10, 5_000_000);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+    let rate = 1e9 / ns;
+    println!("{name:<44} {ns:>12.1} ns/op   {rate:>14.0} op/s   ({iters} iters)");
+    ns
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sel: Vec<&str> = args.iter().map(|s| s.as_str()).filter(|s| !s.starts_with('-')).collect();
+    let run = |name: &str| sel.is_empty() || sel.contains(&name);
+    println!("{:<44} {:>15} {:>20}", "benchmark", "latency", "throughput");
+    println!("{}", "-".repeat(90));
+
+    if run("sim") {
+        let mut sim = GpuSim::for_paper_dnn("inc-v1", Dataset::ImageNet, 1).unwrap();
+        let ns = bench("gpusim: execute_batch(4, 1)", || {
+            let _ = std::hint::black_box(sim.execute_batch(4, 1).unwrap());
+        });
+        assert!(ns < 1_000.0, "simulator step must stay under 1 us");
+        let sim2 = GpuSim::for_paper_dnn("resv2-152", Dataset::ImageNet, 1).unwrap();
+        bench("gpusim: analytic throughput surface (128,10)", || {
+            std::hint::black_box(sim2.throughput(128, 10));
+        });
+        bench("gpusim: power model", || {
+            std::hint::black_box(sim2.power_w(32, 4));
+        });
+    }
+
+    if run("ctrl") {
+        let mut bs = BatchScaler::new();
+        bench("controller: BatchScaler.observe_window", || {
+            std::hint::black_box(bs.observe_window(90.0, 100.0));
+        });
+        let mut mt = MtScaler::unseeded(5, 10);
+        bench("controller: MtScaler.observe_window", || {
+            std::hint::black_box(mt.observe_window(90.0, 100.0));
+        });
+        let mut cl = Clipper::new();
+        bench("controller: Clipper.observe_window", || {
+            std::hint::black_box(cl.observe_window(90.0, 100.0));
+        });
+    }
+
+    if run("mc") {
+        let lib = LatencyLibrary::from_paper_profiles("inc-v1", 10);
+        bench("matcomp: complete 18x10 from 2 obs", || {
+            std::hint::black_box(lib.complete(&[(1, 10.0), (8, 40.0)]));
+        });
+        let mut x = 1u64;
+        let mut next = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((x >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+        };
+        let data: Vec<f64> = (0..18 * 10).map(|_| next()).collect();
+        let m = Mat::from_rows(18, 10, &data);
+        bench("linalg: jacobi SVD 18x10", || {
+            std::hint::black_box(svd(&m));
+        });
+    }
+
+    if run("window") {
+        // Feed varying samples — a constant-valued window hits sort/select
+        // degenerate fast paths and benchmarks nothing real.
+        let mut w = LatencyWindow::new(20);
+        let mut x = 0u64;
+        for i in 0..20 {
+            w.record(i as f64);
+        }
+        bench("latency window: record + p95 (n=20)", || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            w.record((x >> 40) as f64);
+            std::hint::black_box(w.p95());
+        });
+        let mut w200 = LatencyWindow::new(200);
+        for i in 0..200 {
+            w200.record(i as f64);
+        }
+        bench("latency window: record + p95 (n=200)", || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            w200.record((x >> 40) as f64);
+            std::hint::black_box(w200.p95());
+        });
+    }
+
+    if run("e2e") {
+        // End-to-end simulated job run (the figure-regeneration unit).
+        let job = dnnscaler::coordinator::job::paper_job(1).unwrap();
+        let runner = JobRunner::new(RunConfig::windows(20, 20));
+        let t0 = Instant::now();
+        let mut sims = 0;
+        while t0.elapsed().as_millis() < 300 {
+            let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, sims).unwrap();
+            std::hint::black_box(runner.run_dnnscaler(job, &mut d).unwrap());
+            sims += 1;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / sims as f64;
+        println!(
+            "{:<44} {:>10.2} ms/job  {:>14.1} jobs/s   ({} iters)",
+            "e2e: full DNNScaler job (20x20 windows)",
+            ms,
+            1000.0 / ms,
+            sims
+        );
+    }
+
+    if run("real") {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let mut dev =
+                dnnscaler::device::real::RealDevice::open(&dir, "mobv1-025").unwrap();
+            // Warm the compile caches.
+            let _ = dev.execute_batch(1, 1).unwrap();
+            let _ = dev.execute_batch(8, 1).unwrap();
+            for bs in [1u32, 8] {
+                let t0 = Instant::now();
+                let mut n = 0u64;
+                while t0.elapsed().as_millis() < 400 {
+                    std::hint::black_box(dev.execute_batch(bs, 1).unwrap());
+                    n += 1;
+                }
+                let ms = t0.elapsed().as_secs_f64() * 1000.0 / n as f64;
+                println!(
+                    "{:<44} {:>10.3} ms/batch {:>12.0} inf/s   ({} iters)",
+                    format!("real PJRT: mobv1-025 execute bs={bs}"),
+                    ms,
+                    bs as f64 * 1000.0 / ms,
+                    n
+                );
+            }
+        } else {
+            println!("real PJRT: skipped (run `make artifacts`)");
+        }
+    }
+
+    println!("\nhotpath done");
+}

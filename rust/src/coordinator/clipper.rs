@@ -1,0 +1,142 @@
+//! Clipper baseline (Crankshaw et al., NSDI'17) as described in §4.1:
+//! AIMD batch sizing — additively increase BS by a fixed step (4) while
+//! the tail latency meets the SLO, multiplicatively back off by 10% on
+//! violation. Batching only; Multi-Tenancy is never used.
+
+use super::controller::{Controller, Decision};
+use super::MAX_BS;
+
+/// AIMD batch-size controller (the paper's comparison system).
+///
+/// After a violation-triggered back-off Clipper *holds* the discovered
+/// batch size for a few windows before re-probing additively — without
+/// the hold the sawtooth would spend most windows above the SLO, which
+/// contradicts the paper's Fig. 6 (Clipper also keeps p95 <= SLO).
+#[derive(Debug, Clone)]
+pub struct Clipper {
+    bs: u32,
+    step: u32,
+    backoff: f64,
+    hard_max: u32,
+    /// Windows to hold after a back-off before probing upward again.
+    hold_windows: u32,
+    hold_left: u32,
+}
+
+impl Clipper {
+    /// Paper configuration: step 4, 10% back-off, BS in [1, 128].
+    pub fn new() -> Self {
+        Self::with_params(4, 0.10, MAX_BS)
+    }
+
+    pub fn with_params(step: u32, backoff: f64, hard_max: u32) -> Self {
+        assert!(step >= 1 && (0.0..1.0).contains(&backoff) && hard_max >= 1);
+        Clipper { bs: 1, step, backoff, hard_max, hold_windows: 8, hold_left: 0 }
+    }
+
+    pub fn batch_size(&self) -> u32 {
+        self.bs
+    }
+}
+
+impl Default for Clipper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Controller for Clipper {
+    fn name(&self) -> &'static str {
+        "clipper"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (self.bs, 1)
+    }
+
+    fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision {
+        let prev = self.bs;
+        if p95_ms > slo_ms {
+            // Multiplicative back-off: reduce BS by 10%, then hold.
+            self.bs = (((self.bs as f64) * (1.0 - self.backoff)).floor() as u32).max(1);
+            self.hold_left = self.hold_windows;
+        } else if self.hold_left > 0 {
+            self.hold_left -= 1;
+        } else {
+            // Additive increase.
+            self.bs = (self.bs + self.step).min(self.hard_max);
+        }
+        Decision { bs: self.bs, mtl: 1, changed: self.bs != prev }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn additive_increase_until_violation() {
+        let mut c = Clipper::new();
+        let lat = |b: u32| 2.0 * b as f64; // SLO 100 -> feasible b <= 50
+        let mut trace = Vec::new();
+        for _ in 0..40 {
+            let b = c.batch_size();
+            trace.push(b);
+            c.observe_window(lat(b), 100.0);
+        }
+        // Must have climbed past 40 and oscillate around the knee.
+        assert!(trace.iter().any(|&b| b >= 45));
+        let tail: Vec<u32> = trace[25..].to_vec();
+        assert!(tail.iter().all(|&b| (40..=56).contains(&b)), "tail {tail:?}");
+    }
+
+    #[test]
+    fn slower_than_binary_search() {
+        // Fig. 7's observation: Clipper reaches the knee later than
+        // DNNScaler's pseudo binary search.
+        let lat = |b: u32| 1.0 * b as f64; // knee at ~100 with SLO 100
+        let mut c = Clipper::new();
+        let mut c_steps = 0;
+        while c.batch_size() < 85 && c_steps < 200 {
+            let b = c.batch_size();
+            c.observe_window(lat(b), 100.0);
+            c_steps += 1;
+        }
+        let mut s = crate::coordinator::scaler_batching::BatchScaler::new();
+        let mut s_steps = 0;
+        while s.batch_size() < 85 && s_steps < 200 {
+            let b = s.batch_size();
+            s.observe_window(lat(b), 100.0);
+            s_steps += 1;
+        }
+        assert!(
+            s_steps < c_steps,
+            "binary search ({s_steps}) must beat AIMD ({c_steps})"
+        );
+    }
+
+    #[test]
+    fn backoff_on_violation() {
+        let mut c = Clipper::with_params(4, 0.10, 128);
+        // Force BS upward first.
+        for _ in 0..30 {
+            let b = c.batch_size();
+            c.observe_window(if b > 60 { 1e6 } else { 0.0 }, 100.0);
+        }
+        let b = c.batch_size();
+        assert!((54..=68).contains(&b), "oscillates at the knee, got {b}");
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut c = Clipper::new();
+        for _ in 0..100 {
+            c.observe_window(0.0, 100.0);
+        }
+        assert_eq!(c.batch_size(), MAX_BS);
+        for _ in 0..200 {
+            c.observe_window(1e9, 100.0);
+        }
+        assert_eq!(c.batch_size(), 1);
+    }
+}

@@ -1,0 +1,46 @@
+//! The controller abstraction shared by DNNScaler's scalers and Clipper.
+//!
+//! A controller sees only windowed p95 latencies and emits operating-point
+//! decisions; the runner applies them against whatever device is in use.
+
+
+/// Which throughput-improvement approach a DNN gets (paper Eq. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Batching,
+    MultiTenancy,
+}
+
+impl Method {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Method::Batching => "B",
+            Method::MultiTenancy => "MT",
+        }
+    }
+}
+
+/// A controller decision after observing one latency window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// Batch size to use next window.
+    pub bs: u32,
+    /// Number of co-located instances to use next window.
+    pub mtl: u32,
+    /// Whether the operating point changed (drives launch/terminate
+    /// overhead accounting for MT).
+    pub changed: bool,
+}
+
+/// Latency-window driven knob controller.
+pub trait Controller {
+    /// Human-readable name for traces/reports.
+    fn name(&self) -> &'static str;
+
+    /// Current operating point `(bs, mtl)`.
+    fn operating_point(&self) -> (u32, u32);
+
+    /// Observe the p95 of the last window against the (possibly updated)
+    /// SLO and decide the next operating point.
+    fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision;
+}

@@ -1,0 +1,143 @@
+//! The 30-job workload of Table 4.
+//!
+//! Each job is one DNN + dataset + SLO (p95 ms). The `paper_method` and
+//! `paper_steady` columns record what the paper's DNNScaler chose — our
+//! calibration tests assert we reproduce the method column, and the
+//! benches print our steady knob next to the paper's.
+
+
+use crate::gpusim::Dataset;
+
+use super::controller::Method;
+
+/// The steady operating point Table 4 reports for a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SteadyKnob {
+    Bs(u32),
+    Mtl(u32),
+}
+
+/// One inference job (Table 4 row).
+#[derive(Debug, Clone, Copy)]
+pub struct JobSpec {
+    pub id: u32,
+    /// Paper DNN name (gpusim profile key).
+    pub dnn: &'static str,
+    pub dataset: Dataset,
+    /// p95 latency SLO in ms.
+    pub slo_ms: f64,
+    /// Method the paper's DNNScaler selected.
+    pub paper_method: Method,
+    /// Steady BS/MTL the paper reports.
+    pub paper_steady: SteadyKnob,
+}
+
+macro_rules! job {
+    ($id:expr, $dnn:expr, $ds:ident, $slo:expr, B, $bs:expr) => {
+        JobSpec {
+            id: $id,
+            dnn: $dnn,
+            dataset: Dataset::$ds,
+            slo_ms: $slo,
+            paper_method: Method::Batching,
+            paper_steady: SteadyKnob::Bs($bs),
+        }
+    };
+    ($id:expr, $dnn:expr, $ds:ident, $slo:expr, MT, $mtl:expr) => {
+        JobSpec {
+            id: $id,
+            dnn: $dnn,
+            dataset: Dataset::$ds,
+            slo_ms: $slo,
+            paper_method: Method::MultiTenancy,
+            paper_steady: SteadyKnob::Mtl($mtl),
+        }
+    };
+}
+
+/// Table 4, verbatim.
+pub const PAPER_JOBS: &[JobSpec] = &[
+    job!(1, "inc-v1", ImageNet, 35.0, MT, 8),
+    job!(2, "inc-v2", ImageNet, 53.0, MT, 9),
+    job!(3, "inc-v4", ImageNet, 419.0, B, 28),
+    job!(4, "mobv1-05", ImageNet, 199.0, MT, 10),
+    job!(5, "mobv1-025", ImageNet, 186.0, MT, 10),
+    job!(6, "mobv2-1", ImageNet, 81.0, MT, 10),
+    job!(7, "nas-large", ImageNet, 417.0, B, 13),
+    job!(8, "nas-mob", ImageNet, 85.0, MT, 10),
+    job!(9, "pnas-mob", ImageNet, 82.0, MT, 10),
+    job!(10, "resv2-50", ImageNet, 45.0, MT, 6),
+    job!(11, "resv2-101", ImageNet, 72.0, B, 4),
+    job!(12, "resv2-152", ImageNet, 206.0, B, 14),
+    job!(13, "resv2-101", ImageNet, 107.0, B, 7),
+    job!(14, "inc-v1", Caltech256, 48.0, MT, 10),
+    job!(15, "inc-v2", Caltech256, 116.0, B, 16),
+    job!(16, "inc-v3", Caltech256, 322.0, B, 37),
+    job!(17, "inc-v4", Caltech256, 139.0, B, 10),
+    job!(18, "mobv1-1", Caltech256, 89.0, MT, 10),
+    job!(19, "mobv1-05", Caltech256, 60.0, MT, 10),
+    job!(20, "mobv1-025", Caltech256, 104.0, MT, 10),
+    job!(21, "mobv2-1", Caltech256, 129.0, MT, 10),
+    job!(22, "pnas-large", Caltech256, 524.0, B, 19),
+    job!(23, "pnas-mob", Caltech256, 321.0, B, 50),
+    job!(24, "resv2-50", Caltech256, 31.0, B, 1),
+    job!(25, "resv2-101", Caltech256, 107.0, B, 10),
+    job!(26, "textclassif", Sentiment140, 3.5, B, 102),
+    job!(27, "textclassif", ImdbReviews, 3.0, B, 76),
+    job!(28, "deepspeech", LibriSpeech, 1250.0, B, 28),
+    job!(29, "deepvs", Ledov, 3000.0, MT, 6),
+    job!(30, "deepvs", Dhf1k, 5000.0, MT, 8),
+];
+
+/// Lookup a Table 4 job by id.
+pub fn paper_job(id: u32) -> Option<&'static JobSpec> {
+    PAPER_JOBS.iter().find(|j| j.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::paper_profile;
+
+    #[test]
+    fn thirty_jobs_with_unique_ids() {
+        assert_eq!(PAPER_JOBS.len(), 30);
+        let mut ids: Vec<u32> = PAPER_JOBS.iter().map(|j| j.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 30);
+        assert_eq!(ids[0], 1);
+        assert_eq!(ids[29], 30);
+    }
+
+    #[test]
+    fn every_job_references_a_calibrated_profile() {
+        for j in PAPER_JOBS {
+            assert!(paper_profile(j.dnn).is_some(), "job {} references unknown {}", j.id, j.dnn);
+            assert!(j.slo_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn method_split_matches_paper() {
+        let mt = PAPER_JOBS.iter().filter(|j| j.paper_method == Method::MultiTenancy).count();
+        let b = PAPER_JOBS.iter().filter(|j| j.paper_method == Method::Batching).count();
+        assert_eq!((mt, b), (15, 15), "Table 4 has 15 MT and 15 B jobs");
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        assert_eq!(paper_job(5).unwrap().dnn, "mobv1-025");
+        assert!(paper_job(31).is_none());
+    }
+
+    #[test]
+    fn steady_knobs_within_global_bounds() {
+        for j in PAPER_JOBS {
+            match j.paper_steady {
+                SteadyKnob::Bs(b) => assert!((1..=128).contains(&b), "job {}", j.id),
+                SteadyKnob::Mtl(n) => assert!((1..=10).contains(&n), "job {}", j.id),
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Windowed tail-latency monitor.
+//!
+//! The paper defines tail latency as the 95th percentile of the inference
+//! latency distribution and has the Scaler act on windows of recent
+//! batches (`LatencyList` in Algorithm 1). This module provides the
+//! sliding window plus exact percentile computation.
+
+/// Fixed-capacity sliding window of latency samples with percentile
+/// queries.
+#[derive(Debug, Clone)]
+pub struct LatencyWindow {
+    samples: Vec<f64>,
+    capacity: usize,
+    next: usize,
+    filled: bool,
+    /// Reused scratch for percentile selection (§Perf: avoids an alloc +
+    /// full sort per control decision).
+    scratch: Vec<f64>,
+}
+
+impl LatencyWindow {
+    /// Window of `capacity` most-recent samples (capacity >= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "window capacity must be >= 1");
+        LatencyWindow {
+            samples: Vec::with_capacity(capacity),
+            capacity,
+            next: 0,
+            filled: false,
+            scratch: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Record one latency sample (ms).
+    pub fn record(&mut self, latency_ms: f64) {
+        if self.samples.len() < self.capacity {
+            self.samples.push(latency_ms);
+            if self.samples.len() == self.capacity {
+                self.filled = true;
+            }
+        } else {
+            self.samples[self.next] = latency_ms;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    /// Drop all samples (used when the operating point changes so stale
+    /// latencies from the previous knob don't pollute the next decision).
+    pub fn reset(&mut self) {
+        self.samples.clear();
+        self.next = 0;
+        self.filled = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Exact percentile (nearest-rank) of the current window; `None` when
+    /// empty. `q` in [0, 1]. O(n) via quickselect on a reused scratch
+    /// buffer (was O(n log n) with an allocation; see EXPERIMENTS.md
+    /// §Perf).
+    pub fn percentile(&mut self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let n = self.samples.len();
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.samples);
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        let (_, v, _) =
+            self.scratch.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).unwrap());
+        Some(*v)
+    }
+
+    /// The paper's tail latency: p95.
+    pub fn p95(&mut self) -> Option<f64> {
+        self.percentile(0.95)
+    }
+
+    /// Mean of the window.
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    /// Maximum of the window (Algorithm 1 uses `max(LatencyList)`).
+    pub fn max(&self) -> Option<f64> {
+        self.samples.iter().cloned().fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut w = LatencyWindow::new(100);
+        for i in 1..=100 {
+            w.record(i as f64);
+        }
+        assert_eq!(w.p95(), Some(95.0));
+        assert_eq!(w.percentile(0.5), Some(50.0));
+        assert_eq!(w.percentile(1.0), Some(100.0));
+        assert_eq!(w.percentile(0.0), Some(1.0)); // clamped to rank 1
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut w = LatencyWindow::new(3);
+        for v in [1.0, 2.0, 3.0, 10.0] {
+            w.record(v);
+        }
+        // Oldest (1.0) evicted: window = {10, 2, 3}.
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.max(), Some(10.0));
+        assert_eq!(w.percentile(0.34), Some(3.0));
+    }
+
+    #[test]
+    fn empty_and_reset() {
+        let mut w = LatencyWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.p95(), None);
+        assert_eq!(w.mean(), None);
+        assert_eq!(w.max(), None);
+        w.record(5.0);
+        assert_eq!(w.mean(), Some(5.0));
+        w.reset();
+        assert!(w.is_empty());
+        assert_eq!(w.p95(), None);
+    }
+
+    #[test]
+    fn single_sample_all_percentiles() {
+        let mut w = LatencyWindow::new(8);
+        w.record(42.0);
+        assert_eq!(w.p95(), Some(42.0));
+        assert_eq!(w.mean(), Some(42.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = LatencyWindow::new(0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Matrix completion for latency-vs-MTL estimation (paper §3.3.2).
+//!
+//! The paper profiles a new DNN at only two MTL points (1 and 8) and uses
+//! matrix completion (SVD-based, TFOCS in their implementation) to
+//! estimate the latency at every other MTL, so the Scaler can jump
+//! straight to the largest SLO-feasible instance count instead of paying
+//! launch/terminate overhead on a linear search.
+//!
+//! Our estimator is *hard-impute* (iterative SVD with rank truncation, the
+//! fixed-rank cousin of soft-impute / PQ-reconstruction): stack a library
+//! of fully-observed latency-ratio curves `L(n)/L(1)` from previously
+//! profiled DNNs, append the target row with its two observed entries,
+//! then alternate [fill missing entries from the current low-rank
+//! reconstruction] and [rank-r SVD truncation] until the imputed entries
+//! stop moving. The library rows come from the calibrated `gpusim`
+//! profiles — in the paper they accumulate from production profiling runs.
+
+use crate::gpusim::{perf, profiles, Dataset};
+use crate::linalg::{svd, Mat};
+
+/// Library of latency-vs-MTL ratio curves for matrix completion.
+#[derive(Debug, Clone)]
+pub struct LatencyLibrary {
+    /// Each row: `[L(1)/L(1), L(2)/L(1), ..., L(max_mtl)/L(1)]`.
+    rows: Vec<Vec<f64>>,
+    max_mtl: u32,
+}
+
+impl LatencyLibrary {
+    /// Build the library from every calibrated paper DNN except `exclude`
+    /// (the DNN currently being served — it must not see its own curve).
+    pub fn from_paper_profiles(exclude: &str, max_mtl: u32) -> Self {
+        let mut rows = Vec::new();
+        for p in profiles::PAPER_DNNS {
+            if p.name == exclude {
+                continue;
+            }
+            let base = perf::batch_latency_ms(p, Dataset::ImageNet, 1, 1).total_ms;
+            let row: Vec<f64> = (1..=max_mtl)
+                .map(|n| perf::batch_latency_ms(p, Dataset::ImageNet, 1, n).total_ms / base)
+                .collect();
+            rows.push(row);
+        }
+        LatencyLibrary { rows, max_mtl }
+    }
+
+    /// Library from explicit rows (tests / custom deployments).
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        assert!(!rows.is_empty());
+        let max_mtl = rows[0].len() as u32;
+        assert!(rows.iter().all(|r| r.len() as usize == max_mtl as usize));
+        LatencyLibrary { rows, max_mtl }
+    }
+
+    pub fn max_mtl(&self) -> u32 {
+        self.max_mtl
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Estimate absolute latency (ms) at every MTL in `1..=max_mtl` for a
+    /// DNN observed only at the given `(mtl, latency_ms)` points.
+    ///
+    /// Returns `estimates[n-1]` = latency at MTL = n. Observed points are
+    /// returned exactly.
+    pub fn complete(&self, observed: &[(u32, f64)]) -> Vec<f64> {
+        assert!(!observed.is_empty(), "need at least one observation");
+        let base = observed
+            .iter()
+            .find(|(n, _)| *n == 1)
+            .map(|(_, l)| *l)
+            .unwrap_or_else(|| observed[0].1);
+        let m = self.max_mtl as usize;
+
+        // Assemble the matrix: library rows fully observed, target last.
+        let rows = self.rows.len() + 1;
+        let mut mat = Mat::zeros(rows, m);
+        let mut mask = vec![vec![true; m]; rows]; // true = observed
+        for (i, r) in self.rows.iter().enumerate() {
+            for j in 0..m {
+                mat[(i, j)] = r[j];
+            }
+        }
+        let target = rows - 1;
+        for j in 0..m {
+            mask[target][j] = false;
+        }
+        for &(n, lat) in observed {
+            let j = (n as usize).saturating_sub(1).min(m - 1);
+            mat[(target, j)] = lat / base;
+            mask[target][j] = true;
+        }
+        // Initialize missing entries with the library column means.
+        for j in 0..m {
+            if !mask[target][j] {
+                let mean: f64 =
+                    self.rows.iter().map(|r| r[j]).sum::<f64>() / self.rows.len() as f64;
+                mat[(target, j)] = mean;
+            }
+        }
+
+        // Hard-impute: alternate rank-r reconstruction and data re-pinning.
+        let rank = 2.min(m).min(rows);
+        let mut current = mat.clone();
+        for _ in 0..50 {
+            let dec = svd(&current);
+            let recon = dec.reconstruct(rank);
+            let mut next = current.clone();
+            let mut delta: f64 = 0.0;
+            for i in 0..rows {
+                for j in 0..m {
+                    if mask[i][j] {
+                        next[(i, j)] = mat[(i, j)];
+                    } else {
+                        delta = delta.max((recon[(i, j)] - next[(i, j)]).abs());
+                        next[(i, j)] = recon[(i, j)];
+                    }
+                }
+            }
+            current = next;
+            if delta < 1e-9 {
+                break;
+            }
+        }
+
+        // Extract the target row; pin observed points exactly; convert
+        // ratios back to absolute latency.
+        let mut est: Vec<f64> = (0..m).map(|j| current[(target, j)].max(0.0) * base).collect();
+        let mut pins: Vec<(usize, f64)> = observed
+            .iter()
+            .map(|&(n, lat)| ((n as usize).saturating_sub(1).min(m - 1), lat))
+            .collect();
+        pins.sort_by_key(|(j, _)| *j);
+        for &(j, lat) in &pins {
+            est[j] = lat;
+        }
+        // Physical projection: latency is monotone in MTL, so every
+        // interpolated point must lie inside the bracket formed by its
+        // nearest observations (a flat target curve in a steep library
+        // would otherwise overshoot and even drag pinned points upward).
+        for j in 0..m {
+            let lo = pins.iter().filter(|(pj, _)| *pj <= j).map(|(_, v)| *v).fold(0.0, f64::max);
+            let hi = pins
+                .iter()
+                .filter(|(pj, _)| *pj >= j)
+                .map(|(_, v)| *v)
+                .fold(f64::INFINITY, f64::min);
+            est[j] = est[j].clamp(lo.min(hi), hi);
+        }
+        // Monotone pass for the tail beyond the last observation.
+        for j in 1..m {
+            if est[j] < est[j - 1] {
+                est[j] = est[j - 1];
+            }
+        }
+        est
+    }
+}
+
+/// Pick the largest MTL whose *estimated* latency meets the SLO
+/// (Algorithm 1 line 32); at least 1.
+pub fn pick_mtl(estimates: &[f64], slo_ms: f64) -> u32 {
+    let mut best = 1u32;
+    for (idx, &lat) in estimates.iter().enumerate() {
+        if lat <= slo_ms {
+            best = (idx + 1) as u32;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{perf, profiles, Dataset};
+
+    #[test]
+    fn library_excludes_target() {
+        let lib = LatencyLibrary::from_paper_profiles("inc-v1", 10);
+        assert_eq!(lib.len(), profiles::PAPER_DNNS.len() - 1);
+        assert_eq!(lib.max_mtl(), 10);
+    }
+
+    #[test]
+    fn completion_recovers_heldout_curve() {
+        // Leave one DNN out, observe its MTL=1 and MTL=8 latencies, and
+        // check the completed curve tracks the true simulator curve.
+        for name in ["inc-v1", "mobv1-05", "inc-v4", "resv2-101"] {
+            let p = profiles::paper_profile(name).unwrap();
+            let truth: Vec<f64> = (1..=10)
+                .map(|n| perf::batch_latency_ms(&p, Dataset::ImageNet, 1, n).total_ms)
+                .collect();
+            let lib = LatencyLibrary::from_paper_profiles(name, 10);
+            let est = lib.complete(&[(1, truth[0]), (8, truth[7])]);
+            assert_eq!(est.len(), 10);
+            // Observed points exact.
+            assert_eq!(est[0], truth[0]);
+            assert_eq!(est[7], truth[7]);
+            // Interpolated points within 35% (the paper's estimator is
+            // explicitly "not 100% accurate" — AIMD cleans up the rest).
+            for n in [2usize, 4, 6, 9] {
+                let rel = (est[n - 1] - truth[n - 1]).abs() / truth[n - 1];
+                assert!(rel < 0.35, "{name} MTL={}: est {:.1} true {:.1}", n, est[n - 1], truth[n - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn estimates_monotone_in_mtl() {
+        let lib = LatencyLibrary::from_paper_profiles("mobv1-1", 10);
+        let est = lib.complete(&[(1, 10.0), (8, 45.0)]);
+        for w in est.windows(2) {
+            assert!(w[1] >= w[0], "estimates must be monotone: {est:?}");
+        }
+    }
+
+    #[test]
+    fn pick_mtl_boundaries() {
+        let est = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(pick_mtl(&est, 35.0), 3);
+        assert_eq!(pick_mtl(&est, 50.0), 5);
+        assert_eq!(pick_mtl(&est, 9.0), 1); // nothing feasible -> 1
+        assert_eq!(pick_mtl(&est, 1e9), 5);
+    }
+
+    #[test]
+    fn synthetic_low_rank_exact() {
+        // Rows are multiples of one curve -> rank 1; completion must be
+        // near-exact from two observations.
+        let curve: Vec<f64> = (0..10).map(|j| 1.0 + 0.3 * j as f64).collect();
+        let rows: Vec<Vec<f64>> =
+            (1..6).map(|k| curve.iter().map(|c| c * k as f64 / 3.0).collect()).collect();
+        let lib = LatencyLibrary::from_rows(rows);
+        let true_target: Vec<f64> = curve.iter().map(|c| c * 7.0).collect();
+        let est = lib.complete(&[(1, true_target[0]), (8, true_target[7])]);
+        for j in 0..10 {
+            let rel = (est[j] - true_target[j]).abs() / true_target[j];
+            assert!(rel < 0.05, "j={j}: est {} true {}", est[j], true_target[j]);
+        }
+    }
+}

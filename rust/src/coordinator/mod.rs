@@ -1,0 +1,38 @@
+//! The DNNScaler coordinator — the paper's system contribution.
+//!
+//! * [`profiler`] — run-time probe deciding Batching vs Multi-Tenancy
+//!   (Eqs. 3-5 / Algorithm 1 lines 1-9);
+//! * [`scaler_batching`] — pseudo-binary-search dynamic batch sizing with
+//!   the `alpha = 0.85` hysteresis band (Algorithm 1 lines 10-29);
+//! * [`scaler_mt`] — matrix-completion-seeded AIMD instance scaling
+//!   (Algorithm 1 lines 30-41);
+//! * [`matcomp`] — the soft-impute matrix-completion estimator over a
+//!   library of latency-vs-MTL curves;
+//! * [`clipper`] — the Clipper baseline (AIMD batching only, Crankshaw et
+//!   al. NSDI'17) the paper compares against;
+//! * [`latency`] — windowed tail-latency (p95) monitor;
+//! * [`job`] — the 30-job workload of Table 4;
+//! * [`runner`] — the serving loop tying device + controller + metrics.
+
+pub mod clipper;
+pub mod controller;
+pub mod job;
+pub mod latency;
+pub mod matcomp;
+pub mod profiler;
+pub mod runner;
+pub mod scaler_batching;
+pub mod scaler_mt;
+
+pub use controller::{Controller, Decision, Method};
+pub use profiler::{ProfileOutcome, Profiler};
+
+/// Hysteresis coefficient from the paper (§3.3.1): the Scaler holds the
+/// knob while `alpha * SLO <= p95 <= SLO`.
+pub const ALPHA: f64 = 0.85;
+
+/// Upper bound on batch size (paper §3.3.1, fitted to GPU memory).
+pub const MAX_BS: u32 = 128;
+
+/// Upper bound on co-located instances (paper §3.3.2).
+pub const MAX_MTL: u32 = 10;

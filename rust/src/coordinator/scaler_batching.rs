@@ -1,0 +1,247 @@
+//! Dynamic batch-size Scaler: the pseudo binary search of Algorithm 1
+//! (lines 10-29).
+//!
+//! Semantics, straight from the paper:
+//!
+//! * `alpha*SLO <= p95 <= SLO` — hold the current batch size;
+//! * `p95 < alpha*SLO` — headroom: `minBS = currentBS`, jump to
+//!   `ceil((minBS + maxBS) / 2)`;
+//! * `p95 > SLO` — violation: if already at `BS = 1` the SLO cannot be
+//!   met; if the search had converged (`currentBS == minBS`) restart it
+//!   downward (`maxBS = currentBS, minBS = 1`); otherwise
+//!   `maxBS = currentBS`, drop to `floor((minBS + maxBS) / 2)`.
+//!
+//! One extension the figures require (Fig. 9(b), rising SLO): when the
+//! search has converged at its ceiling and latency still has headroom,
+//! `maxBS` re-opens to the global maximum so the controller can chase a
+//! relaxed SLO upward — the paper's "readjustment" behaviour.
+
+use super::controller::{Controller, Decision};
+use super::{ALPHA, MAX_BS};
+
+/// Pseudo-binary-search batch-size controller.
+#[derive(Debug, Clone)]
+pub struct BatchScaler {
+    min_bs: u32,
+    max_bs: u32,
+    current: u32,
+    /// Global ceiling (GPU-memory bound; 128 in the paper).
+    hard_max: u32,
+    /// True once the search cannot move (reported by `converged`).
+    settled: bool,
+    /// Consecutive violating windows seen (spike debounce, §4.4: "short-
+    /// live spikes ... are skipped to avoid excessive changes").
+    violations: u32,
+}
+
+impl BatchScaler {
+    /// Start at `BS = 1` with the paper's ceiling.
+    pub fn new() -> Self {
+        Self::with_limits(1, MAX_BS)
+    }
+
+    /// Custom initial point and ceiling (used by tests and real mode,
+    /// where the ceiling is the largest exported artifact).
+    pub fn with_limits(initial: u32, hard_max: u32) -> Self {
+        assert!(initial >= 1 && hard_max >= initial);
+        BatchScaler {
+            min_bs: 1,
+            max_bs: hard_max,
+            current: initial,
+            hard_max,
+            settled: false,
+            violations: 0,
+        }
+    }
+
+    pub fn batch_size(&self) -> u32 {
+        self.current
+    }
+
+    /// Whether the last observation left the knob unchanged.
+    pub fn converged(&self) -> bool {
+        self.settled
+    }
+}
+
+impl Default for BatchScaler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Controller for BatchScaler {
+    fn name(&self) -> &'static str {
+        "dnnscaler-batching"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (self.current, 1)
+    }
+
+    fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision {
+        let lo = ALPHA * slo_ms;
+        let prev = self.current;
+
+        if p95_ms > slo_ms {
+            // SLO violation. Once settled, debounce one-off spikes (OS
+            // jitter, §4.4: "short-live spikes ... are skipped to avoid
+            // excessive changes"); during an active search react at once.
+            if self.settled {
+                self.violations += 1;
+                if self.violations < 2 {
+                    return Decision { bs: self.current, mtl: 1, changed: false };
+                }
+            }
+            self.violations = 0;
+            if self.current == 1 {
+                // Line 21: further reduction impossible; SLO unmeetable.
+                self.min_bs = 1;
+            } else if self.current == self.min_bs {
+                // Line 22-25: converged point now violates — restart the
+                // search below it.
+                self.max_bs = self.current;
+                self.min_bs = 1;
+                self.current = (self.min_bs + self.max_bs) / 2; // floor
+            } else {
+                // Line 26-28.
+                self.max_bs = self.current;
+                self.current = (self.min_bs + self.max_bs) / 2; // floor
+            }
+            self.current = self.current.max(1);
+        } else if p95_ms < lo {
+            self.violations = 0;
+            // Headroom: search upward (lines 15-18).
+            if self.current == self.max_bs {
+                if self.max_bs < self.hard_max {
+                    // Re-open the ceiling (SLO relaxed at runtime).
+                    self.max_bs = self.hard_max;
+                    self.min_bs = self.current;
+                    self.current = (self.min_bs + self.max_bs).div_ceil(2);
+                }
+                // else: at the hard ceiling — no further improvement.
+            } else {
+                self.min_bs = self.current;
+                self.current = (self.min_bs + self.max_bs).div_ceil(2);
+            }
+        }
+        else {
+            // In the alpha band — hold (line 13-14).
+            self.violations = 0;
+        }
+
+        self.settled = self.current == prev;
+        Decision { bs: self.current, mtl: 1, changed: self.current != prev }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the scaler against a synthetic latency curve `lat(bs)` until
+    /// it stops moving (two consecutive holds — the spike debounce makes
+    /// a single unchanged window inconclusive); returns (final bs, steps).
+    fn drive(lat: impl Fn(u32) -> f64, slo: f64, max_steps: usize) -> (u32, usize) {
+        let mut s = BatchScaler::new();
+        let mut steps = 0;
+        let mut holds = 0;
+        for _ in 0..max_steps {
+            let bs = s.batch_size();
+            let d = s.observe_window(lat(bs), slo);
+            steps += 1;
+            holds = if d.changed { 0 } else { holds + 1 };
+            if holds >= 2 && steps > 2 {
+                break;
+            }
+        }
+        (s.batch_size(), steps)
+    }
+
+    #[test]
+    fn finds_largest_bs_under_slo() {
+        // lat(bs) = 2*bs ms, SLO 100 -> feasible set bs <= 50, alpha band
+        // [85, 100] -> bs in [43, 50].
+        let (bs, steps) = drive(|b| 2.0 * b as f64, 100.0, 50);
+        assert!((43..=50).contains(&bs), "bs {bs}");
+        assert!(steps <= 12, "binary search must converge quickly, took {steps}");
+    }
+
+    #[test]
+    fn converges_in_logarithmic_steps() {
+        let (_, steps) = drive(|b| 0.9 * b as f64, 60.0, 50);
+        assert!(steps <= 10, "took {steps} steps (log2(128) = 7 + settle)");
+    }
+
+    #[test]
+    fn stays_at_one_when_slo_unmeetable() {
+        let (bs, _) = drive(|_| 500.0, 10.0, 30);
+        assert_eq!(bs, 1);
+    }
+
+    #[test]
+    fn grows_to_ceiling_with_loose_slo() {
+        let (bs, _) = drive(|b| 0.01 * b as f64, 1e9, 30);
+        assert_eq!(bs, MAX_BS);
+    }
+
+    #[test]
+    fn holds_inside_alpha_band() {
+        let mut s = BatchScaler::with_limits(40, 128);
+        let d = s.observe_window(90.0, 100.0); // 85 <= 90 <= 100
+        assert!(!d.changed);
+        assert_eq!(s.batch_size(), 40);
+    }
+
+    #[test]
+    fn slo_drop_triggers_downward_restart() {
+        // Converge under SLO=100 first.
+        let lat = |b: u32| 2.0 * b as f64;
+        let mut s = BatchScaler::new();
+        for _ in 0..20 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), 100.0);
+        }
+        let settled = s.batch_size();
+        assert!(settled >= 43);
+        // SLO halves (Fig. 9(a)): controller must descend.
+        for _ in 0..20 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), 50.0);
+        }
+        let after = s.batch_size();
+        assert!(after <= 25, "bs {after} must respect the tightened SLO");
+        assert!(lat(after) <= 50.0);
+    }
+
+    #[test]
+    fn slo_rise_reopens_ceiling() {
+        let lat = |b: u32| 2.0 * b as f64;
+        let mut s = BatchScaler::new();
+        for _ in 0..20 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), 60.0);
+        }
+        let low = s.batch_size();
+        assert!(low <= 30);
+        // SLO doubles (Fig. 9(b)): controller must climb again.
+        for _ in 0..20 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), 180.0);
+        }
+        assert!(s.batch_size() > low, "bs must grow after SLO relaxes");
+        assert!(lat(s.batch_size()) <= 180.0);
+    }
+
+    #[test]
+    fn never_leaves_valid_range() {
+        let mut s = BatchScaler::new();
+        // Adversarial alternating observations.
+        for i in 0..200 {
+            let p95 = if i % 2 == 0 { 1.0 } else { 1e6 };
+            let d = s.observe_window(p95, 100.0);
+            assert!((1..=MAX_BS).contains(&d.bs));
+            assert_eq!(d.mtl, 1);
+        }
+    }
+}

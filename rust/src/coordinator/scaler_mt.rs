@@ -1,0 +1,208 @@
+//! Multi-Tenancy Scaler: matrix-completion seed + AIMD refinement
+//! (Algorithm 1 lines 30-41).
+//!
+//! Launching/terminating TF instances is expensive, so unlike the batch
+//! scaler this controller cannot binary-search. Instead it
+//!
+//! 1. seeds `MTL` from the matrix-completion latency estimates (jump
+//!    straight to the largest SLO-feasible instance count),
+//! 2. then walks additively: `+1` instance while there is headroom
+//!    (`p95 < alpha*SLO`), `-1` on violation (`p95 > SLO`) — terminating
+//!    only the last-added instance, exactly the paper's scheme.
+
+use super::controller::{Controller, Decision};
+use super::matcomp::{pick_mtl, LatencyLibrary};
+use super::{ALPHA, MAX_MTL};
+
+/// Matrix-completion-seeded AIMD instance-count controller.
+#[derive(Debug, Clone)]
+pub struct MtScaler {
+    mtl: u32,
+    max_mtl: u32,
+    /// Latency estimates from matrix completion (index n-1 = MTL n).
+    estimates: Vec<f64>,
+    /// Count of launch/terminate events (overhead accounting + Fig. 8).
+    pub launches: u32,
+    pub terminations: u32,
+    settled: bool,
+    /// Spike debounce (§4.4), as in the batch scaler.
+    violations: u32,
+}
+
+impl MtScaler {
+    /// Seed from matrix completion: complete the latency curve from the
+    /// profiling observations and jump to the largest feasible MTL.
+    pub fn seeded(lib: &LatencyLibrary, observed: &[(u32, f64)], slo_ms: f64) -> Self {
+        let estimates = lib.complete(observed);
+        let mtl = pick_mtl(&estimates, slo_ms).min(lib.max_mtl());
+        MtScaler {
+            mtl,
+            max_mtl: lib.max_mtl().min(MAX_MTL),
+            estimates,
+            launches: mtl,
+            terminations: 0,
+            settled: false,
+            violations: 0,
+        }
+    }
+
+    /// Start at a fixed MTL without estimates (brute-force ablation).
+    pub fn unseeded(start: u32, max_mtl: u32) -> Self {
+        MtScaler {
+            mtl: start.clamp(1, max_mtl),
+            max_mtl,
+            estimates: Vec::new(),
+            launches: start,
+            terminations: 0,
+            settled: false,
+            violations: 0,
+        }
+    }
+
+    pub fn mtl(&self) -> u32 {
+        self.mtl
+    }
+
+    pub fn estimates(&self) -> &[f64] {
+        &self.estimates
+    }
+
+    pub fn converged(&self) -> bool {
+        self.settled
+    }
+}
+
+impl Controller for MtScaler {
+    fn name(&self) -> &'static str {
+        "dnnscaler-mt"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (1, self.mtl)
+    }
+
+    fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision {
+        let prev = self.mtl;
+        if p95_ms > slo_ms {
+            // Violation — in steady state debounce one-off spikes (§4.4);
+            // when still moving, terminate the last-added instance right
+            // away (line 39-41).
+            let act = if self.settled {
+                self.violations += 1;
+                self.violations >= 2
+            } else {
+                true
+            };
+            if act {
+                self.violations = 0;
+                if self.mtl > 1 {
+                    self.mtl -= 1;
+                    self.terminations += 1;
+                }
+            }
+        } else if p95_ms < ALPHA * slo_ms {
+            self.violations = 0;
+            // Headroom: add one instance (line 36-38).
+            if self.mtl < self.max_mtl {
+                self.mtl += 1;
+                self.launches += 1;
+            }
+        }
+        else {
+            // In the alpha band — hold (line 34-35).
+            self.violations = 0;
+        }
+        self.settled = self.mtl == prev;
+        Decision { bs: 1, mtl: self.mtl, changed: self.mtl != prev }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::matcomp::LatencyLibrary;
+
+    fn linear_lib() -> LatencyLibrary {
+        // Library of linear co-location curves with varying slopes.
+        let rows: Vec<Vec<f64>> = [0.1, 0.2, 0.4, 0.8]
+            .iter()
+            .map(|k| (0..10).map(|j| 1.0 + k * j as f64).collect())
+            .collect();
+        LatencyLibrary::from_rows(rows)
+    }
+
+    /// Drive against a synthetic latency curve until stable.
+    fn drive(s: &mut MtScaler, lat: impl Fn(u32) -> f64, slo: f64, steps: usize) {
+        for _ in 0..steps {
+            let n = s.mtl();
+            s.observe_window(lat(n), slo);
+        }
+    }
+
+    #[test]
+    fn seed_jumps_to_feasible_mtl() {
+        // True latency 10*(1 + 0.3*(n-1)); SLO 31 -> feasible n <= 8.
+        let lat = |n: u32| 10.0 * (1.0 + 0.3 * (n - 1) as f64);
+        let s = MtScaler::seeded(&linear_lib(), &[(1, lat(1)), (8, lat(8))], 31.0);
+        assert!(s.mtl() >= 6, "seed {} should jump close to 8", s.mtl());
+        assert!(s.mtl() <= 9);
+    }
+
+    #[test]
+    fn aimd_corrects_underestimate() {
+        // Estimator thinks latency is flat; reality violates at n > 4.
+        let lib = LatencyLibrary::from_rows(vec![vec![1.0; 10], vec![1.0; 10]]);
+        let mut s = MtScaler::seeded(&lib, &[(1, 10.0), (8, 10.0)], 50.0);
+        assert_eq!(s.mtl(), 10, "flat estimate seeds at max");
+        let lat = |n: u32| if n > 4 { 60.0 } else { 10.0 };
+        drive(&mut s, lat, 50.0, 20);
+        // AIMD must walk down until feasible... it settles at 4 or
+        // oscillates within the band {4,5}.
+        assert!(s.mtl() <= 5, "mtl {} must be trimmed", s.mtl());
+        assert!(s.terminations >= 5);
+    }
+
+    #[test]
+    fn aimd_exploits_headroom() {
+        let lib = LatencyLibrary::from_rows(vec![vec![1.0; 10], vec![1.0; 10]]);
+        let mut s = MtScaler::seeded(&lib, &[(1, 10.0), (8, 10.0)], 12.0);
+        // Seed lands low because estimate ~10 > 0.85*12 is in band...
+        let lat = |_n: u32| 5.0; // plenty of headroom in reality
+        drive(&mut s, lat, 12.0, 20);
+        assert_eq!(s.mtl(), 10, "must climb to max with headroom");
+    }
+
+    #[test]
+    fn never_leaves_bounds() {
+        let mut s = MtScaler::unseeded(5, 10);
+        for i in 0..100 {
+            let p95 = if i % 3 == 0 { 1e6 } else { 0.0 };
+            let d = s.observe_window(p95, 100.0);
+            assert!((1..=10).contains(&d.mtl));
+            assert_eq!(d.bs, 1);
+        }
+    }
+
+    #[test]
+    fn holds_in_alpha_band() {
+        let mut s = MtScaler::unseeded(4, 10);
+        let d = s.observe_window(90.0, 100.0);
+        assert!(!d.changed);
+        assert_eq!(s.mtl(), 4);
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn slo_changes_tracked_like_fig10() {
+        // Fig. 10: relaxed SLO -> 10 instances; SLO halves -> ~5 left;
+        // SLO rises again -> climbs back.
+        let lat = |n: u32| 8.0 * (1.0 + 0.25 * (n - 1) as f64);
+        let mut s = MtScaler::unseeded(4, 10);
+        drive(&mut s, lat, 100.0, 15);
+        assert_eq!(s.mtl(), 10, "relaxed SLO fills the GPU");
+        drive(&mut s, lat, 18.0, 15);
+        assert!(s.mtl() <= 6, "tight SLO trims instances, got {}", s.mtl());
+        drive(&mut s, lat, 100.0, 15);
+        assert_eq!(s.mtl(), 10, "climbs back after SLO relaxes");
+    }
+}

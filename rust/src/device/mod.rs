@@ -1,0 +1,83 @@
+//! Device abstraction: everything the coordinator can serve against.
+//!
+//! The Profiler/Scaler/Clipper controllers observe a device *only* through
+//! executed-batch latency samples, exactly as the paper's system observes
+//! its GPU. Two implementations exist:
+//!
+//! * [`crate::gpusim::GpuSim`] — the calibrated Tesla-P40 model used for
+//!   every paper figure/table;
+//! * [`real::RealDevice`] — the PJRT CPU runtime executing the AOT JAX/
+//!   Pallas artifacts, used by the end-to-end examples to prove the whole
+//!   stack composes.
+
+pub mod real;
+
+use std::fmt;
+
+/// One executed batch: the only observable the controllers get.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecSample {
+    /// End-to-end per-batch latency in ms (every request in the batch
+    /// observes this latency).
+    pub latency_ms: f64,
+    pub batch_size: u32,
+    pub mtl: u32,
+    /// Board power during the batch (W); 0 when unknown (real mode).
+    pub power_w: f64,
+    /// SM utilization 0..1; 0 when unknown (real mode).
+    pub sm_util: f64,
+}
+
+/// Errors a device can raise for an operating point.
+#[derive(Debug, Clone)]
+pub enum DeviceError {
+    InvalidOperatingPoint { bs: u32, mtl: u32 },
+    OutOfMemory { demand_mb: f64, capacity_mb: f64 },
+    Exec(String),
+}
+
+impl fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceError::InvalidOperatingPoint { bs, mtl } => {
+                write!(f, "invalid operating point bs={bs} mtl={mtl}")
+            }
+            DeviceError::OutOfMemory { demand_mb, capacity_mb } => {
+                write!(f, "out of GPU memory: need {demand_mb:.0} MB, have {capacity_mb:.0} MB")
+            }
+            DeviceError::Exec(e) => write!(f, "execution failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DeviceError {}
+
+/// A serving device: executes batches at an operating point `(bs, mtl)`.
+pub trait Device {
+    /// The DNN this device instance serves.
+    fn model(&self) -> &str;
+
+    /// Execute one batch of `bs` inputs while `mtl` instances are
+    /// co-located, returning the observed sample.
+    fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError>;
+
+    /// Cost (ms of wall time) of launching one more co-located instance —
+    /// the overhead the paper's matrix-completion seeding avoids paying
+    /// repeatedly.
+    fn launch_overhead_ms(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Blanket impl so `Box<dyn Device>` composes.
+impl Device for Box<dyn Device + Send> {
+    fn model(&self) -> &str {
+        (**self).model()
+    }
+    fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError> {
+        (**self).execute_batch(bs, mtl)
+    }
+    fn launch_overhead_ms(&self) -> f64 {
+        (**self).launch_overhead_ms()
+    }
+}

@@ -1,0 +1,108 @@
+//! Latency noise: lognormal jitter plus rare OS-induced spikes.
+//!
+//! §4.4 of the paper: "some short-live spikes are observed in latency that
+//! violate the SLO. They happen due to some reasons (e.g., OS processes)".
+//! We reproduce both components deterministically from a seed so every
+//! figure regenerates bit-identically.
+
+use crate::rng::Rng;
+
+/// Multiplicative latency noise process.
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    rng: Rng,
+    mu: f64,
+    sigma: f64,
+    /// Probability a batch hits an OS jitter spike.
+    spike_prob: f64,
+    /// Spike latency multiplier range.
+    spike_range: (f64, f64),
+}
+
+impl NoiseModel {
+    /// Default noise: sigma = 0.055 (p95/median ~ 1.095), 0.8% spike
+    /// probability with 1.5-3x multipliers.
+    pub fn new(seed: u64) -> Self {
+        Self::with_params(seed, 0.055, 0.008, (1.5, 3.0))
+    }
+
+    /// Fully parameterized constructor (used by tests and ablations).
+    pub fn with_params(seed: u64, sigma: f64, spike_prob: f64, spike_range: (f64, f64)) -> Self {
+        // mu = -sigma^2/2 keeps the mean multiplier at 1.0.
+        NoiseModel {
+            rng: Rng::new(seed),
+            mu: -sigma * sigma / 2.0,
+            sigma,
+            spike_prob,
+            spike_range,
+        }
+    }
+
+    /// Disable all noise (deterministic latencies).
+    pub fn none(seed: u64) -> Self {
+        Self::with_params(seed, 1e-9, 0.0, (1.0, 1.0))
+    }
+
+    /// Sample one observed latency around `mean_ms`.
+    pub fn sample_latency(&mut self, mean_ms: f64) -> f64 {
+        let mut v = mean_ms * self.rng.lognormal(self.mu, self.sigma);
+        if self.spike_prob > 0.0 && self.rng.chance(self.spike_prob) {
+            let (lo, hi) = self.spike_range;
+            v *= self.rng.uniform_range(lo, hi);
+        }
+        v
+    }
+
+    /// Analytic p95 multiplier of the lognormal component (spikes excluded).
+    pub fn p95_multiplier(sigma: f64) -> f64 {
+        (-sigma * sigma / 2.0 + 1.6449 * sigma).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_preserving() {
+        let mut n = NoiseModel::with_params(1, 0.055, 0.0, (1.0, 1.0));
+        let samples: Vec<f64> = (0..20000).map(|_| n.sample_latency(100.0)).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn p95_close_to_analytic() {
+        let mut n = NoiseModel::with_params(2, 0.055, 0.0, (1.0, 1.0));
+        let mut samples: Vec<f64> = (0..20000).map(|_| n.sample_latency(1.0)).collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = samples[(samples.len() as f64 * 0.95) as usize];
+        let want = NoiseModel::p95_multiplier(0.055);
+        assert!((p95 - want).abs() / want < 0.02, "p95 {p95} want {want}");
+    }
+
+    #[test]
+    fn spikes_appear_at_configured_rate() {
+        let mut n = NoiseModel::with_params(3, 1e-9, 0.05, (2.0, 2.0));
+        let spikes = (0..10000).filter(|_| n.sample_latency(1.0) > 1.5).count();
+        assert!((300..=700).contains(&spikes), "spikes {spikes}");
+    }
+
+    #[test]
+    fn none_is_noise_free() {
+        let mut n = NoiseModel::none(4);
+        for _ in 0..100 {
+            let v = n.sample_latency(42.0);
+            assert!((v - 42.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = NoiseModel::new(9);
+        let mut b = NoiseModel::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.sample_latency(5.0), b.sample_latency(5.0));
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! The mechanistic latency/throughput model (see module docs in `mod.rs`).
+//!
+//! Per-batch latency for one instance, with `n` instances co-located and
+//! batch size `b` each (`ds` = dataset prep multiplier):
+//!
+//! ```text
+//! d(b)     = min(1, r1 * (1 + (b-1)/bsat))              instance SM residency
+//! c(b)     = t_fl * max(b, bsat) * ds_c                 compute roofline
+//! gpu(b,n) = (t_gpu_fixed + c(b) * max(1, n*d(b))) * (1 + kappa*(n-1))
+//! cpu(b)   = b * t_prep * ds * (1 + prep_growth * b)    per-input prep/copy
+//! T(b,n)   = cpu(b) + gpu(b,n)
+//! ```
+//!
+//! Throughput = `n*b / T(b,n)`. The shapes this produces are exactly the
+//! paper's Fig. 1: prep-bound DNNs have flat throughput in `b` (batching
+//! useless) but scale with `n` until `n*r1 > 1`; compute-roofline DNNs
+//! with large `bsat` get near-linear batching gains but time-share under
+//! co-location (`max(1, n*d)` kicks in immediately because `d(1)=r1~1`).
+
+use super::profiles::{dataset_multiplier, Dataset, DnnProfile};
+
+/// An operating point of the serving system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperatingPoint {
+    pub batch_size: u32,
+    pub mtl: u32,
+}
+
+/// Latency decomposition of one batch at an operating point (all ms).
+#[derive(Debug, Clone, Copy)]
+pub struct PerfBreakdown {
+    /// CPU prep + H2D copy time.
+    pub cpu_ms: f64,
+    /// GPU-side time including co-location sharing and interference.
+    pub gpu_ms: f64,
+    /// End-to-end per-batch latency (`cpu + gpu`).
+    pub total_ms: f64,
+    /// This instance's SM residency at the batch size, 0..1.
+    pub residency: f64,
+    /// Aggregate SM demand `n * d(b)` (may exceed 1 = time-sharing).
+    pub sm_demand: f64,
+}
+
+/// Instance SM residency at batch size `b`.
+pub fn residency(p: &DnnProfile, b: u32) -> f64 {
+    let b = b as f64;
+    (p.r1 * (1.0 + (b - 1.0) / p.bsat)).min(1.0)
+}
+
+/// Compute-roofline time (ms) of one batch executed alone.
+pub fn compute_ms(p: &DnnProfile, ds: Dataset, b: u32) -> f64 {
+    let seq_mult = match ds {
+        // Sequence datasets scale compute with input length too.
+        Dataset::ImdbReviews | Dataset::Dhf1k => dataset_multiplier(ds),
+        _ => 1.0,
+    };
+    p.t_fl_ms * (b as f64).max(p.bsat) * seq_mult
+}
+
+/// Full per-batch latency breakdown at `(b, n)`.
+pub fn batch_latency_ms(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> PerfBreakdown {
+    assert!(b >= 1 && n >= 1, "operating point must be >= (1,1)");
+    let bf = b as f64;
+    let nf = n as f64;
+    let mult = dataset_multiplier(ds);
+
+    // Superlinear prep growth saturates around BS=32 (host-side resize
+    // queues stop degrading once full): without the cap, mobilenet
+    // throughput would *fall* 2x by BS=128, where the paper's Fig. 1
+    // shows a flat curve.
+    let cpu_ms = bf * p.t_prep_ms * mult * (1.0 + p.prep_growth * bf.min(32.0));
+    let d = residency(p, b);
+    let sm_demand = nf * d;
+    let sharing = sm_demand.max(1.0);
+    let interference = 1.0 + p.kappa * (nf - 1.0);
+    let gpu_ms = (p.t_gpu_fixed_ms + compute_ms(p, ds, b) * sharing) * interference;
+
+    PerfBreakdown { cpu_ms, gpu_ms, total_ms: cpu_ms + gpu_ms, residency: d, sm_demand }
+}
+
+/// Steady-state throughput (inferences/s) at `(b, n)`.
+pub fn throughput(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
+    let t = batch_latency_ms(p, ds, b, n).total_ms;
+    (n as f64) * (b as f64) / (t / 1000.0)
+}
+
+/// nvidia-smi-style SM utilization: busy fraction weighted by residency.
+///
+/// One instance keeps the GPU "busy" for its gpu-time share of the batch
+/// interval; co-located instances stack until the device saturates
+/// (Fig. 2 of the paper: Mobilenet climbs ~linearly with instances,
+/// Inception-V4 starts high and flattens).
+pub fn sm_utilization(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
+    let bd = batch_latency_ms(p, ds, b, n);
+    let own_gpu_ms = p.t_gpu_fixed_ms + compute_ms(p, ds, b);
+    let busy = ((n as f64) * own_gpu_ms / bd.total_ms).min(1.0);
+    let occupancy = bd.sm_demand.min(1.0);
+    // Busy-time fraction dominates what nvidia-smi reports; occupancy
+    // softens it for very sparse instances.
+    busy * (0.35 + 0.65 * occupancy)
+}
+
+/// GPU memory demand (MB) at `(b, n)`.
+pub fn mem_demand_mb(p: &DnnProfile, b: u32, n: u32) -> f64 {
+    (n as f64) * (p.mem_mb + p.act_mb * (b as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiles::paper_profile;
+
+    fn close_pct(got: f64, want: f64, pct: f64) -> bool {
+        (got - want).abs() / want <= pct / 100.0
+    }
+
+    /// The Table 5 calibration anchors must hold within a tolerance band.
+    /// We check ordering exactly and magnitudes within 40% — the paper's
+    /// own numbers carry run-to-run noise, and DESIGN.md §7 binds us to
+    /// shapes, not absolutes.
+    #[test]
+    fn table5_anchor_bands() {
+        let cases: &[(&str, Dataset, f64, f64, f64)] = &[
+            // (dnn, ds, base thr, thr at MTL=8, thr at BS=32)
+            ("inc-v1", Dataset::ImageNet, 118.66, 237.28, 125.67),
+            ("inc-v2", Dataset::ImageNet, 104.46, 169.85, 125.33),
+            ("inc-v4", Dataset::ImageNet, 36.81, 39.61, 116.41),
+            ("pnas-mob", Dataset::ImageNet, 48.49, 148.28, 125.44),
+            ("resv2-50", Dataset::ImageNet, 103.62, 137.43, 126.55),
+            ("resv2-101", Dataset::ImageNet, 62.75, 78.63, 125.99),
+            ("mobv1-05", Dataset::Caltech256, 241.14, 1050.58, 267.84),
+            ("textclassif", Dataset::Sentiment140, 492.0, 2163.8, 7145.89),
+            ("deepvs", Dataset::Ledov, 15.46, 41.27, 19.82),
+        ];
+        for &(name, ds, base, mt8, bs32) in cases {
+            let p = paper_profile(name).unwrap();
+            let got_base = throughput(&p, ds, 1, 1);
+            let got_mt8 = throughput(&p, ds, 1, 8);
+            let got_bs32 = throughput(&p, ds, 32, 1);
+            assert!(close_pct(got_base, base, 40.0), "{name} base: got {got_base:.1} want {base}");
+            assert!(close_pct(got_mt8, mt8, 40.0), "{name} mt8: got {got_mt8:.1} want {mt8}");
+            assert!(close_pct(got_bs32, bs32, 40.0), "{name} bs32: got {got_bs32:.1} want {bs32}");
+            // The decisive comparison (Eq. 5) must match the paper exactly.
+            let ti_mt = (mt8 - base) / base;
+            let ti_b = (bs32 - base) / base;
+            let got_ti_mt = (got_mt8 - got_base) / got_base;
+            let got_ti_b = (got_bs32 - got_base) / got_base;
+            assert_eq!(
+                ti_mt > ti_b,
+                got_ti_mt > got_ti_b,
+                "{name}: method decision flipped (paper TI_MT={ti_mt:.2} TI_B={ti_b:.2}, \
+                 got TI_MT={got_ti_mt:.2} TI_B={got_ti_b:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn fig1_shapes() {
+        // Batching helps inc-v4/resv2-152 a lot, inc-v1/mobv1-1 barely.
+        for (name, min_gain) in [("inc-v4", 3.0), ("resv2-152", 3.0)] {
+            let p = paper_profile(name).unwrap();
+            let gain = throughput(&p, Dataset::ImageNet, 128, 1)
+                / throughput(&p, Dataset::ImageNet, 1, 1);
+            assert!(gain > min_gain, "{name} batching gain {gain:.2} < {min_gain}");
+        }
+        for name in ["inc-v1", "mobv1-1"] {
+            let p = paper_profile(name).unwrap();
+            let gain = throughput(&p, Dataset::ImageNet, 128, 1)
+                / throughput(&p, Dataset::ImageNet, 1, 1);
+            assert!(gain < 1.6, "{name} batching gain {gain:.2} should be small");
+        }
+        // Multi-tenancy mirror image.
+        for name in ["inc-v1", "mobv1-1"] {
+            let p = paper_profile(name).unwrap();
+            let gain = throughput(&p, Dataset::ImageNet, 1, 8)
+                / throughput(&p, Dataset::ImageNet, 1, 1);
+            assert!(gain > 1.5, "{name} MT gain {gain:.2} too small");
+        }
+        for name in ["inc-v4", "nas-large", "pnas-large"] {
+            let p = paper_profile(name).unwrap();
+            let gain = throughput(&p, Dataset::ImageNet, 1, 8)
+                / throughput(&p, Dataset::ImageNet, 1, 1);
+            assert!(gain < 1.35, "{name} MT gain {gain:.2} should be negligible");
+        }
+    }
+
+    #[test]
+    fn fig2_sm_utilization_shapes() {
+        let mob = paper_profile("mobv1-1").unwrap();
+        let inc4 = paper_profile("inc-v4").unwrap();
+        let mob_u1 = sm_utilization(&mob, Dataset::ImageNet, 1, 1);
+        let mob_u4 = sm_utilization(&mob, Dataset::ImageNet, 1, 4);
+        let inc_u1 = sm_utilization(&inc4, Dataset::ImageNet, 1, 1);
+        let inc_u4 = sm_utilization(&inc4, Dataset::ImageNet, 1, 4);
+        assert!(mob_u1 < 0.3, "one mobilenet instance must leave the GPU mostly idle");
+        assert!(mob_u4 > 2.0 * mob_u1, "co-location must raise mobilenet utilization");
+        assert!(inc_u1 > 0.5, "one inc-v4 instance occupies most of the GPU");
+        assert!(inc_u4 <= 1.0 && inc_u4 > inc_u1 * 0.9, "inc-v4 utilization saturates");
+    }
+
+    #[test]
+    fn residency_monotone_and_capped() {
+        let p = paper_profile("resv2-152").unwrap();
+        let mut prev = 0.0;
+        for b in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+            let d = residency(&p, b);
+            assert!(d >= prev && d <= 1.0);
+            prev = d;
+        }
+        assert!((residency(&p, 1) - p.r1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_monotone_in_both_knobs() {
+        for p in crate::gpusim::profiles::PAPER_DNNS {
+            let mut prev = 0.0;
+            for b in 1..=64u32 {
+                let t = batch_latency_ms(p, Dataset::ImageNet, b, 1).total_ms;
+                assert!(t > prev, "{}: latency not monotone in bs", p.name);
+                prev = t;
+            }
+            let mut prev = 0.0;
+            for n in 1..=10u32 {
+                let t = batch_latency_ms(p, Dataset::ImageNet, 1, n).total_ms;
+                assert!(t >= prev, "{}: latency not monotone in mtl", p.name);
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn mem_demand_linear() {
+        let p = paper_profile("inc-v4").unwrap();
+        let m1 = mem_demand_mb(&p, 1, 1);
+        let m2 = mem_demand_mb(&p, 1, 2);
+        assert!((m2 - 2.0 * m1).abs() < 1e-9);
+        assert!(mem_demand_mb(&p, 64, 1) > m1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Board power model (Table 6 of the paper).
+//!
+//! P40 power = 50 W idle + up to 200 W dynamic. Dynamic power tracks how
+//! busy the SMs are *and* the instruction mix (memory-bound kernels burn
+//! far less than dense GEMM — this is why Clipper pushing huge batches on
+//! a prep-bound Mobilenet barely moves power, §4.3). We model it as
+//!
+//! ```text
+//! P = idle + (max - idle) * p_dyn * busy(b, n)
+//! ```
+//!
+//! with `busy` the GPU busy-time fraction from the perf model and `p_dyn`
+//! the per-DNN instruction-mix coefficient calibrated against Table 6.
+
+use super::perf::{batch_latency_ms, compute_ms};
+use super::profiles::{Dataset, DnnProfile};
+use super::GpuSpec;
+
+/// GPU busy-time fraction at `(b, n)` (0..1).
+pub fn busy_fraction(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
+    let bd = batch_latency_ms(p, ds, b, n);
+    let own_gpu_ms = p.t_gpu_fixed_ms + compute_ms(p, ds, b);
+    ((n as f64) * own_gpu_ms / bd.total_ms).min(1.0)
+}
+
+/// Board power (W) at `(b, n)`.
+pub fn power_w(spec: &GpuSpec, p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
+    let busy = busy_fraction(p, ds, b, n);
+    spec.idle_w + (spec.max_w - spec.idle_w) * p.p_dyn * busy
+}
+
+/// Power efficiency (inferences per joule = throughput / watts).
+pub fn power_efficiency(spec: &GpuSpec, p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
+    super::perf::throughput(p, ds, b, n) / power_w(spec, p, ds, b, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::profiles::paper_profile;
+    use crate::gpusim::TESLA_P40;
+
+    #[test]
+    fn power_bounded_by_spec() {
+        for p in crate::gpusim::profiles::PAPER_DNNS {
+            for (b, n) in [(1u32, 1u32), (32, 1), (128, 1), (1, 8), (1, 10), (8, 4)] {
+                let w = power_w(&TESLA_P40, p, Dataset::ImageNet, b, n);
+                assert!(w >= TESLA_P40.idle_w - 1e-9, "{}: {w} below idle", p.name);
+                assert!(w <= TESLA_P40.max_w + 1e-9, "{}: {w} above cap", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mt_on_small_dnn_raises_power_but_efficiency_wins() {
+        // Table 6 shape: DNNScaler's MT draws more power than Clipper's
+        // batching on the same small DNN, but efficiency still improves.
+        let p = paper_profile("inc-v1").unwrap();
+        let ds = Dataset::ImageNet;
+        let p_mt = power_w(&TESLA_P40, &p, ds, 1, 8);
+        let p_batch = power_w(&TESLA_P40, &p, ds, 32, 1);
+        assert!(p_mt > p_batch, "MT must draw more power ({p_mt:.1} vs {p_batch:.1})");
+        let eff_mt = power_efficiency(&TESLA_P40, &p, ds, 1, 8);
+        let eff_batch = power_efficiency(&TESLA_P40, &p, ds, 32, 1);
+        // The paper's Table 6 gap is larger (their Clipper throughput
+        // collapses under the tight SLO); on the raw surfaces we require
+        // a clear but smaller margin.
+        assert!(
+            eff_mt > 1.2 * eff_batch,
+            "MT efficiency {eff_mt:.2} must beat batching {eff_batch:.2}"
+        );
+    }
+
+    #[test]
+    fn busy_fraction_in_unit_interval() {
+        for p in crate::gpusim::profiles::PAPER_DNNS {
+            for (b, n) in [(1u32, 1u32), (64, 2), (1, 10)] {
+                let f = busy_fraction(p, Dataset::ImageNet, b, n);
+                assert!((0.0..=1.0).contains(&f), "{}: busy {f}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prep_bound_batching_stays_near_idle() {
+        // Clipper pushing BS=128 on mobv1-025: GPU mostly waits on prep,
+        // so power stays near idle (paper: 51.8 W).
+        let p = paper_profile("mobv1-025").unwrap();
+        let w = power_w(&TESLA_P40, &p, Dataset::ImageNet, 128, 1);
+        assert!(w < 70.0, "prep-bound batching power {w:.1} should be near idle");
+    }
+}

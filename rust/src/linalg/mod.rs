@@ -1,0 +1,10 @@
+//! Minimal dense linear algebra, built from scratch for the
+//! matrix-completion substrate (DESIGN.md §3: the paper used TFOCS; we
+//! implement the SVD + soft-impute machinery ourselves rather than pulling
+//! a linear-algebra crate).
+
+pub mod matrix;
+pub mod svd;
+
+pub use matrix::Mat;
+pub use svd::{svd, Svd};

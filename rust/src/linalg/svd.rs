@@ -1,0 +1,207 @@
+//! One-sided Jacobi SVD.
+//!
+//! The matrices soft-impute decomposes here are tiny (a few dozen profiled
+//! DNNs x 10 MTL levels), so the classic one-sided Jacobi iteration —
+//! orthogonalize pairs of columns of `A` by plane rotations until
+//! convergence — is plenty: O(n^2) sweeps of O(m) rotations, numerically
+//! robust, no external dependencies.
+
+use super::matrix::Mat;
+
+/// Result of [`svd`]: `a = u * diag(s) * v^T` with `s` descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// `m x r` left singular vectors (orthonormal columns).
+    pub u: Mat,
+    /// `r` singular values, descending, non-negative.
+    pub s: Vec<f64>,
+    /// `n x r` right singular vectors (orthonormal columns).
+    pub v: Mat,
+}
+
+impl Svd {
+    /// Reconstruct `u * diag(s) * v^T`, truncated to the leading `rank`
+    /// components (rank 0 means all).
+    pub fn reconstruct(&self, rank: usize) -> Mat {
+        let r = if rank == 0 { self.s.len() } else { rank.min(self.s.len()) };
+        let m = self.u.rows();
+        let n = self.v.rows();
+        let mut out = Mat::zeros(m, n);
+        for k in 0..r {
+            let sk = self.s[k];
+            if sk == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let uik = self.u[(i, k)] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[(i, j)] += uik * self.v[(j, k)];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Compute the thin SVD of `a` (m x n, any aspect ratio) by one-sided
+/// Jacobi on the side with fewer columns.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows() < a.cols() {
+        // svd(A^T) = (V, S, U)
+        let Svd { u, s, v } = svd_tall(&a.t());
+        return Svd { u: v, s, v: u };
+    }
+    svd_tall(a)
+}
+
+/// One-sided Jacobi for m >= n: rotate columns of a working copy `w` of
+/// `a` until all column pairs are orthogonal; then s_j = ||w_j||,
+/// u_j = w_j / s_j, and the accumulated rotations give V.
+fn svd_tall(a: &Mat) -> Svd {
+    let m = a.rows();
+    let n = a.cols();
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-12;
+    let max_sweeps = 60;
+
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off = off.max(apq.abs() / (app.sqrt() * aqq.sqrt() + f64::MIN_POSITIVE));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation annihilating the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+
+    // Extract singular values and left vectors; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut vv = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (k, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(nj);
+        if nj > 0.0 {
+            for i in 0..m {
+                u[(i, k)] = w[(i, j)] / nj;
+            }
+        }
+        for i in 0..n {
+            vv[(i, k)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let d = a.sub(b).fro_norm();
+        let scale = b.fro_norm().max(1.0);
+        assert!(d / scale < tol, "fro diff {} vs scale {}", d, scale);
+    }
+
+    #[test]
+    fn reconstructs_diagonal() {
+        let a = Mat::from_rows(3, 3, &[3., 0., 0., 0., 2., 0., 0., 0., 1.]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-9);
+        assert!((d.s[1] - 2.0).abs() < 1e-9);
+        assert!((d.s[2] - 1.0).abs() < 1e-9);
+        assert_close(&d.reconstruct(0), &a, 1e-9);
+    }
+
+    #[test]
+    fn reconstructs_random_tall_and_wide() {
+        // Deterministic pseudo-random fill.
+        let mut x = 1u64;
+        let mut next = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((x >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+        };
+        for (m, n) in [(7, 4), (4, 7), (10, 10), (5, 1), (1, 5)] {
+            let data: Vec<f64> = (0..m * n).map(|_| next()).collect();
+            let a = Mat::from_rows(m, n, &data);
+            let d = svd(&a);
+            assert_close(&d.reconstruct(0), &a, 1e-8);
+            // Singular values descending and non-negative.
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(d.s.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let a = Mat::from_rows(5, 3, &[1., 2., 0., 0., 1., 1., 3., 0., 1., 1., 1., 1., 0., 2., 2.]);
+        let d = svd(&a);
+        let utu = d.u.t().matmul(&d.u);
+        let vtv = d.v.t().matmul(&d.v);
+        assert_close(&utu, &Mat::eye(3), 1e-8);
+        assert_close(&vtv, &Mat::eye(3), 1e-8);
+    }
+
+    #[test]
+    fn low_rank_truncation() {
+        // Rank-1 matrix: truncating to rank 1 must be exact.
+        let u = Mat::from_rows(4, 1, &[1., 2., 3., 4.]);
+        let v = Mat::from_rows(1, 3, &[1., 0., -1.]);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[1] < 1e-9 * d.s[0].max(1.0));
+        assert_close(&d.reconstruct(1), &a, 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(3, 2);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&s| s == 0.0));
+        assert_close(&d.reconstruct(0), &a, 1e-12);
+    }
+}

@@ -1,0 +1,371 @@
+//! `dnnscaler` — CLI for the DNNScaler reproduction.
+//!
+//! Subcommands map onto the paper's workflow:
+//!
+//! * `zoo` — list calibrated paper DNNs and exported AOT artifacts;
+//! * `profile` — run the Profiler on one DNN (Table 5 rows);
+//! * `job` — run one Table 4 job end-to-end (DNNScaler vs Clipper);
+//! * `jobs` — run the full 30-job workload (Fig. 5 summary);
+//! * `sweep` — throughput/latency vs BS or MTL (Fig. 1 curves);
+//! * `serve` — real-mode serving of an AOT artifact over PJRT.
+//!
+//! Argument parsing is hand-rolled (this build is fully offline; see
+//! Cargo.toml) — `--key value` flags after the subcommand.
+
+use anyhow::{anyhow, bail, Result};
+
+use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
+use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::{Method, Profiler};
+use dnnscaler::device::real::RealDevice;
+use dnnscaler::gpusim::{Dataset, GpuSim, PAPER_DNNS};
+use dnnscaler::manifest::Manifest;
+use dnnscaler::metrics::report::{f1, f2};
+use dnnscaler::metrics::Table;
+
+const USAGE: &str = "\
+dnnscaler — Batching or Multi-Tenancy? (CS.DC 2023 reproduction)
+
+USAGE: dnnscaler <COMMAND> [--flag value ...]
+
+COMMANDS:
+  zoo      [--artifacts DIR]
+           List calibrated paper DNNs and exported AOT artifacts.
+  profile  --dnn NAME [--dataset DS] [--seed N]
+           Run the Profiler on one paper DNN (simulated P40).
+  job      --id 1..30 [--windows N] [--seed N] [--trace]
+           Run one Table 4 job: DNNScaler vs Clipper.
+  jobs     [--windows N] [--seed N]
+           Run the full 30-job workload (Fig. 5 summary).
+  sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
+           Throughput/latency sweep over one knob (Fig. 1 curves).
+  serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
+           Serve a real AOT artifact over PJRT with DNNScaler.
+
+Datasets: imagenet caltech sentiment140 imdb ledov dhf1k librispeech
+";
+
+/// Tiny `--key value` flag parser (flags without value become `true`).
+struct Flags(Vec<(String, String)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}\n\n{USAGE}"))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.push((key.to_string(), args[i + 1].clone()));
+                i += 2;
+            } else {
+                out.push((key.to_string(), "true".to_string()));
+                i += 1;
+            }
+        }
+        Ok(Flags(out))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn parse_dataset(s: &str) -> Result<Dataset> {
+    Dataset::parse(s).ok_or_else(|| anyhow!("unknown dataset {s:?}"))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "zoo" => cmd_zoo(&flags.str_or("artifacts", "artifacts")),
+        "profile" => {
+            let dnn = flags.get("dnn").ok_or_else(|| anyhow!("profile needs --dnn"))?;
+            cmd_profile(dnn, &flags.str_or("dataset", "imagenet"), flags.num_or("seed", 42u64)?)
+        }
+        "job" => cmd_job(
+            flags.num_or("id", 0u32).and_then(|id| {
+                if id == 0 {
+                    bail!("job needs --id 1..30")
+                } else {
+                    Ok(id)
+                }
+            })?,
+            flags.num_or("windows", 60usize)?,
+            flags.num_or("seed", 42u64)?,
+            flags.has("trace"),
+        ),
+        "jobs" => cmd_jobs(flags.num_or("windows", 40usize)?, flags.num_or("seed", 42u64)?),
+        "sweep" => {
+            let dnn = flags.get("dnn").ok_or_else(|| anyhow!("sweep needs --dnn"))?;
+            cmd_sweep(dnn, &flags.str_or("dataset", "imagenet"), &flags.str_or("knob", "bs"))
+        }
+        "serve" => cmd_serve(
+            &flags.str_or("model", "mobv1-025"),
+            flags.num_or("slo", 50.0f64)?,
+            &flags.str_or("artifacts", "artifacts"),
+            flags.num_or("windows", 20usize)?,
+        ),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+}
+
+fn cmd_zoo(artifacts: &str) -> Result<()> {
+    let mut t = Table::new(
+        "Calibrated paper DNNs (gpusim)",
+        &["dnn", "weights(MB)", "bsat", "r1", "prep(ms)", "kappa"],
+    );
+    for p in PAPER_DNNS {
+        t.row(&[
+            p.name.into(),
+            f1(p.weight_mb),
+            f1(p.bsat),
+            f2(p.r1),
+            f2(p.t_prep_ms),
+            f2(p.kappa),
+        ]);
+    }
+    print!("{}", t.render());
+
+    match Manifest::load(artifacts) {
+        Ok(m) => {
+            let mut t = Table::new(
+                "AOT artifacts (real mode)",
+                &["model", "batch sizes", "params", "analogue"],
+            );
+            for model in m.models() {
+                let sizes = m.batch_sizes(&model);
+                let e = m.get(&model, sizes[0]).unwrap();
+                t.row(&[
+                    model.clone(),
+                    format!("{sizes:?}"),
+                    e.param_count.to_string(),
+                    e.paper_analogue.clone(),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        Err(e) => println!("(no artifacts: {e})"),
+    }
+    Ok(())
+}
+
+fn cmd_profile(dnn: &str, dataset: &str, seed: u64) -> Result<()> {
+    let ds = parse_dataset(dataset)?;
+    let mut sim = GpuSim::for_paper_dnn(dnn, ds, seed)
+        .ok_or_else(|| anyhow!("unknown DNN {dnn:?} (see `dnnscaler zoo`)"))?;
+    let out = Profiler::default().run(&mut sim).map_err(|e| anyhow!(e.to_string()))?;
+    println!("DNN {dnn} on {}:", ds.name());
+    println!("  base throughput  {:>9.2} inf/s (lat {:.2} ms)", out.thr_base, out.lat_base_ms);
+    println!("  BS=32 throughput {:>9.2} inf/s -> TI_B  = {:>7.2}%", out.thr_batch, out.ti_b);
+    println!("  MTL=8 throughput {:>9.2} inf/s -> TI_MT = {:>7.2}%", out.thr_mt, out.ti_mt);
+    println!("  method: {:?} (profiling overhead {:.0} ms)", out.method, out.overhead_ms);
+    Ok(())
+}
+
+fn run_job_pair(
+    job: &JobSpec,
+    windows: usize,
+    seed: u64,
+) -> Result<(dnnscaler::JobOutcome, dnnscaler::JobOutcome)> {
+    let cfg = RunConfig::windows(windows, 20);
+    let runner = JobRunner::new(cfg);
+    let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed)
+        .ok_or_else(|| anyhow!("unknown DNN {:?}", job.dnn))?;
+    let scaler = runner.run_dnnscaler(job, &mut d1).map_err(|e| anyhow!(e.to_string()))?;
+    let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed + 1).unwrap();
+    let clipper = runner.run_clipper(job, &mut d2).map_err(|e| anyhow!(e.to_string()))?;
+    Ok((scaler, clipper))
+}
+
+fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool) -> Result<()> {
+    let job = paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30"))?;
+    let (scaler, clipper) = run_job_pair(job, windows, seed)?;
+    println!(
+        "Job {} ({} on {}, SLO {} ms): paper method {:?}",
+        job.id,
+        job.dnn,
+        job.dataset.name(),
+        job.slo_ms,
+        job.paper_method
+    );
+    for o in [&scaler, &clipper] {
+        println!(
+            "  {:<10} thr {:>9.2} inf/s  p95 {:>8.2} ms  SLO-attain {:>5.1}%  power {:>6.1} W  knob bs={} mtl={}",
+            o.controller,
+            o.throughput,
+            o.p95_ms,
+            o.slo_attainment * 100.0,
+            o.power_w,
+            o.steady_bs,
+            o.steady_mtl
+        );
+    }
+    println!(
+        "  speedup: {:.2}x (method chosen: {:?})",
+        scaler.throughput / clipper.throughput,
+        scaler.method.unwrap()
+    );
+    if trace {
+        for r in &scaler.trace {
+            println!(
+                "    w{:03} bs={} mtl={} p95={:.2} slo={:.0} thr={:.1}",
+                r.window, r.bs, r.mtl, r.p95_ms, r.slo_ms, r.throughput
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_jobs(windows: usize, seed: u64) -> Result<()> {
+    let mut t = Table::new(
+        "All 30 jobs: DNNScaler vs Clipper (Fig. 5)",
+        &["job", "dnn", "method", "paper", "knob", "scaler thr", "clipper thr", "speedup", "attain%"],
+    );
+    let mut sum_gain = 0.0;
+    let mut max_gain: (f64, u32) = (0.0, 0);
+    let mut method_hits = 0;
+    for job in PAPER_JOBS {
+        let (scaler, clipper) = run_job_pair(job, windows, seed)?;
+        let gain = scaler.throughput / clipper.throughput;
+        sum_gain += gain;
+        if gain > max_gain.0 {
+            max_gain = (gain, job.id);
+        }
+        let method = scaler.method.unwrap();
+        if method == job.paper_method {
+            method_hits += 1;
+        }
+        let knob = match method {
+            Method::Batching => format!("BS={}", scaler.steady_bs),
+            Method::MultiTenancy => format!("MTL={}", scaler.steady_mtl),
+        };
+        t.row(&[
+            job.id.to_string(),
+            job.dnn.into(),
+            method.short().into(),
+            job.paper_method.short().into(),
+            knob,
+            f1(scaler.throughput),
+            f1(clipper.throughput),
+            f2(gain),
+            f1(scaler.slo_attainment * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "method agreement with Table 4: {}/30; mean speedup {:.2}x; max {:.2}x (job {})",
+        method_hits,
+        sum_gain / PAPER_JOBS.len() as f64,
+        max_gain.0,
+        max_gain.1
+    );
+    Ok(())
+}
+
+fn cmd_sweep(dnn: &str, dataset: &str, knob: &str) -> Result<()> {
+    let ds = parse_dataset(dataset)?;
+    let sim = GpuSim::for_paper_dnn(dnn, ds, 0).ok_or_else(|| anyhow!("unknown DNN {dnn:?}"))?;
+    match knob {
+        "bs" => {
+            let mut t = Table::new(
+                &format!("{dnn}: Batching sweep (Fig. 1a/1c)"),
+                &["bs", "throughput", "latency(ms)", "power(W)", "sm util"],
+            );
+            for bs in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+                t.row(&[
+                    bs.to_string(),
+                    f1(sim.throughput(bs, 1)),
+                    f2(sim.mean_batch_latency_ms(bs, 1)),
+                    f1(sim.power_w(bs, 1)),
+                    f2(sim.sm_utilization(bs, 1)),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "mtl" => {
+            let mut t = Table::new(
+                &format!("{dnn}: Multi-Tenancy sweep (Fig. 1b/1d)"),
+                &["mtl", "throughput", "latency(ms)", "power(W)", "sm util"],
+            );
+            for n in 1..=10u32 {
+                t.row(&[
+                    n.to_string(),
+                    f1(sim.throughput(1, n)),
+                    f2(sim.mean_batch_latency_ms(1, n)),
+                    f1(sim.power_w(1, n)),
+                    f2(sim.sm_utilization(1, n)),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        other => return Err(anyhow!("knob must be `bs` or `mtl`, got {other:?}")),
+    }
+    Ok(())
+}
+
+fn cmd_serve(model: &str, slo: f64, artifacts: &str, windows: usize) -> Result<()> {
+    let mut dev = RealDevice::open(artifacts, model)?;
+    println!("loaded {model} (max BS {})", dev.max_batch_size());
+    let job = JobSpec {
+        id: 0,
+        dnn: Box::leak(model.to_string().into_boxed_str()),
+        dataset: Dataset::Synthetic,
+        slo_ms: slo,
+        paper_method: Method::Batching,
+        paper_steady: dnnscaler::coordinator::job::SteadyKnob::Bs(1),
+    };
+    let max_bs = dev.max_batch_size();
+    let cfg = RunConfig {
+        windows,
+        rounds_per_window: 10,
+        max_bs,
+        probe_bs: 8.min(max_bs),
+        probe_mtl: 4,
+        ..Default::default()
+    };
+    let out = JobRunner::new(cfg)
+        .run_dnnscaler(&job, &mut dev)
+        .map_err(|e| anyhow!(e.to_string()))?;
+    println!(
+        "served: method {:?}, steady bs={} mtl={}, throughput {:.1} inf/s, p95 {:.2} ms, SLO attainment {:.1}%",
+        out.method.unwrap(),
+        out.steady_bs,
+        out.steady_mtl,
+        out.throughput,
+        out.p95_ms,
+        out.slo_attainment * 100.0
+    );
+    for (bs, ms) in dev.pool().compile_report() {
+        println!("  compiled bs={bs} in {ms:.0} ms (once)");
+    }
+    Ok(())
+}

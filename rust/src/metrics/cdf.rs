@@ -1,0 +1,160 @@
+//! Weighted latency CDF (Fig. 6 of the paper).
+//!
+//! Batches contribute their latency once per request they carried, so CDF
+//! points are (latency, weight) pairs.
+
+/// Cumulative distribution over weighted samples.
+#[derive(Debug, Clone, Default)]
+pub struct WeightedCdf {
+    samples: Vec<(f64, f64)>,
+    sorted: bool,
+}
+
+impl WeightedCdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: &[(f64, f64)]) -> Self {
+        let mut c = Self::new();
+        for &(v, w) in samples {
+            c.add(v, w);
+        }
+        c
+    }
+
+    /// Add a sample with weight `w` (> 0).
+    pub fn add(&mut self, value: f64, w: f64) {
+        assert!(w > 0.0, "weight must be positive");
+        self.samples.push((value, w));
+        self.sorted = false;
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.samples.iter().map(|(_, w)| w).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Weighted quantile (`q` in [0,1]): smallest value v such that the
+    /// cumulative weight of samples <= v reaches q * total.
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        self.ensure_sorted();
+        let target = q.clamp(0.0, 1.0) * self.total_weight();
+        let mut acc = 0.0;
+        for &(v, w) in &self.samples {
+            acc += w;
+            if acc >= target {
+                return Some(v);
+            }
+        }
+        Some(self.samples.last().unwrap().0)
+    }
+
+    /// Fraction of weight at or below `value`.
+    pub fn fraction_below(&mut self, value: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let total = self.total_weight();
+        let mut acc = 0.0;
+        for &(v, w) in &self.samples {
+            if v > value {
+                break;
+            }
+            acc += w;
+        }
+        acc / total
+    }
+
+    /// `n` evenly spaced CDF points `(value, cumulative_fraction)` for
+    /// plotting (Fig. 6 series).
+    pub fn curve(&mut self, n: usize) -> Vec<(f64, f64)> {
+        if self.samples.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        self.ensure_sorted();
+        let total = self.total_weight();
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        let mut next_i = 0usize;
+        for &(v, w) in &self.samples {
+            acc += w;
+            let frac = acc / total;
+            while next_i < n && frac >= (next_i + 1) as f64 / n as f64 - 1e-12 {
+                out.push((v, frac));
+                next_i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unweighted_quantiles() {
+        let mut c = WeightedCdf::new();
+        for i in 1..=100 {
+            c.add(i as f64, 1.0);
+        }
+        assert_eq!(c.quantile(0.95), Some(95.0));
+        assert_eq!(c.quantile(0.0), Some(1.0));
+        assert_eq!(c.quantile(1.0), Some(100.0));
+    }
+
+    #[test]
+    fn weights_shift_quantiles() {
+        let mut c = WeightedCdf::new();
+        c.add(1.0, 95.0);
+        c.add(100.0, 5.0);
+        assert_eq!(c.quantile(0.95), Some(1.0));
+        assert_eq!(c.quantile(0.96), Some(100.0));
+        assert!((c.fraction_below(1.0) - 0.95).abs() < 1e-12);
+        assert!((c.fraction_below(0.5) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_monotone() {
+        let mut c = WeightedCdf::new();
+        for i in 0..50 {
+            c.add((i * 7 % 13) as f64, 1.0 + (i % 3) as f64);
+        }
+        let pts = c.curve(10);
+        assert!(!pts.is_empty());
+        for w in pts.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_cdf() {
+        let mut c = WeightedCdf::new();
+        assert_eq!(c.quantile(0.5), None);
+        assert!(c.curve(5).is_empty());
+        assert_eq!(c.fraction_below(1.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_rejected() {
+        WeightedCdf::new().add(1.0, 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics and reporting: percentiles, weighted CDFs, and the table/CSV
+//! writers the benches use to regenerate the paper's figures.
+
+pub mod cdf;
+pub mod report;
+
+pub use cdf::WeightedCdf;
+pub use report::{csv_writer, Table};

@@ -1,0 +1,152 @@
+//! PJRT client wrapper: compile-once, execute-many.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::{ArtifactEntry, Manifest};
+
+/// A PJRT client plus compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client (the request-path runtime).
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    /// Backend platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one artifact. Compilation happens exactly once
+    /// per (model, batch size); the returned handle is reused for every
+    /// request batch.
+    pub fn load(&self, manifest: &Manifest, entry: &ArtifactEntry) -> Result<LoadedModel> {
+        let path = manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(LoadedModel {
+            exe,
+            entry: entry.clone(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1000.0,
+        })
+    }
+}
+
+/// A compiled executable for one `(model, batch_size)` artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ArtifactEntry,
+    /// One-time compile latency (ms), reported in EXPERIMENTS.md.
+    pub compile_ms: f64,
+}
+
+impl LoadedModel {
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Execute one batch. `input` must hold exactly the artifact's input
+    /// element count (batch already included). Returns the flat logits.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want = self.entry.input_elems();
+        if input.len() != want {
+            return Err(anyhow!(
+                "{} bs{}: input has {} elements, artifact wants {}",
+                self.entry.model,
+                self.entry.batch_size,
+                input.len(),
+                want
+            ));
+        }
+        let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input to {:?}: {e:?}", dims))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if values.len() != self.entry.output_elems() {
+            return Err(anyhow!(
+                "output has {} elements, expected {}",
+                values.len(),
+                self.entry.output_elems()
+            ));
+        }
+        Ok(values)
+    }
+
+    /// Execute and time one batch; returns (logits, latency ms).
+    pub fn execute_timed(&self, input: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let out = self.execute(input)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1000.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_and_execute_real_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.get("mobv1-025", 1).expect("mobv1-025 bs1 exported");
+        let engine = Engine::cpu().unwrap();
+        let model = engine.load(&manifest, entry).unwrap();
+        assert!(model.compile_ms > 0.0);
+
+        let input = vec![0.5f32; entry.input_elems()];
+        let out = model.execute(&input).unwrap();
+        assert_eq!(out.len(), entry.output_elems());
+        assert!(out.iter().all(|v| v.is_finite()));
+
+        // Determinism: same input, same logits.
+        let out2 = model.execute(&input).unwrap();
+        assert_eq!(out, out2);
+
+        // Different input must change the logits.
+        let input3 = vec![-0.5f32; entry.input_elems()];
+        let out3 = model.execute(&input3).unwrap();
+        assert_ne!(out, out3);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_input_len() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.get("mobv1-025", 1).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let model = engine.load(&manifest, entry).unwrap();
+        assert!(model.execute(&[0.0f32; 7]).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Synthetic input tensors for the real-execution path.
+//!
+//! The paper feeds datasets (ImageNet/Caltech/...) whose *contents* don't
+//! affect serving behaviour — only their shapes and prep costs do (which
+//! the workload module models). For real PJRT execution we synthesize
+//! deterministic pseudo-random tensors so runs are reproducible without
+//! shipping datasets.
+
+/// Deterministic xorshift-based tensor filler in [-1, 1).
+pub struct InputSynth {
+    state: u64,
+}
+
+impl InputSynth {
+    pub fn new(seed: u64) -> Self {
+        InputSynth { state: seed.max(1) }
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Next f32 in [-1, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // Top 23 bits -> [0, 1) at f32 precision -> [-1, 1).
+        ((self.next_u64() >> 41) as f32 / (1u64 << 23) as f32) * 2.0 - 1.0
+    }
+
+    /// Fill a buffer of `n` elements.
+    pub fn tensor(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_f32()).collect()
+    }
+
+    /// Fill an existing buffer in place (hot-path friendly, no alloc).
+    pub fn fill(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let mut a = InputSynth::new(42);
+        let mut b = InputSynth::new(42);
+        let ta = a.tensor(1000);
+        let tb = b.tensor(1000);
+        assert_eq!(ta, tb);
+        assert!(ta.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let ta = InputSynth::new(1).tensor(100);
+        let tb = InputSynth::new(2).tensor(100);
+        assert_ne!(ta, tb);
+    }
+
+    #[test]
+    fn fill_matches_tensor() {
+        let mut a = InputSynth::new(7);
+        let mut b = InputSynth::new(7);
+        let t = a.tensor(64);
+        let mut buf = vec![0.0; 64];
+        b.fill(&mut buf);
+        assert_eq!(t, buf);
+    }
+
+    #[test]
+    fn values_not_degenerate() {
+        let t = InputSynth::new(3).tensor(10000);
+        let mean: f32 = t.iter().sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        let frac_pos = t.iter().filter(|v| **v > 0.0).count() as f32 / t.len() as f32;
+        assert!((0.45..0.55).contains(&frac_pos));
+    }
+}

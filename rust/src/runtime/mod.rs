@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the only place the crate touches XLA. Artifacts are produced
+//! once by `make artifacts` (python/jax/pallas); here we parse the HLO
+//! text (`HloModuleProto::from_text_file` — text, not serialized proto,
+//! reassigns instruction ids and sidesteps the 64-bit-id incompatibility
+//! between jax >= 0.5 and xla_extension 0.5.1), compile it once per
+//! `(model, batch_size)` on the PJRT CPU client, and execute it from the
+//! serving hot path with zero python involvement.
+
+pub mod engine;
+pub mod input;
+pub mod pool;
+
+pub use engine::{Engine, LoadedModel};
+pub use pool::ExecutorPool;

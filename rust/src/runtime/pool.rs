@@ -1,0 +1,174 @@
+//! Executor pool: the real-mode analogue of multi-tenancy.
+//!
+//! On the paper's GPU, MTL = N means N TF processes sharing one device.
+//! Here each "instance" is a compiled PJRT executable; `execute_round`
+//! runs one batch per live instance. On this single-core CPU host the
+//! executions time-share exactly like SM-saturated co-location on the
+//! P40, which is the honest analogue (DESIGN.md §3).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::Manifest;
+use crate::runtime::engine::{Engine, LoadedModel};
+use crate::runtime::input::InputSynth;
+
+/// A pool of co-located instances of one model plus a batch-size cache.
+pub struct ExecutorPool {
+    engine: Engine,
+    manifest: Manifest,
+    model: String,
+    /// Compiled executables keyed by batch size (compile-once cache).
+    compiled: BTreeMap<usize, LoadedModel>,
+    /// Number of live co-located instances.
+    instances: usize,
+    synth: InputSynth,
+    input_buf: Vec<f32>,
+}
+
+impl ExecutorPool {
+    /// Build a pool for `model`, pre-compiling the smallest batch size.
+    pub fn new(manifest: Manifest, model: &str) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let sizes = manifest.batch_sizes(model);
+        if sizes.is_empty() {
+            return Err(anyhow!("model {model} not in manifest (have {:?})", manifest.models()));
+        }
+        let mut pool = ExecutorPool {
+            engine,
+            manifest,
+            model: model.to_string(),
+            compiled: BTreeMap::new(),
+            instances: 1,
+            synth: InputSynth::new(0xD11A5CA1E5),
+            input_buf: Vec::new(),
+        };
+        pool.ensure_compiled(sizes[0])?;
+        Ok(pool)
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn instances(&self) -> usize {
+        self.instances
+    }
+
+    /// Batch sizes with exported artifacts.
+    pub fn available_batch_sizes(&self) -> Vec<usize> {
+        self.manifest.batch_sizes(&self.model)
+    }
+
+    /// Largest exported batch size (the real-mode `maxBS`).
+    pub fn max_batch_size(&self) -> usize {
+        *self.available_batch_sizes().last().unwrap_or(&1)
+    }
+
+    /// Set the number of co-located instances.
+    pub fn set_instances(&mut self, n: usize) {
+        self.instances = n.max(1);
+    }
+
+    /// Compile (and cache) the artifact that serves batches of `bs`.
+    /// Returns the artifact batch size actually used (next size up —
+    /// dynamic batch sizing pads to the nearest exported size, which is
+    /// how the paper's "dynamic batch sizing with negligible overhead"
+    /// maps onto AOT executables).
+    pub fn ensure_compiled(&mut self, bs: usize) -> Result<usize> {
+        let entry = self
+            .manifest
+            .best_fit(&self.model, bs)
+            .ok_or_else(|| anyhow!("{}: no artifact for bs >= {bs}", self.model))?
+            .clone();
+        let abs = entry.batch_size;
+        if !self.compiled.contains_key(&abs) {
+            let loaded = self.engine.load(&self.manifest, &entry)?;
+            self.compiled.insert(abs, loaded);
+        }
+        Ok(abs)
+    }
+
+    /// Execute one round: every live instance runs one batch of `bs`
+    /// requests. Returns per-instance wall latencies (ms). The wall time
+    /// of the round is their sum (single-queue time-sharing).
+    pub fn execute_round(&mut self, bs: usize) -> Result<Vec<f64>> {
+        let abs = self.ensure_compiled(bs)?;
+        let model = &self.compiled[&abs];
+        let elems = model.entry().input_elems();
+        if self.input_buf.len() != elems {
+            self.input_buf.resize(elems, 0.0);
+        }
+        let mut lats = Vec::with_capacity(self.instances);
+        let round0 = std::time::Instant::now();
+        for _ in 0..self.instances {
+            self.synth.fill(&mut self.input_buf);
+            let (_out, _ms) = model.execute_timed(&self.input_buf)?;
+            // Under time-sharing every co-located instance's request
+            // completes only when its slot finishes; observed latency for
+            // instance i is the elapsed wall time so far this round.
+            lats.push(round0.elapsed().as_secs_f64() * 1000.0);
+        }
+        Ok(lats)
+    }
+
+    /// One-time compile latencies observed so far, keyed by batch size.
+    pub fn compile_report(&self) -> Vec<(usize, f64)> {
+        self.compiled.iter().map(|(bs, m)| (*bs, m.compile_ms)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn pool_round_and_mtl() {
+        let Some(m) = manifest() else { return };
+        let mut pool = ExecutorPool::new(m, "mobv1-025").unwrap();
+        assert_eq!(pool.instances(), 1);
+        let l1 = pool.execute_round(1).unwrap();
+        assert_eq!(l1.len(), 1);
+        assert!(l1[0] > 0.0);
+
+        pool.set_instances(3);
+        let l3 = pool.execute_round(1).unwrap();
+        assert_eq!(l3.len(), 3);
+        // Time-sharing: later instances observe strictly growing latency.
+        assert!(l3[0] <= l3[1] && l3[1] <= l3[2]);
+    }
+
+    #[test]
+    fn pool_pads_to_best_fit() {
+        let Some(m) = manifest() else { return };
+        let mut pool = ExecutorPool::new(m, "mobv1-025").unwrap();
+        // bs=3 is not exported; best-fit should pick 4.
+        let abs = pool.ensure_compiled(3).unwrap();
+        assert_eq!(abs, 4);
+        assert!(pool.execute_round(3).is_ok());
+    }
+
+    #[test]
+    fn pool_rejects_unknown_model() {
+        let Some(m) = manifest() else { return };
+        assert!(ExecutorPool::new(m, "not-a-model").is_err());
+    }
+
+    #[test]
+    fn pool_rejects_oversized_batch() {
+        let Some(m) = manifest() else { return };
+        let mut pool = ExecutorPool::new(m, "mobv1-025").unwrap();
+        let max = pool.max_batch_size();
+        assert!(pool.ensure_compiled(max + 1).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generation: request arrival processes and dataset models.
+//!
+//! The paper serves closed-loop streams from real datasets; §3.3 also
+//! claims DNNScaler "can quickly respond to bursty workloads" (citing
+//! AWS-style bursty inference arrivals). This module provides open-loop
+//! Poisson and burst arrival generators plus a queue so examples and
+//! benches can exercise that claim, and dataset descriptors whose prep
+//! costs feed the simulator.
+
+pub mod generator;
+pub mod queue;
+
+pub use generator::{ArrivalGenerator, ArrivalPattern};
+pub use queue::RequestQueue;

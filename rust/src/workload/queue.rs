@@ -1,0 +1,99 @@
+//! Request queue for open-loop serving: arrivals wait here until the
+//! batcher drains them, so queueing delay is part of observed latency.
+
+use std::collections::VecDeque;
+
+/// A pending inference request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival timestamp, seconds.
+    pub arrival_s: f64,
+}
+
+/// FIFO request queue with batch draining.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    q: VecDeque<Request>,
+    next_id: u64,
+    /// High-water mark (backpressure signal).
+    pub max_depth: usize,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue one arrival.
+    pub fn push(&mut self, arrival_s: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.q.push_back(Request { id, arrival_s });
+        self.max_depth = self.max_depth.max(self.q.len());
+        id
+    }
+
+    /// Enqueue many arrivals.
+    pub fn extend(&mut self, arrivals: impl IntoIterator<Item = f64>) {
+        for a in arrivals {
+            self.push(a);
+        }
+    }
+
+    /// Drain up to `bs` requests for one batch (FIFO order).
+    pub fn take_batch(&mut self, bs: usize) -> Vec<Request> {
+        let n = bs.min(self.q.len());
+        self.q.drain(..n).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Oldest waiting request's arrival time, if any.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.q.front().map(|r| r.arrival_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut q = RequestQueue::new();
+        q.extend([0.1, 0.2, 0.3]);
+        assert_eq!(q.len(), 3);
+        let b = q.take_batch(2);
+        assert_eq!(b[0].id, 0);
+        assert_eq!(b[1].id, 1);
+        assert_eq!(b[0].arrival_s, 0.1);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.oldest_arrival(), Some(0.3));
+    }
+
+    #[test]
+    fn take_more_than_available() {
+        let mut q = RequestQueue::new();
+        q.push(1.0);
+        let b = q.take_batch(10);
+        assert_eq!(b.len(), 1);
+        assert!(q.is_empty());
+        assert!(q.take_batch(4).is_empty());
+    }
+
+    #[test]
+    fn high_water_mark() {
+        let mut q = RequestQueue::new();
+        q.extend([1.0, 2.0, 3.0, 4.0]);
+        q.take_batch(4);
+        q.push(5.0);
+        assert_eq!(q.max_depth, 4);
+    }
+}

@@ -1,0 +1,381 @@
+//! Property-based tests over the coordinator invariants (hand-rolled
+//! generator loop — this build is offline, so no proptest crate; the
+//! shrink-free seeded-case pattern below covers the same ground).
+//!
+//! Each property runs a few hundred randomized cases derived from a
+//! deterministic RNG, so failures are reproducible from the printed seed.
+
+use dnnscaler::coordinator::clipper::Clipper;
+use dnnscaler::coordinator::latency::LatencyWindow;
+use dnnscaler::coordinator::matcomp::{pick_mtl, LatencyLibrary};
+use dnnscaler::coordinator::scaler_batching::BatchScaler;
+use dnnscaler::coordinator::scaler_mt::MtScaler;
+use dnnscaler::coordinator::{Controller, MAX_BS, MAX_MTL};
+use dnnscaler::gpusim::{perf, Dataset, DnnProfile};
+use dnnscaler::json;
+use dnnscaler::linalg::{svd, Mat};
+use dnnscaler::metrics::WeightedCdf;
+use dnnscaler::rng::Rng;
+use dnnscaler::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
+
+/// Run `cases` seeded property cases.
+fn forall(cases: u64, mut body: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        body(seed, &mut rng);
+    }
+}
+
+/// Random-but-physical DNN profile.
+fn random_profile(rng: &mut Rng) -> DnnProfile {
+    let mut p = dnnscaler::gpusim::paper_profile("inc-v1").unwrap();
+    p.weight_mb = rng.uniform_range(1.0, 400.0);
+    p.t_fl_ms = rng.uniform_range(0.01, 5.0);
+    p.bsat = rng.uniform_range(1.0, 40.0);
+    p.r1 = rng.uniform_range(0.05, 1.0);
+    p.t_gpu_fixed_ms = rng.uniform_range(0.1, 3.0);
+    p.t_prep_ms = rng.uniform_range(0.05, 50.0);
+    p.prep_growth = rng.uniform_range(0.0, 0.01);
+    p.kappa = rng.uniform_range(0.0, 0.5);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Batch scaler properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_scaler_stays_in_bounds_under_adversarial_p95() {
+    forall(300, |seed, rng| {
+        let mut s = BatchScaler::new();
+        for _ in 0..100 {
+            let p95 = if rng.chance(0.5) { rng.uniform_range(0.0, 1e5) } else { f64::INFINITY };
+            let d = s.observe_window(p95, rng.uniform_range(1.0, 1e4));
+            assert!((1..=MAX_BS).contains(&d.bs), "seed {seed}: bs {}", d.bs);
+            assert_eq!(d.mtl, 1);
+        }
+    });
+}
+
+#[test]
+fn prop_batch_scaler_converges_to_feasible_knee() {
+    // For any monotone latency curve lat(b) = a*b + c with a feasible
+    // region, the scaler must settle at an SLO-compliant batch size that
+    // is at least alpha-efficient (within the hysteresis band of the
+    // knee) in O(log MAX_BS) moves.
+    forall(200, |seed, rng| {
+        let a = rng.uniform_range(0.05, 5.0);
+        let c = rng.uniform_range(0.0, 10.0);
+        let slo = rng.uniform_range(c + a * 1.5, c + a * 200.0);
+        let lat = |b: u32| a * b as f64 + c;
+        let mut s = BatchScaler::new();
+        let mut moves = 0;
+        for _ in 0..40 {
+            let bs = s.batch_size();
+            if s.observe_window(lat(bs), slo).changed {
+                moves += 1;
+            }
+        }
+        let bs = s.batch_size();
+        assert!(lat(bs) <= slo * 1.0001, "seed {seed}: settled on violation (bs={bs})");
+        // Either the knee is reached (next step violates / at cap) or we
+        // are inside the alpha band.
+        let next_violates = bs == MAX_BS || lat(bs + (bs).max(1)) > slo;
+        let in_band = lat(bs) >= 0.85 * slo * 0.5; // loose efficiency floor
+        assert!(next_violates || in_band, "seed {seed}: bs {bs} left too much headroom");
+        assert!(moves <= 2 * 7 + 6, "seed {seed}: {moves} moves for a 7-bit search");
+    });
+}
+
+#[test]
+fn prop_batch_scaler_tracks_any_slo_change() {
+    forall(100, |seed, rng| {
+        let a = rng.uniform_range(0.1, 3.0);
+        let lat = |b: u32| a * b as f64;
+        let slo1 = rng.uniform_range(a * 2.0, a * 128.0);
+        let slo2 = rng.uniform_range(a * 2.0, a * 128.0);
+        let mut s = BatchScaler::new();
+        for _ in 0..30 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), slo1);
+        }
+        for _ in 0..30 {
+            let bs = s.batch_size();
+            s.observe_window(lat(bs), slo2);
+        }
+        let bs = s.batch_size();
+        // Within one knob step of compliance: when no batch size lands in
+        // the [alpha*SLO, SLO] band (knob quantization coarser than the
+        // band) the controller legitimately oscillates bs* <-> bs*+1.
+        assert!(
+            lat(bs) <= slo2 || lat(bs.saturating_sub(1).max(1)) <= slo2,
+            "seed {seed}: p95 {} > SLO2 {} beyond one step",
+            lat(bs),
+            slo2
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// MT scaler / AIMD properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mt_scaler_bounds_and_aimd_feasibility() {
+    forall(200, |seed, rng| {
+        let base = rng.uniform_range(1.0, 50.0);
+        let slope = rng.uniform_range(0.0, 1.0);
+        let lat = |n: u32| base * (1.0 + slope * (n - 1) as f64);
+        let slo = rng.uniform_range(base * 1.01, base * 12.0);
+        let mut s = MtScaler::unseeded(rng.below(10) as u32 + 1, MAX_MTL);
+        for _ in 0..30 {
+            let n = s.mtl();
+            let d = s.observe_window(lat(n), slo);
+            assert!((1..=MAX_MTL).contains(&d.mtl), "seed {seed}");
+        }
+        let n = s.mtl();
+        // Feasible within one AIMD step: when the feasible knee sits
+        // below the alpha band the controller legitimately oscillates
+        // n* <-> n*+1 (the paper's Algorithm 1 does the same).
+        assert!(
+            lat(n) <= slo || n == 1 || lat(n - 1) <= slo,
+            "seed {seed}: mtl {n} more than one step above feasibility"
+        );
+        // Efficient: adding one more would violate, or at the cap, or in
+        // the alpha band.
+        let maxed = n == MAX_MTL || lat(n + 1) > slo || lat(n) >= 0.85 * slo;
+        assert!(maxed, "seed {seed}: mtl {n} leaves headroom (lat {} slo {slo})", lat(n));
+    });
+}
+
+#[test]
+fn prop_matcomp_estimates_physical() {
+    // For any target curve drawn from the same family as the library,
+    // completion must return positive, monotone estimates that pin the
+    // observations exactly.
+    forall(100, |seed, rng| {
+        let lib_rows: Vec<Vec<f64>> = (0..6)
+            .map(|_| {
+                let k = rng.uniform_range(0.02, 0.9);
+                (0..10).map(|j| 1.0 + k * j as f64).collect()
+            })
+            .collect();
+        let lib = LatencyLibrary::from_rows(lib_rows);
+        let base = rng.uniform_range(1.0, 100.0);
+        let k = rng.uniform_range(0.02, 0.9);
+        let truth: Vec<f64> = (0..10).map(|j| base * (1.0 + k * j as f64)).collect();
+        let est = lib.complete(&[(1, truth[0]), (8, truth[7])]);
+        assert_eq!(est.len(), 10);
+        assert_eq!(est[0], truth[0], "seed {seed}");
+        assert_eq!(est[7], truth[7], "seed {seed}");
+        for w in est.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "seed {seed}: non-monotone {est:?}");
+        }
+        assert!(est.iter().all(|&v| v >= 0.0), "seed {seed}");
+        // pick_mtl consistency: the chosen MTL's estimate meets the SLO.
+        let slo = rng.uniform_range(base, base * 12.0);
+        let n = pick_mtl(&est, slo);
+        assert!((1..=10).contains(&n));
+        if est[0] <= slo {
+            assert!(est[n as usize - 1] <= slo, "seed {seed}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Clipper properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_clipper_never_exceeds_bounds_and_backs_off() {
+    forall(150, |seed, rng| {
+        let knee = rng.below(100) as u32 + 2;
+        let lat = move |b: u32| if b > knee { 1e6 } else { 1.0 };
+        let mut c = Clipper::new();
+        let mut last_violation_bs = None;
+        for _ in 0..80 {
+            let b = c.batch_size();
+            let p95 = lat(b);
+            let before = c.batch_size();
+            c.observe_window(p95, 100.0);
+            assert!((1..=MAX_BS).contains(&c.batch_size()), "seed {seed}");
+            if p95 > 100.0 {
+                assert!(c.batch_size() < before.max(2), "seed {seed}: no back-off");
+                last_violation_bs = Some(before);
+            }
+        }
+        if let Some(v) = last_violation_bs {
+            assert!(v > knee, "seed {seed}: violated below the knee");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator surface properties (random profiles, not just paper ones)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_perf_surface_monotone_and_positive() {
+    forall(200, |seed, rng| {
+        let p = random_profile(rng);
+        let ds = Dataset::ImageNet;
+        let mut prev = 0.0;
+        for b in [1u32, 2, 4, 8, 16, 32, 64, 128] {
+            let t = perf::batch_latency_ms(&p, ds, b, 1).total_ms;
+            assert!(t > prev, "seed {seed}: latency not monotone in bs");
+            prev = t;
+        }
+        let mut prev = 0.0;
+        for n in 1..=10u32 {
+            let t = perf::batch_latency_ms(&p, ds, 1, n).total_ms;
+            assert!(t >= prev, "seed {seed}: latency not monotone in mtl");
+            prev = t;
+            let u = perf::sm_utilization(&p, ds, 1, n);
+            assert!((0.0..=1.0).contains(&u), "seed {seed}: util {u}");
+        }
+    });
+}
+
+#[test]
+fn prop_throughput_bounded_by_serial_rate() {
+    // Throughput at any (b, n) can never exceed n * b / gpu-fixed time —
+    // a crude physical ceiling.
+    forall(200, |seed, rng| {
+        let p = random_profile(rng);
+        let b = rng.below(128) as u32 + 1;
+        let n = rng.below(10) as u32 + 1;
+        let thr = perf::throughput(&p, Dataset::ImageNet, b, n);
+        let ceiling = (n as f64) * (b as f64) / (p.t_gpu_fixed_ms / 1000.0);
+        assert!(thr > 0.0 && thr <= ceiling, "seed {seed}: thr {thr} ceiling {ceiling}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Metrics / substrate properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_latency_window_percentile_matches_naive() {
+    forall(200, |seed, rng| {
+        let n = rng.below(50) + 1;
+        let mut w = LatencyWindow::new(n);
+        let mut all = Vec::new();
+        for _ in 0..n {
+            let v = rng.uniform_range(0.0, 1e3);
+            w.record(v);
+            all.push(v);
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.05, 0.5, 0.95, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            assert_eq!(w.percentile(q), Some(all[rank - 1]), "seed {seed} q {q} n {n}");
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_cdf_quantile_matches_expansion() {
+    forall(100, |seed, rng| {
+        let mut cdf = WeightedCdf::new();
+        let mut expanded = Vec::new();
+        for _ in 0..rng.below(30) + 1 {
+            let v = rng.uniform_range(0.0, 100.0);
+            let w = rng.below(5) + 1;
+            cdf.add(v, w as f64);
+            for _ in 0..w {
+                expanded.push(v);
+            }
+        }
+        expanded.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.25, 0.5, 0.95] {
+            let want = expanded[((q * expanded.len() as f64).ceil() as usize)
+                .clamp(1, expanded.len())
+                - 1];
+            let got = cdf.quantile(q).unwrap();
+            assert!((got - want).abs() < 1e-9, "seed {seed}: q {q} got {got} want {want}");
+        }
+    });
+}
+
+#[test]
+fn prop_svd_reconstructs_random_matrices() {
+    forall(60, |seed, rng| {
+        let m = rng.below(8) + 1;
+        let n = rng.below(8) + 1;
+        let data: Vec<f64> = (0..m * n).map(|_| rng.uniform_range(-5.0, 5.0)).collect();
+        let a = Mat::from_rows(m, n, &data);
+        let d = svd(&a);
+        let r = d.reconstruct(0);
+        let err = a.sub(&r).fro_norm();
+        assert!(err < 1e-7 * a.fro_norm().max(1.0), "seed {seed}: err {err}");
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "seed {seed}: s not sorted");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.chance(0.5)),
+            2 => json::Json::Num((rng.uniform_range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(12);
+                json::Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => json::Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(300, |seed, rng| {
+        let v = random_json(rng, 3);
+        let text = json::write(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(back, v, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_queue_fifo_matches_model() {
+    forall(150, |seed, rng| {
+        let mut q = RequestQueue::new();
+        let mut model: Vec<f64> = Vec::new();
+        let mut clock = 0.0;
+        for _ in 0..60 {
+            if rng.chance(0.6) {
+                clock += rng.uniform_range(0.001, 0.1);
+                q.push(clock);
+                model.push(clock);
+            } else {
+                let k = rng.below(4) + 1;
+                let got = q.take_batch(k);
+                let want: Vec<f64> = model.drain(..k.min(model.len())).collect();
+                assert_eq!(got.len(), want.len(), "seed {seed}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.arrival_s, *w, "seed {seed}");
+                }
+            }
+            assert_eq!(q.len(), model.len(), "seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_poisson_rate_concentrates() {
+    forall(20, |seed, rng| {
+        let rate = rng.uniform_range(50.0, 2000.0);
+        let mut g = ArrivalGenerator::new(ArrivalPattern::Poisson { rate }, seed);
+        let n = g.arrivals_until(10.0).len() as f64;
+        let got = n / 10.0;
+        assert!(
+            (got - rate).abs() / rate < 0.15,
+            "seed {seed}: rate {got:.1} want {rate:.1}"
+        );
+    });
+}
