@@ -1,0 +1,8 @@
+# Top-level convenience targets.
+#
+#   make verify    — tier-1 checks: cargo build --release, cargo test -q,
+#                    cargo fmt --check (see scripts/verify.sh)
+
+.PHONY: verify
+verify:
+	bash scripts/verify.sh

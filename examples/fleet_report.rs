@@ -1,32 +1,45 @@
-//! Fleet power-efficiency report (paper Table 6) and latency CDFs
-//! (paper Fig. 6) for the Multi-Tenancy jobs.
+//! Fleet power-efficiency report (paper Table 6), latency CDFs (paper
+//! Fig. 6) for the Multi-Tenancy jobs, and a true multi-job `Fleet` run:
+//! several DNNs co-located on ONE simulated P40 with shared memory and
+//! SM contention — the scenario the paper's one-job-per-GPU evaluation
+//! cannot express.
 //!
 //! Run with: cargo run --release --example fleet_report
 
 use anyhow::{anyhow, Result};
 
-use dnnscaler::coordinator::job::PAPER_JOBS;
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
-use dnnscaler::coordinator::Method;
+use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
+use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
+use dnnscaler::coordinator::{Fleet, Method};
 use dnnscaler::gpusim::GpuSim;
 use dnnscaler::metrics::report::{f1, f2};
 use dnnscaler::metrics::{Table, WeightedCdf};
 
+fn closed(job: &JobSpec, seed: u64, spec: PolicySpec<'static>) -> Result<JobOutcome> {
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
+    ServingSession::builder()
+        .config(RunConfig::windows(40, 20))
+        .job(job)
+        .device(sim)
+        .policy(spec)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))
+}
+
 fn main() -> Result<()> {
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
     let mut t = Table::new(
         "Power & efficiency, MT jobs (Table 6)",
         &["job", "dnn", "P_scaler(W)", "P_clipper(W)", "thr_s", "thr_c", "eff_s", "eff_c", "eff gain"],
     );
     let mut cdf_jobs: Vec<(u32, WeightedCdf, WeightedCdf, f64)> = Vec::new();
     for job in PAPER_JOBS {
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 300 + job.id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).map_err(|e| anyhow!(e.to_string()))?;
+        let s = closed(job, 300 + job.id as u64, PolicySpec::DnnScaler)?;
         if s.method != Some(Method::MultiTenancy) {
             continue;
         }
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 400 + job.id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).map_err(|e| anyhow!(e.to_string()))?;
+        let c = closed(job, 400 + job.id as u64, PolicySpec::Clipper)?;
         let eff_s = s.throughput / s.power_w;
         let eff_c = c.throughput / c.power_w;
         t.row(&[
@@ -65,5 +78,43 @@ fn main() -> Result<()> {
             );
         }
     }
+
+    // ---- Multi-job Fleet: three DNNs sharing one P40. -------------------
+    println!("\nFleet: jobs 1 (inc-v1), 3 (inc-v4), 4 (mobv1-05) co-located on one P40");
+    let fleet = Fleet::builder()
+        .windows(25)
+        .rounds_per_window(10)
+        .seed(7)
+        .job(paper_job(1).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(3).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(4).unwrap(), PolicySpec::DnnScaler)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))?;
+    let mut t = Table::new(
+        "Fleet members (shared memory + SM contention)",
+        &["job", "dnn", "method", "knob", "thr", "p95(ms)", "attain%"],
+    );
+    for m in &fleet.members {
+        t.row(&[
+            m.job_id.to_string(),
+            m.dnn.clone(),
+            m.method.map(|x| x.short()).unwrap_or("-").into(),
+            format!("bs={} mtl={}", m.steady_bs, m.steady_mtl),
+            f1(m.throughput),
+            f2(m.p95_ms),
+            f1(m.slo_attainment * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "fleet total {:.1} inf/s | peak mem {:.0}/{:.0} MB | peak SM contention {:.2} | clamps {}",
+        fleet.total_throughput,
+        fleet.peak_mem_mb,
+        fleet.mem_capacity_mb,
+        fleet.peak_contention,
+        fleet.admission_clamps
+    );
     Ok(())
 }

@@ -2,8 +2,9 @@
 //!
 //! Loads a real AOT-compiled model (JAX/Pallas -> HLO text -> PJRT CPU),
 //! serves batched inference requests through the full DNNScaler stack
-//! (Profiler -> Scaler -> serving loop), and reports throughput/latency.
-//! Everything here is the real request path: no simulator, no python.
+//! (Profiler -> Scaler -> event-driven `ServingSession`), and reports
+//! throughput/latency. Everything here is the real request path: no
+//! simulator, no python.
 //!
 //! Run with:
 //!   make artifacts && cargo run --release --example quickstart
@@ -11,7 +12,7 @@
 use anyhow::{anyhow, Result};
 
 use dnnscaler::coordinator::job::{JobSpec, SteadyKnob};
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::session::{PolicySpec, RunConfig, ServingSession};
 use dnnscaler::coordinator::Method;
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::device::Device;
@@ -59,8 +60,14 @@ fn main() -> Result<()> {
         probe_mtl: 4,
         ..Default::default()
     };
-    let out = JobRunner::new(cfg)
-        .run_dnnscaler(&job, &mut dev)
+    let out = ServingSession::builder()
+        .config(cfg)
+        .job(&job)
+        .device(&mut dev)
+        .policy(PolicySpec::DnnScaler)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
         .map_err(|e| anyhow!(e.to_string()))?;
     let profile = out.profile.as_ref().unwrap();
     println!(

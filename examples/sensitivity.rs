@@ -1,13 +1,14 @@
 //! Sensitivity analysis (paper §4.5, Figs. 9-10): the SLO changes at
 //! runtime and DNNScaler must chase it — batch size for Inception-V4,
-//! instance count for Inception-V1, in both directions.
+//! instance count for Inception-V1, in both directions. Runs through the
+//! event-driven `ServingSession` with a `.slo_schedule(..)`.
 //!
 //! Run with: cargo run --release --example sensitivity
 
 use anyhow::{anyhow, Result};
 
 use dnnscaler::coordinator::job::{JobSpec, SteadyKnob};
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::session::{PolicySpec, ServingSession};
 use dnnscaler::coordinator::Method;
 use dnnscaler::gpusim::{Dataset, GpuSim};
 
@@ -26,9 +27,18 @@ fn run_scenario(
         paper_method: Method::Batching,
         paper_steady: SteadyKnob::Bs(1),
     };
-    let cfg = RunConfig { windows: 40, rounds_per_window: 20, slo_schedule: schedule, ..Default::default() };
-    let mut sim = GpuSim::for_paper_dnn(dnn, Dataset::ImageNet, 99).unwrap();
-    let out = JobRunner::new(cfg).run_dnnscaler(&job, &mut sim).map_err(|e| anyhow!(e.to_string()))?;
+    let sim = GpuSim::for_paper_dnn(dnn, Dataset::ImageNet, 99).unwrap();
+    let out = ServingSession::builder()
+        .windows(40)
+        .rounds_per_window(20)
+        .slo_schedule(schedule)
+        .job(&job)
+        .device(sim)
+        .policy(PolicySpec::DnnScaler)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))?;
     println!("  method: {:?}", out.method.unwrap());
     let mut last = (0u32, 0u32, 0.0f64);
     for r in &out.trace {

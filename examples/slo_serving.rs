@@ -1,31 +1,42 @@
 //! SLO serving at fleet scale: the paper's 30-job workload (Table 4) run
 //! with DNNScaler and Clipper on the simulated Tesla P40, plus an
-//! open-loop bursty-arrival demonstration (§3.3's burst claim).
+//! open-loop bursty-arrival demonstration (§3.3's burst claim) through
+//! the event-driven `ServingSession`.
 //!
 //! Run with: cargo run --release --example slo_serving
 
 use anyhow::{anyhow, Result};
 
-use dnnscaler::coordinator::job::PAPER_JOBS;
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::job::{JobSpec, PAPER_JOBS};
+use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
 use dnnscaler::gpusim::GpuSim;
 use dnnscaler::metrics::report::{f1, f2};
 use dnnscaler::metrics::Table;
-use dnnscaler::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
+use dnnscaler::workload::ArrivalPattern;
+
+fn closed(job: &JobSpec, seed: u64, spec: PolicySpec<'static>) -> Result<JobOutcome> {
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
+    ServingSession::builder()
+        .config(RunConfig::windows(40, 20))
+        .job(job)
+        .device(sim)
+        .policy(spec)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))
+}
 
 fn main() -> Result<()> {
-    // ---- Part 1: the 30-job fleet. --------------------------------------
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
+    // ---- Part 1: the 30-job fleet, closed loop (the paper's setup). ----
     let mut t = Table::new(
         "30-job fleet: DNNScaler vs Clipper (simulated P40)",
         &["job", "dnn", "method", "knob", "thr", "clipper", "gain", "p95<=SLO"],
     );
     let (mut gains, mut hits) = (Vec::new(), 0);
     for job in PAPER_JOBS {
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + job.id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).map_err(|e| anyhow!(e.to_string()))?;
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 200 + job.id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).map_err(|e| anyhow!(e.to_string()))?;
+        let s = closed(job, 100 + job.id as u64, PolicySpec::DnnScaler)?;
+        let c = closed(job, 200 + job.id as u64, PolicySpec::Clipper)?;
         let gain = s.throughput / c.throughput;
         gains.push(gain);
         let method = s.method.unwrap();
@@ -55,53 +66,45 @@ fn main() -> Result<()> {
         "method agreement {hits}/30 | mean speedup {mean:.2}x | max {max:.2}x (paper: 218% avg, 14x max)\n"
     );
 
-    // ---- Part 2: bursty open-loop serving of one MT job. ---------------
-    println!("bursty arrivals against job 1 (inc-v1, MT): queue depth under a 5x burst");
+    // ---- Part 2: open-loop bursty serving of job 1 (inc-v1, MT). -------
+    // Base load 60 req/s with 4x bursts (1 s of every 4 s). The session's
+    // virtual-time event loop queues arrivals, forms batches by size or a
+    // 5 ms timeout, and charges queueing delay into every latency — so
+    // DNNScaler converges to a point with headroom for the bursts instead
+    // of the closed-loop knee.
+    println!("bursty open-loop serving of job 1 (inc-v1): 60 req/s base, 4x bursts");
     let job = &PAPER_JOBS[0];
-    let mut sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, 7).unwrap();
-    // Base load ~60 req/s with 4x bursts: mean offered load ~105 req/s
-    // against ~200 inf/s of MT capacity, so bursts queue then drain.
-    let mut gen = ArrivalGenerator::new(
-        ArrivalPattern::Bursty { rate: 60.0, factor: 4.0, period_s: 4.0, burst_s: 1.0 },
-        11,
-    );
-    let mut queue = RequestQueue::new();
-    let arrivals = gen.arrivals_until(12.0);
-    let mut next_arrival = 0usize;
-    let mut now_s = 0.0;
-    let mtl = 8u32; // steady point DNNScaler found for job 1
-    let mut served = 0u64;
-    let mut p95_acc: Vec<f64> = Vec::new();
-    while now_s < 12.0 {
-        while next_arrival < arrivals.len() && arrivals[next_arrival] <= now_s {
-            queue.push(arrivals[next_arrival]);
-            next_arrival += 1;
-        }
-        use dnnscaler::device::Device;
-        let s = sim.execute_batch(1, mtl).map_err(|e| anyhow!(e.to_string()))?;
-        let round_s = s.latency_ms / 1000.0;
-        // Each of the mtl instances drains one request per round.
-        let batch = queue.take_batch(mtl as usize);
-        for r in &batch {
-            let sojourn_ms = (now_s - r.arrival_s) * 1000.0 + s.latency_ms;
-            p95_acc.push(sojourn_ms);
-            served += 1;
-        }
-        now_s += round_s;
-        if (now_s * 10.0) as u64 % 20 == 0 {
-            // coarse progress line every ~2 s of sim time
-        }
-    }
-    p95_acc.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p95 = p95_acc[(p95_acc.len() as f64 * 0.95) as usize - 1];
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, 11).unwrap();
+    let out = ServingSession::builder()
+        .config(RunConfig::windows(30, 20))
+        .job(job)
+        .device(sim)
+        .policy(PolicySpec::DnnScaler)
+        .arrivals(ArrivalPattern::bursty(60.0, 4.0, 4.0, 1.0))
+        .batch_timeout_ms(5.0)
+        .seed(11)
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))?;
+    let served: f64 = out.latencies.iter().map(|(_, w)| w).sum();
     println!(
-        "  served {served} requests in 12 s sim time | peak queue depth {} | p95 sojourn {:.1} ms (SLO {} ms)",
-        queue.max_depth, p95, job.slo_ms
+        "  served {served:.0} requests | steady knob mtl={} (closed-loop knee: 8) | p95 sojourn {:.1} ms (SLO {} ms)",
+        out.steady_mtl, out.p95_ms, job.slo_ms
     );
     println!(
-        "  residual queue {} — MT absorbs the burst {}",
-        queue.len(),
-        if queue.len() < 50 { "(stable)" } else { "(overloaded)" }
+        "  queue peak {} | dropped {} | steady SLO attainment {:.1}%",
+        out.queue_peak,
+        out.drops,
+        out.steady_attainment * 100.0
+    );
+    let burst_windows =
+        out.trace.iter().filter(|r| r.queue_peak > 2).count();
+    println!(
+        "  {} of {} windows saw queue build-up — MT absorbs the bursts {}",
+        burst_windows,
+        out.trace.len(),
+        if out.steady_attainment > 0.8 { "(stable)" } else { "(overloaded)" }
     );
     Ok(())
 }

@@ -12,12 +12,26 @@
 use std::io::Write as _;
 
 use dnnscaler::coordinator::job::{paper_job, JobSpec, SteadyKnob, PAPER_JOBS};
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
 use dnnscaler::coordinator::scaler_mt::MtScaler;
+use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
 use dnnscaler::coordinator::Method;
 use dnnscaler::gpusim::{Dataset, GpuSim};
 use dnnscaler::metrics::report::{csv_writer, f1, f2};
 use dnnscaler::metrics::{Table, WeightedCdf};
+
+/// Run one job through the event-driven session with the given policy.
+fn run_with(job: &JobSpec, cfg: RunConfig, seed: u64, spec: PolicySpec<'static>) -> JobOutcome {
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
+    ServingSession::builder()
+        .config(cfg)
+        .job(job)
+        .device(sim)
+        .policy(spec)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -145,7 +159,6 @@ fn fig2() {
 
 /// Fig. 5: DNNScaler vs Clipper throughput on all 30 jobs.
 fn fig5() {
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
     let mut w = csv_writer(
         "reports/fig5.csv",
         "job,dnn,method,paper_method,dnnscaler_thr,clipper_thr,speedup",
@@ -158,10 +171,9 @@ fn fig5() {
     let mut gains = Vec::new();
     let mut hits = 0;
     for job in PAPER_JOBS {
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + job.id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 200 + job.id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).unwrap();
+        let cfg = RunConfig::windows(40, 20);
+        let s = run_with(job, cfg.clone(), 100 + job.id as u64, PolicySpec::DnnScaler);
+        let c = run_with(job, cfg, 200 + job.id as u64, PolicySpec::Clipper);
         let gain = s.throughput / c.throughput;
         gains.push(gain);
         let m = s.method.unwrap();
@@ -200,14 +212,12 @@ fn fig5() {
 
 /// Fig. 6: latency CDFs for four jobs under both systems.
 fn fig6() {
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
     let mut w = csv_writer("reports/fig6.csv", "job,system,quantile,latency_ms").unwrap();
     for id in [1u32, 5, 14, 29] {
         let job = paper_job(id).unwrap();
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 300 + id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 400 + id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).unwrap();
+        let cfg = RunConfig::windows(40, 20);
+        let s = run_with(job, cfg.clone(), 300 + id as u64, PolicySpec::DnnScaler);
+        let c = run_with(job, cfg, 400 + id as u64, PolicySpec::Clipper);
         println!("Fig 6, job {id} ({}, SLO {} ms):", job.dnn, job.slo_ms);
         for (sys, out) in [("dnnscaler", &s), ("clipper", &c)] {
             let mut cdf = WeightedCdf::from_samples(&out.latencies);
@@ -231,11 +241,9 @@ fn fig7() {
     let mut w = csv_writer("reports/fig7.csv", "job,system,window,bs,p95_ms").unwrap();
     for id in [3u32, 12] {
         let job = paper_job(id).unwrap();
-        let runner = JobRunner::new(RunConfig::windows(25, 20));
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 500 + id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 600 + id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).unwrap();
+        let cfg = RunConfig::windows(25, 20);
+        let s = run_with(job, cfg.clone(), 500 + id as u64, PolicySpec::DnnScaler);
+        let c = run_with(job, cfg, 600 + id as u64, PolicySpec::Clipper);
         println!("Fig 7, job {id} ({}): BS trace (window: dnnscaler/clipper)", job.dnn);
         let mut s_settle = None;
         let mut c_settle = None;
@@ -265,9 +273,7 @@ fn fig8() {
     let mut w = csv_writer("reports/fig8.csv", "job,window,mtl,p95_ms,slo_ms").unwrap();
     for id in [2u32, 14] {
         let job = paper_job(id).unwrap();
-        let runner = JobRunner::new(RunConfig::windows(25, 20));
-        let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d).unwrap();
+        let s = run_with(job, RunConfig::windows(25, 20), 100 + id as u64, PolicySpec::DnnScaler);
         println!(
             "Fig 8, job {id} ({}, SLO {} ms): MTL trace (seeded by matrix completion at w0)",
             job.dnn, job.slo_ms
@@ -297,8 +303,7 @@ fn sensitivity(fig: &str, dnn: &'static str, slo0: f64, slo1: f64) {
         slo_schedule: vec![(20, slo1)],
         ..Default::default()
     };
-    let mut sim = GpuSim::for_paper_dnn(dnn, Dataset::ImageNet, 900).unwrap();
-    let out = JobRunner::new(cfg).run_dnnscaler(&job, &mut sim).unwrap();
+    let out = run_with(&job, cfg, 900, PolicySpec::DnnScaler);
     let mut w =
         csv_writer(&format!("reports/{fig}.csv"), "window,slo_ms,bs,mtl,p95_ms,throughput")
             .unwrap();
@@ -338,7 +343,6 @@ fn fig10() {
 
 /// Fig. 11: Batching vs (forced) Multi-Tenancy on six batching jobs.
 fn fig11() {
-    let runner = JobRunner::new(RunConfig::windows(30, 20));
     let mut w = csv_writer("reports/fig11.csv", "job,batching_thr,mt_thr").unwrap();
     let mut t = Table::new(
         "Fig 11: Batching (DNNScaler's pick) vs forced Multi-Tenancy",
@@ -346,12 +350,15 @@ fn fig11() {
     );
     for id in [3u32, 7, 12, 16, 22, 28] {
         let job = paper_job(id).unwrap();
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 1100 + id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
+        let cfg = RunConfig::windows(30, 20);
+        let s = run_with(job, cfg.clone(), 1100 + id as u64, PolicySpec::DnnScaler);
         // Force the MT scaler on the same job.
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 1200 + id as u64).unwrap();
-        let mut mt = MtScaler::unseeded(1, 10);
-        let m = runner.serve(job, &mut d2, &mut mt).unwrap();
+        let m = run_with(
+            job,
+            cfg,
+            1200 + id as u64,
+            PolicySpec::custom(MtScaler::unseeded(1, 10)),
+        );
         writeln!(w, "{id},{:.2},{:.2}", s.throughput, m.throughput).unwrap();
         t.row(&[
             id.to_string(),

@@ -19,13 +19,14 @@ use std::time::Instant;
 use dnnscaler::coordinator::clipper::Clipper;
 use dnnscaler::coordinator::latency::LatencyWindow;
 use dnnscaler::coordinator::matcomp::LatencyLibrary;
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
 use dnnscaler::coordinator::scaler_batching::BatchScaler;
 use dnnscaler::coordinator::scaler_mt::MtScaler;
+use dnnscaler::coordinator::session::{PolicySpec, RunConfig, ServingSession};
 use dnnscaler::coordinator::Controller;
 use dnnscaler::device::Device;
 use dnnscaler::gpusim::{Dataset, GpuSim};
 use dnnscaler::linalg::{svd, Mat};
+use dnnscaler::workload::ArrivalPattern;
 
 /// Time `f` adaptively; returns ns/op.
 fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
@@ -126,14 +127,23 @@ fn main() {
     }
 
     if run("e2e") {
-        // End-to-end simulated job run (the figure-regeneration unit).
+        // End-to-end simulated job run (the figure-regeneration unit),
+        // closed loop through the event-driven session.
         let job = dnnscaler::coordinator::job::paper_job(1).unwrap();
-        let runner = JobRunner::new(RunConfig::windows(20, 20));
         let t0 = Instant::now();
         let mut sims = 0;
         while t0.elapsed().as_millis() < 300 {
-            let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, sims).unwrap();
-            std::hint::black_box(runner.run_dnnscaler(job, &mut d).unwrap());
+            let d = GpuSim::for_paper_dnn(job.dnn, job.dataset, sims).unwrap();
+            let out = ServingSession::builder()
+                .config(RunConfig::windows(20, 20))
+                .job(job)
+                .device(d)
+                .policy(PolicySpec::DnnScaler)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            std::hint::black_box(out);
             sims += 1;
         }
         let ms = t0.elapsed().as_secs_f64() * 1000.0 / sims as f64;
@@ -143,6 +153,35 @@ fn main() {
             ms,
             1000.0 / ms,
             sims
+        );
+
+        // Open-loop variant: the virtual-time event loop (queue + batch
+        // formation) must not become the serving bottleneck.
+        let t0 = Instant::now();
+        let mut runs = 0;
+        while t0.elapsed().as_millis() < 300 {
+            let d = GpuSim::for_paper_dnn(job.dnn, job.dataset, runs).unwrap();
+            let out = ServingSession::builder()
+                .config(RunConfig::windows(20, 20))
+                .job(job)
+                .device(d)
+                .policy(PolicySpec::DnnScaler)
+                .arrivals(ArrivalPattern::bursty(60.0, 3.0, 4.0, 1.0))
+                .seed(runs)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            std::hint::black_box(out);
+            runs += 1;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 / runs as f64;
+        println!(
+            "{:<44} {:>10.2} ms/job  {:>14.1} jobs/s   ({} iters)",
+            "e2e: open-loop bursty session (20x20)",
+            ms,
+            1000.0 / ms,
+            runs
         );
     }
 

@@ -7,13 +7,27 @@
 
 use std::io::Write as _;
 
-use dnnscaler::coordinator::job::{paper_job, SteadyKnob, PAPER_JOBS};
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
+use dnnscaler::coordinator::job::{paper_job, JobSpec, SteadyKnob, PAPER_JOBS};
+use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
 use dnnscaler::coordinator::{Method, Profiler};
 use dnnscaler::gpusim::{paper_profile, Dataset, GpuSim};
 use dnnscaler::manifest::Manifest;
 use dnnscaler::metrics::report::{csv_writer, f1, f2};
 use dnnscaler::metrics::Table;
+
+/// Run one job through the event-driven session with the given policy.
+fn run_with(job: &JobSpec, seed: u64, spec: PolicySpec<'static>) -> JobOutcome {
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
+    ServingSession::builder()
+        .config(RunConfig::windows(40, 20))
+        .job(job)
+        .device(sim)
+        .policy(spec)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -80,7 +94,6 @@ fn table1() {
 
 /// Table 4: the 30 jobs — our method + steady knob vs the paper's.
 fn table4() {
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
     let mut w = csv_writer(
         "reports/table4.csv",
         "job,dnn,dataset,slo_ms,method,paper_method,steady,paper_steady",
@@ -92,8 +105,7 @@ fn table4() {
     );
     let mut hits = 0;
     for job in PAPER_JOBS {
-        let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, 100 + job.id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d).unwrap();
+        let s = run_with(job, 100 + job.id as u64, PolicySpec::DnnScaler);
         let m = s.method.unwrap();
         if m == job.paper_method {
             hits += 1;
@@ -211,7 +223,6 @@ fn table6() {
         (29, 122.44, 86.39, 40.93, 22.51, 0.33, 0.26),
         (30, 132.19, 88.98, 40.72, 24.72, 0.31, 0.28),
     ];
-    let runner = JobRunner::new(RunConfig::windows(40, 20));
     let mut w = csv_writer(
         "reports/table6.csv",
         "job,power_scaler,power_clipper,thr_scaler,thr_clipper,eff_scaler,eff_clipper,eff_gain",
@@ -225,10 +236,8 @@ fn table6() {
     let mut eff_up = 0;
     for &(id, pps, ppc, _pts, _ptc, pes, pec) in paper {
         let job = paper_job(id).unwrap();
-        let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 300 + id as u64).unwrap();
-        let s = runner.run_dnnscaler(job, &mut d1).unwrap();
-        let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, 400 + id as u64).unwrap();
-        let c = runner.run_clipper(job, &mut d2).unwrap();
+        let s = run_with(job, 300 + id as u64, PolicySpec::DnnScaler);
+        let c = run_with(job, 400 + id as u64, PolicySpec::Clipper);
         let (es, ec) = (s.throughput / s.power_w, c.throughput / c.power_w);
         if s.power_w > c.power_w {
             power_up += 1;

@@ -4,6 +4,7 @@
 //! violation. Batching only; Multi-Tenancy is never used.
 
 use super::controller::{Controller, Decision};
+use super::policy::{Action, Policy, WindowObservation};
 use super::MAX_BS;
 
 /// AIMD batch-size controller (the paper's comparison system).
@@ -67,6 +68,21 @@ impl Controller for Clipper {
             self.bs = (self.bs + self.step).min(self.hard_max);
         }
         Decision { bs: self.bs, mtl: 1, changed: self.bs != prev }
+    }
+}
+
+/// `Policy` view of the Clipper baseline (p95/SLO-driven AIMD).
+impl Policy for Clipper {
+    fn name(&self) -> &'static str {
+        Controller::name(self)
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        Controller::operating_point(self)
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        Action::from_decision(self.observe_window(obs.p95_ms, obs.slo_ms))
     }
 }
 

@@ -44,3 +44,19 @@ pub trait Controller {
     /// SLO and decide the next operating point.
     fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision;
 }
+
+/// Forwarding impl so `&mut dyn Controller` (the legacy `JobRunner::serve`
+/// argument) plugs into the `AsPolicy` adapter without reboxing.
+impl<C: Controller + ?Sized> Controller for &mut C {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (**self).operating_point()
+    }
+
+    fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision {
+        (**self).observe_window(p95_ms, slo_ms)
+    }
+}

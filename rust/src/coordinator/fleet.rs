@@ -1,0 +1,381 @@
+//! `Fleet`: multiple jobs served concurrently on one shared-capacity GPU.
+//!
+//! The paper (and the legacy `JobRunner`) serve one job per device; real
+//! clusters co-locate *different* models on one accelerator ("No DNN Left
+//! Behind"-style multi-tenancy). `Fleet` expresses that scenario on the
+//! simulated Tesla P40:
+//!
+//! * **Shared memory** — before every control window the members'
+//!   requested operating points pass an admission check against the
+//!   GPU's memory capacity; the greediest member is shrunk (batch halved,
+//!   then instances shed) until the combined demand fits, so the fleet
+//!   never OOMs.
+//! * **Shared SMs** — the members' combined SM utilization sets a
+//!   contention factor; when it exceeds 1 the GPU time-shares and every
+//!   member's batch latency is inflated proportionally. Policies observe
+//!   those inflated latencies and back off, which is exactly the
+//!   cross-job feedback loop single-job serving cannot express.
+//!
+//! Members run their control windows in lockstep (window `w` of every
+//! member sees the same contention snapshot), each with its own
+//! [`Policy`] resolved from a [`PolicySpec`] — DNNScaler members profile
+//! themselves alone at fleet start, as the paper's profiler would.
+
+use crate::device::{Device, DeviceError};
+use crate::gpusim::{GpuSim, GpuSpec, TESLA_P40};
+
+use super::job::JobSpec;
+use super::latency::LatencyWindow;
+use super::policy::{Action, Policy};
+use super::profiler::ProfileOutcome;
+use super::session::{
+    assemble_outcome, resolve_policy, serve_closed_window, AttainAcc, ConfigError, JobOutcome,
+    PolicySpec, RunConfig, SloSchedule, WindowRecord,
+};
+
+/// Result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Per-member outcomes, in the order jobs were added.
+    pub members: Vec<JobOutcome>,
+    /// Sum of member steady-state throughputs (inferences/s).
+    pub total_throughput: f64,
+    /// Peak combined GPU memory demand over the run (MB).
+    pub peak_mem_mb: f64,
+    /// The shared GPU's memory capacity (MB).
+    pub mem_capacity_mb: f64,
+    /// Peak combined SM utilization (values > 1 mean time-sharing).
+    pub peak_contention: f64,
+    /// Times the admission check shrank a member's requested point.
+    pub admission_clamps: u64,
+}
+
+/// Builder for [`Fleet`].
+pub struct FleetBuilder<'a> {
+    gpu: GpuSpec,
+    cfg: RunConfig,
+    seed: u64,
+    members: Vec<(JobSpec, PolicySpec<'a>)>,
+}
+
+impl<'a> FleetBuilder<'a> {
+    fn new() -> Self {
+        FleetBuilder { gpu: TESLA_P40, cfg: RunConfig::default(), seed: 42, members: Vec::new() }
+    }
+
+    /// The shared accelerator (default: the paper's Tesla P40).
+    pub fn gpu(mut self, gpu: GpuSpec) -> Self {
+        self.gpu = gpu;
+        self
+    }
+
+    /// Replace the shared serving config.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn windows(mut self, windows: usize) -> Self {
+        self.cfg.windows = windows;
+        self
+    }
+
+    pub fn rounds_per_window(mut self, rounds: usize) -> Self {
+        self.cfg.rounds_per_window = rounds;
+        self
+    }
+
+    /// Seed for member simulators (member `i` gets `seed + i`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Add a member job with its serving policy.
+    pub fn job(mut self, job: &JobSpec, policy: PolicySpec<'a>) -> Self {
+        self.members.push((*job, policy));
+        self
+    }
+
+    /// Validate and assemble the fleet.
+    pub fn build(self) -> Result<Fleet<'a>, ConfigError> {
+        if self.cfg.windows == 0 {
+            return Err(ConfigError::ZeroWindows);
+        }
+        if self.cfg.rounds_per_window == 0 {
+            return Err(ConfigError::ZeroRounds);
+        }
+        if self.cfg.max_bs == 0 || self.cfg.max_mtl == 0 {
+            return Err(ConfigError::ZeroKnobCeiling {
+                max_bs: self.cfg.max_bs,
+                max_mtl: self.cfg.max_mtl,
+            });
+        }
+        if self.members.is_empty() {
+            return Err(ConfigError::NoFleetMembers);
+        }
+        for (job, _) in &self.members {
+            if crate::gpusim::paper_profile(job.dnn).is_none() {
+                return Err(ConfigError::UnknownDnn { dnn: job.dnn.to_string() });
+            }
+        }
+        Ok(Fleet { gpu: self.gpu, cfg: self.cfg, seed: self.seed, members: self.members })
+    }
+}
+
+/// A validated multi-job fleet, ready to run.
+pub struct Fleet<'a> {
+    gpu: GpuSpec,
+    cfg: RunConfig,
+    seed: u64,
+    members: Vec<(JobSpec, PolicySpec<'a>)>,
+}
+
+struct Member<'a> {
+    job: JobSpec,
+    sim: GpuSim,
+    policy: Box<dyn Policy + 'a>,
+    profile: Option<ProfileOutcome>,
+    label: Option<&'static str>,
+    schedule: SloSchedule,
+    window: LatencyWindow,
+    trace: Vec<WindowRecord>,
+    latencies: Vec<(f64, f64)>,
+    acc: AttainAcc,
+    pending_launch_ms: f64,
+    /// Last operating point the admission check actually let this member
+    /// serve at (what `JobOutcome::steady_*` reports — the policy's own
+    /// request may be larger than the shared GPU ever granted).
+    admitted: (u32, u32),
+}
+
+impl<'a> Fleet<'a> {
+    pub fn builder() -> FleetBuilder<'a> {
+        FleetBuilder::new()
+    }
+
+    /// Serve every member to completion on the shared GPU.
+    pub fn run(self) -> Result<FleetOutcome, DeviceError> {
+        let Fleet { gpu, cfg, seed, members } = self;
+        let mut states: Vec<Member<'a>> = Vec::with_capacity(members.len());
+        for (i, (job, spec)) in members.into_iter().enumerate() {
+            let mut sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed + i as u64)
+                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", job.dnn)))?;
+            // DNNScaler members profile themselves alone at fleet start.
+            let (policy, profile, label) = resolve_policy(spec, &cfg, &job, &mut sim)?;
+            let admitted = policy.operating_point();
+            states.push(Member {
+                schedule: SloSchedule::new(job.slo_ms, cfg.slo_schedule.clone()),
+                window: LatencyWindow::new(cfg.rounds_per_window),
+                trace: Vec::with_capacity(cfg.windows),
+                latencies: Vec::new(),
+                acc: AttainAcc::new(cfg.windows / 2),
+                pending_launch_ms: 0.0,
+                admitted,
+                job,
+                sim,
+                policy,
+                profile,
+                label,
+            });
+        }
+
+        let mut peak_mem_mb: f64 = 0.0;
+        let mut peak_contention: f64 = 0.0;
+        let mut admission_clamps = 0u64;
+
+        for w in 0..cfg.windows {
+            // Requested operating points, then shared-memory admission:
+            // shrink the largest *shrinkable* consumer (batch halved
+            // first, then instances shed) until the fleet fits. Members
+            // already at (1, 1) are passed over — OOM is only an error
+            // when nobody can give anything back.
+            let requested: Vec<(u32, u32)> =
+                states.iter().map(|m| m.policy.operating_point()).collect();
+            let mut points = requested.clone();
+            loop {
+                let demands: Vec<f64> = states
+                    .iter()
+                    .zip(&points)
+                    .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+                    .collect();
+                let total: f64 = demands.iter().sum();
+                if total <= gpu.mem_mb {
+                    peak_mem_mb = peak_mem_mb.max(total);
+                    break;
+                }
+                let Some((k, _)) = demands
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| points[i] != (1, 1))
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                else {
+                    return Err(DeviceError::OutOfMemory {
+                        demand_mb: total,
+                        capacity_mb: gpu.mem_mb,
+                    });
+                };
+                let p = &mut points[k];
+                if p.0 > 1 {
+                    p.0 = (p.0 / 2).max(1);
+                } else {
+                    p.1 -= 1;
+                }
+                admission_clamps += 1;
+            }
+
+            // Combined SM pressure sets this window's time-sharing factor.
+            let contention: f64 = states
+                .iter()
+                .zip(&points)
+                .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
+                .sum();
+            peak_contention = peak_contention.max(contention);
+            let factor = contention.max(1.0);
+
+            for (i, m) in states.iter_mut().enumerate() {
+                let (bs, mtl) = points[i];
+                let slo = m.schedule.at(w);
+                let pending = m.pending_launch_ms;
+                m.pending_launch_ms = 0.0;
+                m.admitted = (bs, mtl);
+                let (record, obs) = serve_closed_window(
+                    &cfg,
+                    w,
+                    slo,
+                    (bs, mtl),
+                    factor,
+                    pending,
+                    &mut m.sim,
+                    &mut m.window,
+                    &mut m.latencies,
+                    &mut m.acc,
+                )?;
+                m.trace.push(record);
+                // Launch overhead is charged against the policy's own
+                // previous request, not the admitted point — an admission
+                // clamp must not bill launches that never happened.
+                let requested_mtl = requested[i].1;
+                if let Action::SetPoint { mtl: new_mtl, .. } = m.policy.observe(&obs) {
+                    if new_mtl > requested_mtl {
+                        m.pending_launch_ms +=
+                            m.sim.launch_overhead_ms() * (new_mtl - requested_mtl) as f64;
+                    }
+                }
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(states.len());
+        for m in states {
+            let mut out = assemble_outcome(
+                &m.job,
+                m.policy.name().to_string(),
+                m.admitted,
+                m.trace,
+                m.latencies,
+                &m.acc,
+                0,
+                0,
+            );
+            if let Some(name) = m.label {
+                out.controller = name.to_string();
+            }
+            out.method = m.profile.as_ref().map(|p| p.method);
+            out.profile = m.profile;
+            outcomes.push(out);
+        }
+        let total_throughput = outcomes.iter().map(|o| o.throughput).sum();
+        Ok(FleetOutcome {
+            members: outcomes,
+            total_throughput,
+            peak_mem_mb,
+            mem_capacity_mb: gpu.mem_mb,
+            peak_contention,
+            admission_clamps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::paper_job;
+
+    #[test]
+    fn builder_rejects_empty_fleet_and_unknown_dnn() {
+        assert_eq!(Fleet::builder().build().err(), Some(ConfigError::NoFleetMembers));
+        let mut bogus = *paper_job(1).unwrap();
+        bogus.dnn = "vgg16";
+        assert_eq!(
+            Fleet::builder().job(&bogus, PolicySpec::Clipper).build().err(),
+            Some(ConfigError::UnknownDnn { dnn: "vgg16".into() })
+        );
+        assert_eq!(
+            Fleet::builder()
+                .windows(0)
+                .job(paper_job(1).unwrap(), PolicySpec::Clipper)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroWindows)
+        );
+    }
+
+    #[test]
+    fn two_member_fleet_shares_the_gpu() {
+        let out = Fleet::builder()
+            .windows(16)
+            .rounds_per_window(10)
+            .seed(11)
+            .job(paper_job(1).unwrap(), PolicySpec::DnnScaler)
+            .job(paper_job(4).unwrap(), PolicySpec::DnnScaler)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.members.len(), 2);
+        for m in &out.members {
+            assert!(m.throughput > 0.0, "{}: zero throughput", m.dnn);
+            assert!((0.0..=1.0).contains(&m.slo_attainment));
+            assert_eq!(m.trace.len(), 16);
+        }
+        assert!(out.peak_mem_mb <= out.mem_capacity_mb);
+        assert!(out.peak_mem_mb > 0.0);
+        assert!(out.total_throughput > 0.0);
+        // Two MT-class jobs at their seeded instance counts must actually
+        // contend for SMs (factor > 1 => time-sharing kicked in).
+        assert!(out.peak_contention > 1.0, "contention {}", out.peak_contention);
+    }
+
+    #[test]
+    fn static_members_are_admission_checked() {
+        // Two members asking for preposterous static points must be
+        // shrunk by admission control rather than OOMing the shared GPU,
+        // and the reported steady point must be the *admitted* one, not
+        // the policy's request.
+        let out = Fleet::builder()
+            .windows(4)
+            .rounds_per_window(4)
+            .seed(3)
+            .job(paper_job(7).unwrap(), PolicySpec::Static { bs: 128, mtl: 10 })
+            .job(paper_job(3).unwrap(), PolicySpec::Static { bs: 128, mtl: 10 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(out.admission_clamps > 0, "admission must have intervened");
+        assert!(out.peak_mem_mb <= out.mem_capacity_mb);
+        for m in &out.members {
+            assert!(m.throughput > 0.0);
+            // 2x (128, 10) demands ~85 GB on a 24 GB card: both members
+            // must have been shrunk, and the outcome must say so.
+            assert!(
+                m.steady_bs < 128,
+                "{}: steady bs {} reports the request, not the admitted point",
+                m.dnn,
+                m.steady_bs
+            );
+            let last = m.trace.last().unwrap();
+            assert_eq!((last.bs, last.mtl), (m.steady_bs, m.steady_mtl));
+        }
+    }
+}

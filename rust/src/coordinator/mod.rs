@@ -1,4 +1,21 @@
-//! The DNNScaler coordinator — the paper's system contribution.
+//! The DNNScaler coordinator — the paper's system contribution, grown
+//! into an event-driven serving core.
+//!
+//! ## Serving entry points
+//!
+//! * [`session`] — **`ServingSession`**, the primary API: one job, one
+//!   device, one [`policy::Policy`], served either closed-loop (the
+//!   paper's setup, `ArrivalPattern::Closed`) or open-loop (virtual-time
+//!   event loop over `workload` arrivals: timeout/size-triggered batch
+//!   formation, queueing delay charged into every latency, drop
+//!   accounting under bounded queues);
+//! * [`fleet`] — **`Fleet`**, multiple jobs co-located on one simulated
+//!   GPU with shared memory (admission control) and shared SMs
+//!   (contention-inflated latencies);
+//! * [`runner`] — the deprecated closed-loop `JobRunner` shim over
+//!   `ServingSession`, kept for legacy call sites.
+//!
+//! ## Control algorithms (all [`policy::Policy`] implementations)
 //!
 //! * [`profiler`] — run-time probe deciding Batching vs Multi-Tenancy
 //!   (Eqs. 3-5 / Algorithm 1 lines 1-9);
@@ -6,26 +23,39 @@
 //!   the `alpha = 0.85` hysteresis band (Algorithm 1 lines 10-29);
 //! * [`scaler_mt`] — matrix-completion-seeded AIMD instance scaling
 //!   (Algorithm 1 lines 30-41);
-//! * [`matcomp`] — the soft-impute matrix-completion estimator over a
-//!   library of latency-vs-MTL curves;
 //! * [`clipper`] — the Clipper baseline (AIMD batching only, Crankshaw et
 //!   al. NSDI'17) the paper compares against;
+//! * [`policy`] — the `Policy`/`WindowObservation`/`Action` interface
+//!   plus the static-knob baseline and the legacy-`Controller` adapter.
+//!
+//! ## Substrate
+//!
+//! * [`controller`] — the legacy p95-only `Controller` trait;
+//! * [`matcomp`] — the soft-impute matrix-completion estimator over a
+//!   library of latency-vs-MTL curves;
 //! * [`latency`] — windowed tail-latency (p95) monitor;
-//! * [`job`] — the 30-job workload of Table 4;
-//! * [`runner`] — the serving loop tying device + controller + metrics.
+//! * [`job`] — the 30-job workload of Table 4.
 
 pub mod clipper;
 pub mod controller;
+pub mod fleet;
 pub mod job;
 pub mod latency;
 pub mod matcomp;
+pub mod policy;
 pub mod profiler;
 pub mod runner;
 pub mod scaler_batching;
 pub mod scaler_mt;
+pub mod session;
 
 pub use controller::{Controller, Decision, Method};
+pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
+pub use policy::{Action, AsPolicy, Policy, StaticPolicy, WindowObservation};
 pub use profiler::{ProfileOutcome, Profiler};
+pub use session::{
+    ConfigError, JobOutcome, PolicySpec, RunConfig, ServingSession, SessionBuilder, WindowRecord,
+};
 
 /// Hysteresis coefficient from the paper (§3.3.1): the Scaler holds the
 /// knob while `alpha * SLO <= p95 <= SLO`.

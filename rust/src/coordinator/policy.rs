@@ -1,0 +1,202 @@
+//! The `Policy` abstraction: what a serving-control algorithm sees and
+//! what it may do.
+//!
+//! The legacy [`Controller`] trait observes only `(p95, SLO)` — enough
+//! for the paper's closed-loop evaluation, but blind to everything an
+//! open-loop server knows: queue depth, offered arrival rate, drops,
+//! power, SM utilization. `Policy` generalizes it: each control window
+//! the session hands the policy a typed [`WindowObservation`] and gets a
+//! typed [`Action`] back. DNNScaler's two scalers, Clipper, and the
+//! static-knob baseline are all `Policy` implementations, so ablations
+//! and new algorithms plug into `ServingSession`/`Fleet` uniformly.
+//!
+//! [`Controller`]: super::controller::Controller
+
+use super::controller::{Controller, Decision};
+
+/// Everything the serving loop measured over one control window.
+///
+/// Closed-loop sessions leave the queue fields at zero (there is no
+/// queue); open-loop sessions report sojourn latencies (queueing delay
+/// included), the offered arrival rate, and drop counts.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowObservation {
+    /// Window index, `0..windows`.
+    pub window: usize,
+    /// SLO in effect during the window (ms).
+    pub slo_ms: f64,
+    /// p95 of per-request latency over the window (ms).
+    pub p95_ms: f64,
+    /// Mean per-request latency over the window (ms).
+    pub mean_ms: f64,
+    /// Requests completed per second of window wall time.
+    pub throughput: f64,
+    /// Mean board power over the window (W); 0 when unknown.
+    pub power_w: f64,
+    /// Mean SM utilization over the window, 0..1; 0 when unknown.
+    pub sm_util: f64,
+    /// Pending requests left in the queue at the window boundary.
+    pub queue_depth: usize,
+    /// Offered arrival rate over the window (requests/s); 0 closed-loop.
+    pub arrival_rate: f64,
+    /// Requests dropped (bounded queue overflow) during the window.
+    pub drops: u64,
+}
+
+/// A policy's verdict for the next window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Keep the current operating point.
+    Hold,
+    /// Move to a new operating point; the session charges instance-launch
+    /// overhead when `mtl` grows.
+    SetPoint { bs: u32, mtl: u32 },
+}
+
+impl Action {
+    /// Lift a legacy [`Decision`] into an `Action`.
+    pub fn from_decision(d: Decision) -> Action {
+        if d.changed {
+            Action::SetPoint { bs: d.bs, mtl: d.mtl }
+        } else {
+            Action::Hold
+        }
+    }
+}
+
+/// A window-driven serving-control algorithm.
+pub trait Policy {
+    /// Human-readable name for traces/reports.
+    fn name(&self) -> &'static str;
+
+    /// Current operating point `(bs, mtl)`.
+    fn operating_point(&self) -> (u32, u32);
+
+    /// Observe one control window and decide the next operating point.
+    fn observe(&mut self, obs: &WindowObservation) -> Action;
+}
+
+/// Adapter giving any legacy [`Controller`] the `Policy` interface (it
+/// sees only the `p95_ms`/`slo_ms` fields of the observation).
+pub struct AsPolicy<C>(pub C);
+
+impl<C: Controller> Policy for AsPolicy<C> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        self.0.operating_point()
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        Action::from_decision(self.0.observe_window(obs.p95_ms, obs.slo_ms))
+    }
+}
+
+/// Static-knob baseline: serve at a fixed `(bs, mtl)` forever. The
+/// no-control lower bound every adaptive policy must beat, and the
+/// building block for sweep-style experiments through the serving loop.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticPolicy {
+    bs: u32,
+    mtl: u32,
+}
+
+impl StaticPolicy {
+    pub fn new(bs: u32, mtl: u32) -> Self {
+        assert!(bs >= 1 && mtl >= 1, "operating point must be >= (1,1)");
+        StaticPolicy { bs, mtl }
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (self.bs, self.mtl)
+    }
+
+    fn observe(&mut self, _obs: &WindowObservation) -> Action {
+        Action::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::clipper::Clipper;
+    use crate::coordinator::scaler_batching::BatchScaler;
+
+    fn obs(p95: f64, slo: f64) -> WindowObservation {
+        WindowObservation {
+            window: 0,
+            slo_ms: slo,
+            p95_ms: p95,
+            mean_ms: p95,
+            throughput: 0.0,
+            power_w: 0.0,
+            sm_util: 0.0,
+            queue_depth: 0,
+            arrival_rate: 0.0,
+            drops: 0,
+        }
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let mut p = StaticPolicy::new(8, 2);
+        assert_eq!(p.operating_point(), (8, 2));
+        for i in 0..50 {
+            let a = p.observe(&obs(if i % 2 == 0 { 1.0 } else { 1e9 }, 100.0));
+            assert_eq!(a, Action::Hold);
+            assert_eq!(p.operating_point(), (8, 2));
+        }
+        assert_eq!(p.name(), "static");
+    }
+
+    #[test]
+    #[should_panic]
+    fn static_policy_rejects_zero_knob() {
+        let _ = StaticPolicy::new(0, 1);
+    }
+
+    #[test]
+    fn as_policy_mirrors_controller() {
+        let mut c = Clipper::new();
+        let mut p = AsPolicy(Clipper::new());
+        for i in 0..30 {
+            let p95 = if i % 5 == 4 { 1e6 } else { 0.0 };
+            let d = c.observe_window(p95, 100.0);
+            let a = p.observe(&obs(p95, 100.0));
+            assert_eq!(a, Action::from_decision(d));
+            assert_eq!(Policy::operating_point(&p), Controller::operating_point(&c));
+        }
+        assert_eq!(Policy::name(&p), "clipper");
+    }
+
+    #[test]
+    fn scalers_implement_policy_directly() {
+        // BatchScaler as a Policy converges the same way it does as a
+        // Controller (it reads only p95/slo from the observation).
+        let mut p: Box<dyn Policy> = Box::new(BatchScaler::new());
+        for _ in 0..30 {
+            let (bs, _) = p.operating_point();
+            let lat = 2.0 * bs as f64; // SLO 100 -> knee at 50
+            p.observe(&obs(lat, 100.0));
+        }
+        let (bs, mtl) = p.operating_point();
+        assert!((43..=50).contains(&bs), "bs {bs}");
+        assert_eq!(mtl, 1);
+    }
+
+    #[test]
+    fn action_from_decision() {
+        let hold = Decision { bs: 4, mtl: 1, changed: false };
+        let moved = Decision { bs: 8, mtl: 2, changed: true };
+        assert_eq!(Action::from_decision(hold), Action::Hold);
+        assert_eq!(Action::from_decision(moved), Action::SetPoint { bs: 8, mtl: 2 });
+    }
+}

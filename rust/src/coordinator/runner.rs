@@ -1,120 +1,31 @@
-//! The serving loop: device + controller + SLO monitor + metrics.
+//! Legacy closed-loop entry point, kept as a thin deprecated shim.
 //!
-//! Time is driven by executed batches (virtual time in sim mode, wall
-//! time in real mode): each control window executes a fixed number of
-//! rounds at the current operating point, computes the windowed p95, and
-//! lets the controller move the knob — exactly the paper's monitor/adjust
-//! cycle. Instance launches are charged their overhead (§3.3.2).
-
+//! `JobRunner` predates the event-driven [`ServingSession`] API and is
+//! retained only so existing call sites and scripts keep working: each
+//! method builds a closed-loop session (`ArrivalPattern::Closed`) and
+//! runs it, which reproduces the old serving loop exactly — same device
+//! RNG consumption order, same window accounting. New code should use
+//! [`ServingSession::builder`] directly (open-loop arrivals, bounded
+//! queues, custom policies) or [`super::fleet::Fleet`] for multi-job
+//! serving.
+//!
+//! [`ServingSession`]: super::session::ServingSession
+//! [`ServingSession::builder`]: super::session::ServingSession::builder
 
 use crate::device::{Device, DeviceError};
 
-use super::clipper::Clipper;
-use super::controller::{Controller, Decision, Method};
+use super::controller::Controller;
 use super::job::JobSpec;
-use super::latency::LatencyWindow;
-use super::matcomp::LatencyLibrary;
-use super::profiler::{ProfileOutcome, Profiler};
-use super::scaler_batching::BatchScaler;
-use super::scaler_mt::MtScaler;
-use super::MAX_MTL;
+use super::policy::AsPolicy;
+use super::session::{PolicySpec, ServingSession};
 
-/// Serving-loop configuration.
-#[derive(Debug, Clone)]
-pub struct RunConfig {
-    /// Number of control windows.
-    pub windows: usize,
-    /// Batch rounds executed per window.
-    pub rounds_per_window: usize,
-    /// Optional SLO schedule: `(window_index, new_slo_ms)` steps applied
-    /// in order (sensitivity analysis, Figs. 9-10).
-    pub slo_schedule: Vec<(usize, f64)>,
-    /// Batch-size ceiling (128 on the P40; the largest exported artifact
-    /// in real mode).
-    pub max_bs: u32,
-    /// Instance-count ceiling (10 on the P40).
-    pub max_mtl: u32,
-    /// Profiler probe points (paper: m = 32, n = 8); clamped to the
-    /// ceilings above.
-    pub probe_bs: u32,
-    pub probe_mtl: u32,
-}
+pub use super::session::{JobOutcome, RunConfig, WindowRecord};
 
-impl Default for RunConfig {
-    fn default() -> Self {
-        RunConfig {
-            windows: 60,
-            rounds_per_window: 20,
-            slo_schedule: Vec::new(),
-            max_bs: super::MAX_BS,
-            max_mtl: MAX_MTL,
-            probe_bs: 32,
-            probe_mtl: 8,
-        }
-    }
-}
+/// Result type of every shim entry point.
+type RunResult = Result<JobOutcome, DeviceError>;
 
-impl RunConfig {
-    /// Config with the paper's knobs but custom window counts.
-    pub fn windows(windows: usize, rounds_per_window: usize) -> Self {
-        RunConfig { windows, rounds_per_window, ..Default::default() }
-    }
-}
-
-/// Per-window trace record (the raw material of Figs. 7-10).
-#[derive(Debug, Clone)]
-pub struct WindowRecord {
-    pub window: usize,
-    pub bs: u32,
-    pub mtl: u32,
-    pub slo_ms: f64,
-    pub p95_ms: f64,
-    pub mean_ms: f64,
-    /// Requests completed / window wall time.
-    pub throughput: f64,
-    pub power_w: f64,
-}
-
-/// Result of one job run.
-#[derive(Debug, Clone)]
-pub struct JobOutcome {
-    pub job_id: u32,
-    pub dnn: String,
-    pub controller: String,
-    /// Method DNNScaler's profiler chose (None for Clipper).
-    pub method: Option<Method>,
-    /// Final operating point.
-    pub steady_bs: u32,
-    pub steady_mtl: u32,
-    /// Mean throughput over the steady half of the run (inferences/s).
-    pub throughput: f64,
-    /// p95 latency over the steady half (ms).
-    pub p95_ms: f64,
-    /// Fraction of requests whose latency met the SLO in effect (whole
-    /// run, including the search/convergence phase).
-    pub slo_attainment: f64,
-    /// Same, restricted to the steady half of the run — the paper's
-    /// Fig. 6 regime, after the knob has converged.
-    pub steady_attainment: f64,
-    /// Mean power over the steady half (W); 0 in real mode.
-    pub power_w: f64,
-    /// Per-window trace.
-    pub trace: Vec<WindowRecord>,
-    /// Per-request (latency, weight) pairs for CDFs (weight = requests
-    /// that observed that latency).
-    pub latencies: Vec<(f64, f64)>,
-    /// Profiler outcome (DNNScaler only).
-    pub profile: Option<ProfileOutcome>,
-}
-
-impl JobOutcome {
-    /// Power efficiency (throughput per watt); None when power unknown.
-    pub fn power_efficiency(&self) -> Option<f64> {
-        (self.power_w > 0.0).then(|| self.throughput / self.power_w)
-    }
-}
-
-/// Drives one job on one device with one controller.
+/// Deprecated: drives one job on one device with one controller, closed
+/// loop. Use [`ServingSession`] instead.
 pub struct JobRunner {
     pub cfg: RunConfig,
 }
@@ -124,171 +35,41 @@ impl JobRunner {
         JobRunner { cfg }
     }
 
-    /// Full DNNScaler: profile, pick the method, build the matching
-    /// scaler (MT seeded by matrix completion from the profiling
-    /// latencies), then serve.
-    pub fn run_dnnscaler(
-        &self,
-        job: &JobSpec,
-        device: &mut dyn Device,
-    ) -> Result<JobOutcome, DeviceError> {
-        let profiler = Profiler {
-            probe_bs: self.cfg.probe_bs.min(self.cfg.max_bs),
-            probe_mtl: self.cfg.probe_mtl.min(self.cfg.max_mtl),
-            batches_per_point: 5,
-        };
-        let profile = profiler.run(device)?;
-        let mut controller: Box<dyn Controller> = match profile.method {
-            Method::Batching => Box::new(BatchScaler::with_limits(1, self.cfg.max_bs)),
-            Method::MultiTenancy => {
-                let lib = LatencyLibrary::from_paper_profiles(job.dnn, self.cfg.max_mtl);
-                // The two MT observations come free from profiling.
-                let observed =
-                    [(1u32, profile.lat_base_ms), (profiler.probe_mtl, profile.lat_mt_ms)];
-                Box::new(MtScaler::seeded(&lib, &observed, job.slo_ms))
-            }
-        };
-        let mut outcome = self.serve(job, device, controller.as_mut())?;
-        outcome.controller = "dnnscaler".into();
-        outcome.method = Some(profile.method);
-        outcome.profile = Some(profile);
-        Ok(outcome)
+    /// Full DNNScaler: profile, pick the method, scale (closed loop).
+    pub fn run_dnnscaler(&self, job: &JobSpec, dev: &mut dyn Device) -> RunResult {
+        self.run_spec(job, dev, PolicySpec::DnnScaler)
     }
 
     /// The Clipper baseline (batching-only AIMD).
-    pub fn run_clipper(
-        &self,
-        job: &JobSpec,
-        device: &mut dyn Device,
-    ) -> Result<JobOutcome, DeviceError> {
-        let mut c = Clipper::with_params(4, 0.10, self.cfg.max_bs);
-        let mut outcome = self.serve(job, device, &mut c)?;
-        outcome.controller = "clipper".into();
-        Ok(outcome)
+    pub fn run_clipper(&self, job: &JobSpec, dev: &mut dyn Device) -> RunResult {
+        self.run_spec(job, dev, PolicySpec::Clipper)
     }
 
     /// Serve with an explicit controller (ablations, Fig. 11/12 probes).
-    pub fn serve(
+    pub fn serve<'a>(
         &self,
         job: &JobSpec,
-        device: &mut dyn Device,
-        controller: &mut dyn Controller,
-    ) -> Result<JobOutcome, DeviceError> {
-        let mut slo = job.slo_ms;
-        let mut schedule = self.cfg.slo_schedule.clone();
-        schedule.sort_by_key(|(w, _)| *w);
-        let mut schedule_iter = schedule.into_iter().peekable();
+        dev: &'a mut (dyn Device + 'a),
+        controller: &'a mut (dyn Controller + 'a),
+    ) -> RunResult {
+        self.run_spec(job, dev, PolicySpec::custom(AsPolicy(controller)))
+    }
 
-        let mut window = LatencyWindow::new(self.cfg.rounds_per_window);
-        let mut trace = Vec::with_capacity(self.cfg.windows);
-        let mut latencies: Vec<(f64, f64)> = Vec::new();
-        let mut pending_launch_ms = 0.0;
-
-        for w in 0..self.cfg.windows {
-            while let Some(&(at, new_slo)) = schedule_iter.peek() {
-                if at <= w {
-                    slo = new_slo;
-                    schedule_iter.next();
-                } else {
-                    break;
-                }
-            }
-
-            let (bs, mtl) = controller.operating_point();
-            let mut wall_ms = pending_launch_ms;
-            pending_launch_ms = 0.0;
-            let mut requests = 0.0;
-            let mut power_acc = 0.0;
-            window.reset();
-
-            for _ in 0..self.cfg.rounds_per_window {
-                let s = device.execute_batch(bs, mtl)?;
-                window.record(s.latency_ms);
-                wall_ms += s.latency_ms;
-                let reqs = (bs * mtl) as f64;
-                requests += reqs;
-                latencies.push((s.latency_ms, reqs));
-                power_acc += s.power_w;
-            }
-
-            let p95 = window.p95().unwrap_or(0.0);
-            let mean = window.mean().unwrap_or(0.0);
-            let throughput = requests / (wall_ms / 1000.0);
-            trace.push(WindowRecord {
-                window: w,
-                bs,
-                mtl,
-                slo_ms: slo,
-                p95_ms: p95,
-                mean_ms: mean,
-                throughput,
-                power_w: power_acc / self.cfg.rounds_per_window as f64,
-            });
-
-            let decision: Decision = controller.observe_window(p95, slo);
-            if decision.changed && decision.mtl > mtl {
-                // Charge instance-launch overhead to the next window.
-                pending_launch_ms +=
-                    device.launch_overhead_ms() * (decision.mtl - mtl) as f64;
-            }
-        }
-
-        // Steady-state = last half of the run.
-        let steady = &trace[trace.len() / 2..];
-        let throughput = steady.iter().map(|r| r.throughput).sum::<f64>() / steady.len() as f64;
-        let power_w = steady.iter().map(|r| r.power_w).sum::<f64>() / steady.len() as f64;
-        let mut steady_lat: Vec<f64> = steady.iter().map(|r| r.p95_ms).collect();
-        steady_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p95_ms = steady_lat[((steady_lat.len() as f64 * 0.95).ceil() as usize - 1)
-            .min(steady_lat.len() - 1)];
-
-        // SLO attainment over all requests, against the SLO in effect;
-        // also restricted to the steady half.
-        let mut met = 0.0;
-        let mut total = 0.0;
-        let mut steady_met = 0.0;
-        let mut steady_total = 0.0;
-        let per_window = self.cfg.rounds_per_window;
-        let steady_from = self.cfg.windows / 2;
-        for (i, (lat, weight)) in latencies.iter().enumerate() {
-            let wi = (i / per_window).min(trace.len() - 1);
-            let slo_then = trace[wi].slo_ms;
-            let ok = *lat <= slo_then;
-            if ok {
-                met += weight;
-            }
-            total += weight;
-            if wi >= steady_from {
-                if ok {
-                    steady_met += weight;
-                }
-                steady_total += weight;
-            }
-        }
-
-        let (steady_bs, steady_mtl) = controller.operating_point();
-        Ok(JobOutcome {
-            job_id: job.id,
-            dnn: job.dnn.to_string(),
-            controller: controller.name().to_string(),
-            method: None,
-            steady_bs,
-            steady_mtl,
-            throughput,
-            p95_ms,
-            slo_attainment: met / total,
-            steady_attainment: steady_met / steady_total.max(1e-12),
-            power_w,
-            trace,
-            latencies,
-            profile: None,
-        })
+    fn run_spec<'a>(
+        &self,
+        job: &JobSpec,
+        dev: &'a mut (dyn Device + 'a),
+        spec: PolicySpec<'a>,
+    ) -> RunResult {
+        let session = ServingSession::builder().config(self.cfg.clone()).job(job).device(dev);
+        session.policy(spec).build().map_err(|e| DeviceError::Exec(e.to_string()))?.run()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::controller::Method;
     use crate::coordinator::job::{paper_job, SteadyKnob};
     use crate::gpusim::GpuSim;
 
@@ -383,5 +164,19 @@ mod tests {
         assert!((0.0..=1.0).contains(&scaler.slo_attainment));
         let total_reqs: f64 = scaler.latencies.iter().map(|(_, w)| w).sum();
         assert!(total_reqs > 0.0);
+    }
+
+    #[test]
+    fn zero_window_config_is_a_typed_error_not_a_panic() {
+        // Regression: windows == 0 used to underflow `trace.len() - 1`
+        // deep inside serve; it must surface as a config error now.
+        let job = paper_job(1).unwrap();
+        let mut d = GpuSim::for_paper_dnn(job.dnn, job.dataset, 1).unwrap();
+        let runner = JobRunner::new(RunConfig { windows: 0, ..Default::default() });
+        let err = runner.run_dnnscaler(job, &mut d).unwrap_err();
+        assert!(err.to_string().contains("windows"), "{err}");
+        let runner = JobRunner::new(RunConfig { rounds_per_window: 0, ..Default::default() });
+        let err = runner.run_dnnscaler(job, &mut d).unwrap_err();
+        assert!(err.to_string().contains("rounds_per_window"), "{err}");
     }
 }

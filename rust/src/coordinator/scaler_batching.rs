@@ -17,6 +17,7 @@
 //! relaxed SLO upward — the paper's "readjustment" behaviour.
 
 use super::controller::{Controller, Decision};
+use super::policy::{Action, Policy, WindowObservation};
 use super::{ALPHA, MAX_BS};
 
 /// Pseudo-binary-search batch-size controller.
@@ -132,6 +133,22 @@ impl Controller for BatchScaler {
 
         self.settled = self.current == prev;
         Decision { bs: self.current, mtl: 1, changed: self.current != prev }
+    }
+}
+
+/// `Policy` view of the batch scaler: it acts on the observation's
+/// p95/SLO only (the paper's Algorithm 1 uses nothing else).
+impl Policy for BatchScaler {
+    fn name(&self) -> &'static str {
+        Controller::name(self)
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        Controller::operating_point(self)
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        Action::from_decision(self.observe_window(obs.p95_ms, obs.slo_ms))
     }
 }
 

@@ -12,6 +12,7 @@
 
 use super::controller::{Controller, Decision};
 use super::matcomp::{pick_mtl, LatencyLibrary};
+use super::policy::{Action, Policy, WindowObservation};
 use super::{ALPHA, MAX_MTL};
 
 /// Matrix-completion-seeded AIMD instance-count controller.
@@ -114,6 +115,23 @@ impl Controller for MtScaler {
         }
         self.settled = self.mtl == prev;
         Decision { bs: 1, mtl: self.mtl, changed: self.mtl != prev }
+    }
+}
+
+/// `Policy` view of the MT scaler: like the paper's Algorithm 1, it acts
+/// on p95/SLO; the richer observation fields are available to subclasses
+/// of the interface, not needed here.
+impl Policy for MtScaler {
+    fn name(&self) -> &'static str {
+        Controller::name(self)
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        Controller::operating_point(self)
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        Action::from_decision(self.observe_window(obs.p95_ms, obs.slo_ms))
     }
 }
 

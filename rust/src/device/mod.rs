@@ -69,6 +69,20 @@ pub trait Device {
     }
 }
 
+/// Forwarding impl so `&mut GpuSim` / `&mut dyn Device` can be handed to
+/// `ServingSession::builder().device(..)` without giving up ownership.
+impl<D: Device + ?Sized> Device for &mut D {
+    fn model(&self) -> &str {
+        (**self).model()
+    }
+    fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError> {
+        (**self).execute_batch(bs, mtl)
+    }
+    fn launch_overhead_ms(&self) -> f64 {
+        (**self).launch_overhead_ms()
+    }
+}
+
 /// Blanket impl so `Box<dyn Device>` composes.
 impl Device for Box<dyn Device + Send> {
     fn model(&self) -> &str {

@@ -6,22 +6,29 @@
 //! * `profile` — run the Profiler on one DNN (Table 5 rows);
 //! * `job` — run one Table 4 job end-to-end (DNNScaler vs Clipper);
 //! * `jobs` — run the full 30-job workload (Fig. 5 summary);
+//! * `fleet` — co-locate several jobs on one shared simulated P40;
 //! * `sweep` — throughput/latency vs BS or MTL (Fig. 1 curves);
 //! * `serve` — real-mode serving of an AOT artifact over PJRT.
 //!
+//! `job`, `jobs`, and `serve` accept `--open` plus arrival-shape flags to
+//! serve open-loop through the event-driven `ServingSession` (queueing
+//! delay in every latency, drop accounting under `--queue-cap`).
+//!
 //! Argument parsing is hand-rolled (this build is fully offline; see
-//! Cargo.toml) — `--key value` flags after the subcommand.
+//! Cargo.toml) — `--key value` flags after the subcommand; each
+//! subcommand rejects flags it does not understand.
 
 use anyhow::{anyhow, bail, Result};
 
 use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
-use dnnscaler::coordinator::runner::{JobRunner, RunConfig};
-use dnnscaler::coordinator::{Method, Profiler};
+use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
+use dnnscaler::coordinator::{Fleet, Method, Profiler};
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::gpusim::{Dataset, GpuSim, PAPER_DNNS};
 use dnnscaler::manifest::Manifest;
 use dnnscaler::metrics::report::{f1, f2};
 use dnnscaler::metrics::Table;
+use dnnscaler::workload::ArrivalPattern;
 
 const USAGE: &str = "\
 dnnscaler — Batching or Multi-Tenancy? (CS.DC 2023 reproduction)
@@ -33,23 +40,37 @@ COMMANDS:
            List calibrated paper DNNs and exported AOT artifacts.
   profile  --dnn NAME [--dataset DS] [--seed N]
            Run the Profiler on one paper DNN (simulated P40).
-  job      --id 1..30 [--windows N] [--seed N] [--trace]
+  job      --id 1..30 [--windows N] [--seed N] [--trace] [open flags]
            Run one Table 4 job: DNNScaler vs Clipper.
-  jobs     [--windows N] [--seed N]
+  jobs     [--windows N] [--seed N] [open flags]
            Run the full 30-job workload (Fig. 5 summary).
+  fleet    [--ids 1,4,10] [--windows N] [--seed N]
+           Serve several jobs concurrently on ONE shared simulated P40
+           (shared memory admission + SM contention).
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
-  serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
+  serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N] [open flags]
            Serve a real AOT artifact over PJRT with DNNScaler.
+
+OPEN-LOOP FLAGS (job, jobs, serve):
+  --open                serve open-loop instead of closed-loop
+  --rate R              base arrival rate, requests/s (default 50)
+  --burst-factor F      rate multiplier during bursts (default 1 = plain Poisson)
+  --burst-period S      seconds between burst starts (default 4)
+  --burst-len S         burst duration in seconds (default 1)
+  --timeout-ms MS       batch-formation timeout (default 5)
+  --queue-cap N         bound the request queue; overflow is dropped
 
 Datasets: imagenet caltech sentiment140 imdb ledov dhf1k librispeech
 ";
 
 /// Tiny `--key value` flag parser (flags without value become `true`).
+/// Every subcommand passes its allow-list; unknown flags are an error so
+/// a typo like `--windos 10` cannot be silently ignored.
 struct Flags(Vec<(String, String)>);
 
 impl Flags {
-    fn parse(args: &[String]) -> Result<Flags> {
+    fn parse(args: &[String], allowed: &[&str]) -> Result<Flags> {
         let mut out = Vec::new();
         let mut i = 0;
         while i < args.len() {
@@ -57,6 +78,13 @@ impl Flags {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got {a:?}\n\n{USAGE}"))?;
+            if !allowed.contains(&key) {
+                let known: Vec<String> = allowed.iter().map(|k| format!("--{k}")).collect();
+                bail!(
+                    "unknown flag --{key} for this command (allowed: {})",
+                    known.join(" ")
+                );
+            }
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 out.push((key.to_string(), args[i + 1].clone()));
                 i += 2;
@@ -88,6 +116,53 @@ impl Flags {
     }
 }
 
+/// Flags shared by every open-loop-capable subcommand.
+const OPEN_FLAGS: &[&str] =
+    &["open", "rate", "burst-factor", "burst-period", "burst-len", "timeout-ms", "queue-cap"];
+
+/// Parsed open-loop serving shape (None = closed loop).
+#[derive(Clone, Copy)]
+struct OpenCfg {
+    pattern: ArrivalPattern,
+    timeout_ms: f64,
+    queue_cap: Option<usize>,
+}
+
+fn parse_open(flags: &Flags) -> Result<Option<OpenCfg>> {
+    if !flags.has("open") {
+        // The arrival-shape flags mean nothing closed-loop; refuse to
+        // silently discard them.
+        if let Some(stray) = OPEN_FLAGS.iter().find(|&&k| k != "open" && flags.has(k)) {
+            bail!("--{stray} requires --open (closed-loop serving has no arrival process)");
+        }
+        return Ok(None);
+    }
+    let rate: f64 = flags.num_or("rate", 50.0)?;
+    let factor: f64 = flags.num_or("burst-factor", 1.0)?;
+    let pattern = if factor > 1.0 {
+        ArrivalPattern::bursty(
+            rate,
+            factor,
+            flags.num_or("burst-period", 4.0)?,
+            flags.num_or("burst-len", 1.0)?,
+        )
+    } else if factor < 1.0 {
+        bail!("--burst-factor must be >= 1 (got {factor}); 1 means plain Poisson");
+    } else if flags.has("burst-period") || flags.has("burst-len") {
+        // Don't silently discard a burst shape the user spelled out.
+        bail!("--burst-period/--burst-len have no effect without --burst-factor > 1");
+    } else {
+        ArrivalPattern::poisson(rate)
+    };
+    let queue_cap = match flags.get("queue-cap") {
+        None => None,
+        Some(v) => {
+            Some(v.parse().map_err(|_| anyhow!("--queue-cap: cannot parse {v:?}"))?)
+        }
+    };
+    Ok(Some(OpenCfg { pattern, timeout_ms: flags.num_or("timeout-ms", 5.0)?, queue_cap }))
+}
+
 fn parse_dataset(s: &str) -> Result<Dataset> {
     Dataset::parse(s).ok_or_else(|| anyhow!("unknown dataset {s:?}"))
 }
@@ -98,36 +173,65 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let flags = Flags::parse(&args[1..])?;
+    let rest = &args[1..];
     match cmd.as_str() {
-        "zoo" => cmd_zoo(&flags.str_or("artifacts", "artifacts")),
+        "zoo" => {
+            let flags = Flags::parse(rest, &["artifacts"])?;
+            cmd_zoo(&flags.str_or("artifacts", "artifacts"))
+        }
         "profile" => {
+            let flags = Flags::parse(rest, &["dnn", "dataset", "seed"])?;
             let dnn = flags.get("dnn").ok_or_else(|| anyhow!("profile needs --dnn"))?;
             cmd_profile(dnn, &flags.str_or("dataset", "imagenet"), flags.num_or("seed", 42u64)?)
         }
-        "job" => cmd_job(
-            flags.num_or("id", 0u32).and_then(|id| {
-                if id == 0 {
-                    bail!("job needs --id 1..30")
-                } else {
-                    Ok(id)
-                }
-            })?,
-            flags.num_or("windows", 60usize)?,
-            flags.num_or("seed", 42u64)?,
-            flags.has("trace"),
-        ),
-        "jobs" => cmd_jobs(flags.num_or("windows", 40usize)?, flags.num_or("seed", 42u64)?),
+        "job" => {
+            let allowed = [&["id", "windows", "seed", "trace"][..], OPEN_FLAGS].concat();
+            let flags = Flags::parse(rest, &allowed)?;
+            let id = flags.num_or("id", 0u32)?;
+            if id == 0 {
+                bail!("job needs --id 1..30");
+            }
+            cmd_job(
+                id,
+                flags.num_or("windows", 60usize)?,
+                flags.num_or("seed", 42u64)?,
+                flags.has("trace"),
+                parse_open(&flags)?,
+            )
+        }
+        "jobs" => {
+            let allowed = [&["windows", "seed"][..], OPEN_FLAGS].concat();
+            let flags = Flags::parse(rest, &allowed)?;
+            cmd_jobs(
+                flags.num_or("windows", 40usize)?,
+                flags.num_or("seed", 42u64)?,
+                parse_open(&flags)?,
+            )
+        }
+        "fleet" => {
+            let flags = Flags::parse(rest, &["ids", "windows", "seed"])?;
+            cmd_fleet(
+                &flags.str_or("ids", "1,4,10"),
+                flags.num_or("windows", 30usize)?,
+                flags.num_or("seed", 42u64)?,
+            )
+        }
         "sweep" => {
+            let flags = Flags::parse(rest, &["dnn", "dataset", "knob"])?;
             let dnn = flags.get("dnn").ok_or_else(|| anyhow!("sweep needs --dnn"))?;
             cmd_sweep(dnn, &flags.str_or("dataset", "imagenet"), &flags.str_or("knob", "bs"))
         }
-        "serve" => cmd_serve(
-            &flags.str_or("model", "mobv1-025"),
-            flags.num_or("slo", 50.0f64)?,
-            &flags.str_or("artifacts", "artifacts"),
-            flags.num_or("windows", 20usize)?,
-        ),
+        "serve" => {
+            let allowed = [&["model", "slo", "artifacts", "windows"][..], OPEN_FLAGS].concat();
+            let flags = Flags::parse(rest, &allowed)?;
+            cmd_serve(
+                &flags.str_or("model", "mobv1-025"),
+                flags.num_or("slo", 50.0f64)?,
+                &flags.str_or("artifacts", "artifacts"),
+                flags.num_or("windows", 20usize)?,
+                parse_open(&flags)?,
+            )
+        }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -191,31 +295,53 @@ fn cmd_profile(dnn: &str, dataset: &str, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Run one session on a fresh simulator through the event-driven API.
+fn run_session(
+    job: &JobSpec,
+    cfg: RunConfig,
+    seed: u64,
+    spec: PolicySpec<'static>,
+    open: Option<&OpenCfg>,
+) -> Result<JobOutcome> {
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed)
+        .ok_or_else(|| anyhow!("unknown DNN {:?}", job.dnn))?;
+    let mut b =
+        ServingSession::builder().config(cfg).job(job).device(sim).policy(spec).seed(seed);
+    if let Some(o) = open {
+        b = b.arrivals(o.pattern).batch_timeout_ms(o.timeout_ms);
+        if let Some(cap) = o.queue_cap {
+            b = b.queue_capacity(cap);
+        }
+    }
+    b.build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))
+}
+
 fn run_job_pair(
     job: &JobSpec,
     windows: usize,
     seed: u64,
-) -> Result<(dnnscaler::JobOutcome, dnnscaler::JobOutcome)> {
+    open: Option<&OpenCfg>,
+) -> Result<(JobOutcome, JobOutcome)> {
     let cfg = RunConfig::windows(windows, 20);
-    let runner = JobRunner::new(cfg);
-    let mut d1 = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed)
-        .ok_or_else(|| anyhow!("unknown DNN {:?}", job.dnn))?;
-    let scaler = runner.run_dnnscaler(job, &mut d1).map_err(|e| anyhow!(e.to_string()))?;
-    let mut d2 = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed + 1).unwrap();
-    let clipper = runner.run_clipper(job, &mut d2).map_err(|e| anyhow!(e.to_string()))?;
+    let scaler = run_session(job, cfg.clone(), seed, PolicySpec::DnnScaler, open)?;
+    let clipper = run_session(job, cfg, seed + 1, PolicySpec::Clipper, open)?;
     Ok((scaler, clipper))
 }
 
-fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool) -> Result<()> {
+fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool, open: Option<OpenCfg>) -> Result<()> {
     let job = paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30"))?;
-    let (scaler, clipper) = run_job_pair(job, windows, seed)?;
+    let (scaler, clipper) = run_job_pair(job, windows, seed, open.as_ref())?;
     println!(
-        "Job {} ({} on {}, SLO {} ms): paper method {:?}",
+        "Job {} ({} on {}, SLO {} ms): paper method {:?}{}",
         job.id,
         job.dnn,
         job.dataset.name(),
         job.slo_ms,
-        job.paper_method
+        job.paper_method,
+        if open.is_some() { "  [open-loop]" } else { "" }
     );
     for o in [&scaler, &clipper] {
         println!(
@@ -228,6 +354,12 @@ fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool) -> Result<()> {
             o.steady_bs,
             o.steady_mtl
         );
+        if open.is_some() {
+            println!(
+                "  {:<10} queue peak {:>4}  dropped {:>5}  steady attain {:>5.1}%",
+                "", o.queue_peak, o.drops, o.steady_attainment * 100.0
+            );
+        }
     }
     println!(
         "  speedup: {:.2}x (method chosen: {:?})",
@@ -237,24 +369,29 @@ fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool) -> Result<()> {
     if trace {
         for r in &scaler.trace {
             println!(
-                "    w{:03} bs={} mtl={} p95={:.2} slo={:.0} thr={:.1}",
-                r.window, r.bs, r.mtl, r.p95_ms, r.slo_ms, r.throughput
+                "    w{:03} bs={} mtl={} p95={:.2} slo={:.0} thr={:.1} queue={} drops={}",
+                r.window, r.bs, r.mtl, r.p95_ms, r.slo_ms, r.throughput, r.queue_peak, r.drops
             );
         }
     }
     Ok(())
 }
 
-fn cmd_jobs(windows: usize, seed: u64) -> Result<()> {
+fn cmd_jobs(windows: usize, seed: u64, open: Option<OpenCfg>) -> Result<()> {
+    let title = if open.is_some() {
+        "All 30 jobs, open-loop: DNNScaler vs Clipper"
+    } else {
+        "All 30 jobs: DNNScaler vs Clipper (Fig. 5)"
+    };
     let mut t = Table::new(
-        "All 30 jobs: DNNScaler vs Clipper (Fig. 5)",
+        title,
         &["job", "dnn", "method", "paper", "knob", "scaler thr", "clipper thr", "speedup", "attain%"],
     );
     let mut sum_gain = 0.0;
     let mut max_gain: (f64, u32) = (0.0, 0);
     let mut method_hits = 0;
     for job in PAPER_JOBS {
-        let (scaler, clipper) = run_job_pair(job, windows, seed)?;
+        let (scaler, clipper) = run_job_pair(job, windows, seed, open.as_ref())?;
         let gain = scaler.throughput / clipper.throughput;
         sum_gain += gain;
         if gain > max_gain.0 {
@@ -287,6 +424,48 @@ fn cmd_jobs(windows: usize, seed: u64) -> Result<()> {
         sum_gain / PAPER_JOBS.len() as f64,
         max_gain.0,
         max_gain.1
+    );
+    Ok(())
+}
+
+fn cmd_fleet(ids: &str, windows: usize, seed: u64) -> Result<()> {
+    let mut b = Fleet::builder().windows(windows).rounds_per_window(20).seed(seed);
+    let mut picked = Vec::new();
+    for tok in ids.split(',') {
+        let id: u32 = tok.trim().parse().map_err(|_| anyhow!("--ids: bad job id {tok:?}"))?;
+        let job = paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30, got {id}"))?;
+        picked.push(id);
+        b = b.job(job, PolicySpec::DnnScaler);
+    }
+    let out = b
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
+        .map_err(|e| anyhow!(e.to_string()))?;
+    let mut t = Table::new(
+        &format!("Fleet: jobs {picked:?} sharing one simulated P40"),
+        &["job", "dnn", "method", "knob", "thr", "p95(ms)", "attain%"],
+    );
+    for m in &out.members {
+        let knob = format!("bs={} mtl={}", m.steady_bs, m.steady_mtl);
+        t.row(&[
+            m.job_id.to_string(),
+            m.dnn.clone(),
+            m.method.map(|x| x.short()).unwrap_or("-").into(),
+            knob,
+            f1(m.throughput),
+            f2(m.p95_ms),
+            f1(m.slo_attainment * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "fleet total {:.1} inf/s | peak mem {:.0}/{:.0} MB | peak SM contention {:.2} | admission clamps {}",
+        out.total_throughput,
+        out.peak_mem_mb,
+        out.mem_capacity_mb,
+        out.peak_contention,
+        out.admission_clamps
     );
     Ok(())
 }
@@ -332,7 +511,13 @@ fn cmd_sweep(dnn: &str, dataset: &str, knob: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(model: &str, slo: f64, artifacts: &str, windows: usize) -> Result<()> {
+fn cmd_serve(
+    model: &str,
+    slo: f64,
+    artifacts: &str,
+    windows: usize,
+    open: Option<OpenCfg>,
+) -> Result<()> {
     let mut dev = RealDevice::open(artifacts, model)?;
     println!("loaded {model} (max BS {})", dev.max_batch_size());
     let job = JobSpec {
@@ -352,8 +537,21 @@ fn cmd_serve(model: &str, slo: f64, artifacts: &str, windows: usize) -> Result<(
         probe_mtl: 4,
         ..Default::default()
     };
-    let out = JobRunner::new(cfg)
-        .run_dnnscaler(&job, &mut dev)
+    let mut b = ServingSession::builder()
+        .config(cfg)
+        .job(&job)
+        .device(&mut dev)
+        .policy(PolicySpec::DnnScaler);
+    if let Some(o) = &open {
+        b = b.arrivals(o.pattern).batch_timeout_ms(o.timeout_ms);
+        if let Some(cap) = o.queue_cap {
+            b = b.queue_capacity(cap);
+        }
+    }
+    let out = b
+        .build()
+        .map_err(|e| anyhow!(e.to_string()))?
+        .run()
         .map_err(|e| anyhow!(e.to_string()))?;
     println!(
         "served: method {:?}, steady bs={} mtl={}, throughput {:.1} inf/s, p95 {:.2} ms, SLO attainment {:.1}%",
@@ -364,8 +562,44 @@ fn cmd_serve(model: &str, slo: f64, artifacts: &str, windows: usize) -> Result<(
         out.p95_ms,
         out.slo_attainment * 100.0
     );
+    if open.is_some() {
+        println!("open-loop: queue peak {}, dropped {}", out.queue_peak, out.drops);
+    }
     for (bs, ms) in dev.pool().compile_report() {
         println!("  compiled bs={bs} in {ms:.0} ms (once)");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Flags;
+
+    #[test]
+    fn unknown_flag_is_rejected_with_allowed_list() {
+        // The regression the strict parser exists for: `--windos 10` used
+        // to be silently ignored.
+        let args: Vec<String> = ["--windos", "10"].iter().map(|s| s.to_string()).collect();
+        let err = Flags::parse(&args, &["windows", "seed"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --windos"), "{msg}");
+        assert!(msg.contains("--windows"), "{msg}");
+        assert!(msg.contains("--seed"), "{msg}");
+    }
+
+    #[test]
+    fn known_flags_parse_with_values_and_booleans() {
+        let args: Vec<String> =
+            ["--windows", "10", "--trace"].iter().map(|s| s.to_string()).collect();
+        let f = Flags::parse(&args, &["windows", "trace", "seed"]).unwrap();
+        assert_eq!(f.num_or("windows", 0usize).unwrap(), 10);
+        assert!(f.has("trace"));
+        assert_eq!(f.num_or("seed", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn non_flag_argument_is_rejected() {
+        let args: Vec<String> = ["oops"].iter().map(|s| s.to_string()).collect();
+        assert!(Flags::parse(&args, &["windows"]).is_err());
+    }
 }

@@ -1,10 +1,16 @@
-//! Request arrival generators (open-loop Poisson, bursty, uniform).
+//! Request arrival generators (open-loop Poisson, bursty, uniform) plus
+//! the `Closed` sentinel used by `ServingSession` to request the legacy
+//! closed-loop serving mode (batches issued back-to-back, no queue).
 
 use crate::rng::Rng;
 
-/// Arrival pattern of an open-loop workload.
-#[derive(Debug, Clone, Copy)]
+/// Arrival pattern of a workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalPattern {
+    /// Closed loop: no external arrival process — the server issues
+    /// batches back-to-back (the paper's evaluation setup). Generators
+    /// built from this pattern yield no arrivals.
+    Closed,
     /// Deterministic arrivals at exactly `rate` requests/s.
     Uniform { rate: f64 },
     /// Poisson process at `rate` requests/s.
@@ -13,6 +19,44 @@ pub enum ArrivalPattern {
     /// burst multiplies the rate by `factor` for `burst_s` seconds
     /// (the AWS "bursty inference workloads" shape from §3.3).
     Bursty { rate: f64, factor: f64, period_s: f64, burst_s: f64 },
+}
+
+impl ArrivalPattern {
+    /// Closed-loop serving (no arrival process).
+    pub fn closed() -> Self {
+        ArrivalPattern::Closed
+    }
+
+    /// Deterministic arrivals at `rate` requests/s.
+    pub fn uniform(rate: f64) -> Self {
+        ArrivalPattern::Uniform { rate }
+    }
+
+    /// Poisson arrivals at `rate` requests/s.
+    pub fn poisson(rate: f64) -> Self {
+        ArrivalPattern::Poisson { rate }
+    }
+
+    /// Poisson base `rate` with `factor`x bursts of `burst_s` seconds
+    /// every `period_s` seconds.
+    pub fn bursty(rate: f64, factor: f64, period_s: f64, burst_s: f64) -> Self {
+        ArrivalPattern::Bursty { rate, factor, period_s, burst_s }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, ArrivalPattern::Closed)
+    }
+
+    /// Long-run mean offered rate (requests/s); 0 for `Closed`.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalPattern::Closed => 0.0,
+            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
+                rate * (factor * burst_s + (period_s - burst_s)) / period_s
+            }
+        }
+    }
 }
 
 /// Generates request arrival timestamps (seconds).
@@ -31,6 +75,7 @@ impl ArrivalGenerator {
     /// Instantaneous rate at time `t` (requests/s).
     pub fn rate_at(&self, t: f64) -> f64 {
         match self.pattern {
+            ArrivalPattern::Closed => 0.0,
             ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => rate,
             ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
                 let phase = t % period_s;
@@ -43,9 +88,11 @@ impl ArrivalGenerator {
         }
     }
 
-    /// Next arrival timestamp (monotone, seconds).
+    /// Next arrival timestamp (monotone, seconds); `f64::INFINITY` for the
+    /// `Closed` pattern (it never produces arrivals).
     pub fn next_arrival(&mut self) -> f64 {
         let gap = match self.pattern {
+            ArrivalPattern::Closed => return f64::INFINITY,
             ArrivalPattern::Uniform { rate } => 1.0 / rate,
             ArrivalPattern::Poisson { .. } | ArrivalPattern::Bursty { .. } => {
                 // Thinning-free exponential gap at the local rate; for the
@@ -123,5 +170,24 @@ mod tests {
         let mut a = ArrivalGenerator::new(ArrivalPattern::Poisson { rate: 50.0 }, 9);
         let mut b = ArrivalGenerator::new(ArrivalPattern::Poisson { rate: 50.0 }, 9);
         assert_eq!(a.arrivals_until(2.0), b.arrivals_until(2.0));
+    }
+
+    #[test]
+    fn closed_pattern_never_arrives() {
+        let mut g = ArrivalGenerator::new(ArrivalPattern::closed(), 1);
+        assert!(g.arrivals_until(1e6).is_empty());
+        assert_eq!(g.next_arrival(), f64::INFINITY);
+        assert_eq!(g.rate_at(12.0), 0.0);
+        assert!(ArrivalPattern::closed().is_closed());
+        assert!(!ArrivalPattern::poisson(10.0).is_closed());
+    }
+
+    #[test]
+    fn mean_rate_matches_pattern() {
+        assert_eq!(ArrivalPattern::closed().mean_rate(), 0.0);
+        assert_eq!(ArrivalPattern::poisson(80.0).mean_rate(), 80.0);
+        // 3x bursts for 1 s out of every 4 s: mean = (3 + 3) / 4 = 1.5x.
+        let b = ArrivalPattern::bursty(40.0, 3.0, 4.0, 1.0);
+        assert!((b.mean_rate() - 60.0).abs() < 1e-9);
     }
 }

@@ -1,14 +1,19 @@
-//! Workload generation: request arrival processes and dataset models.
+//! Workload generation: request arrival processes and the request queue.
 //!
 //! The paper serves closed-loop streams from real datasets; §3.3 also
 //! claims DNNScaler "can quickly respond to bursty workloads" (citing
-//! AWS-style bursty inference arrivals). This module provides open-loop
-//! Poisson and burst arrival generators plus a queue so examples and
-//! benches can exercise that claim, and dataset descriptors whose prep
-//! costs feed the simulator.
+//! AWS-style bursty inference arrivals). This module is the arrival side
+//! of the open-loop serving core: [`ArrivalPattern`] describes the offered
+//! load (`Closed`, `Uniform`, `Poisson`, `Bursty`), [`ArrivalGenerator`]
+//! turns a pattern into a deterministic timestamp stream, and
+//! [`RequestQueue`] holds pending requests between arrival and batch
+//! formation so queueing delay becomes part of every observed latency.
+//! `coordinator::session::ServingSession` drives all three; bounded
+//! queues additionally count drops for the backpressure signal policies
+//! receive in their `WindowObservation`.
 
 pub mod generator;
 pub mod queue;
 
 pub use generator::{ArrivalGenerator, ArrivalPattern};
-pub use queue::RequestQueue;
+pub use queue::{Request, RequestQueue};

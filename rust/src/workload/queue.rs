@@ -1,5 +1,8 @@
 //! Request queue for open-loop serving: arrivals wait here until the
 //! batcher drains them, so queueing delay is part of observed latency.
+//! A queue may be *bounded*, in which case arrivals beyond the capacity
+//! are dropped and counted — the backpressure signal `ServingSession`
+//! reports to policies and in `JobOutcome::drops`.
 
 use std::collections::VecDeque;
 
@@ -11,33 +14,54 @@ pub struct Request {
     pub arrival_s: f64,
 }
 
-/// FIFO request queue with batch draining.
+/// FIFO request queue with batch draining and optional capacity bound.
 #[derive(Debug, Default)]
 pub struct RequestQueue {
     q: VecDeque<Request>,
     next_id: u64,
+    capacity: Option<usize>,
     /// High-water mark (backpressure signal).
     pub max_depth: usize,
+    /// Arrivals rejected because the queue was full.
+    pub dropped: u64,
 }
 
 impl RequestQueue {
+    /// Unbounded queue.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Enqueue one arrival.
-    pub fn push(&mut self, arrival_s: f64) -> u64 {
+    /// Queue that holds at most `capacity` pending requests; arrivals
+    /// beyond that are dropped (counted in [`RequestQueue::dropped`]).
+    pub fn bounded(capacity: usize) -> Self {
+        RequestQueue { capacity: Some(capacity), ..Self::default() }
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Enqueue one arrival; `None` when the queue is full (the request is
+    /// dropped and counted).
+    pub fn push(&mut self, arrival_s: f64) -> Option<u64> {
+        if let Some(cap) = self.capacity {
+            if self.q.len() >= cap {
+                self.dropped += 1;
+                return None;
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.q.push_back(Request { id, arrival_s });
         self.max_depth = self.max_depth.max(self.q.len());
-        id
+        Some(id)
     }
 
-    /// Enqueue many arrivals.
+    /// Enqueue many arrivals (full ones dropped as in [`RequestQueue::push`]).
     pub fn extend(&mut self, arrivals: impl IntoIterator<Item = f64>) {
         for a in arrivals {
-            self.push(a);
+            let _ = self.push(a);
         }
     }
 
@@ -81,7 +105,7 @@ mod tests {
     #[test]
     fn take_more_than_available() {
         let mut q = RequestQueue::new();
-        q.push(1.0);
+        let _ = q.push(1.0);
         let b = q.take_batch(10);
         assert_eq!(b.len(), 1);
         assert!(q.is_empty());
@@ -93,7 +117,35 @@ mod tests {
         let mut q = RequestQueue::new();
         q.extend([1.0, 2.0, 3.0, 4.0]);
         q.take_batch(4);
-        q.push(5.0);
+        let _ = q.push(5.0);
         assert_eq!(q.max_depth, 4);
+    }
+
+    #[test]
+    fn bounded_queue_drops_overflow() {
+        let mut q = RequestQueue::bounded(2);
+        assert!(q.push(0.1).is_some());
+        assert!(q.push(0.2).is_some());
+        assert!(q.push(0.3).is_none()); // full -> dropped
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.len(), 2);
+        // Draining frees capacity again; FIFO order survives the overflow.
+        let b = q.take_batch(1);
+        assert_eq!(b[0].arrival_s, 0.1);
+        assert!(q.push(0.4).is_some());
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.oldest_arrival(), Some(0.2));
+        assert_eq!(q.capacity(), Some(2));
+    }
+
+    #[test]
+    fn unbounded_queue_never_drops() {
+        let mut q = RequestQueue::new();
+        for i in 0..10_000 {
+            assert!(q.push(i as f64).is_some());
+        }
+        assert_eq!(q.dropped, 0);
+        assert_eq!(q.max_depth, 10_000);
+        assert_eq!(q.capacity(), None);
     }
 }

@@ -350,7 +350,7 @@ fn prop_queue_fifo_matches_model() {
         for _ in 0..60 {
             if rng.chance(0.6) {
                 clock += rng.uniform_range(0.001, 0.1);
-                q.push(clock);
+                assert!(q.push(clock).is_some(), "seed {seed}: unbounded push");
                 model.push(clock);
             } else {
                 let k = rng.below(4) + 1;
@@ -363,6 +363,46 @@ fn prop_queue_fifo_matches_model() {
             }
             assert_eq!(q.len(), model.len(), "seed {seed}");
         }
+        assert_eq!(q.dropped, 0, "seed {seed}: unbounded queue dropped");
+    });
+}
+
+#[test]
+fn prop_bounded_queue_fifo_and_drop_accounting() {
+    // Under random push/drain traffic against a random capacity, the
+    // bounded queue must (a) preserve FIFO order of *accepted* requests,
+    // (b) drop exactly the arrivals that found it full, and (c) never
+    // exceed its capacity.
+    forall(150, |seed, rng| {
+        let cap = rng.below(6) + 1;
+        let mut q = RequestQueue::bounded(cap);
+        let mut model: Vec<f64> = Vec::new();
+        let mut expected_drops = 0u64;
+        let mut clock = 0.0;
+        for _ in 0..80 {
+            if rng.chance(0.7) {
+                clock += rng.uniform_range(0.001, 0.1);
+                if model.len() < cap {
+                    assert!(q.push(clock).is_some(), "seed {seed}: push below cap");
+                    model.push(clock);
+                } else {
+                    assert!(q.push(clock).is_none(), "seed {seed}: push at cap");
+                    expected_drops += 1;
+                }
+            } else {
+                let k = rng.below(4) + 1;
+                let got = q.take_batch(k);
+                let want: Vec<f64> = model.drain(..k.min(model.len())).collect();
+                assert_eq!(got.len(), want.len(), "seed {seed}");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.arrival_s, *w, "seed {seed}: FIFO broken");
+                }
+            }
+            assert!(q.len() <= cap, "seed {seed}: len {} over cap {cap}", q.len());
+            assert_eq!(q.len(), model.len(), "seed {seed}");
+            assert_eq!(q.dropped, expected_drops, "seed {seed}");
+        }
+        assert!(q.max_depth <= cap, "seed {seed}");
     });
 }
 
@@ -377,5 +417,58 @@ fn prop_poisson_rate_concentrates() {
             (got - rate).abs() / rate < 0.15,
             "seed {seed}: rate {got:.1} want {rate:.1}"
         );
+    });
+}
+
+#[test]
+fn prop_poisson_interarrival_mean_is_inverse_rate() {
+    // The defining property of the exponential gap sampler: the mean
+    // inter-arrival time concentrates on 1/rate.
+    forall(25, |seed, rng| {
+        let rate = rng.uniform_range(20.0, 800.0);
+        let mut g = ArrivalGenerator::new(ArrivalPattern::poisson(rate), 0xA11CE ^ seed);
+        let a = g.arrivals_until(40.0);
+        assert!(a.len() > 100, "seed {seed}: too few arrivals ({})", a.len());
+        let mut gaps = Vec::with_capacity(a.len() - 1);
+        for w in a.windows(2) {
+            let gap = w[1] - w[0];
+            assert!(gap > 0.0, "seed {seed}: non-positive gap");
+            gaps.push(gap);
+        }
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let want = 1.0 / rate;
+        assert!(
+            (mean - want).abs() / want < 0.15,
+            "seed {seed}: mean gap {mean:.5} want {want:.5}"
+        );
+    });
+}
+
+#[test]
+fn prop_bursty_pattern_alternates_between_rates() {
+    // Arrivals inside the burst phase must be denser than outside, by
+    // roughly the burst factor (we assert at least half of it to leave
+    // room for sampling noise).
+    forall(20, |seed, rng| {
+        let rate = rng.uniform_range(50.0, 300.0);
+        let factor = rng.uniform_range(3.0, 8.0);
+        let (period, burst) = (2.0, 0.5);
+        let pattern = ArrivalPattern::bursty(rate, factor, period, burst);
+        let mut g = ArrivalGenerator::new(pattern, 0xB00 ^ seed);
+        let a = g.arrivals_until(40.0);
+        let in_burst = a.iter().filter(|t| *t % period < burst).count() as f64;
+        let off_burst = a.iter().filter(|t| *t % period >= burst).count() as f64;
+        assert!(off_burst > 0.0, "seed {seed}");
+        // Empirical per-second rates in each phase.
+        let burst_rate = in_burst / (40.0 * burst / period);
+        let base_rate = off_burst / (40.0 * (period - burst) / period);
+        let ratio = burst_rate / base_rate;
+        assert!(
+            ratio > factor / 2.0 && ratio < factor * 2.0,
+            "seed {seed}: burst/base rate ratio {ratio:.2} vs factor {factor:.2}"
+        );
+        // rate_at reports the alternation exactly.
+        assert_eq!(g.rate_at(0.1), rate * factor, "seed {seed}");
+        assert_eq!(g.rate_at(1.0), rate, "seed {seed}");
     });
 }

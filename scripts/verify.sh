@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and format-check the rust crate.
+#
+# Usage: scripts/verify.sh   (or `make verify`)
+#
+# Exits non-zero on the first failing step and prints a summary of what
+# ran, so CHANGES.md can record the explicit baseline of any still-failing
+# seed tests.
+
+set -u
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH — tier-1 checks cannot run in this environment." >&2
+    echo "verify: install a Rust toolchain (or run in the CI image) and re-run." >&2
+    exit 1
+fi
+
+# The crate may be rooted at the repo top level or under rust/ depending
+# on how the workspace is assembled.
+manifest=""
+for c in Cargo.toml rust/Cargo.toml; do
+    if [ -f "$c" ]; then
+        manifest="$c"
+        break
+    fi
+done
+if [ -z "$manifest" ]; then
+    echo "verify: no Cargo.toml found (looked at ./Cargo.toml and rust/Cargo.toml)." >&2
+    exit 1
+fi
+
+fail=0
+run_step() {
+    local name="$1"
+    shift
+    echo "==> $name: $*"
+    if "$@"; then
+        echo "==> $name: OK"
+    else
+        echo "==> $name: FAILED" >&2
+        fail=1
+    fi
+}
+
+run_step "build" cargo build --release --manifest-path "$manifest"
+run_step "test" cargo test -q --manifest-path "$manifest"
+run_step "fmt" cargo fmt --check --manifest-path "$manifest"
+
+if [ "$fail" -ne 0 ]; then
+    echo "verify: at least one step failed — record the baseline in CHANGES.md." >&2
+fi
+exit "$fail"
