@@ -1,0 +1,306 @@
+//! The shared virtual-time open-loop serving engine.
+//!
+//! PR 1 buried the open-loop event loop inside `ServingSession::run`,
+//! which meant `Fleet` could only serve closed-loop lockstep windows.
+//! This module extracts that loop into a reusable per-member core so
+//! *every* serving entry point drives the same machinery:
+//!
+//! * [`OpenLoop`] owns one member's arrival stream ([`Feed`] over an
+//!   `ArrivalGenerator`), its (optionally bounded) [`RequestQueue`], the
+//!   batch-formation timeout, and the member's virtual clock;
+//! * [`OpenLoop::serve_round`] forms and executes ONE batch — dispatched
+//!   as soon as `bs * mtl` requests are waiting (size trigger) or once
+//!   the oldest waiting request has waited `batch_timeout_ms` (timeout
+//!   trigger) — charges every request its full sojourn (queueing delay +
+//!   service, optionally inflated by a fleet SM-contention factor), and
+//!   advances the member clock by the observed batch latency;
+//! * [`WindowAccum`] snapshots the member counters at a window boundary
+//!   and folds the rounds served since into the `WindowRecord` /
+//!   `WindowObservation` pair every policy consumes.
+//!
+//! `ServingSession` runs one `OpenLoop`; `Fleet` runs one per member and
+//! interleaves their rounds by next-event time (smallest member clock
+//! first), which is what makes per-member arrival processes, trace
+//! replay, and cross-job burst interference expressible at all.
+//!
+//! Two modeling notes shared by every driver:
+//!
+//! * A partial batch still executes at the configured `mtl` (all
+//!   co-located instances stay resident; the device bills full
+//!   co-location contention and power), so light-load MT latency is the
+//!   conservative upper bound, not the idle-instances optimum.
+//! * With deadline shedding enabled, expiry is checked at dispatch time:
+//!   a request whose queueing delay alone already exceeds the SLO is
+//!   dropped (counted in `dropped_deadline`) instead of wasting a batch
+//!   slot it can no longer use.
+
+use crate::device::{Device, DeviceError};
+use crate::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
+
+use super::policy::WindowObservation;
+use super::session::WindowRecord;
+
+/// Peekable arrival stream over an [`ArrivalGenerator`].
+pub(crate) struct Feed {
+    gen: ArrivalGenerator,
+    next: f64,
+    count: u64,
+}
+
+impl Feed {
+    pub(crate) fn new(mut gen: ArrivalGenerator) -> Self {
+        let next = gen.next_arrival();
+        Feed { gen, next, count: 0 }
+    }
+
+    pub(crate) fn peek(&self) -> f64 {
+        self.next
+    }
+
+    pub(crate) fn pop(&mut self) -> f64 {
+        let t = self.next;
+        self.next = self.gen.next_arrival();
+        self.count += 1;
+        t
+    }
+}
+
+/// One member's open-loop serving state: arrival feed, request queue,
+/// batch-formation timeout, shedding switch, and virtual clock.
+pub(crate) struct OpenLoop {
+    feed: Feed,
+    queue: RequestQueue,
+    timeout_s: f64,
+    shed_deadline: bool,
+    /// Member-local virtual time (seconds).
+    pub(crate) now_s: f64,
+}
+
+impl OpenLoop {
+    /// `start_s` seeds the clock (profiling consumed virtual time before
+    /// serving began, so arrivals during it start the serve as backlog).
+    pub(crate) fn new(
+        pattern: ArrivalPattern,
+        seed: u64,
+        queue_capacity: Option<usize>,
+        batch_timeout_ms: f64,
+        shed_deadline: bool,
+        start_s: f64,
+    ) -> Self {
+        OpenLoop {
+            feed: Feed::new(ArrivalGenerator::new(pattern, seed)),
+            queue: match queue_capacity {
+                Some(cap) => RequestQueue::bounded(cap),
+                None => RequestQueue::new(),
+            },
+            timeout_s: batch_timeout_ms / 1000.0,
+            shed_deadline,
+            now_s: start_s,
+        }
+    }
+
+    /// Requests pulled off the arrival stream so far.
+    pub(crate) fn arrived(&self) -> u64 {
+        self.feed.count
+    }
+
+    /// Requests dropped at admission (bounded-queue overflow).
+    pub(crate) fn dropped(&self) -> u64 {
+        self.queue.dropped
+    }
+
+    /// Requests shed because their queueing delay blew the deadline.
+    pub(crate) fn dropped_deadline(&self) -> u64 {
+        self.queue.dropped_deadline
+    }
+
+    /// Current queue depth (the window-boundary backpressure signal).
+    pub(crate) fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queue high-water mark over the whole run.
+    pub(crate) fn max_depth(&self) -> usize {
+        self.queue.max_depth
+    }
+
+    /// Form and execute one batch at `(bs, mtl)`, inflating the observed
+    /// batch latency by `inflate` (1.0 solo; a fleet passes its window's
+    /// SM-contention factor). `slo_ms` is the deadline for shedding when
+    /// enabled. Returns `Ok(false)` when the arrival stream is exhausted
+    /// and nothing is left to serve (finite traces); the driver should
+    /// stop scheduling rounds for this member.
+    pub(crate) fn serve_round(
+        &mut self,
+        (bs, mtl): (u32, u32),
+        slo_ms: f64,
+        inflate: f64,
+        device: &mut dyn Device,
+        win: &mut WindowAccum,
+    ) -> Result<bool, DeviceError> {
+        let target = (bs as usize) * (mtl as usize);
+        // Batch formation: size- or timeout-triggered.
+        loop {
+            while self.feed.peek() <= self.now_s {
+                let t = self.feed.pop();
+                let _ = self.queue.push(t);
+            }
+            win.queue_peak = win.queue_peak.max(self.queue.len());
+            if self.queue.len() >= target {
+                break;
+            }
+            let deadline = match self.queue.oldest_arrival() {
+                Some(oldest) => oldest + self.timeout_s,
+                None => f64::INFINITY,
+            };
+            let next = self.feed.peek();
+            if next.is_infinite() && self.queue.is_empty() {
+                // Trace exhausted and fully drained: no more work, ever.
+                return Ok(false);
+            }
+            if next <= deadline {
+                // Wait for the next arrival (maybe it fills the batch).
+                self.now_s = next;
+            } else {
+                // Timeout: dispatch whatever is waiting.
+                self.now_s = self.now_s.max(deadline);
+                break;
+            }
+        }
+
+        if self.shed_deadline {
+            self.queue.shed_expired(self.now_s, slo_ms);
+        }
+        let batch = self.queue.take_batch(target);
+        if batch.is_empty() {
+            // Everything waiting had already blown its deadline; the
+            // round consumed (virtual) time but dispatched nothing.
+            return Ok(true);
+        }
+        let eff_bs = (batch.len().div_ceil(mtl as usize)).max(1) as u32;
+        let s = device.execute_batch(eff_bs, mtl)?;
+        self.now_s += s.latency_ms * inflate / 1000.0;
+        for r in &batch {
+            let sojourn_ms = (self.now_s - r.arrival_s) * 1000.0;
+            win.lat.push((sojourn_ms, 1.0));
+        }
+        win.served += batch.len() as f64;
+        win.power_acc += s.power_w;
+        win.sm_acc += s.sm_util;
+        win.executed += 1;
+        Ok(true)
+    }
+}
+
+/// Per-window accumulator: counter snapshots taken at the window start
+/// plus everything [`OpenLoop::serve_round`] measured since.
+pub(crate) struct WindowAccum {
+    start_s: f64,
+    arrived_before: u64,
+    dropped_before: u64,
+    shed_before: u64,
+    /// Per-request `(sojourn_ms, weight)` pairs served this window.
+    pub(crate) lat: Vec<(f64, f64)>,
+    served: f64,
+    power_acc: f64,
+    sm_acc: f64,
+    /// Batches actually executed this window — the divisor for the
+    /// power/SM means. Equal to `rounds_per_window` on an infinite
+    /// arrival stream; smaller once a finite trace drains mid-window.
+    executed: usize,
+    queue_peak: usize,
+}
+
+impl WindowAccum {
+    /// Snapshot the member counters at a window boundary.
+    pub(crate) fn begin(lp: &OpenLoop) -> Self {
+        WindowAccum {
+            start_s: lp.now_s,
+            arrived_before: lp.arrived(),
+            dropped_before: lp.dropped(),
+            shed_before: lp.dropped_deadline(),
+            lat: Vec::new(),
+            served: 0.0,
+            power_acc: 0.0,
+            sm_acc: 0.0,
+            executed: 0,
+            queue_peak: 0,
+        }
+    }
+
+    /// Fold the window into its trace record + policy observation.
+    /// `scratch` is reused percentile space (one quickselect per control
+    /// decision, no per-window alloc + sort). Also returns the window's
+    /// `(latency, weight)` pairs for SLO-attainment accounting.
+    pub(crate) fn finish(
+        self,
+        window: usize,
+        slo_ms: f64,
+        (bs, mtl): (u32, u32),
+        lp: &OpenLoop,
+        scratch: &mut Vec<f64>,
+    ) -> (WindowRecord, WindowObservation, Vec<(f64, f64)>) {
+        let WindowAccum {
+            start_s,
+            arrived_before,
+            dropped_before,
+            shed_before,
+            lat,
+            served,
+            power_acc,
+            sm_acc,
+            executed,
+            queue_peak,
+        } = self;
+        let duration_s = (lp.now_s - start_s).max(1e-9);
+        let n = lat.len();
+        let (p95, mean) = if n == 0 {
+            // A window can be empty once a finite trace has drained.
+            (0.0, 0.0)
+        } else {
+            scratch.clear();
+            scratch.extend(lat.iter().map(|(l, _)| *l));
+            let rank = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
+            let (_, p95, _) =
+                scratch.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).unwrap());
+            (*p95, lat.iter().map(|(l, _)| *l).sum::<f64>() / n as f64)
+        };
+        let throughput = served / duration_s;
+        // Means over batches actually executed (a drained finite trace
+        // can end a window early; an idle window honestly reports 0).
+        let power_w = power_acc / executed.max(1) as f64;
+        let arrival_rate = (lp.arrived() - arrived_before) as f64 / duration_s;
+        let drops = lp.dropped() - dropped_before;
+        let drops_deadline = lp.dropped_deadline() - shed_before;
+
+        let record = WindowRecord {
+            window,
+            bs,
+            mtl,
+            slo_ms,
+            p95_ms: p95,
+            mean_ms: mean,
+            throughput,
+            duration_s,
+            power_w,
+            queue_peak,
+            arrival_rate,
+            drops,
+            drops_deadline,
+        };
+        let obs = WindowObservation {
+            window,
+            slo_ms,
+            p95_ms: p95,
+            mean_ms: mean,
+            throughput,
+            power_w,
+            sm_util: sm_acc / executed.max(1) as f64,
+            queue_depth: lp.queue_len(),
+            arrival_rate,
+            drops,
+            drops_deadline,
+        };
+        (record, obs, lat)
+    }
+}

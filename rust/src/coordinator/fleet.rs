@@ -16,21 +16,43 @@
 //!   those inflated latencies and back off, which is exactly the
 //!   cross-job feedback loop single-job serving cannot express.
 //!
-//! Members run their control windows in lockstep (window `w` of every
-//! member sees the same contention snapshot), each with its own
-//! [`Policy`] resolved from a [`PolicySpec`] — DNNScaler members profile
-//! themselves alone at fleet start, as the paper's profiler would.
+//! Fleets serve in one of two modes, decided by how members are added:
+//!
+//! * **Closed-loop** ([`FleetBuilder::job`]): members run their control
+//!   windows in lockstep (window `w` of every member sees the same
+//!   contention snapshot), batches issued back-to-back — exactly the
+//!   pre-engine behaviour, byte for byte.
+//! * **Open-loop** ([`FleetBuilder::job_with_arrivals`]): every member
+//!   gets its own [`ArrivalPattern`] (Poisson, bursty, or a recorded
+//!   trace), bounded [`workload::RequestQueue`], batch-formation timeout,
+//!   and optional SLO deadline shedding — all served by per-member
+//!   [`engine::OpenLoop`] cores. One global event loop interleaves the
+//!   members' batch rounds by next-event time (smallest member clock
+//!   first) while the per-window admission check and SM-contention
+//!   coupling stay exactly as in the closed loop. This is the setting
+//!   where one member's burst degrades its neighbours' tails and
+//!   admission-under-overload actually matters.
+//!
+//! Each member's [`Policy`] is resolved from a [`PolicySpec`] — DNNScaler
+//! members profile themselves alone at fleet start, as the paper's
+//! profiler would.
+//!
+//! [`workload::RequestQueue`]: crate::workload::RequestQueue
+//! [`engine::OpenLoop`]: super::engine::OpenLoop
 
 use crate::device::{Device, DeviceError};
 use crate::gpusim::{GpuSim, GpuSpec, TESLA_P40};
+use crate::workload::ArrivalPattern;
 
+use super::engine::{OpenLoop, WindowAccum};
 use super::job::JobSpec;
 use super::latency::LatencyWindow;
 use super::policy::{Action, Policy};
 use super::profiler::ProfileOutcome;
 use super::session::{
-    assemble_outcome, resolve_policy, serve_closed_window, AttainAcc, ConfigError, JobOutcome,
-    PolicySpec, RunConfig, SloSchedule, WindowRecord,
+    assemble_outcome, resolve_policy, serve_closed_window, validate_pattern, AttainAcc,
+    ConfigError, JobOutcome, PolicySpec, RunConfig, SloSchedule, WindowRecord,
+    DEFAULT_BATCH_TIMEOUT_MS,
 };
 
 /// Result of one fleet run.
@@ -40,14 +62,32 @@ pub struct FleetOutcome {
     pub members: Vec<JobOutcome>,
     /// Sum of member steady-state throughputs (inferences/s).
     pub total_throughput: f64,
+    /// Sum of member steady-state goodputs (SLO-met inferences/s).
+    pub total_goodput: f64,
     /// Peak combined GPU memory demand over the run (MB).
     pub peak_mem_mb: f64,
     /// The shared GPU's memory capacity (MB).
     pub mem_capacity_mb: f64,
     /// Peak combined SM utilization (values > 1 mean time-sharing).
     pub peak_contention: f64,
+    /// Combined SM utilization per control window — the raw material for
+    /// watching cross-job interference build up and re-converge.
+    pub contention_trace: Vec<f64>,
     /// Times the admission check shrank a member's requested point.
     pub admission_clamps: u64,
+}
+
+/// One member's configuration: job, policy, and (open loop only) its
+/// arrival process and queueing knobs.
+struct MemberCfg<'a> {
+    job: JobSpec,
+    policy: PolicySpec<'a>,
+    arrivals: ArrivalPattern,
+    queue_capacity: Option<usize>,
+    /// None = engine default (5 ms); kept optional so `build()` can tell
+    /// "never set" apart from "set on a closed-loop member" (an error).
+    batch_timeout_ms: Option<f64>,
+    shed_deadline: bool,
 }
 
 /// Builder for [`Fleet`].
@@ -55,12 +95,21 @@ pub struct FleetBuilder<'a> {
     gpu: GpuSpec,
     cfg: RunConfig,
     seed: u64,
-    members: Vec<(JobSpec, PolicySpec<'a>)>,
+    members: Vec<MemberCfg<'a>>,
+    /// First per-member knob that was set before any member existed
+    /// (reported as a typed error at `build()`).
+    knob_before_job: Option<&'static str>,
 }
 
 impl<'a> FleetBuilder<'a> {
     fn new() -> Self {
-        FleetBuilder { gpu: TESLA_P40, cfg: RunConfig::default(), seed: 42, members: Vec::new() }
+        FleetBuilder {
+            gpu: TESLA_P40,
+            cfg: RunConfig::default(),
+            seed: 42,
+            members: Vec::new(),
+            knob_before_job: None,
+        }
     }
 
     /// The shared accelerator (default: the paper's Tesla P40).
@@ -85,20 +134,79 @@ impl<'a> FleetBuilder<'a> {
         self
     }
 
-    /// Seed for member simulators (member `i` gets `seed + i`).
+    /// Seed for member simulators (member `i` gets `seed + i`; its
+    /// arrival stream gets an independent derived seed).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
-    /// Add a member job with its serving policy.
-    pub fn job(mut self, job: &JobSpec, policy: PolicySpec<'a>) -> Self {
-        self.members.push((*job, policy));
+    /// Add a closed-loop member job with its serving policy.
+    pub fn job(self, job: &JobSpec, policy: PolicySpec<'a>) -> Self {
+        self.job_with_arrivals(job, policy, ArrivalPattern::Closed)
+    }
+
+    /// Add a member job with its own open-loop arrival process. Follow
+    /// with [`FleetBuilder::queue_capacity`] /
+    /// [`FleetBuilder::batch_timeout_ms`] / [`FleetBuilder::shed_deadline`]
+    /// to tune that member's queueing behaviour.
+    pub fn job_with_arrivals(
+        mut self,
+        job: &JobSpec,
+        policy: PolicySpec<'a>,
+        arrivals: ArrivalPattern,
+    ) -> Self {
+        self.members.push(MemberCfg {
+            job: *job,
+            policy,
+            arrivals,
+            queue_capacity: None,
+            batch_timeout_ms: None,
+            shed_deadline: false,
+        });
+        self
+    }
+
+    fn last_member(&mut self, knob: &'static str) -> Option<&mut MemberCfg<'a>> {
+        if self.members.is_empty() && self.knob_before_job.is_none() {
+            self.knob_before_job = Some(knob);
+        }
+        self.members.last_mut()
+    }
+
+    /// Bound the most recently added member's request queue; overflowing
+    /// arrivals are dropped and counted (default: unbounded).
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        if let Some(m) = self.last_member("queue_capacity") {
+            m.queue_capacity = Some(capacity);
+        }
+        self
+    }
+
+    /// Batch-formation timeout for the most recently added member
+    /// (default 5 ms).
+    pub fn batch_timeout_ms(mut self, timeout_ms: f64) -> Self {
+        if let Some(m) = self.last_member("batch_timeout_ms") {
+            m.batch_timeout_ms = Some(timeout_ms);
+        }
+        self
+    }
+
+    /// Enable SLO deadline shedding for the most recently added member:
+    /// requests whose queueing delay alone already exceeds the member's
+    /// SLO are dropped at dispatch and counted separately.
+    pub fn shed_deadline(mut self, enabled: bool) -> Self {
+        if let Some(m) = self.last_member("shed_deadline") {
+            m.shed_deadline = enabled;
+        }
         self
     }
 
     /// Validate and assemble the fleet.
     pub fn build(self) -> Result<Fleet<'a>, ConfigError> {
+        if let Some(knob) = self.knob_before_job {
+            return Err(ConfigError::MemberKnobBeforeJob { knob });
+        }
         if self.cfg.windows == 0 {
             return Err(ConfigError::ZeroWindows);
         }
@@ -114,10 +222,41 @@ impl<'a> FleetBuilder<'a> {
         if self.members.is_empty() {
             return Err(ConfigError::NoFleetMembers);
         }
-        for (job, _) in &self.members {
-            if crate::gpusim::paper_profile(job.dnn).is_none() {
-                return Err(ConfigError::UnknownDnn { dnn: job.dnn.to_string() });
+        for m in &self.members {
+            if crate::gpusim::paper_profile(m.job.dnn).is_none() {
+                return Err(ConfigError::UnknownDnn { dnn: m.job.dnn.to_string() });
             }
+            validate_pattern(&m.arrivals)?;
+            if m.queue_capacity == Some(0) {
+                return Err(ConfigError::ZeroQueueCapacity);
+            }
+            if let Some(t) = m.batch_timeout_ms {
+                if !t.is_finite() || t < 0.0 {
+                    return Err(ConfigError::BadBatchTimeout { timeout_ms: t });
+                }
+            }
+            // Every queueing knob is meaningless on a closed-loop member
+            // (there is no queue); refuse to silently discard any of them.
+            if m.arrivals.is_closed() {
+                if m.shed_deadline {
+                    return Err(ConfigError::ShedRequiresOpenLoop);
+                }
+                if m.queue_capacity.is_some() {
+                    return Err(ConfigError::KnobRequiresOpenLoop {
+                        knob: "queue_capacity",
+                    });
+                }
+                if m.batch_timeout_ms.is_some() {
+                    return Err(ConfigError::KnobRequiresOpenLoop {
+                        knob: "batch_timeout_ms",
+                    });
+                }
+            }
+        }
+        // Lockstep windows and the event loop cannot be mixed in one run.
+        let closed = self.members.iter().filter(|m| m.arrivals.is_closed()).count();
+        if closed != 0 && closed != self.members.len() {
+            return Err(ConfigError::MixedArrivalModes);
         }
         Ok(Fleet { gpu: self.gpu, cfg: self.cfg, seed: self.seed, members: self.members })
     }
@@ -128,9 +267,10 @@ pub struct Fleet<'a> {
     gpu: GpuSpec,
     cfg: RunConfig,
     seed: u64,
-    members: Vec<(JobSpec, PolicySpec<'a>)>,
+    members: Vec<MemberCfg<'a>>,
 }
 
+/// Closed-loop member state (lockstep windows).
 struct Member<'a> {
     job: JobSpec,
     sim: GpuSim,
@@ -149,6 +289,64 @@ struct Member<'a> {
     admitted: (u32, u32),
 }
 
+/// Open-loop member state (per-member engine core).
+struct OpenMember<'a> {
+    job: JobSpec,
+    sim: GpuSim,
+    policy: Box<dyn Policy + 'a>,
+    profile: Option<ProfileOutcome>,
+    label: Option<&'static str>,
+    schedule: SloSchedule,
+    lp: OpenLoop,
+    trace: Vec<WindowRecord>,
+    latencies: Vec<(f64, f64)>,
+    acc: AttainAcc,
+    admitted: (u32, u32),
+}
+
+/// Shared-memory admission: shrink the greediest *shrinkable* consumer
+/// (batch halved first, then instances shed) until the fleet fits.
+/// Members already at (1, 1) are passed over — OOM is only an error when
+/// nobody can give anything back. Used verbatim by both serving paths so
+/// the admission semantics cannot drift between them.
+fn admit_window(
+    demand: &dyn Fn(usize, (u32, u32)) -> f64,
+    n_members: usize,
+    requested: &[(u32, u32)],
+    mem_capacity_mb: f64,
+    peak_mem_mb: &mut f64,
+    admission_clamps: &mut u64,
+) -> Result<Vec<(u32, u32)>, DeviceError> {
+    let mut points = requested.to_vec();
+    loop {
+        let demands: Vec<f64> = (0..n_members).map(|i| demand(i, points[i])).collect();
+        let total: f64 = demands.iter().sum();
+        if total <= mem_capacity_mb {
+            *peak_mem_mb = peak_mem_mb.max(total);
+            break;
+        }
+        let Some((k, _)) = demands
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| points[i] != (1, 1))
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        else {
+            return Err(DeviceError::OutOfMemory {
+                demand_mb: total,
+                capacity_mb: mem_capacity_mb,
+            });
+        };
+        let p = &mut points[k];
+        if p.0 > 1 {
+            p.0 = (p.0 / 2).max(1);
+        } else {
+            p.1 -= 1;
+        }
+        *admission_clamps += 1;
+    }
+    Ok(points)
+}
+
 impl<'a> Fleet<'a> {
     pub fn builder() -> FleetBuilder<'a> {
         FleetBuilder::new()
@@ -156,23 +354,34 @@ impl<'a> Fleet<'a> {
 
     /// Serve every member to completion on the shared GPU.
     pub fn run(self) -> Result<FleetOutcome, DeviceError> {
+        // The builder guarantees the modes are not mixed.
+        if self.members.iter().all(|m| m.arrivals.is_closed()) {
+            self.run_closed()
+        } else {
+            self.run_open()
+        }
+    }
+
+    /// Closed-loop lockstep windows — byte-identical to the pre-engine
+    /// `Fleet` (same device-RNG consumption order, same accounting).
+    fn run_closed(self) -> Result<FleetOutcome, DeviceError> {
         let Fleet { gpu, cfg, seed, members } = self;
         let mut states: Vec<Member<'a>> = Vec::with_capacity(members.len());
-        for (i, (job, spec)) in members.into_iter().enumerate() {
-            let mut sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed + i as u64)
-                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", job.dnn)))?;
+        for (i, m) in members.into_iter().enumerate() {
+            let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, seed + i as u64)
+                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
             // DNNScaler members profile themselves alone at fleet start.
-            let (policy, profile, label) = resolve_policy(spec, &cfg, &job, &mut sim)?;
+            let (policy, profile, label) = resolve_policy(m.policy, &cfg, &m.job, &mut sim)?;
             let admitted = policy.operating_point();
             states.push(Member {
-                schedule: SloSchedule::new(job.slo_ms, cfg.slo_schedule.clone()),
+                schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
                 window: LatencyWindow::new(cfg.rounds_per_window),
                 trace: Vec::with_capacity(cfg.windows),
                 latencies: Vec::new(),
                 acc: AttainAcc::new(cfg.windows / 2),
                 pending_launch_ms: 0.0,
                 admitted,
-                job,
+                job: m.job,
                 sim,
                 policy,
                 profile,
@@ -183,46 +392,20 @@ impl<'a> Fleet<'a> {
         let mut peak_mem_mb: f64 = 0.0;
         let mut peak_contention: f64 = 0.0;
         let mut admission_clamps = 0u64;
+        let mut contention_trace = Vec::with_capacity(cfg.windows);
 
         for w in 0..cfg.windows {
-            // Requested operating points, then shared-memory admission:
-            // shrink the largest *shrinkable* consumer (batch halved
-            // first, then instances shed) until the fleet fits. Members
-            // already at (1, 1) are passed over — OOM is only an error
-            // when nobody can give anything back.
+            // Requested operating points, then shared-memory admission.
             let requested: Vec<(u32, u32)> =
                 states.iter().map(|m| m.policy.operating_point()).collect();
-            let mut points = requested.clone();
-            loop {
-                let demands: Vec<f64> = states
-                    .iter()
-                    .zip(&points)
-                    .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
-                    .collect();
-                let total: f64 = demands.iter().sum();
-                if total <= gpu.mem_mb {
-                    peak_mem_mb = peak_mem_mb.max(total);
-                    break;
-                }
-                let Some((k, _)) = demands
-                    .iter()
-                    .enumerate()
-                    .filter(|&(i, _)| points[i] != (1, 1))
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                else {
-                    return Err(DeviceError::OutOfMemory {
-                        demand_mb: total,
-                        capacity_mb: gpu.mem_mb,
-                    });
-                };
-                let p = &mut points[k];
-                if p.0 > 1 {
-                    p.0 = (p.0 / 2).max(1);
-                } else {
-                    p.1 -= 1;
-                }
-                admission_clamps += 1;
-            }
+            let points = admit_window(
+                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+                states.len(),
+                &requested,
+                gpu.mem_mb,
+                &mut peak_mem_mb,
+                &mut admission_clamps,
+            )?;
 
             // Combined SM pressure sets this window's time-sharing factor.
             let contention: f64 = states
@@ -231,6 +414,7 @@ impl<'a> Fleet<'a> {
                 .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
                 .sum();
             peak_contention = peak_contention.max(contention);
+            contention_trace.push(contention);
             let factor = contention.max(1.0);
 
             for (i, m) in states.iter_mut().enumerate() {
@@ -276,6 +460,8 @@ impl<'a> Fleet<'a> {
                 &m.acc,
                 0,
                 0,
+                0,
+                0,
             );
             if let Some(name) = m.label {
                 out.controller = name.to_string();
@@ -284,15 +470,182 @@ impl<'a> Fleet<'a> {
             out.profile = m.profile;
             outcomes.push(out);
         }
-        let total_throughput = outcomes.iter().map(|o| o.throughput).sum();
-        Ok(FleetOutcome {
-            members: outcomes,
-            total_throughput,
+        Ok(finish_fleet(
+            outcomes,
+            gpu,
             peak_mem_mb,
-            mem_capacity_mb: gpu.mem_mb,
             peak_contention,
+            contention_trace,
             admission_clamps,
-        })
+        ))
+    }
+
+    /// Open-loop fleet: one engine core per member, one global event loop
+    /// interleaving batch rounds by next-event time. Admission and
+    /// SM-contention are still recomputed per lockstep control window —
+    /// the same coupling the closed loop applies — but inside a window
+    /// members serve in virtual-time order, each against its own arrival
+    /// stream and queue.
+    fn run_open(self) -> Result<FleetOutcome, DeviceError> {
+        let Fleet { gpu, cfg, seed, members } = self;
+        let n = members.len();
+        let mut states: Vec<OpenMember<'a>> = Vec::with_capacity(n);
+        for (i, m) in members.into_iter().enumerate() {
+            let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, seed + i as u64)
+                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
+            let (policy, profile, label) = resolve_policy(m.policy, &cfg, &m.job, &mut sim)?;
+            // Arrival streams get seeds independent of the device-noise
+            // seeds (same u64 would replay the identical RNG stream).
+            let arrival_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+            // Profiling consumed virtual time: arrivals during it form
+            // the member's starting backlog, as in single-job serving.
+            let overhead_ms = profile.as_ref().map_or(0.0, |p| p.overhead_ms);
+            let admitted = policy.operating_point();
+            states.push(OpenMember {
+                schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
+                lp: OpenLoop::new(
+                    m.arrivals,
+                    arrival_seed,
+                    m.queue_capacity,
+                    m.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
+                    m.shed_deadline,
+                    overhead_ms / 1000.0,
+                ),
+                trace: Vec::with_capacity(cfg.windows),
+                latencies: Vec::new(),
+                acc: AttainAcc::new(cfg.windows / 2),
+                admitted,
+                job: m.job,
+                sim,
+                policy,
+                profile,
+                label,
+            });
+        }
+
+        let mut peak_mem_mb: f64 = 0.0;
+        let mut peak_contention: f64 = 0.0;
+        let mut admission_clamps = 0u64;
+        let mut contention_trace = Vec::with_capacity(cfg.windows);
+        let mut scratch: Vec<f64> = Vec::new();
+
+        for w in 0..cfg.windows {
+            let requested: Vec<(u32, u32)> =
+                states.iter().map(|m| m.policy.operating_point()).collect();
+            let points = admit_window(
+                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+                n,
+                &requested,
+                gpu.mem_mb,
+                &mut peak_mem_mb,
+                &mut admission_clamps,
+            )?;
+            let contention: f64 = states
+                .iter()
+                .zip(&points)
+                .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
+                .sum();
+            peak_contention = peak_contention.max(contention);
+            contention_trace.push(contention);
+            let factor = contention.max(1.0);
+
+            let slos: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
+            let mut wins: Vec<WindowAccum> =
+                states.iter().map(|m| WindowAccum::begin(&m.lp)).collect();
+            let mut remaining = vec![cfg.rounds_per_window; n];
+
+            // Global event loop: always advance the member whose virtual
+            // clock is furthest behind (ties break toward the lower
+            // index), so batch dispatches happen in global time order.
+            loop {
+                let mut pick: Option<usize> = None;
+                for i in 0..n {
+                    if remaining[i] == 0 {
+                        continue;
+                    }
+                    if pick.map_or(true, |p| states[i].lp.now_s < states[p].lp.now_s) {
+                        pick = Some(i);
+                    }
+                }
+                let Some(k) = pick else { break };
+                remaining[k] -= 1;
+                let st = &mut states[k];
+                let more =
+                    st.lp.serve_round(points[k], slos[k], factor, &mut st.sim, &mut wins[k])?;
+                if !more {
+                    // Finite trace exhausted and drained: this member has
+                    // nothing left to serve, this window or ever.
+                    remaining[k] = 0;
+                }
+            }
+
+            for (i, win) in wins.into_iter().enumerate() {
+                let st = &mut states[i];
+                st.admitted = points[i];
+                let (record, obs, mut win_lat) =
+                    win.finish(w, slos[i], points[i], &st.lp, &mut scratch);
+                st.acc.absorb(w, slos[i], &win_lat);
+                st.latencies.append(&mut win_lat);
+                st.trace.push(record);
+                // As in single-job open-loop serving, instance launches
+                // are not charged as a queue-draining stall (existing
+                // instances keep serving while a new one spins up).
+                st.policy.observe(&obs);
+            }
+        }
+
+        let mut outcomes = Vec::with_capacity(states.len());
+        for m in states {
+            let mut out = assemble_outcome(
+                &m.job,
+                m.policy.name().to_string(),
+                m.admitted,
+                m.trace,
+                m.latencies,
+                &m.acc,
+                m.lp.arrived(),
+                m.lp.dropped(),
+                m.lp.dropped_deadline(),
+                m.lp.max_depth(),
+            );
+            if let Some(name) = m.label {
+                out.controller = name.to_string();
+            }
+            out.method = m.profile.as_ref().map(|p| p.method);
+            out.profile = m.profile;
+            outcomes.push(out);
+        }
+        Ok(finish_fleet(
+            outcomes,
+            gpu,
+            peak_mem_mb,
+            peak_contention,
+            contention_trace,
+            admission_clamps,
+        ))
+    }
+}
+
+/// Fold per-member outcomes into the fleet-level result.
+fn finish_fleet(
+    members: Vec<JobOutcome>,
+    gpu: GpuSpec,
+    peak_mem_mb: f64,
+    peak_contention: f64,
+    contention_trace: Vec<f64>,
+    admission_clamps: u64,
+) -> FleetOutcome {
+    let total_throughput = members.iter().map(|o| o.throughput).sum();
+    let total_goodput = members.iter().map(|o| o.goodput).sum();
+    FleetOutcome {
+        members,
+        total_throughput,
+        total_goodput,
+        peak_mem_mb,
+        mem_capacity_mb: gpu.mem_mb,
+        peak_contention,
+        contention_trace,
+        admission_clamps,
     }
 }
 
@@ -321,6 +674,52 @@ mod tests {
     }
 
     #[test]
+    fn builder_rejects_mixed_modes_and_misplaced_knobs() {
+        let job = paper_job(1).unwrap();
+        assert_eq!(
+            Fleet::builder()
+                .job(job, PolicySpec::Clipper)
+                .job_with_arrivals(job, PolicySpec::Clipper, ArrivalPattern::poisson(20.0))
+                .build()
+                .err(),
+            Some(ConfigError::MixedArrivalModes)
+        );
+        assert_eq!(
+            Fleet::builder().queue_capacity(8).job(job, PolicySpec::Clipper).build().err(),
+            Some(ConfigError::MemberKnobBeforeJob { knob: "queue_capacity" })
+        );
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).shed_deadline(true).build().err(),
+            Some(ConfigError::ShedRequiresOpenLoop)
+        );
+        // Queueing knobs on a closed-loop member are rejected, not
+        // silently ignored (a closed loop has no queue).
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).queue_capacity(64).build().err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "queue_capacity" })
+        );
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).batch_timeout_ms(2.0).build().err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "batch_timeout_ms" })
+        );
+        assert_eq!(
+            Fleet::builder()
+                .job_with_arrivals(job, PolicySpec::Clipper, ArrivalPattern::poisson(0.0))
+                .build()
+                .err(),
+            Some(ConfigError::BadArrivalRate { rate: 0.0 })
+        );
+        assert_eq!(
+            Fleet::builder()
+                .job_with_arrivals(job, PolicySpec::Clipper, ArrivalPattern::poisson(20.0))
+                .queue_capacity(0)
+                .build()
+                .err(),
+            Some(ConfigError::ZeroQueueCapacity)
+        );
+    }
+
+    #[test]
     fn two_member_fleet_shares_the_gpu() {
         let out = Fleet::builder()
             .windows(16)
@@ -344,6 +743,10 @@ mod tests {
         // Two MT-class jobs at their seeded instance counts must actually
         // contend for SMs (factor > 1 => time-sharing kicked in).
         assert!(out.peak_contention > 1.0, "contention {}", out.peak_contention);
+        // The per-window contention trace records the same peak.
+        assert_eq!(out.contention_trace.len(), 16);
+        let trace_peak = out.contention_trace.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(trace_peak, out.peak_contention);
     }
 
     #[test]
@@ -377,5 +780,54 @@ mod tests {
             let last = m.trace.last().unwrap();
             assert_eq!((last.bs, last.mtl), (m.steady_bs, m.steady_mtl));
         }
+    }
+
+    #[test]
+    fn open_fleet_members_follow_their_own_arrival_rates() {
+        // Two identical jobs, one offered 4x the load of the other: with
+        // ample capacity each member's throughput must track ITS offered
+        // rate — the thing lockstep closed-loop fleets cannot express.
+        let out = Fleet::builder()
+            .windows(12)
+            .rounds_per_window(20)
+            .seed(9)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(10.0),
+            )
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(40.0),
+            )
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.members.len(), 2);
+        let slow = &out.members[0];
+        let fast = &out.members[1];
+        // NB: `arrived` counts are NOT comparable across members — each
+        // member's count tracks its own virtual-clock horizon, and the
+        // lightly loaded member's clock (which waits on arrivals) runs
+        // far ahead. The per-window arrival-rate telemetry below is the
+        // meaningful per-member load signal.
+        assert!(slow.arrived > 0 && fast.arrived > 0);
+        assert_eq!(slow.drops + fast.drops, 0, "unbounded queues never drop");
+        assert!(
+            fast.throughput > 2.0 * slow.throughput,
+            "fast {:.1} inf/s must dwarf slow {:.1} inf/s",
+            fast.throughput,
+            slow.throughput
+        );
+        // Arrival telemetry is per member now: the fast member's windows
+        // see the high offered rate, and on average 4x the slow one's.
+        assert!(fast.trace.iter().any(|r| r.arrival_rate > 20.0));
+        let mean_rate = |t: &[WindowRecord]| {
+            t.iter().map(|r| r.arrival_rate).sum::<f64>() / t.len() as f64
+        };
+        assert!(mean_rate(&fast.trace) > 2.0 * mean_rate(&slow.trace));
+        assert!(out.total_goodput > 0.0);
     }
 }

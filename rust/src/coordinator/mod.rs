@@ -1,17 +1,28 @@
 //! The DNNScaler coordinator — the paper's system contribution, grown
 //! into an event-driven serving core.
 //!
-//! ## Serving entry points
+//! ## Architecture: engine / session / fleet
 //!
-//! * [`session`] — **`ServingSession`**, the primary API: one job, one
+//! The open-loop serving machinery lives in ONE place, [`engine`]: a
+//! virtual-time event loop (arrival generation, timestamped queueing,
+//! size/timeout batch formation, sojourn-latency charging, bounded-queue
+//! drop accounting, SLO deadline shedding) packaged as a per-member
+//! `OpenLoop` core. The entry points are thin drivers over it:
+//!
+//! * [`session`] — **`ServingSession`**, the single-job API: one job, one
 //!   device, one [`policy::Policy`], served either closed-loop (the
-//!   paper's setup, `ArrivalPattern::Closed`) or open-loop (virtual-time
-//!   event loop over `workload` arrivals: timeout/size-triggered batch
-//!   formation, queueing delay charged into every latency, drop
-//!   accounting under bounded queues);
+//!   paper's setup, `ArrivalPattern::Closed`) or open-loop over one
+//!   engine core (Poisson/uniform/bursty arrivals or recorded-trace
+//!   replay via `ArrivalPattern::Trace`);
 //! * [`fleet`] — **`Fleet`**, multiple jobs co-located on one simulated
 //!   GPU with shared memory (admission control) and shared SMs
-//!   (contention-inflated latencies);
+//!   (contention-inflated latencies). Members added with
+//!   `FleetBuilder::job` serve closed-loop in lockstep windows exactly as
+//!   before; members added with `FleetBuilder::job_with_arrivals` each
+//!   get their own arrival process, bounded queue, batch timeout, and
+//!   shedding switch, and one global event loop interleaves their batch
+//!   rounds by next-event time — the "No DNN Left Behind" cross-job
+//!   burst-interference setting;
 //! * [`runner`] — the deprecated closed-loop `JobRunner` shim over
 //!   `ServingSession`, kept for legacy call sites.
 //!
@@ -25,8 +36,10 @@
 //!   (Algorithm 1 lines 30-41);
 //! * [`clipper`] — the Clipper baseline (AIMD batching only, Crankshaw et
 //!   al. NSDI'17) the paper compares against;
-//! * [`policy`] — the `Policy`/`WindowObservation`/`Action` interface
-//!   plus the static-knob baseline and the legacy-`Controller` adapter.
+//! * [`policy`] — the `Policy`/`WindowObservation`/`Action` interface,
+//!   the static-knob baseline, the queue-aware proactive scaler
+//!   (`QueuePolicy`, D-STACK-style demand estimation), and the
+//!   legacy-`Controller` adapter.
 //!
 //! ## Substrate
 //!
@@ -38,6 +51,7 @@
 
 pub mod clipper;
 pub mod controller;
+pub(crate) mod engine;
 pub mod fleet;
 pub mod job;
 pub mod latency;
@@ -51,7 +65,7 @@ pub mod session;
 
 pub use controller::{Controller, Decision, Method};
 pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
-pub use policy::{Action, AsPolicy, Policy, StaticPolicy, WindowObservation};
+pub use policy::{Action, AsPolicy, Policy, QueuePolicy, StaticPolicy, WindowObservation};
 pub use profiler::{ProfileOutcome, Profiler};
 pub use session::{
     ConfigError, JobOutcome, PolicySpec, RunConfig, ServingSession, SessionBuilder, WindowRecord,

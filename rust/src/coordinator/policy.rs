@@ -41,6 +41,9 @@ pub struct WindowObservation {
     pub arrival_rate: f64,
     /// Requests dropped (bounded queue overflow) during the window.
     pub drops: u64,
+    /// Requests shed (queueing delay blew the SLO deadline) during the
+    /// window; 0 unless deadline shedding is enabled.
+    pub drops_deadline: u64,
 }
 
 /// A policy's verdict for the next window.
@@ -124,6 +127,115 @@ impl Policy for StaticPolicy {
     }
 }
 
+/// Queue-aware proactive instance scaler (D-STACK-style demand
+/// estimation). Where the paper's scalers wait for p95 to move,
+/// `QueuePolicy` watches the *demand side* of the open loop — queue
+/// depth, offered arrival rate, drop counts — and adds an instance
+/// before the tail latency has degraded; capacity decays again only
+/// after sustained calm. Batch size stays fixed (instances are the knob,
+/// as in the paper's Multi-Tenancy mode). Intended for open-loop
+/// serving: in a closed loop every demand signal reads zero and the
+/// policy only ever reacts to outright SLO violations.
+#[derive(Debug, Clone)]
+pub struct QueuePolicy {
+    bs: u32,
+    mtl: u32,
+    max_mtl: u32,
+    /// EWMA of the offered arrival rate (requests/s).
+    rate_ewma: f64,
+    /// EWMA of the served throughput — the capacity proxy at the current
+    /// operating point.
+    serve_ewma: f64,
+    last_depth: usize,
+    /// Consecutive calm windows (empty queue, no drops, comfortable p95).
+    calm: u32,
+}
+
+impl QueuePolicy {
+    /// Instance scaling at batch size 1 (the paper's MT configuration).
+    pub fn new(max_mtl: u32) -> Self {
+        Self::with_batch(1, max_mtl)
+    }
+
+    /// Instance scaling at a fixed batch size per instance.
+    pub fn with_batch(bs: u32, max_mtl: u32) -> Self {
+        assert!(bs >= 1 && max_mtl >= 1, "operating point must be >= (1,1)");
+        QueuePolicy {
+            bs,
+            mtl: 1,
+            max_mtl,
+            rate_ewma: 0.0,
+            serve_ewma: 0.0,
+            last_depth: 0,
+            calm: 0,
+        }
+    }
+
+    fn grow(&mut self) -> Action {
+        self.calm = 0;
+        if self.mtl < self.max_mtl {
+            self.mtl += 1;
+            Action::SetPoint { bs: self.bs, mtl: self.mtl }
+        } else {
+            Action::Hold
+        }
+    }
+}
+
+impl Policy for QueuePolicy {
+    fn name(&self) -> &'static str {
+        "queue-aware"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (self.bs, self.mtl)
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        const BETA: f64 = 0.5;
+        if obs.window == 0 {
+            self.rate_ewma = obs.arrival_rate;
+            self.serve_ewma = obs.throughput;
+        } else {
+            self.rate_ewma = BETA * obs.arrival_rate + (1.0 - BETA) * self.rate_ewma;
+            self.serve_ewma = BETA * obs.throughput + (1.0 - BETA) * self.serve_ewma;
+        }
+        let growing = obs.queue_depth > self.last_depth;
+        self.last_depth = obs.queue_depth;
+        let batch = (self.bs as usize) * (self.mtl as usize);
+
+        // Proactive signals — all fire before p95 has to move:
+        // a backlog deeper than two full batches, any kind of drop, or
+        // offered demand outrunning the measured service rate while the
+        // queue is still growing.
+        let backlog = obs.queue_depth > 2 * batch;
+        let starved = obs.drops > 0 || obs.drops_deadline > 0;
+        let demand = growing && self.rate_ewma > self.serve_ewma * 1.1;
+        if backlog || starved || demand {
+            return self.grow();
+        }
+        // Reactive guard (the late signal the proactive path exists to
+        // pre-empt): the tail has already crossed the SLO.
+        if obs.p95_ms > obs.slo_ms {
+            return self.grow();
+        }
+        // Decay only after sustained calm, one instance at a time. (Any
+        // window with drops or sheds already returned via `starved`, so
+        // only the backlog and tail need re-checking here.)
+        if obs.queue_depth == 0 && obs.p95_ms <= 0.5 * obs.slo_ms {
+            self.calm += 1;
+            if self.calm >= 2 && self.mtl > 1 {
+                self.calm = 0;
+                self.mtl -= 1;
+                return Action::SetPoint { bs: self.bs, mtl: self.mtl };
+            }
+        } else {
+            self.calm = 0;
+        }
+        Action::Hold
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +254,7 @@ mod tests {
             queue_depth: 0,
             arrival_rate: 0.0,
             drops: 0,
+            drops_deadline: 0,
         }
     }
 
@@ -198,5 +311,80 @@ mod tests {
         let moved = Decision { bs: 8, mtl: 2, changed: true };
         assert_eq!(Action::from_decision(hold), Action::Hold);
         assert_eq!(Action::from_decision(moved), Action::SetPoint { bs: 8, mtl: 2 });
+    }
+
+    /// Demand-side observation: deep/rising queue but a perfectly healthy
+    /// tail (the situation reactive scalers sleep through).
+    fn demand_obs(window: usize, depth: usize) -> WindowObservation {
+        WindowObservation {
+            window,
+            slo_ms: 100.0,
+            p95_ms: 20.0, // far below the SLO: no reactive signal at all
+            mean_ms: 10.0,
+            throughput: 50.0,
+            power_w: 0.0,
+            sm_util: 0.0,
+            queue_depth: depth,
+            arrival_rate: 200.0,
+            drops: 0,
+            drops_deadline: 0,
+        }
+    }
+
+    #[test]
+    fn queue_policy_scales_up_before_p95_moves() {
+        let mut p = QueuePolicy::new(10);
+        assert_eq!(p.operating_point(), (1, 1));
+        assert_eq!(p.name(), "queue-aware");
+        for w in 0..4 {
+            let a = p.observe(&demand_obs(w, 10 + 10 * w));
+            assert!(
+                matches!(a, Action::SetPoint { .. }),
+                "window {w}: backlog must trigger proactive scale-up, got {a:?}"
+            );
+        }
+        assert!(p.operating_point().1 >= 4, "mtl {}", p.operating_point().1);
+    }
+
+    #[test]
+    fn queue_policy_grows_on_drops_and_respects_the_ceiling() {
+        let mut p = QueuePolicy::new(3);
+        for w in 0..10 {
+            let mut o = demand_obs(w, 0);
+            o.drops = 5; // overflow: capacity is clearly short
+            p.observe(&o);
+            assert!(p.operating_point().1 <= 3);
+        }
+        assert_eq!(p.operating_point(), (1, 3));
+    }
+
+    #[test]
+    fn queue_policy_decays_after_sustained_calm() {
+        let mut p = QueuePolicy::new(10);
+        for w in 0..5 {
+            p.observe(&demand_obs(w, 100));
+        }
+        let peak = p.operating_point().1;
+        assert!(peak >= 5);
+        // Calm: empty queue, tiny tail, no drops -> decay back to 1.
+        for w in 5..50 {
+            let mut o = demand_obs(w, 0);
+            o.arrival_rate = 1.0;
+            o.throughput = 1.0;
+            o.p95_ms = 5.0;
+            p.observe(&o);
+        }
+        assert_eq!(p.operating_point().1, 1);
+    }
+
+    #[test]
+    fn queue_policy_reactive_guard_still_fires() {
+        // Even with zero demand signals, an SLO violation scales up.
+        let mut p = QueuePolicy::new(10);
+        let mut o = demand_obs(0, 0);
+        o.arrival_rate = 0.0;
+        o.throughput = 0.0;
+        o.p95_ms = 500.0; // 5x the SLO
+        assert_eq!(p.observe(&o), Action::SetPoint { bs: 1, mtl: 2 });
     }
 }

@@ -1,11 +1,14 @@
-//! `ServingSession`: the event-driven serving core.
+//! `ServingSession`: one job, one device, one policy.
 //!
 //! One session serves one job on one device under one [`Policy`], either
 //! **closed-loop** (batches issued back-to-back — the paper's evaluation
-//! setup, `ArrivalPattern::Closed`) or **open-loop** (a virtual-time event
-//! loop that pulls timestamped requests from `workload::RequestQueue`,
-//! forms batches by size or timeout, charges queueing delay into every
-//! per-request latency, and counts drops under a bounded queue).
+//! setup, `ArrivalPattern::Closed`) or **open-loop**, in which case the
+//! session is a thin driver over the shared [`super::engine`] event loop
+//! (arrival generation — Poisson/uniform/bursty/trace replay — size- or
+//! timeout-triggered batch formation, sojourn-latency charging, bounded
+//! queue drop accounting, and optional SLO deadline shedding). `Fleet`
+//! drives the very same engine with one [`super::engine::OpenLoop`] per
+//! member, so single-job and multi-tenant serving cannot drift apart.
 //!
 //! Sessions are built with a validating builder:
 //!
@@ -24,20 +27,26 @@
 //! figure/table regenerates unchanged through this API.
 
 use crate::device::{Device, DeviceError};
-use crate::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
+use crate::workload::{validate_trace, ArrivalPattern, TraceError};
 
 use super::clipper::Clipper;
 use super::controller::Method;
+use super::engine::{OpenLoop, WindowAccum};
 use super::job::JobSpec;
 use super::latency::LatencyWindow;
 use super::matcomp::LatencyLibrary;
-use super::policy::{Action, Policy, StaticPolicy, WindowObservation};
+use super::policy::{Action, Policy, QueuePolicy, StaticPolicy, WindowObservation};
 use super::profiler::{ProfileOutcome, Profiler};
 use super::scaler_batching::BatchScaler;
 use super::scaler_mt::MtScaler;
 use super::{MAX_BS, MAX_MTL};
 
 use std::fmt;
+
+/// Engine default for the open-loop batch-formation timeout (ms): a
+/// partial batch is dispatched once its oldest request has waited this
+/// long. Single source of truth for the builders and the CLI.
+pub const DEFAULT_BATCH_TIMEOUT_MS: f64 = 5.0;
 
 /// Serving-loop configuration shared by every session kind.
 #[derive(Debug, Clone)]
@@ -92,6 +101,9 @@ pub struct WindowRecord {
     pub mean_ms: f64,
     /// Requests completed / window wall time.
     pub throughput: f64,
+    /// Window wall time (seconds): closed-loop, the summed batch
+    /// latencies (+ pending launch); open-loop, elapsed virtual time.
+    pub duration_s: f64,
     pub power_w: f64,
     /// Peak queue depth seen during the window (0 closed-loop).
     pub queue_peak: usize,
@@ -99,6 +111,9 @@ pub struct WindowRecord {
     pub arrival_rate: f64,
     /// Requests dropped during the window (bounded queue only).
     pub drops: u64,
+    /// Requests shed during the window because their queueing delay alone
+    /// exceeded the SLO (deadline shedding only).
+    pub drops_deadline: u64,
 }
 
 /// Result of one serving run.
@@ -132,8 +147,17 @@ pub struct JobOutcome {
     pub latencies: Vec<(f64, f64)>,
     /// Profiler outcome (DNNScaler only).
     pub profile: Option<ProfileOutcome>,
+    /// Requests that arrived over the whole run (0 closed-loop — there is
+    /// no arrival process).
+    pub arrived: u64,
     /// Requests dropped over the whole run (bounded queue only).
     pub drops: u64,
+    /// Requests shed over the whole run because their queueing delay
+    /// alone exceeded the SLO (deadline shedding only).
+    pub dropped_deadline: u64,
+    /// SLO-met throughput over the steady half (inferences/s): the
+    /// goodput the paper's attainment claims are really about.
+    pub goodput: f64,
     /// Queue high-water mark over the whole run (0 closed-loop).
     pub queue_peak: usize,
 }
@@ -142,6 +166,18 @@ impl JobOutcome {
     /// Power efficiency (throughput per watt); None when power unknown.
     pub fn power_efficiency(&self) -> Option<f64> {
         (self.power_w > 0.0).then(|| self.throughput / self.power_w)
+    }
+
+    /// Mean offered arrival rate over the run (requests/s), weighted by
+    /// window duration — idle near-zero-length windows after a finite
+    /// trace drains do not dilute it. 0 for closed-loop runs, which have
+    /// no arrival process.
+    pub fn mean_arrival_rate(&self) -> f64 {
+        let total_s: f64 = self.trace.iter().map(|r| r.duration_s).sum();
+        if total_s <= 0.0 {
+            return 0.0;
+        }
+        self.trace.iter().map(|r| r.arrival_rate * r.duration_s).sum::<f64>() / total_s
     }
 }
 
@@ -171,6 +207,21 @@ pub enum ConfigError {
     NoFleetMembers,
     /// A fleet member's DNN has no calibrated simulator profile.
     UnknownDnn { dnn: String },
+    /// An `ArrivalPattern::Trace` failed validation (unsorted, negative,
+    /// non-finite, or empty timestamps).
+    BadTrace(TraceError),
+    /// Deadline shedding needs an arrival process (a closed loop has no
+    /// queueing delay to shed on).
+    ShedRequiresOpenLoop,
+    /// A per-member fleet knob (`queue_capacity`, `batch_timeout_ms`,
+    /// `shed_deadline`) was set before any member job was added.
+    MemberKnobBeforeJob { knob: &'static str },
+    /// A queueing knob was set on closed-loop arrivals (closed loops
+    /// have no queue, so the knob would be a silent no-op).
+    KnobRequiresOpenLoop { knob: &'static str },
+    /// A fleet must be entirely closed-loop or entirely open-loop; the
+    /// lockstep-window and event-loop schedulers cannot be mixed.
+    MixedArrivalModes,
 }
 
 impl fmt::Display for ConfigError {
@@ -201,6 +252,23 @@ impl fmt::Display for ConfigError {
             ConfigError::UnknownDnn { dnn } => {
                 write!(f, "unknown DNN {dnn:?} (no calibrated gpusim profile; see `dnnscaler zoo`)")
             }
+            ConfigError::BadTrace(e) => write!(f, "invalid arrival trace: {e}"),
+            ConfigError::ShedRequiresOpenLoop => {
+                write!(f, "deadline shedding requires open-loop arrivals (closed loops do not queue)")
+            }
+            ConfigError::MemberKnobBeforeJob { knob } => {
+                write!(f, "{knob} applies to the most recently added fleet member; add a job first")
+            }
+            ConfigError::KnobRequiresOpenLoop { knob } => {
+                write!(
+                    f,
+                    "{knob} was set but the arrivals are closed-loop (no queue exists); \
+                     configure an open arrival pattern or drop the knob"
+                )
+            }
+            ConfigError::MixedArrivalModes => {
+                write!(f, "fleet members must be all closed-loop or all open-loop, not a mix")
+            }
         }
     }
 }
@@ -215,6 +283,10 @@ pub enum PolicySpec<'a> {
     DnnScaler,
     /// The Clipper baseline (batching-only AIMD, NSDI'17).
     Clipper,
+    /// Queue-aware proactive instance scaling (D-STACK-style demand
+    /// estimation): acts on queue depth / arrival rate / drops *before*
+    /// p95 crosses the SLO. Intended for open-loop serving.
+    QueueAware,
     /// Static-knob baseline: serve at a fixed point forever.
     Static { bs: u32, mtl: u32 },
     /// Any user-supplied policy.
@@ -233,6 +305,7 @@ impl fmt::Debug for PolicySpec<'_> {
         match self {
             PolicySpec::DnnScaler => write!(f, "DnnScaler"),
             PolicySpec::Clipper => write!(f, "Clipper"),
+            PolicySpec::QueueAware => write!(f, "QueueAware"),
             PolicySpec::Static { bs, mtl } => write!(f, "Static {{ bs: {bs}, mtl: {mtl} }}"),
             PolicySpec::Custom(_) => write!(f, "Custom(..)"),
         }
@@ -248,7 +321,10 @@ pub struct SessionBuilder<'a> {
     policy: PolicySpec<'a>,
     arrivals: ArrivalPattern,
     queue_capacity: Option<usize>,
-    batch_timeout_ms: f64,
+    /// None = engine default (5 ms); optional so `build()` can tell
+    /// "never set" apart from "set on a closed loop" (an error).
+    batch_timeout_ms: Option<f64>,
+    shed_deadline: bool,
     seed: u64,
 }
 
@@ -261,7 +337,8 @@ impl<'a> SessionBuilder<'a> {
             policy: PolicySpec::DnnScaler,
             arrivals: ArrivalPattern::Closed,
             queue_capacity: None,
-            batch_timeout_ms: 5.0,
+            batch_timeout_ms: None,
+            shed_deadline: false,
             seed: 42,
         }
     }
@@ -326,7 +403,16 @@ impl<'a> SessionBuilder<'a> {
     /// Open-loop batch-formation timeout: a partial batch is dispatched
     /// once its oldest request has waited this long (default 5 ms).
     pub fn batch_timeout_ms(mut self, timeout_ms: f64) -> Self {
-        self.batch_timeout_ms = timeout_ms;
+        self.batch_timeout_ms = Some(timeout_ms);
+        self
+    }
+
+    /// SLO-aware deadline shedding (open loop only, default off): at
+    /// dispatch time, requests whose queueing delay alone already exceeds
+    /// the SLO in effect are dropped and counted in
+    /// [`JobOutcome::dropped_deadline`] instead of wasting batch slots.
+    pub fn shed_deadline(mut self, enabled: bool) -> Self {
+        self.shed_deadline = enabled;
         self
     }
 
@@ -350,34 +436,27 @@ impl<'a> SessionBuilder<'a> {
                 max_mtl: self.cfg.max_mtl,
             });
         }
-        match self.arrivals {
-            ArrivalPattern::Closed => {}
-            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => {
-                if !rate.is_finite() || rate <= 0.0 {
-                    return Err(ConfigError::BadArrivalRate { rate });
-                }
-            }
-            ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
-                if !rate.is_finite() || rate <= 0.0 {
-                    return Err(ConfigError::BadArrivalRate { rate });
-                }
-                if !factor.is_finite()
-                    || factor < 1.0
-                    || !period_s.is_finite()
-                    || period_s <= 0.0
-                    || !burst_s.is_finite()
-                    || burst_s <= 0.0
-                    || burst_s > period_s
-                {
-                    return Err(ConfigError::BadBurst { factor, period_s, burst_s });
-                }
-            }
-        }
+        validate_pattern(&self.arrivals)?;
         if self.queue_capacity == Some(0) {
             return Err(ConfigError::ZeroQueueCapacity);
         }
-        if !self.batch_timeout_ms.is_finite() || self.batch_timeout_ms < 0.0 {
-            return Err(ConfigError::BadBatchTimeout { timeout_ms: self.batch_timeout_ms });
+        if let Some(t) = self.batch_timeout_ms {
+            if !t.is_finite() || t < 0.0 {
+                return Err(ConfigError::BadBatchTimeout { timeout_ms: t });
+            }
+        }
+        // Queueing knobs are meaningless closed-loop (there is no queue);
+        // refuse to silently discard any of them.
+        if self.arrivals.is_closed() {
+            if self.shed_deadline {
+                return Err(ConfigError::ShedRequiresOpenLoop);
+            }
+            if self.queue_capacity.is_some() {
+                return Err(ConfigError::KnobRequiresOpenLoop { knob: "queue_capacity" });
+            }
+            if self.batch_timeout_ms.is_some() {
+                return Err(ConfigError::KnobRequiresOpenLoop { knob: "batch_timeout_ms" });
+            }
         }
         let job = self.job.ok_or(ConfigError::MissingJob)?;
         let device = self.device.ok_or(ConfigError::MissingDevice)?;
@@ -388,9 +467,45 @@ impl<'a> SessionBuilder<'a> {
             policy: self.policy,
             arrivals: self.arrivals,
             queue_capacity: self.queue_capacity,
-            batch_timeout_ms: self.batch_timeout_ms,
+            batch_timeout_ms: self.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
+            shed_deadline: self.shed_deadline,
             seed: self.seed,
         })
+    }
+}
+
+/// Validate an arrival pattern's shape (shared by `SessionBuilder` and
+/// `FleetBuilder`, so hand-built patterns are re-checked everywhere).
+pub(crate) fn validate_pattern(pattern: &ArrivalPattern) -> Result<(), ConfigError> {
+    match pattern {
+        ArrivalPattern::Closed => Ok(()),
+        ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => {
+            if !rate.is_finite() || *rate <= 0.0 {
+                return Err(ConfigError::BadArrivalRate { rate: *rate });
+            }
+            Ok(())
+        }
+        ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
+            if !rate.is_finite() || *rate <= 0.0 {
+                return Err(ConfigError::BadArrivalRate { rate: *rate });
+            }
+            if !factor.is_finite()
+                || *factor < 1.0
+                || !period_s.is_finite()
+                || *period_s <= 0.0
+                || !burst_s.is_finite()
+                || *burst_s <= 0.0
+                || burst_s > period_s
+            {
+                return Err(ConfigError::BadBurst {
+                    factor: *factor,
+                    period_s: *period_s,
+                    burst_s: *burst_s,
+                });
+            }
+            Ok(())
+        }
+        ArrivalPattern::Trace(ts) => validate_trace(ts).map_err(ConfigError::BadTrace),
     }
 }
 
@@ -403,6 +518,7 @@ pub struct ServingSession<'a> {
     arrivals: ArrivalPattern,
     queue_capacity: Option<usize>,
     batch_timeout_ms: f64,
+    shed_deadline: bool,
     seed: u64,
 }
 
@@ -421,6 +537,7 @@ impl<'a> ServingSession<'a> {
             arrivals,
             queue_capacity,
             batch_timeout_ms,
+            shed_deadline,
             seed,
         } = self;
         let (mut policy, profile, label) = resolve_policy(spec, &cfg, &job, device.as_mut())?;
@@ -435,11 +552,14 @@ impl<'a> ServingSession<'a> {
                     &job,
                     device.as_mut(),
                     policy.as_mut(),
-                    pattern,
-                    seed,
-                    queue_capacity,
-                    batch_timeout_ms,
-                    overhead_ms,
+                    OpenLoop::new(
+                        pattern,
+                        seed,
+                        queue_capacity,
+                        batch_timeout_ms,
+                        shed_deadline,
+                        overhead_ms / 1000.0,
+                    ),
                 )?
             }
         };
@@ -481,6 +601,7 @@ pub(crate) fn resolve_policy<'a>(
             (policy, Some(profile), Some("dnnscaler"))
         }
         PolicySpec::Clipper => (Box::new(Clipper::with_params(4, 0.10, cfg.max_bs)), None, None),
+        PolicySpec::QueueAware => (Box::new(QueuePolicy::new(cfg.max_mtl)), None, None),
         PolicySpec::Static { bs, mtl } => (
             Box::new(StaticPolicy::new(bs.clamp(1, cfg.max_bs), mtl.clamp(1, cfg.max_mtl))),
             None,
@@ -570,7 +691,9 @@ pub(crate) fn assemble_outcome(
     trace: Vec<WindowRecord>,
     latencies: Vec<(f64, f64)>,
     acc: &AttainAcc,
+    arrived: u64,
     drops: u64,
+    dropped_deadline: u64,
     queue_peak: usize,
 ) -> JobOutcome {
     // Steady-state = last half of the run.
@@ -581,6 +704,7 @@ pub(crate) fn assemble_outcome(
     steady_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p95_ms = steady_lat
         [((steady_lat.len() as f64 * 0.95).ceil() as usize - 1).min(steady_lat.len() - 1)];
+    let steady_attainment = acc.steady_attainment();
 
     JobOutcome {
         job_id: job.id,
@@ -592,12 +716,15 @@ pub(crate) fn assemble_outcome(
         throughput,
         p95_ms,
         slo_attainment: acc.attainment(),
-        steady_attainment: acc.steady_attainment(),
+        steady_attainment,
         power_w,
         trace,
         latencies,
         profile: None,
+        arrived,
         drops,
+        dropped_deadline,
+        goodput: throughput * steady_attainment,
         queue_peak,
     }
 }
@@ -654,10 +781,12 @@ pub(crate) fn serve_closed_window(
         p95_ms: p95,
         mean_ms: mean,
         throughput,
+        duration_s: wall_ms / 1000.0,
         power_w,
         queue_peak: 0,
         arrival_rate: 0.0,
         drops: 0,
+        drops_deadline: 0,
     };
     let obs = WindowObservation {
         window: w,
@@ -670,6 +799,7 @@ pub(crate) fn serve_closed_window(
         queue_depth: 0,
         arrival_rate: 0.0,
         drops: 0,
+        drops_deadline: 0,
     };
     Ok((record, obs))
 }
@@ -723,70 +853,26 @@ fn run_closed(
         &acc,
         0,
         0,
+        0,
+        0,
     ))
 }
 
-/// Peekable arrival stream over an [`ArrivalGenerator`].
-struct Feed {
-    gen: ArrivalGenerator,
-    next: f64,
-    count: u64,
-}
-
-impl Feed {
-    fn new(mut gen: ArrivalGenerator) -> Self {
-        let next = gen.next_arrival();
-        Feed { gen, next, count: 0 }
-    }
-
-    fn peek(&self) -> f64 {
-        self.next
-    }
-
-    fn pop(&mut self) -> f64 {
-        let t = self.next;
-        self.next = self.gen.next_arrival();
-        self.count += 1;
-        t
-    }
-}
-
-/// Open-loop serve: virtual-time event loop over timestamped arrivals.
-///
-/// Each round forms one batch — dispatched as soon as `bs * mtl` requests
-/// are waiting (size trigger) or once the oldest waiting request has
-/// waited `batch_timeout_ms` (timeout trigger) — then executes it and
-/// advances the clock by the observed batch latency. Every request's
-/// recorded latency is its full sojourn: queueing delay + service.
-///
-/// Modeling note: a partial batch still executes at the configured `mtl`
-/// (all co-located instances stay resident and the device bills full
-/// co-location contention and power), so light-load MT latency is the
-/// conservative upper bound, not the idle-instances optimum. The
-/// re-convergence test thresholds were validated against exactly these
-/// semantics.
-#[allow(clippy::too_many_arguments)]
+/// Open-loop serve: a thin window driver over the shared
+/// [`super::engine`] event loop. Each round [`OpenLoop::serve_round`]
+/// forms one batch (size- or timeout-triggered), executes it, charges
+/// full sojourn latencies, and advances the virtual clock; this function
+/// only sequences windows, applies the SLO schedule, and feeds each
+/// window's observation to the policy. `Fleet` drives the same engine
+/// with one `OpenLoop` per member, interleaved by next-event time.
 fn run_open(
     cfg: &RunConfig,
     job: &JobSpec,
     device: &mut dyn Device,
     policy: &mut dyn Policy,
-    pattern: ArrivalPattern,
-    seed: u64,
-    queue_capacity: Option<usize>,
-    batch_timeout_ms: f64,
-    profile_overhead_ms: f64,
+    mut lp: OpenLoop,
 ) -> Result<JobOutcome, DeviceError> {
     let mut schedule = SloSchedule::new(job.slo_ms, cfg.slo_schedule.clone());
-    let mut feed = Feed::new(ArrivalGenerator::new(pattern, seed));
-    let mut queue = match queue_capacity {
-        Some(cap) => RequestQueue::bounded(cap),
-        None => RequestQueue::new(),
-    };
-    let timeout_s = batch_timeout_ms / 1000.0;
-    // Profiling consumed virtual time before serving began.
-    let mut now_s = profile_overhead_ms / 1000.0;
-
     let mut trace = Vec::with_capacity(cfg.windows);
     let mut latencies: Vec<(f64, f64)> = Vec::new();
     let mut acc = AttainAcc::new(cfg.windows / 2);
@@ -797,97 +883,18 @@ fn run_open(
     for w in 0..cfg.windows {
         let slo = schedule.at(w);
         let (bs, mtl) = policy.operating_point();
-        let window_start_s = now_s;
-        let arrived_before = feed.count;
-        let dropped_before = queue.dropped;
-        let mut served = 0.0;
-        let mut power_acc = 0.0;
-        let mut sm_acc = 0.0;
-        let mut queue_peak = 0usize;
-        let mut win_lat: Vec<(f64, f64)> = Vec::new();
-
+        let mut win = WindowAccum::begin(&lp);
         for _ in 0..cfg.rounds_per_window {
-            let target = (bs as usize) * (mtl as usize);
-            // Form a batch: size- or timeout-triggered.
-            loop {
-                while feed.peek() <= now_s {
-                    let t = feed.pop();
-                    let _ = queue.push(t);
-                }
-                queue_peak = queue_peak.max(queue.len());
-                if queue.len() >= target {
-                    break;
-                }
-                let deadline = match queue.oldest_arrival() {
-                    Some(oldest) => oldest + timeout_s,
-                    None => f64::INFINITY,
-                };
-                if feed.peek() <= deadline {
-                    // Wait for the next arrival (maybe it fills the batch).
-                    now_s = feed.peek();
-                } else {
-                    // Timeout: dispatch whatever is waiting.
-                    now_s = now_s.max(deadline);
-                    break;
-                }
+            if !lp.serve_round((bs, mtl), slo, 1.0, device, &mut win)? {
+                // Finite trace exhausted and drained: remaining rounds
+                // (and windows) have nothing left to serve.
+                break;
             }
-
-            let batch = queue.take_batch(target);
-            debug_assert!(!batch.is_empty(), "batch formation must yield >= 1 request");
-            let eff_bs = (batch.len().div_ceil(mtl as usize)).max(1) as u32;
-            let s = device.execute_batch(eff_bs, mtl)?;
-            now_s += s.latency_ms / 1000.0;
-            for r in &batch {
-                let sojourn_ms = (now_s - r.arrival_s) * 1000.0;
-                win_lat.push((sojourn_ms, 1.0));
-            }
-            served += batch.len() as f64;
-            power_acc += s.power_w;
-            sm_acc += s.sm_util;
         }
-
-        let duration_s = (now_s - window_start_s).max(1e-9);
-        scratch.clear();
-        scratch.extend(win_lat.iter().map(|(l, _)| *l));
-        let n = scratch.len();
-        let rank = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
-        let (_, p95, _) =
-            scratch.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).unwrap());
-        let p95 = *p95;
-        let mean = win_lat.iter().map(|(l, _)| *l).sum::<f64>() / n as f64;
-        let throughput = served / duration_s;
-        let power_w = power_acc / cfg.rounds_per_window as f64;
-        let arrival_rate = (feed.count - arrived_before) as f64 / duration_s;
-        let drops = queue.dropped - dropped_before;
-
+        let (record, obs, mut win_lat) = win.finish(w, slo, (bs, mtl), &lp, &mut scratch);
         acc.absorb(w, slo, &win_lat);
-        latencies.extend_from_slice(&win_lat);
-        trace.push(WindowRecord {
-            window: w,
-            bs,
-            mtl,
-            slo_ms: slo,
-            p95_ms: p95,
-            mean_ms: mean,
-            throughput,
-            power_w,
-            queue_peak,
-            arrival_rate,
-            drops,
-        });
-
-        let obs = WindowObservation {
-            window: w,
-            slo_ms: slo,
-            p95_ms: p95,
-            mean_ms: mean,
-            throughput,
-            power_w,
-            sm_util: sm_acc / cfg.rounds_per_window as f64,
-            queue_depth: queue.len(),
-            arrival_rate,
-            drops,
-        };
+        latencies.append(&mut win_lat);
+        trace.push(record);
         // Unlike the closed loop, instance launches are not charged as a
         // serving stall here: co-located instances are independent
         // processes, so the existing ones keep draining the queue while a
@@ -905,8 +912,10 @@ fn run_open(
         trace,
         latencies,
         &acc,
-        queue.dropped,
-        queue.max_depth,
+        lp.arrived(),
+        lp.dropped(),
+        lp.dropped_deadline(),
+        lp.max_depth(),
     ))
 }
 
@@ -1118,5 +1127,52 @@ mod tests {
         assert!(ConfigError::ZeroRounds.to_string().contains("rounds_per_window"));
         assert!(ConfigError::BadArrivalRate { rate: -1.0 }.to_string().contains("-1"));
         assert!(ConfigError::UnknownDnn { dnn: "vgg16".into() }.to_string().contains("vgg16"));
+        assert!(ConfigError::ShedRequiresOpenLoop.to_string().contains("open-loop"));
+        assert!(ConfigError::MixedArrivalModes.to_string().contains("mix"));
+    }
+
+    #[test]
+    fn builder_rejects_shed_on_closed_loop_and_bad_traces() {
+        let job = paper_job(1).unwrap();
+        assert_eq!(
+            ServingSession::builder()
+                .job(job)
+                .device(sim(job, 1))
+                .shed_deadline(true)
+                .build()
+                .err(),
+            Some(ConfigError::ShedRequiresOpenLoop)
+        );
+        // Queueing knobs on closed-loop arrivals are rejected, not
+        // silently ignored (there is no queue for them to act on).
+        assert_eq!(
+            ServingSession::builder().job(job).device(sim(job, 1)).queue_capacity(8).build().err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "queue_capacity" })
+        );
+        assert_eq!(
+            ServingSession::builder()
+                .job(job)
+                .device(sim(job, 1))
+                .batch_timeout_ms(2.0)
+                .build()
+                .err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "batch_timeout_ms" })
+        );
+        // A hand-built (unvalidated) Trace variant is re-checked at build.
+        let err = ServingSession::builder()
+            .job(job)
+            .device(sim(job, 1))
+            .arrivals(ArrivalPattern::Trace(vec![3.0, 1.0]))
+            .build()
+            .err();
+        assert!(matches!(err, Some(ConfigError::BadTrace(_))), "{err:?}");
+        // A validated trace with shedding builds fine.
+        assert!(ServingSession::builder()
+            .job(job)
+            .device(sim(job, 1))
+            .arrivals(ArrivalPattern::trace(vec![0.0, 0.5]).unwrap())
+            .shed_deadline(true)
+            .build()
+            .is_ok());
     }
 }

@@ -4,15 +4,19 @@
 //!
 //! * `zoo` — list calibrated paper DNNs and exported AOT artifacts;
 //! * `profile` — run the Profiler on one DNN (Table 5 rows);
-//! * `job` — run one Table 4 job end-to-end (DNNScaler vs Clipper);
+//! * `job` — run one Table 4 job end-to-end (chosen method vs Clipper);
 //! * `jobs` — run the full 30-job workload (Fig. 5 summary);
-//! * `fleet` — co-locate several jobs on one shared simulated P40;
+//! * `fleet` — co-locate several jobs on one shared simulated P40,
+//!   closed-loop or (with `--rates`/`--trace`) open-loop with per-member
+//!   arrival processes, deadline shedding, and goodput reporting;
 //! * `sweep` — throughput/latency vs BS or MTL (Fig. 1 curves);
 //! * `serve` — real-mode serving of an AOT artifact over PJRT.
 //!
-//! `job`, `jobs`, and `serve` accept `--open` plus arrival-shape flags to
-//! serve open-loop through the event-driven `ServingSession` (queueing
-//! delay in every latency, drop accounting under `--queue-cap`).
+//! `job`, `jobs`, and `serve` accept `--open` plus arrival-shape flags
+//! (or `--trace PATH` to replay a recorded arrival log) to serve
+//! open-loop through the event-driven engine (queueing delay in every
+//! latency, drop accounting under `--queue-cap`, SLO deadline shedding
+//! under `--shed`).
 //!
 //! Argument parsing is hand-rolled (this build is fully offline; see
 //! Cargo.toml) — `--key value` flags after the subcommand; each
@@ -21,7 +25,9 @@
 use anyhow::{anyhow, bail, Result};
 
 use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
-use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
+use dnnscaler::coordinator::session::{
+    JobOutcome, PolicySpec, RunConfig, ServingSession, DEFAULT_BATCH_TIMEOUT_MS,
+};
 use dnnscaler::coordinator::{Fleet, Method, Profiler};
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::gpusim::{Dataset, GpuSim, PAPER_DNNS};
@@ -40,17 +46,28 @@ COMMANDS:
            List calibrated paper DNNs and exported AOT artifacts.
   profile  --dnn NAME [--dataset DS] [--seed N]
            Run the Profiler on one paper DNN (simulated P40).
-  job      --id 1..30 [--windows N] [--seed N] [--trace] [open flags]
-           Run one Table 4 job: DNNScaler vs Clipper.
+  job      --id 1..30 [--windows N] [--seed N] [--method M] [--print-trace]
+           [open flags]
+           Run one Table 4 job: chosen method (default dnnscaler) vs Clipper.
   jobs     [--windows N] [--seed N] [open flags]
            Run the full 30-job workload (Fig. 5 summary).
-  fleet    [--ids 1,4,10] [--windows N] [--seed N]
+  fleet    [--ids 1,4,10] [--windows N] [--seed N] [--method M]
+           [--rates R1,R2,.. | --trace PATH] [--shed] [--timeout-ms MS]
+           [--queue-cap N]
            Serve several jobs concurrently on ONE shared simulated P40
-           (shared memory admission + SM contention).
+           (shared memory admission + SM contention). With --rates (one
+           Poisson rate per member, or one rate for all) or --trace, the
+           fleet serves OPEN-LOOP: per-member arrivals through the shared
+           event engine, with per-member drop/shed/goodput accounting.
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
-  serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N] [open flags]
-           Serve a real AOT artifact over PJRT with DNNScaler.
+  serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
+           [--method M] [open flags]
+           Serve a real AOT artifact over PJRT.
+
+METHODS (--method): dnnscaler (default) | clipper | queue
+  `queue` is the queue-aware proactive scaler: it adds instances on rising
+  queue depth / arrival rate / drops BEFORE p95 degrades (open loop).
 
 OPEN-LOOP FLAGS (job, jobs, serve):
   --open                serve open-loop instead of closed-loop
@@ -58,8 +75,13 @@ OPEN-LOOP FLAGS (job, jobs, serve):
   --burst-factor F      rate multiplier during bursts (default 1 = plain Poisson)
   --burst-period S      seconds between burst starts (default 4)
   --burst-len S         burst duration in seconds (default 1)
+  --trace PATH          replay a recorded arrival trace (one timestamp in
+                        seconds per line; # comments and blanks skipped);
+                        implies --open, conflicts with --rate/--burst-*
   --timeout-ms MS       batch-formation timeout (default 5)
   --queue-cap N         bound the request queue; overflow is dropped
+  --shed                SLO deadline shedding: drop requests whose queueing
+                        delay alone already exceeds the SLO (goodput saver)
 
 Datasets: imagenet caltech sentiment140 imdb ledov dhf1k librispeech
 ";
@@ -117,42 +139,68 @@ impl Flags {
 }
 
 /// Flags shared by every open-loop-capable subcommand.
-const OPEN_FLAGS: &[&str] =
-    &["open", "rate", "burst-factor", "burst-period", "burst-len", "timeout-ms", "queue-cap"];
+const OPEN_FLAGS: &[&str] = &[
+    "open",
+    "rate",
+    "burst-factor",
+    "burst-period",
+    "burst-len",
+    "trace",
+    "timeout-ms",
+    "queue-cap",
+    "shed",
+];
 
 /// Parsed open-loop serving shape (None = closed loop).
-#[derive(Clone, Copy)]
+#[derive(Clone)]
 struct OpenCfg {
     pattern: ArrivalPattern,
     timeout_ms: f64,
     queue_cap: Option<usize>,
+    shed: bool,
 }
 
 fn parse_open(flags: &Flags) -> Result<Option<OpenCfg>> {
-    if !flags.has("open") {
+    let has_trace = flags.has("trace");
+    if !flags.has("open") && !has_trace {
         // The arrival-shape flags mean nothing closed-loop; refuse to
         // silently discard them.
         if let Some(stray) = OPEN_FLAGS.iter().find(|&&k| k != "open" && flags.has(k)) {
-            bail!("--{stray} requires --open (closed-loop serving has no arrival process)");
+            bail!(
+                "--{stray} requires --open or --trace PATH (closed-loop serving has no \
+                 arrival process)"
+            );
         }
         return Ok(None);
     }
-    let rate: f64 = flags.num_or("rate", 50.0)?;
-    let factor: f64 = flags.num_or("burst-factor", 1.0)?;
-    let pattern = if factor > 1.0 {
-        ArrivalPattern::bursty(
-            rate,
-            factor,
-            flags.num_or("burst-period", 4.0)?,
-            flags.num_or("burst-len", 1.0)?,
-        )
-    } else if factor < 1.0 {
-        bail!("--burst-factor must be >= 1 (got {factor}); 1 means plain Poisson");
-    } else if flags.has("burst-period") || flags.has("burst-len") {
-        // Don't silently discard a burst shape the user spelled out.
-        bail!("--burst-period/--burst-len have no effect without --burst-factor > 1");
+    let pattern = if has_trace {
+        // The trace IS the arrival process; synthetic-shape flags would
+        // be silently overridden, so reject the combination outright.
+        for k in ["rate", "burst-factor", "burst-period", "burst-len"] {
+            if flags.has(k) {
+                bail!("--{k} conflicts with --trace (the trace defines the arrivals)");
+            }
+        }
+        let path = flags.get("trace").unwrap();
+        ArrivalPattern::from_trace_file(path).map_err(|e| anyhow!("--trace: {e}"))?
     } else {
-        ArrivalPattern::poisson(rate)
+        let rate: f64 = flags.num_or("rate", 50.0)?;
+        let factor: f64 = flags.num_or("burst-factor", 1.0)?;
+        if factor > 1.0 {
+            ArrivalPattern::bursty(
+                rate,
+                factor,
+                flags.num_or("burst-period", 4.0)?,
+                flags.num_or("burst-len", 1.0)?,
+            )
+        } else if factor < 1.0 {
+            bail!("--burst-factor must be >= 1 (got {factor}); 1 means plain Poisson");
+        } else if flags.has("burst-period") || flags.has("burst-len") {
+            // Don't silently discard a burst shape the user spelled out.
+            bail!("--burst-period/--burst-len have no effect without --burst-factor > 1");
+        } else {
+            ArrivalPattern::poisson(rate)
+        }
     };
     let queue_cap = match flags.get("queue-cap") {
         None => None,
@@ -160,7 +208,23 @@ fn parse_open(flags: &Flags) -> Result<Option<OpenCfg>> {
             Some(v.parse().map_err(|_| anyhow!("--queue-cap: cannot parse {v:?}"))?)
         }
     };
-    Ok(Some(OpenCfg { pattern, timeout_ms: flags.num_or("timeout-ms", 5.0)?, queue_cap }))
+    Ok(Some(OpenCfg {
+        pattern,
+        timeout_ms: flags.num_or("timeout-ms", DEFAULT_BATCH_TIMEOUT_MS)?,
+        queue_cap,
+        shed: flags.has("shed"),
+    }))
+}
+
+/// Parse `--method` into the policy it names (default: the paper's full
+/// DNNScaler pipeline).
+fn parse_method(flags: &Flags) -> Result<PolicySpec<'static>> {
+    match flags.str_or("method", "dnnscaler").as_str() {
+        "dnnscaler" => Ok(PolicySpec::DnnScaler),
+        "clipper" => Ok(PolicySpec::Clipper),
+        "queue" => Ok(PolicySpec::QueueAware),
+        other => bail!("--method must be dnnscaler, clipper, or queue (got {other:?})"),
+    }
 }
 
 fn parse_dataset(s: &str) -> Result<Dataset> {
@@ -185,7 +249,8 @@ fn main() -> Result<()> {
             cmd_profile(dnn, &flags.str_or("dataset", "imagenet"), flags.num_or("seed", 42u64)?)
         }
         "job" => {
-            let allowed = [&["id", "windows", "seed", "trace"][..], OPEN_FLAGS].concat();
+            let allowed = [&["id", "windows", "seed", "print-trace", "method"][..], OPEN_FLAGS]
+                .concat();
             let flags = Flags::parse(rest, &allowed)?;
             let id = flags.num_or("id", 0u32)?;
             if id == 0 {
@@ -195,7 +260,8 @@ fn main() -> Result<()> {
                 id,
                 flags.num_or("windows", 60usize)?,
                 flags.num_or("seed", 42u64)?,
-                flags.has("trace"),
+                flags.has("print-trace"),
+                parse_method(&flags)?,
                 parse_open(&flags)?,
             )
         }
@@ -209,12 +275,21 @@ fn main() -> Result<()> {
             )
         }
         "fleet" => {
-            let flags = Flags::parse(rest, &["ids", "windows", "seed"])?;
-            cmd_fleet(
-                &flags.str_or("ids", "1,4,10"),
-                flags.num_or("windows", 30usize)?,
-                flags.num_or("seed", 42u64)?,
-            )
+            let flags = Flags::parse(
+                rest,
+                &[
+                    "ids",
+                    "windows",
+                    "seed",
+                    "method",
+                    "rates",
+                    "trace",
+                    "shed",
+                    "timeout-ms",
+                    "queue-cap",
+                ],
+            )?;
+            cmd_fleet(&flags)
         }
         "sweep" => {
             let flags = Flags::parse(rest, &["dnn", "dataset", "knob"])?;
@@ -222,13 +297,15 @@ fn main() -> Result<()> {
             cmd_sweep(dnn, &flags.str_or("dataset", "imagenet"), &flags.str_or("knob", "bs"))
         }
         "serve" => {
-            let allowed = [&["model", "slo", "artifacts", "windows"][..], OPEN_FLAGS].concat();
+            let allowed =
+                [&["model", "slo", "artifacts", "windows", "method"][..], OPEN_FLAGS].concat();
             let flags = Flags::parse(rest, &allowed)?;
             cmd_serve(
                 &flags.str_or("model", "mobv1-025"),
                 flags.num_or("slo", 50.0f64)?,
                 &flags.str_or("artifacts", "artifacts"),
                 flags.num_or("windows", 20usize)?,
+                parse_method(&flags)?,
                 parse_open(&flags)?,
             )
         }
@@ -308,7 +385,10 @@ fn run_session(
     let mut b =
         ServingSession::builder().config(cfg).job(job).device(sim).policy(spec).seed(seed);
     if let Some(o) = open {
-        b = b.arrivals(o.pattern).batch_timeout_ms(o.timeout_ms);
+        b = b
+            .arrivals(o.pattern.clone())
+            .batch_timeout_ms(o.timeout_ms)
+            .shed_deadline(o.shed);
         if let Some(cap) = o.queue_cap {
             b = b.queue_capacity(cap);
         }
@@ -323,17 +403,25 @@ fn run_job_pair(
     job: &JobSpec,
     windows: usize,
     seed: u64,
+    spec: PolicySpec<'static>,
     open: Option<&OpenCfg>,
 ) -> Result<(JobOutcome, JobOutcome)> {
     let cfg = RunConfig::windows(windows, 20);
-    let scaler = run_session(job, cfg.clone(), seed, PolicySpec::DnnScaler, open)?;
+    let chosen = run_session(job, cfg.clone(), seed, spec, open)?;
     let clipper = run_session(job, cfg, seed + 1, PolicySpec::Clipper, open)?;
-    Ok((scaler, clipper))
+    Ok((chosen, clipper))
 }
 
-fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool, open: Option<OpenCfg>) -> Result<()> {
+fn cmd_job(
+    id: u32,
+    windows: usize,
+    seed: u64,
+    print_trace: bool,
+    spec: PolicySpec<'static>,
+    open: Option<OpenCfg>,
+) -> Result<()> {
     let job = paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30"))?;
-    let (scaler, clipper) = run_job_pair(job, windows, seed, open.as_ref())?;
+    let (chosen, clipper) = run_job_pair(job, windows, seed, spec, open.as_ref())?;
     println!(
         "Job {} ({} on {}, SLO {} ms): paper method {:?}{}",
         job.id,
@@ -343,9 +431,9 @@ fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool, open: Option<OpenCfg
         job.paper_method,
         if open.is_some() { "  [open-loop]" } else { "" }
     );
-    for o in [&scaler, &clipper] {
+    for o in [&chosen, &clipper] {
         println!(
-            "  {:<10} thr {:>9.2} inf/s  p95 {:>8.2} ms  SLO-attain {:>5.1}%  power {:>6.1} W  knob bs={} mtl={}",
+            "  {:<11} thr {:>9.2} inf/s  p95 {:>8.2} ms  SLO-attain {:>5.1}%  power {:>6.1} W  knob bs={} mtl={}",
             o.controller,
             o.throughput,
             o.p95_ms,
@@ -356,21 +444,34 @@ fn cmd_job(id: u32, windows: usize, seed: u64, trace: bool, open: Option<OpenCfg
         );
         if open.is_some() {
             println!(
-                "  {:<10} queue peak {:>4}  dropped {:>5}  steady attain {:>5.1}%",
-                "", o.queue_peak, o.drops, o.steady_attainment * 100.0
+                "  {:<11} queue peak {:>4}  dropped {:>5}  shed {:>5}  goodput {:>8.2} inf/s  steady attain {:>5.1}%",
+                "",
+                o.queue_peak,
+                o.drops,
+                o.dropped_deadline,
+                o.goodput,
+                o.steady_attainment * 100.0
             );
         }
     }
     println!(
-        "  speedup: {:.2}x (method chosen: {:?})",
-        scaler.throughput / clipper.throughput,
-        scaler.method.unwrap()
+        "  speedup vs clipper: {:.2}x (profiler method: {})",
+        chosen.throughput / clipper.throughput,
+        chosen.method.map_or_else(|| "-".to_string(), |m| format!("{m:?}"))
     );
-    if trace {
-        for r in &scaler.trace {
+    if print_trace {
+        for r in &chosen.trace {
             println!(
-                "    w{:03} bs={} mtl={} p95={:.2} slo={:.0} thr={:.1} queue={} drops={}",
-                r.window, r.bs, r.mtl, r.p95_ms, r.slo_ms, r.throughput, r.queue_peak, r.drops
+                "    w{:03} bs={} mtl={} p95={:.2} slo={:.0} thr={:.1} queue={} drops={} shed={}",
+                r.window,
+                r.bs,
+                r.mtl,
+                r.p95_ms,
+                r.slo_ms,
+                r.throughput,
+                r.queue_peak,
+                r.drops,
+                r.drops_deadline
             );
         }
     }
@@ -385,13 +486,25 @@ fn cmd_jobs(windows: usize, seed: u64, open: Option<OpenCfg>) -> Result<()> {
     };
     let mut t = Table::new(
         title,
-        &["job", "dnn", "method", "paper", "knob", "scaler thr", "clipper thr", "speedup", "attain%"],
+        &[
+            "job",
+            "dnn",
+            "method",
+            "paper",
+            "knob",
+            "scaler thr",
+            "clipper thr",
+            "speedup",
+            "attain%",
+            "goodput",
+        ],
     );
     let mut sum_gain = 0.0;
     let mut max_gain: (f64, u32) = (0.0, 0);
     let mut method_hits = 0;
     for job in PAPER_JOBS {
-        let (scaler, clipper) = run_job_pair(job, windows, seed, open.as_ref())?;
+        let (scaler, clipper) =
+            run_job_pair(job, windows, seed, PolicySpec::DnnScaler, open.as_ref())?;
         let gain = scaler.throughput / clipper.throughput;
         sum_gain += gain;
         if gain > max_gain.0 {
@@ -415,6 +528,7 @@ fn cmd_jobs(windows: usize, seed: u64, open: Option<OpenCfg>) -> Result<()> {
             f1(clipper.throughput),
             f2(gain),
             f1(scaler.slo_attainment * 100.0),
+            f1(scaler.goodput),
         ]);
     }
     print!("{}", t.render());
@@ -428,40 +542,120 @@ fn cmd_jobs(windows: usize, seed: u64, open: Option<OpenCfg>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(ids: &str, windows: usize, seed: u64) -> Result<()> {
-    let mut b = Fleet::builder().windows(windows).rounds_per_window(20).seed(seed);
-    let mut picked = Vec::new();
+fn cmd_fleet(flags: &Flags) -> Result<()> {
+    let ids = flags.str_or("ids", "1,4,10");
+    let windows = flags.num_or("windows", 30usize)?;
+    let seed = flags.num_or("seed", 42u64)?;
+    let shed = flags.has("shed");
+    let timeout_ms: f64 = flags.num_or("timeout-ms", DEFAULT_BATCH_TIMEOUT_MS)?;
+    let queue_cap: Option<usize> = match flags.get("queue-cap") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("--queue-cap: cannot parse {v:?}"))?),
+    };
+
+    let mut jobs = Vec::new();
     for tok in ids.split(',') {
         let id: u32 = tok.trim().parse().map_err(|_| anyhow!("--ids: bad job id {tok:?}"))?;
-        let job = paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30, got {id}"))?;
-        picked.push(id);
-        b = b.job(job, PolicySpec::DnnScaler);
+        jobs.push(paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30, got {id}"))?);
+    }
+
+    // Open-loop fleet: per-member Poisson rates or one shared trace file.
+    let rates: Option<Vec<f64>> = match flags.get("rates") {
+        None => None,
+        Some(s) => Some(
+            s.split(',')
+                .map(|tok| {
+                    tok.trim().parse().map_err(|_| anyhow!("--rates: bad rate {tok:?}"))
+                })
+                .collect::<Result<Vec<f64>>>()?,
+        ),
+    };
+    if let Some(rs) = &rates {
+        if rs.len() != 1 && rs.len() != jobs.len() {
+            bail!(
+                "--rates needs 1 value or one per member ({} jobs, {} rates)",
+                jobs.len(),
+                rs.len()
+            );
+        }
+        if flags.has("trace") {
+            bail!("--rates conflicts with --trace (pick one arrival source)");
+        }
+    }
+    let trace_pattern: Option<ArrivalPattern> = match flags.get("trace") {
+        None => None,
+        Some(path) => {
+            Some(ArrivalPattern::from_trace_file(path).map_err(|e| anyhow!("--trace: {e}"))?)
+        }
+    };
+    let open = rates.is_some() || trace_pattern.is_some();
+    if !open && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
+        bail!("--shed/--timeout-ms/--queue-cap need --rates or --trace (open-loop fleet)");
+    }
+
+    let mut b = Fleet::builder().windows(windows).rounds_per_window(20).seed(seed);
+    let picked: Vec<u32> = jobs.iter().map(|j| j.id).collect();
+    for (i, job) in jobs.iter().enumerate() {
+        // Every member serves under the same --method; PolicySpec is not
+        // Clone (Custom holds a boxed policy), so construct one per member.
+        let spec = parse_method(flags)?;
+        if open {
+            let pattern = match (&rates, &trace_pattern) {
+                (Some(rs), _) => {
+                    ArrivalPattern::poisson(if rs.len() == 1 { rs[0] } else { rs[i] })
+                }
+                (None, Some(p)) => p.clone(),
+                (None, None) => unreachable!("open implies rates or trace"),
+            };
+            b = b
+                .job_with_arrivals(job, spec, pattern)
+                .batch_timeout_ms(timeout_ms)
+                .shed_deadline(shed);
+            if let Some(cap) = queue_cap {
+                b = b.queue_capacity(cap);
+            }
+        } else {
+            b = b.job(job, spec);
+        }
     }
     let out = b
         .build()
         .map_err(|e| anyhow!(e.to_string()))?
         .run()
         .map_err(|e| anyhow!(e.to_string()))?;
+
+    let title = format!(
+        "Fleet: jobs {picked:?} sharing one simulated P40{}",
+        if open { " [open-loop]" } else { "" }
+    );
     let mut t = Table::new(
-        &format!("Fleet: jobs {picked:?} sharing one simulated P40"),
-        &["job", "dnn", "method", "knob", "thr", "p95(ms)", "attain%"],
+        &title,
+        &[
+            "job", "dnn", "policy", "knob", "arr/s", "thr", "goodput", "p95(ms)", "attain%",
+            "drop", "shed",
+        ],
     );
     for m in &out.members {
         let knob = format!("bs={} mtl={}", m.steady_bs, m.steady_mtl);
         t.row(&[
             m.job_id.to_string(),
             m.dnn.clone(),
-            m.method.map(|x| x.short()).unwrap_or("-").into(),
+            m.controller.clone(),
             knob,
+            f1(m.mean_arrival_rate()),
             f1(m.throughput),
+            f1(m.goodput),
             f2(m.p95_ms),
             f1(m.slo_attainment * 100.0),
+            m.drops.to_string(),
+            m.dropped_deadline.to_string(),
         ]);
     }
     print!("{}", t.render());
     println!(
-        "fleet total {:.1} inf/s | peak mem {:.0}/{:.0} MB | peak SM contention {:.2} | admission clamps {}",
+        "fleet total {:.1} inf/s (goodput {:.1}) | peak mem {:.0}/{:.0} MB | peak SM contention {:.2} | admission clamps {}",
         out.total_throughput,
+        out.total_goodput,
         out.peak_mem_mb,
         out.mem_capacity_mb,
         out.peak_contention,
@@ -516,6 +710,7 @@ fn cmd_serve(
     slo: f64,
     artifacts: &str,
     windows: usize,
+    spec: PolicySpec<'static>,
     open: Option<OpenCfg>,
 ) -> Result<()> {
     let mut dev = RealDevice::open(artifacts, model)?;
@@ -541,9 +736,12 @@ fn cmd_serve(
         .config(cfg)
         .job(&job)
         .device(&mut dev)
-        .policy(PolicySpec::DnnScaler);
+        .policy(spec);
     if let Some(o) = &open {
-        b = b.arrivals(o.pattern).batch_timeout_ms(o.timeout_ms);
+        b = b
+            .arrivals(o.pattern.clone())
+            .batch_timeout_ms(o.timeout_ms)
+            .shed_deadline(o.shed);
         if let Some(cap) = o.queue_cap {
             b = b.queue_capacity(cap);
         }
@@ -554,8 +752,9 @@ fn cmd_serve(
         .run()
         .map_err(|e| anyhow!(e.to_string()))?;
     println!(
-        "served: method {:?}, steady bs={} mtl={}, throughput {:.1} inf/s, p95 {:.2} ms, SLO attainment {:.1}%",
-        out.method.unwrap(),
+        "served: {} (method {}), steady bs={} mtl={}, throughput {:.1} inf/s, p95 {:.2} ms, SLO attainment {:.1}%",
+        out.controller,
+        out.method.map_or_else(|| "-".to_string(), |m| format!("{m:?}")),
         out.steady_bs,
         out.steady_mtl,
         out.throughput,
@@ -563,7 +762,10 @@ fn cmd_serve(
         out.slo_attainment * 100.0
     );
     if open.is_some() {
-        println!("open-loop: queue peak {}, dropped {}", out.queue_peak, out.drops);
+        println!(
+            "open-loop: queue peak {}, dropped {}, shed {}, goodput {:.1} inf/s",
+            out.queue_peak, out.drops, out.dropped_deadline, out.goodput
+        );
     }
     for (bs, ms) in dev.pool().compile_report() {
         println!("  compiled bs={bs} in {ms:.0} ms (once)");
@@ -573,7 +775,60 @@ fn cmd_serve(
 
 #[cfg(test)]
 mod tests {
-    use super::Flags;
+    use super::{parse_method, parse_open, Flags, PolicySpec, OPEN_FLAGS};
+
+    fn flags(args: &[&str]) -> Flags {
+        let owned: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        Flags::parse(&owned, &[&["method"][..], OPEN_FLAGS].concat()).unwrap()
+    }
+
+    #[test]
+    fn open_flags_require_open_or_trace() {
+        let err = parse_open(&flags(&["--rate", "80"])).unwrap_err().to_string();
+        assert!(err.contains("--open or --trace"), "{err}");
+        let err = parse_open(&flags(&["--shed"])).unwrap_err().to_string();
+        assert!(err.contains("--shed"), "{err}");
+        assert!(parse_open(&flags(&[])).unwrap().is_none());
+    }
+
+    #[test]
+    fn trace_conflicts_with_synthetic_shapes() {
+        // The conflict is rejected before the trace file is ever read, so
+        // no file needs to exist here.
+        let err = parse_open(&flags(&["--trace", "t.txt", "--rate", "80"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("conflicts with --trace"), "{err}");
+        // A missing trace file is a readable error, not a panic.
+        let err = parse_open(&flags(&["--trace", "/nonexistent/t.txt"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read trace"), "{err}");
+    }
+
+    #[test]
+    fn shed_and_queue_flags_ride_along_with_open() {
+        let cfg = parse_open(&flags(&["--open", "--rate", "60", "--shed", "--queue-cap", "32"]))
+            .unwrap()
+            .unwrap();
+        assert!(cfg.shed);
+        assert_eq!(cfg.queue_cap, Some(32));
+    }
+
+    #[test]
+    fn method_flag_selects_policies() {
+        assert!(matches!(parse_method(&flags(&[])).unwrap(), PolicySpec::DnnScaler));
+        assert!(matches!(
+            parse_method(&flags(&["--method", "queue"])).unwrap(),
+            PolicySpec::QueueAware
+        ));
+        assert!(matches!(
+            parse_method(&flags(&["--method", "clipper"])).unwrap(),
+            PolicySpec::Clipper
+        ));
+        let err = parse_method(&flags(&["--method", "magic"])).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
 
     #[test]
     fn unknown_flag_is_rejected_with_allowed_list() {

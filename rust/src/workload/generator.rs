@@ -1,11 +1,15 @@
-//! Request arrival generators (open-loop Poisson, bursty, uniform) plus
-//! the `Closed` sentinel used by `ServingSession` to request the legacy
-//! closed-loop serving mode (batches issued back-to-back, no queue).
+//! Request arrival generators (open-loop Poisson, bursty, uniform,
+//! trace replay) plus the `Closed` sentinel used by `ServingSession` to
+//! request the legacy closed-loop serving mode (batches issued
+//! back-to-back, no queue).
 
 use crate::rng::Rng;
 
+use std::fmt;
+use std::path::Path;
+
 /// Arrival pattern of a workload.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalPattern {
     /// Closed loop: no external arrival process — the server issues
     /// batches back-to-back (the paper's evaluation setup). Generators
@@ -19,6 +23,75 @@ pub enum ArrivalPattern {
     /// burst multiplies the rate by `factor` for `burst_s` seconds
     /// (the AWS "bursty inference workloads" shape from §3.3).
     Bursty { rate: f64, factor: f64, period_s: f64, burst_s: f64 },
+    /// Replay of recorded arrival timestamps (seconds, sorted ascending,
+    /// non-negative) — e.g. an Azure Functions or Twitter trace. The
+    /// generator emits exactly these timestamps in order and then goes
+    /// silent (`f64::INFINITY`). Build with [`ArrivalPattern::trace`] or
+    /// [`ArrivalPattern::from_trace_file`], which validate the data.
+    Trace(Vec<f64>),
+}
+
+/// Why a recorded arrival trace was rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceError {
+    /// A trace must contain at least one arrival.
+    Empty,
+    /// A timestamp was negative (serving starts at t = 0).
+    Negative { index: usize, t: f64 },
+    /// Timestamps must be sorted ascending (equal timestamps are fine).
+    Unsorted { index: usize, prev: f64, t: f64 },
+    /// NaN or infinite timestamp.
+    NotFinite { index: usize },
+    /// A trace-file line did not parse as a number.
+    Parse { line: usize, token: String },
+    /// The trace file could not be read.
+    Io { path: String, error: String },
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::Empty => write!(f, "trace has no arrivals"),
+            TraceError::Negative { index, t } => {
+                write!(f, "trace timestamp #{index} is negative ({t})")
+            }
+            TraceError::Unsorted { index, prev, t } => {
+                write!(f, "trace timestamp #{index} ({t}) precedes its predecessor ({prev})")
+            }
+            TraceError::NotFinite { index } => {
+                write!(f, "trace timestamp #{index} is NaN or infinite")
+            }
+            TraceError::Parse { line, token } => {
+                write!(f, "trace line {line}: {token:?} is not a number")
+            }
+            TraceError::Io { path, error } => write!(f, "cannot read trace {path:?}: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Validate a candidate arrival trace (sorted, non-negative, finite,
+/// non-empty). Shared by the constructors and the session builders, so a
+/// hand-built `ArrivalPattern::Trace` is re-checked before serving.
+pub fn validate_trace(ts: &[f64]) -> Result<(), TraceError> {
+    if ts.is_empty() {
+        return Err(TraceError::Empty);
+    }
+    let mut prev = 0.0f64;
+    for (index, &t) in ts.iter().enumerate() {
+        if !t.is_finite() {
+            return Err(TraceError::NotFinite { index });
+        }
+        if t < 0.0 {
+            return Err(TraceError::Negative { index, t });
+        }
+        if t < prev {
+            return Err(TraceError::Unsorted { index, prev, t });
+        }
+        prev = t;
+    }
+    Ok(())
 }
 
 impl ArrivalPattern {
@@ -43,18 +116,55 @@ impl ArrivalPattern {
         ArrivalPattern::Bursty { rate, factor, period_s, burst_s }
     }
 
+    /// Replay of recorded arrival `timestamps` (seconds). Rejects empty,
+    /// unsorted, negative, or non-finite data with a typed [`TraceError`].
+    pub fn trace(timestamps: Vec<f64>) -> Result<Self, TraceError> {
+        validate_trace(&timestamps)?;
+        Ok(ArrivalPattern::Trace(timestamps))
+    }
+
+    /// Parse a trace file: one arrival timestamp (seconds) per line, in
+    /// the first whitespace-separated column (extra columns are ignored);
+    /// blank lines and `#` comments are skipped. The resulting trace is
+    /// validated like [`ArrivalPattern::trace`].
+    pub fn from_trace_file(path: impl AsRef<Path>) -> Result<Self, TraceError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| TraceError::Io {
+            path: path.display().to_string(),
+            error: e.to_string(),
+        })?;
+        let mut ts = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let token = line.split_whitespace().next().unwrap_or(line);
+            let t: f64 = token
+                .parse()
+                .map_err(|_| TraceError::Parse { line: i + 1, token: token.to_string() })?;
+            ts.push(t);
+        }
+        Self::trace(ts)
+    }
+
     pub fn is_closed(&self) -> bool {
         matches!(self, ArrivalPattern::Closed)
     }
 
-    /// Long-run mean offered rate (requests/s); 0 for `Closed`.
+    /// Long-run mean offered rate (requests/s); 0 for `Closed`. For a
+    /// trace this is the count divided by the trace span `[0, last]`.
     pub fn mean_rate(&self) -> f64 {
-        match *self {
+        match self {
             ArrivalPattern::Closed => 0.0,
-            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => *rate,
             ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
                 rate * (factor * burst_s + (period_s - burst_s)) / period_s
             }
+            ArrivalPattern::Trace(ts) => match ts.last() {
+                Some(&last) if last > 0.0 => ts.len() as f64 / last,
+                _ => 0.0,
+            },
         }
     }
 }
@@ -65,32 +175,54 @@ pub struct ArrivalGenerator {
     pattern: ArrivalPattern,
     rng: Rng,
     now_s: f64,
+    /// Next unread entry of a `Trace` pattern.
+    trace_idx: usize,
+    /// Arrival generated but not yet handed out: `arrivals_until` stashes
+    /// its horizon-overshooting sample here so no arrival is ever lost
+    /// (a replayed trace must emit *exactly* its timestamps).
+    pending: Option<f64>,
 }
 
 impl ArrivalGenerator {
     pub fn new(pattern: ArrivalPattern, seed: u64) -> Self {
-        ArrivalGenerator { pattern, rng: Rng::new(seed), now_s: 0.0 }
+        ArrivalGenerator { pattern, rng: Rng::new(seed), now_s: 0.0, trace_idx: 0, pending: None }
     }
 
-    /// Instantaneous rate at time `t` (requests/s).
+    /// Instantaneous rate at time `t` (requests/s). A trace reports its
+    /// long-run mean (its instantaneous rate is a spike train).
     pub fn rate_at(&self, t: f64) -> f64 {
-        match self.pattern {
+        match &self.pattern {
             ArrivalPattern::Closed => 0.0,
-            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => rate,
+            ArrivalPattern::Uniform { rate } | ArrivalPattern::Poisson { rate } => *rate,
             ArrivalPattern::Bursty { rate, factor, period_s, burst_s } => {
                 let phase = t % period_s;
-                if phase < burst_s {
+                if phase < *burst_s {
                     rate * factor
                 } else {
-                    rate
+                    *rate
                 }
             }
+            ArrivalPattern::Trace(_) => self.pattern.mean_rate(),
         }
     }
 
     /// Next arrival timestamp (monotone, seconds); `f64::INFINITY` for the
-    /// `Closed` pattern (it never produces arrivals).
+    /// `Closed` pattern (it never produces arrivals) and for an exhausted
+    /// `Trace`.
     pub fn next_arrival(&mut self) -> f64 {
+        if let Some(t) = self.pending.take() {
+            return t;
+        }
+        if let ArrivalPattern::Trace(ts) = &self.pattern {
+            return match ts.get(self.trace_idx) {
+                Some(&t) => {
+                    self.trace_idx += 1;
+                    self.now_s = t;
+                    t
+                }
+                None => f64::INFINITY,
+            };
+        }
         let gap = match self.pattern {
             ArrivalPattern::Closed => return f64::INFINITY,
             ArrivalPattern::Uniform { rate } => 1.0 / rate,
@@ -100,17 +232,23 @@ impl ArrivalGenerator {
                 // which is exact for bursts much longer than a gap.
                 self.rng.exponential(self.rate_at(self.now_s).max(1e-9))
             }
+            ArrivalPattern::Trace(_) => unreachable!("handled above"),
         };
         self.now_s += gap;
         self.now_s
     }
 
-    /// All arrivals in `[0, horizon_s)`.
+    /// All arrivals in `[0, horizon_s)`. The first arrival at or past the
+    /// horizon is retained (not discarded): the next call — to this
+    /// method or [`ArrivalGenerator::next_arrival`] — yields it.
     pub fn arrivals_until(&mut self, horizon_s: f64) -> Vec<f64> {
         let mut out = Vec::new();
         loop {
             let t = self.next_arrival();
             if t >= horizon_s {
+                if t.is_finite() {
+                    self.pending = Some(t);
+                }
                 break;
             }
             out.push(t);
@@ -189,5 +327,71 @@ mod tests {
         // 3x bursts for 1 s out of every 4 s: mean = (3 + 3) / 4 = 1.5x.
         let b = ArrivalPattern::bursty(40.0, 3.0, 4.0, 1.0);
         assert!((b.mean_rate() - 60.0).abs() < 1e-9);
+        // 4 arrivals over [0, 2] s -> 2 req/s.
+        let t = ArrivalPattern::trace(vec![0.5, 1.0, 1.5, 2.0]).unwrap();
+        assert!((t.mean_rate() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_replays_exact_timestamps_then_goes_silent() {
+        let ts = vec![0.0, 0.1, 0.1, 0.35, 2.0];
+        let mut g = ArrivalGenerator::new(ArrivalPattern::trace(ts.clone()).unwrap(), 99);
+        for &want in &ts {
+            assert_eq!(g.next_arrival(), want);
+        }
+        assert_eq!(g.next_arrival(), f64::INFINITY);
+        assert_eq!(g.next_arrival(), f64::INFINITY);
+        // The seed is irrelevant: replay consumes no randomness.
+        let mut a = ArrivalGenerator::new(ArrivalPattern::trace(ts.clone()).unwrap(), 1);
+        let mut b = ArrivalGenerator::new(ArrivalPattern::trace(ts).unwrap(), 2);
+        assert_eq!(a.arrivals_until(1.0), b.arrivals_until(1.0));
+    }
+
+    #[test]
+    fn trace_constructor_rejects_bad_data() {
+        assert_eq!(ArrivalPattern::trace(vec![]), Err(TraceError::Empty));
+        assert_eq!(
+            ArrivalPattern::trace(vec![0.0, -1.0]),
+            Err(TraceError::Negative { index: 1, t: -1.0 })
+        );
+        assert_eq!(
+            ArrivalPattern::trace(vec![0.0, 2.0, 1.0]),
+            Err(TraceError::Unsorted { index: 2, prev: 2.0, t: 1.0 })
+        );
+        assert!(matches!(
+            ArrivalPattern::trace(vec![0.0, f64::NAN]),
+            Err(TraceError::NotFinite { index: 1 })
+        ));
+        assert!(matches!(
+            ArrivalPattern::trace(vec![f64::INFINITY]),
+            Err(TraceError::NotFinite { index: 0 })
+        ));
+        // Equal timestamps (simultaneous arrivals) are allowed.
+        assert!(ArrivalPattern::trace(vec![1.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn trace_file_parser_skips_blanks_and_comments() {
+        let path = std::env::temp_dir()
+            .join(format!("dnnscaler-trace-ok-{}.txt", std::process::id()));
+        std::fs::write(&path, "# a recorded trace\n\n0.0\n0.5 extra columns ignored\n\n1.25\n")
+            .unwrap();
+        let got = ArrivalPattern::from_trace_file(&path);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(got, Ok(ArrivalPattern::Trace(vec![0.0, 0.5, 1.25])));
+    }
+
+    #[test]
+    fn trace_file_parser_reports_line_and_io_errors() {
+        let path = std::env::temp_dir()
+            .join(format!("dnnscaler-trace-bad-{}.txt", std::process::id()));
+        std::fs::write(&path, "0.0\noops\n").unwrap();
+        let got = ArrivalPattern::from_trace_file(&path);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(got, Err(TraceError::Parse { line: 2, token: "oops".into() }));
+        assert!(matches!(
+            ArrivalPattern::from_trace_file("/nonexistent/dnnscaler-trace.txt"),
+            Err(TraceError::Io { .. })
+        ));
     }
 }

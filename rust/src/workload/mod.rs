@@ -4,16 +4,18 @@
 //! claims DNNScaler "can quickly respond to bursty workloads" (citing
 //! AWS-style bursty inference arrivals). This module is the arrival side
 //! of the open-loop serving core: [`ArrivalPattern`] describes the offered
-//! load (`Closed`, `Uniform`, `Poisson`, `Bursty`), [`ArrivalGenerator`]
-//! turns a pattern into a deterministic timestamp stream, and
-//! [`RequestQueue`] holds pending requests between arrival and batch
-//! formation so queueing delay becomes part of every observed latency.
-//! `coordinator::session::ServingSession` drives all three; bounded
-//! queues additionally count drops for the backpressure signal policies
-//! receive in their `WindowObservation`.
+//! load (`Closed`, `Uniform`, `Poisson`, `Bursty`, or a recorded `Trace`
+//! replayed from a log file), [`ArrivalGenerator`] turns a pattern into a
+//! deterministic timestamp stream, and [`RequestQueue`] holds pending
+//! requests between arrival and batch formation so queueing delay becomes
+//! part of every observed latency. `coordinator::engine` drives all three
+//! for `ServingSession` and `Fleet` alike; bounded queues count overflow
+//! drops, and [`RequestQueue::shed_expired`] implements SLO-aware deadline
+//! shedding (both are backpressure signals policies receive in their
+//! `WindowObservation`).
 
 pub mod generator;
 pub mod queue;
 
-pub use generator::{ArrivalGenerator, ArrivalPattern};
+pub use generator::{validate_trace, ArrivalGenerator, ArrivalPattern, TraceError};
 pub use queue::{Request, RequestQueue};

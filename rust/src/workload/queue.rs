@@ -2,7 +2,11 @@
 //! batcher drains them, so queueing delay is part of observed latency.
 //! A queue may be *bounded*, in which case arrivals beyond the capacity
 //! are dropped and counted — the backpressure signal `ServingSession`
-//! reports to policies and in `JobOutcome::drops`.
+//! reports to policies and in `JobOutcome::drops`. Queues also support
+//! SLO-aware *deadline shedding* ([`RequestQueue::shed_expired`]): a
+//! request whose queueing delay alone already exceeds the SLO can never
+//! meet it, so serving it only wastes GPU time — the serving engine
+//! drops it at dispatch and counts it separately from capacity drops.
 
 use std::collections::VecDeque;
 
@@ -24,6 +28,9 @@ pub struct RequestQueue {
     pub max_depth: usize,
     /// Arrivals rejected because the queue was full.
     pub dropped: u64,
+    /// Accepted requests later shed because their queueing delay alone
+    /// exceeded the deadline (see [`RequestQueue::shed_expired`]).
+    pub dropped_deadline: u64,
 }
 
 impl RequestQueue {
@@ -69,6 +76,26 @@ impl RequestQueue {
     pub fn take_batch(&mut self, bs: usize) -> Vec<Request> {
         let n = bs.min(self.q.len());
         self.q.drain(..n).collect()
+    }
+
+    /// SLO-aware deadline shedding: drop every waiting request whose
+    /// queueing delay at `now_s` already exceeds `deadline_ms` — it can
+    /// no longer meet the SLO, so serving it would only waste capacity.
+    /// Arrivals enter in time order, so the expired requests form a FIFO
+    /// prefix. Returns how many were shed; the total is counted in
+    /// [`RequestQueue::dropped_deadline`], separate from capacity drops.
+    pub fn shed_expired(&mut self, now_s: f64, deadline_ms: f64) -> u64 {
+        let mut shed = 0u64;
+        while let Some(front) = self.q.front() {
+            if (now_s - front.arrival_s) * 1000.0 > deadline_ms {
+                self.q.pop_front();
+                shed += 1;
+            } else {
+                break;
+            }
+        }
+        self.dropped_deadline += shed;
+        shed
     }
 
     pub fn len(&self) -> usize {
@@ -136,6 +163,31 @@ mod tests {
         assert_eq!(q.dropped, 1);
         assert_eq!(q.oldest_arrival(), Some(0.2));
         assert_eq!(q.capacity(), Some(2));
+    }
+
+    #[test]
+    fn shed_expired_drops_only_the_expired_prefix() {
+        let mut q = RequestQueue::new();
+        q.extend([0.0, 0.05, 0.20, 0.21]);
+        // Deadline 100 ms at t = 0.3: the first two waited 300/250 ms
+        // (expired); the last two waited 100/90 ms (0.20 is exactly at
+        // the deadline and survives — shedding is strict).
+        assert_eq!(q.shed_expired(0.3, 100.0), 2);
+        assert_eq!(q.dropped_deadline, 2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.oldest_arrival(), Some(0.20));
+        // Nothing else expires at the same instant.
+        assert_eq!(q.shed_expired(0.3, 100.0), 0);
+        assert_eq!(q.dropped_deadline, 2);
+        // Capacity drops stay a separate counter.
+        assert_eq!(q.dropped, 0);
+    }
+
+    #[test]
+    fn shed_expired_empty_queue_is_a_noop() {
+        let mut q = RequestQueue::bounded(2);
+        assert_eq!(q.shed_expired(1e9, 0.0), 0);
+        assert_eq!(q.dropped_deadline, 0);
     }
 
     #[test]

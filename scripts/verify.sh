@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, and format-check the rust crate.
+# Tier-1 verification: build, test, and format-check the rust crate,
+# plus the drift guards — examples and benches are compiled too (so a
+# library API change that rots an example fails `make verify` instead of
+# rotting silently), and clippy runs with -D warnings when installed.
 #
 # Usage: scripts/verify.sh   (or `make verify`)
 #
-# Exits non-zero on the first failing step and prints a summary of what
-# ran, so CHANGES.md can record the explicit baseline of any still-failing
-# seed tests.
+# Runs every step and exits non-zero if any failed, printing a summary of
+# what ran, so CHANGES.md can record the explicit baseline of any
+# still-failing seed tests.
 
 set -u
 cd "$(dirname "$0")/.."
@@ -44,8 +47,18 @@ run_step() {
 }
 
 run_step "build" cargo build --release --manifest-path "$manifest"
+run_step "examples" cargo build --release --examples --manifest-path "$manifest"
+run_step "benches" cargo bench --no-run --manifest-path "$manifest"
 run_step "test" cargo test -q --manifest-path "$manifest"
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
+
+# Clippy is optional tooling (not in every image); when present, warnings
+# are errors so lint drift cannot accumulate unnoticed.
+if cargo clippy --version >/dev/null 2>&1; then
+    run_step "clippy" cargo clippy --all-targets --manifest-path "$manifest" -- -D warnings
+else
+    echo "==> clippy: not installed, skipped"
+fi
 
 if [ "$fail" -ne 0 ]; then
     echo "verify: at least one step failed — record the baseline in CHANGES.md." >&2
