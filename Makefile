@@ -1,8 +1,27 @@
 # Top-level convenience targets.
 #
-#   make verify    — tier-1 checks: cargo build --release, cargo test -q,
-#                    cargo fmt --check (see scripts/verify.sh)
+#   make verify         — tier-1 checks: cargo build --release, examples,
+#                         benches, cargo test -q, cargo fmt --check,
+#                         clippy when installed, and golden-fixture drift
+#                         (see scripts/verify.sh)
+#   make test-fixtures  — regenerate the golden outcome snapshots under
+#                         rust/tests/fixtures/ and fail on drift vs git
 
-.PHONY: verify
+.PHONY: verify test-fixtures
 verify:
 	bash scripts/verify.sh
+
+test-fixtures:
+	@manifest=""; \
+	for c in Cargo.toml rust/Cargo.toml; do \
+		[ -f "$$c" ] && manifest="$$c" && break; \
+	done; \
+	if [ -z "$$manifest" ]; then echo "test-fixtures: no Cargo.toml found" >&2; exit 1; fi; \
+	REGEN_FIXTURES=1 cargo test -q --test golden --manifest-path "$$manifest"
+	@if [ -n "$$(git status --porcelain -- rust/tests/fixtures)" ]; then \
+		echo "test-fixtures: golden snapshots drifted (or are new) — review and commit:"; \
+		git status --porcelain -- rust/tests/fixtures; \
+		git --no-pager diff -- rust/tests/fixtures; \
+		exit 1; \
+	fi
+	@echo "test-fixtures: snapshots match the checked-in baseline"

@@ -185,6 +185,52 @@ fn main() {
         );
     }
 
+    if run("trace") {
+        // Replay the shipped Azure-Functions-style arrival log (the
+        // burst-interference raw material) through the open-loop engine:
+        // the event loop must replay recorded production shapes at far
+        // above real time.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../data/azure_functions_sample.txt");
+        match ArrivalPattern::from_trace_file(&path) {
+            Ok(pattern) => {
+                let n = match &pattern {
+                    ArrivalPattern::Trace(ts) => ts.len(),
+                    _ => 0,
+                };
+                let job = dnnscaler::coordinator::job::paper_job(1).unwrap();
+                let t0 = Instant::now();
+                let mut runs = 0u64;
+                while t0.elapsed().as_millis() < 300 {
+                    let d = GpuSim::for_paper_dnn(job.dnn, job.dataset, runs).unwrap();
+                    let out = ServingSession::builder()
+                        .config(RunConfig::windows(60, 20))
+                        .job(job)
+                        .device(d)
+                        .policy(PolicySpec::Static { bs: 1, mtl: 4 })
+                        .arrivals(pattern.clone())
+                        .seed(runs)
+                        .build()
+                        .unwrap()
+                        .run()
+                        .unwrap();
+                    assert_eq!(out.arrived as usize, n, "replay must admit the whole trace");
+                    std::hint::black_box(out);
+                    runs += 1;
+                }
+                let ms = t0.elapsed().as_secs_f64() * 1000.0 / runs as f64;
+                println!(
+                    "{:<44} {:>10.2} ms/replay {:>12.0} req/s   ({} iters)",
+                    format!("trace: azure sample ({n} arrivals, 60 s)"),
+                    ms,
+                    n as f64 * 1000.0 / ms,
+                    runs
+                );
+            }
+            Err(e) => println!("trace: skipped ({e})"),
+        }
+    }
+
     if run("real") {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("manifest.json").exists() {

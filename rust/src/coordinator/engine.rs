@@ -40,6 +40,18 @@ use crate::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
 use super::policy::WindowObservation;
 use super::session::WindowRecord;
 
+/// How a member's window shares the GPU's SMs — the two regimes the
+/// fleet's `PartitionMode` selects between.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum SmShare {
+    /// Time-sharing: execute on the whole device and inflate the observed
+    /// latency by the fleet's combined-contention factor (1.0 solo).
+    Inflate(f64),
+    /// Spatial partition: execute inside an SM capacity grant (MPS
+    /// fraction / MIG slice bundle); no cross-member inflation at all.
+    Grant(f64),
+}
+
 /// Peekable arrival stream over an [`ArrivalGenerator`].
 pub(crate) struct Feed {
     gen: ArrivalGenerator,
@@ -124,17 +136,18 @@ impl OpenLoop {
         self.queue.max_depth
     }
 
-    /// Form and execute one batch at `(bs, mtl)`, inflating the observed
-    /// batch latency by `inflate` (1.0 solo; a fleet passes its window's
-    /// SM-contention factor). `slo_ms` is the deadline for shedding when
-    /// enabled. Returns `Ok(false)` when the arrival stream is exhausted
-    /// and nothing is left to serve (finite traces); the driver should
-    /// stop scheduling rounds for this member.
+    /// Form and execute one batch at `(bs, mtl)` under `share` — either
+    /// time-sharing (observed latency inflated by the fleet's contention
+    /// factor; `SmShare::Inflate(1.0)` solo) or a spatial SM grant
+    /// (executed inside the partition, no inflation). `slo_ms` is the
+    /// deadline for shedding when enabled. Returns `Ok(false)` when the
+    /// arrival stream is exhausted and nothing is left to serve (finite
+    /// traces); the driver should stop scheduling rounds for this member.
     pub(crate) fn serve_round(
         &mut self,
         (bs, mtl): (u32, u32),
         slo_ms: f64,
-        inflate: f64,
+        share: SmShare,
         device: &mut dyn Device,
         win: &mut WindowAccum,
     ) -> Result<bool, DeviceError> {
@@ -178,8 +191,17 @@ impl OpenLoop {
             return Ok(true);
         }
         let eff_bs = (batch.len().div_ceil(mtl as usize)).max(1) as u32;
-        let s = device.execute_batch(eff_bs, mtl)?;
-        self.now_s += s.latency_ms * inflate / 1000.0;
+        let (s, lat_ms) = match share {
+            SmShare::Inflate(factor) => {
+                let s = device.execute_batch(eff_bs, mtl)?;
+                (s, s.latency_ms * factor)
+            }
+            SmShare::Grant(grant) => {
+                let s = device.execute_batch_granted(eff_bs, mtl, grant)?;
+                (s, s.latency_ms)
+            }
+        };
+        self.now_s += lat_ms / 1000.0;
         for r in &batch {
             let sojourn_ms = (self.now_s - r.arrival_s) * 1000.0;
             win.lat.push((sojourn_ms, 1.0));

@@ -10,11 +10,25 @@
 //!   GPU's memory capacity; the greediest member is shrunk (batch halved,
 //!   then instances shed) until the combined demand fits, so the fleet
 //!   never OOMs.
-//! * **Shared SMs** — the members' combined SM utilization sets a
-//!   contention factor; when it exceeds 1 the GPU time-shares and every
-//!   member's batch latency is inflated proportionally. Policies observe
-//!   those inflated latencies and back off, which is exactly the
-//!   cross-job feedback loop single-job serving cannot express.
+//! * **Shared SMs** — how the members share compute is set by the
+//!   fleet's [`PartitionMode`]:
+//!   - `TimeShare` (default, the paper's regime): the members' combined
+//!     SM utilization sets a contention factor; when it exceeds 1 the
+//!     GPU time-shares and every member's batch latency is inflated
+//!     proportionally. Policies observe those inflated latencies and
+//!     back off — the cross-job feedback loop single-job serving cannot
+//!     express.
+//!   - `Mps` / `MigSlices` (spatial): each member holds an SM capacity
+//!     *grant* (an MPS fraction, or whole MIG slices quantized down
+//!     conservatively) and executes inside it via the granted perf
+//!     model — neighbours can no longer inflate each other, they can
+//!     only run slower inside their own share. Reservations come from
+//!     [`FleetBuilder::sm_reservation`] (unreserved members split the
+//!     rest equally), are admitted per window through an
+//!     [`SmPool`] that refuses over-subscription, and can be moved
+//!     between members at window boundaries by a
+//!     [`PartitionPolicy`] (rebalances are re-validated; invalid ones
+//!     are rejected and counted as admission clamps).
 //!
 //! Fleets serve in one of two modes, decided by how members are added:
 //!
@@ -41,13 +55,15 @@
 //! [`engine::OpenLoop`]: super::engine::OpenLoop
 
 use crate::device::{Device, DeviceError};
-use crate::gpusim::{GpuSim, GpuSpec, TESLA_P40};
+use crate::gpusim::{
+    plan_grants, GpuSim, GpuSpec, PartitionMode, SmPool, MIN_GRANT, TESLA_P40,
+};
 use crate::workload::ArrivalPattern;
 
-use super::engine::{OpenLoop, WindowAccum};
+use super::engine::{OpenLoop, SmShare, WindowAccum};
 use super::job::JobSpec;
 use super::latency::LatencyWindow;
-use super::policy::{Action, Policy};
+use super::policy::{Action, PartitionPolicy, Policy, WindowObservation};
 use super::profiler::ProfileOutcome;
 use super::session::{
     assemble_outcome, resolve_policy, serve_closed_window, validate_pattern, AttainAcc,
@@ -68,13 +84,23 @@ pub struct FleetOutcome {
     pub peak_mem_mb: f64,
     /// The shared GPU's memory capacity (MB).
     pub mem_capacity_mb: f64,
-    /// Peak combined SM utilization (values > 1 mean time-sharing).
+    /// Peak combined SM pressure. TimeShare: combined SM utilization
+    /// (values > 1 mean time-sharing). Spatial modes: peak total granted
+    /// SM fraction (the pool never lets this exceed 1).
     pub peak_contention: f64,
-    /// Combined SM utilization per control window — the raw material for
-    /// watching cross-job interference build up and re-converge.
+    /// Combined SM pressure per control window — the raw material for
+    /// watching cross-job interference build up and re-converge. In
+    /// spatial modes this records the total SM fraction granted each
+    /// window (the admission ledger), never above 1.
     pub contention_trace: Vec<f64>,
-    /// Times the admission check shrank a member's requested point.
+    /// Times the admission check shrank a member's requested point (or,
+    /// in spatial modes, rejected a partition-policy rebalance).
     pub admission_clamps: u64,
+    /// How the fleet divided the SMs.
+    pub partition: PartitionMode,
+    /// Per-window SM grants, one inner vec per window in member order.
+    /// Empty for `TimeShare` (there are no grants to record).
+    pub grant_trace: Vec<Vec<f64>>,
 }
 
 /// One member's configuration: job, policy, and (open loop only) its
@@ -88,6 +114,9 @@ struct MemberCfg<'a> {
     /// "never set" apart from "set on a closed-loop member" (an error).
     batch_timeout_ms: Option<f64>,
     shed_deadline: bool,
+    /// SM fraction reserved for this member under a spatial
+    /// [`PartitionMode`]; None = an equal share of the unreserved rest.
+    sm_reservation: Option<f64>,
 }
 
 /// Builder for [`Fleet`].
@@ -96,6 +125,8 @@ pub struct FleetBuilder<'a> {
     cfg: RunConfig,
     seed: u64,
     members: Vec<MemberCfg<'a>>,
+    partition: PartitionMode,
+    partition_policy: Option<Box<dyn PartitionPolicy + 'a>>,
     /// First per-member knob that was set before any member existed
     /// (reported as a typed error at `build()`).
     knob_before_job: Option<&'static str>,
@@ -108,6 +139,8 @@ impl<'a> FleetBuilder<'a> {
             cfg: RunConfig::default(),
             seed: 42,
             members: Vec::new(),
+            partition: PartitionMode::TimeShare,
+            partition_policy: None,
             knob_before_job: None,
         }
     }
@@ -163,7 +196,38 @@ impl<'a> FleetBuilder<'a> {
             queue_capacity: None,
             batch_timeout_ms: None,
             shed_deadline: false,
+            sm_reservation: None,
         });
+        self
+    }
+
+    /// How the fleet divides the GPU's SMs (default:
+    /// [`PartitionMode::TimeShare`], the legacy contention-factor
+    /// coupling). `Mps`/`MigSlices` switch to spatial capacity grants:
+    /// members run inside their own SM share and never inflate each
+    /// other's latency.
+    pub fn partition_mode(mut self, mode: PartitionMode) -> Self {
+        self.partition = mode;
+        self
+    }
+
+    /// Reserve an SM fraction for the most recently added member
+    /// (spatial modes only). Members without a reservation split the
+    /// unreserved remainder equally; under `MigSlices` every grant is
+    /// quantized down to whole slices.
+    pub fn sm_reservation(mut self, fraction: f64) -> Self {
+        if let Some(m) = self.last_member("sm_reservation") {
+            m.sm_reservation = Some(fraction);
+        }
+        self
+    }
+
+    /// Install a fleet-level [`PartitionPolicy`] that may move SM
+    /// reservations between members at window boundaries (spatial modes
+    /// only). Rebalances are re-validated like build-time reservations;
+    /// invalid proposals are rejected and counted as admission clamps.
+    pub fn partition_policy(mut self, policy: impl PartitionPolicy + 'a) -> Self {
+        self.partition_policy = Some(Box::new(policy));
         self
     }
 
@@ -258,7 +322,29 @@ impl<'a> FleetBuilder<'a> {
         if closed != 0 && closed != self.members.len() {
             return Err(ConfigError::MixedArrivalModes);
         }
-        Ok(Fleet { gpu: self.gpu, cfg: self.cfg, seed: self.seed, members: self.members })
+        // Partition plan: spatial modes validate the reservations up
+        // front (typed error, not a mid-run surprise); TimeShare has no
+        // partitions, so partition knobs on it are refused outright.
+        if self.partition.is_spatial() {
+            let reservations: Vec<Option<f64>> =
+                self.members.iter().map(|m| m.sm_reservation).collect();
+            plan_grants(self.partition, &reservations).map_err(ConfigError::BadPartition)?;
+        } else {
+            if self.members.iter().any(|m| m.sm_reservation.is_some()) {
+                return Err(ConfigError::KnobRequiresPartition { knob: "sm_reservation" });
+            }
+            if self.partition_policy.is_some() {
+                return Err(ConfigError::KnobRequiresPartition { knob: "partition_policy" });
+            }
+        }
+        Ok(Fleet {
+            gpu: self.gpu,
+            cfg: self.cfg,
+            seed: self.seed,
+            members: self.members,
+            partition: self.partition,
+            partition_policy: self.partition_policy,
+        })
     }
 }
 
@@ -268,6 +354,8 @@ pub struct Fleet<'a> {
     cfg: RunConfig,
     seed: u64,
     members: Vec<MemberCfg<'a>>,
+    partition: PartitionMode,
+    partition_policy: Option<Box<dyn PartitionPolicy + 'a>>,
 }
 
 /// Closed-loop member state (lockstep windows).
@@ -347,6 +435,110 @@ fn admit_window(
     Ok(points)
 }
 
+/// Per-run spatial-partition ledger shared by both serving paths: holds
+/// the live reservations, plans + admits each window's grants through an
+/// [`SmPool`], and applies (re-validated) `PartitionPolicy` rebalances.
+struct Partitioner<'a> {
+    mode: PartitionMode,
+    reservations: Vec<Option<f64>>,
+    policy: Option<Box<dyn PartitionPolicy + 'a>>,
+}
+
+impl<'a> Partitioner<'a> {
+    fn new(
+        mode: PartitionMode,
+        members: &[MemberCfg<'_>],
+        policy: Option<Box<dyn PartitionPolicy + 'a>>,
+    ) -> Self {
+        Partitioner {
+            mode,
+            reservations: members.iter().map(|m| m.sm_reservation).collect(),
+            policy,
+        }
+    }
+
+    /// Plan this window's grants and admit them against the SM pool.
+    /// The builder validated the reservations (and every accepted
+    /// rebalance is re-validated), so failures here are defensive.
+    fn window_grants(&self) -> Result<Vec<f64>, DeviceError> {
+        let grants = plan_grants(self.mode, &self.reservations)
+            .map_err(|e| DeviceError::Exec(format!("SM partition plan: {e}")))?;
+        let mut pool = SmPool::new();
+        for g in &grants {
+            pool.try_grant(*g)
+                .map_err(|e| DeviceError::Exec(format!("SM partition admission: {e}")))?;
+        }
+        Ok(grants)
+    }
+
+    /// This window's SM shares plus telemetry: spatial modes plan + admit
+    /// per-member grants (recorded in `grant_trace`, totals in
+    /// `contention_trace`); `TimeShare` evaluates `contention` (the
+    /// members' combined SM utilization) and inflates everyone by it.
+    /// One implementation for both serving paths, like `admit_window`.
+    fn window_shares(
+        &self,
+        contention: impl FnOnce() -> f64,
+        n_members: usize,
+        peak_contention: &mut f64,
+        contention_trace: &mut Vec<f64>,
+        grant_trace: &mut Vec<Vec<f64>>,
+    ) -> Result<Vec<SmShare>, DeviceError> {
+        if self.mode.is_spatial() {
+            let grants = self.window_grants()?;
+            let total: f64 = grants.iter().sum();
+            *peak_contention = peak_contention.max(total);
+            contention_trace.push(total);
+            let shares = grants.iter().map(|&g| SmShare::Grant(g)).collect();
+            grant_trace.push(grants);
+            Ok(shares)
+        } else {
+            let contention = contention();
+            *peak_contention = peak_contention.max(contention);
+            contention_trace.push(contention);
+            Ok(vec![SmShare::Inflate(contention.max(1.0)); n_members])
+        }
+    }
+
+    /// Smallest share the mode can actually grant (one MIG slice, or the
+    /// global `MIN_GRANT` fraction under MPS).
+    fn min_share(&self) -> f64 {
+        match self.mode {
+            PartitionMode::MigSlices { slices } => 1.0 / slices.max(1) as f64,
+            _ => MIN_GRANT,
+        }
+    }
+
+    /// Offer the window's observations to the partition policy; an
+    /// accepted rebalance replaces the reservations, an invalid one is
+    /// rejected and counted against `admission_clamps`. Proposals are
+    /// sanitized, not trusted: a wrong-length or non-finite vector is
+    /// rejected outright, and values are lifted to the mode's smallest
+    /// grantable share first — a policy that nudges a member just below
+    /// one MIG slice must not deadlock rebalancing forever.
+    fn maybe_rebalance(
+        &mut self,
+        obs: &[WindowObservation],
+        grants: &[f64],
+        admission_clamps: &mut u64,
+    ) {
+        let Some(policy) = self.policy.as_mut() else { return };
+        let Some(next) = policy.rebalance(obs, grants) else { return };
+        if next.len() != self.reservations.len() || next.iter().any(|v| !v.is_finite()) {
+            *admission_clamps += 1;
+            return;
+        }
+        let floor = self.min_share();
+        let proposed: Vec<Option<f64>> =
+            next.into_iter().map(|v| Some(v.max(floor))).collect();
+        if plan_grants(self.mode, &proposed).is_ok() {
+            self.reservations = proposed;
+        } else {
+            *admission_clamps += 1;
+        }
+    }
+}
+
 impl<'a> Fleet<'a> {
     pub fn builder() -> FleetBuilder<'a> {
         FleetBuilder::new()
@@ -363,9 +555,12 @@ impl<'a> Fleet<'a> {
     }
 
     /// Closed-loop lockstep windows — byte-identical to the pre-engine
-    /// `Fleet` (same device-RNG consumption order, same accounting).
+    /// `Fleet` (same device-RNG consumption order, same accounting) in
+    /// `TimeShare` mode; spatial modes swap the contention factor for
+    /// per-member SM grants.
     fn run_closed(self) -> Result<FleetOutcome, DeviceError> {
-        let Fleet { gpu, cfg, seed, members } = self;
+        let Fleet { gpu, cfg, seed, members, partition, partition_policy } = self;
+        let mut parts = Partitioner::new(partition, &members, partition_policy);
         let mut states: Vec<Member<'a>> = Vec::with_capacity(members.len());
         for (i, m) in members.into_iter().enumerate() {
             let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, seed + i as u64)
@@ -393,6 +588,7 @@ impl<'a> Fleet<'a> {
         let mut peak_contention: f64 = 0.0;
         let mut admission_clamps = 0u64;
         let mut contention_trace = Vec::with_capacity(cfg.windows);
+        let mut grant_trace: Vec<Vec<f64>> = Vec::new();
 
         for w in 0..cfg.windows {
             // Requested operating points, then shared-memory admission.
@@ -407,16 +603,24 @@ impl<'a> Fleet<'a> {
                 &mut admission_clamps,
             )?;
 
-            // Combined SM pressure sets this window's time-sharing factor.
-            let contention: f64 = states
-                .iter()
-                .zip(&points)
-                .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
-                .sum();
-            peak_contention = peak_contention.max(contention);
-            contention_trace.push(contention);
-            let factor = contention.max(1.0);
+            // SM regime for the window: the combined-pressure time-sharing
+            // factor, or (spatial modes) per-member capacity grants taken
+            // from the SM pool.
+            let shares = parts.window_shares(
+                || {
+                    states
+                        .iter()
+                        .zip(&points)
+                        .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
+                        .sum()
+                },
+                states.len(),
+                &mut peak_contention,
+                &mut contention_trace,
+                &mut grant_trace,
+            )?;
 
+            let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
             for (i, m) in states.iter_mut().enumerate() {
                 let (bs, mtl) = points[i];
                 let slo = m.schedule.at(w);
@@ -428,7 +632,7 @@ impl<'a> Fleet<'a> {
                     w,
                     slo,
                     (bs, mtl),
-                    factor,
+                    shares[i],
                     pending,
                     &mut m.sim,
                     &mut m.window,
@@ -446,6 +650,10 @@ impl<'a> Fleet<'a> {
                             m.sim.launch_overhead_ms() * (new_mtl - requested_mtl) as f64;
                     }
                 }
+                window_obs.push(obs);
+            }
+            if let Some(grants) = grant_trace.last() {
+                parts.maybe_rebalance(&window_obs, grants, &mut admission_clamps);
             }
         }
 
@@ -477,6 +685,8 @@ impl<'a> Fleet<'a> {
             peak_contention,
             contention_trace,
             admission_clamps,
+            partition,
+            grant_trace,
         ))
     }
 
@@ -485,9 +695,12 @@ impl<'a> Fleet<'a> {
     /// SM-contention are still recomputed per lockstep control window —
     /// the same coupling the closed loop applies — but inside a window
     /// members serve in virtual-time order, each against its own arrival
-    /// stream and queue.
+    /// stream and queue. Spatial partition modes replace the shared
+    /// contention factor with per-member SM grants, so a bursty member
+    /// can only slow itself down.
     fn run_open(self) -> Result<FleetOutcome, DeviceError> {
-        let Fleet { gpu, cfg, seed, members } = self;
+        let Fleet { gpu, cfg, seed, members, partition, partition_policy } = self;
+        let mut parts = Partitioner::new(partition, &members, partition_policy);
         let n = members.len();
         let mut states: Vec<OpenMember<'a>> = Vec::with_capacity(n);
         for (i, m) in members.into_iter().enumerate() {
@@ -527,6 +740,7 @@ impl<'a> Fleet<'a> {
         let mut peak_contention: f64 = 0.0;
         let mut admission_clamps = 0u64;
         let mut contention_trace = Vec::with_capacity(cfg.windows);
+        let mut grant_trace: Vec<Vec<f64>> = Vec::new();
         let mut scratch: Vec<f64> = Vec::new();
 
         for w in 0..cfg.windows {
@@ -540,14 +754,19 @@ impl<'a> Fleet<'a> {
                 &mut peak_mem_mb,
                 &mut admission_clamps,
             )?;
-            let contention: f64 = states
-                .iter()
-                .zip(&points)
-                .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
-                .sum();
-            peak_contention = peak_contention.max(contention);
-            contention_trace.push(contention);
-            let factor = contention.max(1.0);
+            let shares = parts.window_shares(
+                || {
+                    states
+                        .iter()
+                        .zip(&points)
+                        .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
+                        .sum()
+                },
+                n,
+                &mut peak_contention,
+                &mut contention_trace,
+                &mut grant_trace,
+            )?;
 
             let slos: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
             let mut wins: Vec<WindowAccum> =
@@ -571,7 +790,7 @@ impl<'a> Fleet<'a> {
                 remaining[k] -= 1;
                 let st = &mut states[k];
                 let more =
-                    st.lp.serve_round(points[k], slos[k], factor, &mut st.sim, &mut wins[k])?;
+                    st.lp.serve_round(points[k], slos[k], shares[k], &mut st.sim, &mut wins[k])?;
                 if !more {
                     // Finite trace exhausted and drained: this member has
                     // nothing left to serve, this window or ever.
@@ -579,6 +798,7 @@ impl<'a> Fleet<'a> {
                 }
             }
 
+            let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(n);
             for (i, win) in wins.into_iter().enumerate() {
                 let st = &mut states[i];
                 st.admitted = points[i];
@@ -591,6 +811,10 @@ impl<'a> Fleet<'a> {
                 // are not charged as a queue-draining stall (existing
                 // instances keep serving while a new one spins up).
                 st.policy.observe(&obs);
+                window_obs.push(obs);
+            }
+            if let Some(grants) = grant_trace.last() {
+                parts.maybe_rebalance(&window_obs, grants, &mut admission_clamps);
             }
         }
 
@@ -622,11 +846,14 @@ impl<'a> Fleet<'a> {
             peak_contention,
             contention_trace,
             admission_clamps,
+            partition,
+            grant_trace,
         ))
     }
 }
 
 /// Fold per-member outcomes into the fleet-level result.
+#[allow(clippy::too_many_arguments)]
 fn finish_fleet(
     members: Vec<JobOutcome>,
     gpu: GpuSpec,
@@ -634,6 +861,8 @@ fn finish_fleet(
     peak_contention: f64,
     contention_trace: Vec<f64>,
     admission_clamps: u64,
+    partition: PartitionMode,
+    grant_trace: Vec<Vec<f64>>,
 ) -> FleetOutcome {
     let total_throughput = members.iter().map(|o| o.throughput).sum();
     let total_goodput = members.iter().map(|o| o.goodput).sum();
@@ -646,6 +875,8 @@ fn finish_fleet(
         peak_contention,
         contention_trace,
         admission_clamps,
+        partition,
+        grant_trace,
     }
 }
 
@@ -717,6 +948,230 @@ mod tests {
                 .err(),
             Some(ConfigError::ZeroQueueCapacity)
         );
+    }
+
+    #[test]
+    fn builder_rejects_partition_misconfiguration() {
+        use crate::gpusim::PartitionError;
+        let job = paper_job(1).unwrap();
+        // Partition knobs on a TimeShare fleet are refused, not ignored.
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).sm_reservation(0.5).build().err(),
+            Some(ConfigError::KnobRequiresPartition { knob: "sm_reservation" })
+        );
+        assert_eq!(
+            Fleet::builder()
+                .job(job, PolicySpec::Clipper)
+                .partition_policy(crate::coordinator::policy::DemandPartition::new())
+                .build()
+                .err(),
+            Some(ConfigError::KnobRequiresPartition { knob: "partition_policy" })
+        );
+        // Over-subscription and invalid fractions are typed errors.
+        assert!(matches!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservation(0.8)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservation(0.8)
+                .build()
+                .err(),
+            Some(ConfigError::BadPartition(PartitionError::Oversubscribed { .. }))
+        ));
+        assert!(matches!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservation(-0.25)
+                .build()
+                .err(),
+            Some(ConfigError::BadPartition(PartitionError::BadReservation { .. }))
+        ));
+        // A sub-slice MIG reservation cannot be granted.
+        assert!(matches!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::MigSlices { slices: 7 })
+                .job(job, PolicySpec::Clipper)
+                .sm_reservation(0.05)
+                .build()
+                .err(),
+            Some(ConfigError::BadPartition(PartitionError::BelowSliceFloor { .. }))
+        ));
+        // A reservation before any member is the usual knob error.
+        assert_eq!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .sm_reservation(0.5)
+                .job(job, PolicySpec::Clipper)
+                .build()
+                .err(),
+            Some(ConfigError::MemberKnobBeforeJob { knob: "sm_reservation" })
+        );
+    }
+
+    #[test]
+    fn mps_fleet_records_grants_and_never_oversubscribes() {
+        let out = Fleet::builder()
+            .windows(8)
+            .rounds_per_window(6)
+            .seed(5)
+            .partition_mode(PartitionMode::Mps)
+            .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 1, mtl: 2 })
+            .sm_reservation(0.6)
+            .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 1, mtl: 2 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.partition, PartitionMode::Mps);
+        assert_eq!(out.grant_trace.len(), 8);
+        for grants in &out.grant_trace {
+            assert_eq!(grants.len(), 2);
+            assert!((grants[0] - 0.6).abs() < 1e-12, "explicit reservation granted verbatim");
+            assert!((grants[1] - 0.4).abs() < 1e-12, "default member gets the remainder");
+            assert!(grants.iter().sum::<f64>() <= 1.0 + 1e-9);
+        }
+        // In spatial mode the contention trace is the granted total: <= 1.
+        assert!(out.contention_trace.iter().all(|&c| c <= 1.0 + 1e-9));
+        assert!(out.peak_contention <= 1.0 + 1e-9);
+        for m in &out.members {
+            assert!(m.throughput > 0.0);
+        }
+    }
+
+    #[test]
+    fn mig_fleet_quantizes_grants_to_slices() {
+        let out = Fleet::builder()
+            .windows(4)
+            .rounds_per_window(4)
+            .seed(5)
+            .partition_mode(PartitionMode::MigSlices { slices: 7 })
+            .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.5)
+            .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.4)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        for grants in &out.grant_trace {
+            // 0.5 -> 3/7, 0.4 -> 2/7 (rounded DOWN; 2/7 stays unused).
+            assert!((grants[0] - 3.0 / 7.0).abs() < 1e-12);
+            assert!((grants[1] - 2.0 / 7.0).abs() < 1e-12);
+        }
+        assert!(out.peak_contention < 1.0);
+    }
+
+    #[test]
+    fn timeshare_fleet_reports_no_grant_trace() {
+        let out = Fleet::builder()
+            .windows(4)
+            .rounds_per_window(4)
+            .seed(5)
+            .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 1, mtl: 2 })
+            .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 1, mtl: 2 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.partition, PartitionMode::TimeShare);
+        assert!(out.grant_trace.is_empty());
+    }
+
+    #[test]
+    fn hostile_partition_policies_are_sanitized_not_trusted() {
+        use crate::coordinator::policy::PartitionPolicy;
+
+        /// Returns a fixed proposal every window, however malformed.
+        struct FixedProposal(Vec<f64>);
+        impl PartitionPolicy for FixedProposal {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn rebalance(&mut self, _: &[WindowObservation], _: &[f64]) -> Option<Vec<f64>> {
+                Some(self.0.clone())
+            }
+        }
+
+        let run = |proposal: Vec<f64>, mode: PartitionMode| {
+            Fleet::builder()
+                .windows(6)
+                .rounds_per_window(4)
+                .seed(2)
+                .partition_mode(mode)
+                .partition_policy(FixedProposal(proposal))
+                .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+                .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+
+        // Wrong length: rejected every window (counted as clamps), the
+        // fleet keeps serving on the original equal split — no panic.
+        for bad in [vec![1.0], vec![0.3, 0.3, 0.3], vec![f64::NAN, 0.5]] {
+            let out = run(bad, PartitionMode::Mps);
+            assert!(out.admission_clamps >= 5, "rejections must be counted");
+            for grants in &out.grant_trace {
+                assert_eq!(grants.len(), 2);
+                assert!((grants[0] - 0.5).abs() < 1e-12, "reservations must be untouched");
+            }
+        }
+        // Over-subscription: also rejected, never granted.
+        let out = run(vec![0.9, 0.9], PartitionMode::Mps);
+        assert!(out.admission_clamps >= 5);
+        assert!(out.contention_trace.iter().all(|&c| c <= 1.0 + 1e-9));
+
+        // A proposal nudging a member below one MIG slice is lifted to
+        // the slice floor and accepted — not rejected forever (the
+        // rebalance-deadlock regression).
+        let out = run(vec![0.8, 0.1], PartitionMode::MigSlices { slices: 7 });
+        assert_eq!(out.admission_clamps, 0, "clamped proposal must be grantable");
+        let last = out.grant_trace.last().unwrap();
+        assert!((last[0] - 5.0 / 7.0).abs() < 1e-12, "0.8 quantizes to 5 slices");
+        assert!((last[1] - 1.0 / 7.0).abs() < 1e-12, "0.1 is lifted to one slice");
+    }
+
+    #[test]
+    fn partition_policy_rebalances_toward_the_loaded_member() {
+        use crate::coordinator::policy::DemandPartition;
+        // Open-loop MPS fleet: member 0 is overloaded, member 1 idle; the
+        // demand rebalancer must shift SM share toward member 0.
+        let out = Fleet::builder()
+            .windows(16)
+            .rounds_per_window(12)
+            .seed(3)
+            .partition_mode(PartitionMode::Mps)
+            .partition_policy(DemandPartition::new())
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(150.0),
+            )
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(2.0),
+            )
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let first = &out.grant_trace[0];
+        let last = out.grant_trace.last().unwrap();
+        assert!((first[0] - 0.5).abs() < 1e-12, "no reservations -> equal split at w0");
+        assert!(
+            last[0] > first[0] + 0.05,
+            "loaded member's grant never grew: {:.3} -> {:.3}",
+            first[0],
+            last[0]
+        );
+        for grants in &out.grant_trace {
+            assert!(grants.iter().sum::<f64>() <= 1.0 + 1e-9, "rebalance over-subscribed");
+            assert!(grants.iter().all(|&g| g > 0.0));
+        }
     }
 
     #[test]

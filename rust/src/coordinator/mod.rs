@@ -62,10 +62,14 @@ pub mod runner;
 pub mod scaler_batching;
 pub mod scaler_mt;
 pub mod session;
+pub mod snapshot;
 
 pub use controller::{Controller, Decision, Method};
 pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
-pub use policy::{Action, AsPolicy, Policy, QueuePolicy, StaticPolicy, WindowObservation};
+pub use policy::{
+    Action, AsPolicy, DemandPartition, PartitionPolicy, Policy, QueuePolicy, StaticPolicy,
+    WindowObservation,
+};
 pub use profiler::{ProfileOutcome, Profiler};
 pub use session::{
     ConfigError, JobOutcome, PolicySpec, RunConfig, ServingSession, SessionBuilder, WindowRecord,

@@ -12,6 +12,8 @@
 //!
 //! [`Controller`]: super::controller::Controller
 
+use crate::gpusim::MIN_GRANT;
+
 use super::controller::{Controller, Decision};
 
 /// Everything the serving loop measured over one control window.
@@ -236,6 +238,145 @@ impl Policy for QueuePolicy {
     }
 }
 
+/// A fleet-level SM-partition rebalancer: observes every member's window
+/// and may move SM reservations between them at the window boundary.
+///
+/// Where a [`Policy`] turns one member's observation into that member's
+/// `(bs, mtl)`, a `PartitionPolicy` arbitrates the *device* — the §4.6
+/// third knob (partition share) alongside batch size and instances. The
+/// fleet sanitizes whatever is returned: wrong-length or non-finite
+/// vectors are rejected outright, values are lifted to the mode's
+/// smallest grantable share (one MIG slice / `MIN_GRANT`), and the
+/// result passes the same `plan_grants` validation used at build time —
+/// a rebalance that still over-subscribes is rejected (and counted as
+/// an admission clamp), never silently granted.
+pub trait PartitionPolicy {
+    /// Human-readable name for traces/reports.
+    fn name(&self) -> &'static str;
+
+    /// Observe one window of every member (index-aligned with `current`
+    /// reservations) and propose new reservations, or `None` to hold.
+    fn rebalance(&mut self, obs: &[WindowObservation], current: &[f64]) -> Option<Vec<f64>>;
+}
+
+/// Demand-weighted SM rebalancer: shifts reservation toward members
+/// whose offered load (arrival rate, queue backlog, drops) outruns their
+/// served throughput, with an EWMA so one bursty window does not thrash
+/// the partition layout. Every member keeps a floor share so a starved
+/// member can still drain and be seen recovering.
+#[derive(Debug, Clone)]
+pub struct DemandPartition {
+    /// Smoothed demand score per member (lazily sized on first window).
+    score: Vec<f64>,
+    /// Minimum share any member can be squeezed to.
+    floor: f64,
+    /// Smoothing step toward the demand-proportional target, 0..1.
+    gain: f64,
+}
+
+impl DemandPartition {
+    pub fn new() -> Self {
+        Self::with_params(MIN_GRANT.max(0.05), 0.3)
+    }
+
+    /// `floor`: smallest share a member may hold; `gain`: fraction of the
+    /// gap toward the demand-proportional split applied per window.
+    pub fn with_params(floor: f64, gain: f64) -> Self {
+        assert!((0.0..0.5).contains(&floor), "floor must be in [0, 0.5)");
+        assert!((0.0..=1.0).contains(&gain), "gain must be in [0, 1]");
+        DemandPartition { score: Vec::new(), floor, gain }
+    }
+}
+
+impl Default for DemandPartition {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PartitionPolicy for DemandPartition {
+    fn name(&self) -> &'static str {
+        "demand-share"
+    }
+
+    fn rebalance(&mut self, obs: &[WindowObservation], current: &[f64]) -> Option<Vec<f64>> {
+        if obs.len() != current.len() || obs.is_empty() {
+            return None;
+        }
+        if self.score.len() != obs.len() {
+            self.score = vec![1.0; obs.len()];
+        }
+        const BETA: f64 = 0.5;
+        for (s, o) in self.score.iter_mut().zip(obs) {
+            // Demand proxy: offered rate plus backlog/drop pressure,
+            // floored so an idle member keeps a nonzero score.
+            let pressure = o.arrival_rate
+                + o.queue_depth as f64
+                + 10.0 * (o.drops + o.drops_deadline) as f64;
+            *s = BETA * pressure.max(1e-3) + (1.0 - BETA) * *s;
+        }
+        let n = current.len() as f64;
+        // Demand-proportional split with the floor enforced exactly:
+        // members whose proportional share would fall below the floor
+        // are pinned AT the floor and the remaining mass is re-split
+        // among the rest (bounded waterfill, at most one pass per
+        // member). An infeasible floor (floor * n > 1) degrades to an
+        // equal split rather than an over-subscribed target.
+        let mut target = vec![0.0; current.len()];
+        if self.floor * n > 1.0 {
+            target.fill(1.0 / n);
+        } else {
+            let mut pinned = vec![false; current.len()];
+            loop {
+                let pinned_mass =
+                    pinned.iter().filter(|&&p| p).count() as f64 * self.floor;
+                let free_score: f64 = self
+                    .score
+                    .iter()
+                    .zip(&pinned)
+                    .filter(|(_, &p)| !p)
+                    .map(|(s, _)| *s)
+                    .sum();
+                let mut changed = false;
+                for i in 0..current.len() {
+                    if pinned[i] {
+                        target[i] = self.floor;
+                        continue;
+                    }
+                    target[i] = self.score[i] / free_score * (1.0 - pinned_mass);
+                    if target[i] < self.floor {
+                        pinned[i] = true;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+        }
+        let mut next: Vec<f64> = current
+            .iter()
+            .zip(&target)
+            .map(|(c, t)| c + self.gain * (t - c))
+            .collect();
+        // Defensive renormalization (floating error only; plan_grants
+        // re-validates downstream anyway).
+        let nsum: f64 = next.iter().sum();
+        if nsum > 1.0 {
+            for v in &mut next {
+                *v /= nsum;
+            }
+        }
+        let drift: f64 =
+            next.iter().zip(current).map(|(a, b)| (a - b).abs()).sum::<f64>() / n;
+        if drift < 0.005 {
+            None
+        } else {
+            Some(next)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,5 +527,44 @@ mod tests {
         o.throughput = 0.0;
         o.p95_ms = 500.0; // 5x the SLO
         assert_eq!(p.observe(&o), Action::SetPoint { bs: 1, mtl: 2 });
+    }
+
+    #[test]
+    fn demand_partition_shifts_share_toward_the_loaded_member() {
+        let mut p = DemandPartition::new();
+        assert_eq!(p.name(), "demand-share");
+        let mut res = vec![0.5, 0.5];
+        // Member 0 is slammed (high rate, deep queue); member 1 is idle.
+        for w in 0..12 {
+            let hot = demand_obs(w, 200);
+            let mut cold = demand_obs(w, 0);
+            cold.arrival_rate = 0.5;
+            if let Some(next) = p.rebalance(&[hot, cold], &res) {
+                res = next;
+            }
+        }
+        assert!(res[0] > 0.7, "hot member share {} never grew", res[0]);
+        assert!(res[1] >= 0.04, "cold member squeezed below its floor: {}", res[1]);
+        assert!(res.iter().sum::<f64>() <= 1.0 + 1e-9);
+        assert!(res.iter().all(|r| *r > 0.0));
+    }
+
+    #[test]
+    fn demand_partition_holds_on_balanced_load_and_bad_input() {
+        let mut p = DemandPartition::new();
+        let res = vec![0.5, 0.5];
+        // Perfectly symmetric load: after the EWMA settles, targets equal
+        // current and the policy holds instead of thrashing.
+        let mut held = false;
+        for w in 0..10 {
+            let o = demand_obs(w, 10);
+            if p.rebalance(&[o, o], &res).is_none() {
+                held = true;
+            }
+        }
+        assert!(held, "symmetric load must eventually hold");
+        // Length mismatch is a hold, not a panic.
+        assert!(p.rebalance(&[demand_obs(0, 1)], &res).is_none());
+        assert!(p.rebalance(&[], &[]).is_none());
     }
 }

@@ -27,11 +27,12 @@
 //! figure/table regenerates unchanged through this API.
 
 use crate::device::{Device, DeviceError};
+use crate::gpusim::PartitionError;
 use crate::workload::{validate_trace, ArrivalPattern, TraceError};
 
 use super::clipper::Clipper;
 use super::controller::Method;
-use super::engine::{OpenLoop, WindowAccum};
+use super::engine::{OpenLoop, SmShare, WindowAccum};
 use super::job::JobSpec;
 use super::latency::LatencyWindow;
 use super::matcomp::LatencyLibrary;
@@ -222,6 +223,12 @@ pub enum ConfigError {
     /// A fleet must be entirely closed-loop or entirely open-loop; the
     /// lockstep-window and event-loop schedulers cannot be mixed.
     MixedArrivalModes,
+    /// The fleet's spatial partition plan was rejected (over-subscribed
+    /// reservations, an invalid fraction, a sub-slice MIG reservation).
+    BadPartition(PartitionError),
+    /// A partition knob (`sm_reservation`, `partition_policy`) was set on
+    /// a `TimeShare` fleet, where there are no partitions to configure.
+    KnobRequiresPartition { knob: &'static str },
 }
 
 impl fmt::Display for ConfigError {
@@ -269,6 +276,12 @@ impl fmt::Display for ConfigError {
             ConfigError::MixedArrivalModes => {
                 write!(f, "fleet members must be all closed-loop or all open-loop, not a mix")
             }
+            ConfigError::BadPartition(e) => write!(f, "invalid SM partition plan: {e}"),
+            ConfigError::KnobRequiresPartition { knob } => write!(
+                f,
+                "{knob} was set but the fleet partition mode is timeshare; \
+                 select --partition mps or mig (PartitionMode::Mps/MigSlices) first"
+            ),
         }
     }
 }
@@ -730,18 +743,20 @@ pub(crate) fn assemble_outcome(
 }
 
 /// Serve one closed-loop control window at `(bs, mtl)` and fold it into
-/// the shared accumulators. `inflate` scales every observed batch
-/// latency (1.0 solo; the fleet passes its SM-contention factor) and
-/// `pending_launch_ms` is charged into this window's wall time. Shared
-/// by [`run_closed`] and `Fleet` so the window accounting cannot drift
-/// between the two.
+/// the shared accumulators. `share` sets the SM regime: time-sharing
+/// (`SmShare::Inflate` — every observed batch latency scaled by the
+/// fleet's contention factor, 1.0 solo) or a spatial partition
+/// (`SmShare::Grant` — executed inside the member's SM grant, no
+/// inflation). `pending_launch_ms` is charged into this window's wall
+/// time. Shared by [`run_closed`] and `Fleet` so the window accounting
+/// cannot drift between the two.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn serve_closed_window(
     cfg: &RunConfig,
     w: usize,
     slo: f64,
     (bs, mtl): (u32, u32),
-    inflate: f64,
+    share: SmShare,
     pending_launch_ms: f64,
     device: &mut dyn Device,
     window: &mut LatencyWindow,
@@ -756,8 +771,16 @@ pub(crate) fn serve_closed_window(
     let mut win_lat: Vec<(f64, f64)> = Vec::with_capacity(cfg.rounds_per_window);
 
     for _ in 0..cfg.rounds_per_window {
-        let s = device.execute_batch(bs, mtl)?;
-        let lat_ms = s.latency_ms * inflate;
+        let (s, lat_ms) = match share {
+            SmShare::Inflate(factor) => {
+                let s = device.execute_batch(bs, mtl)?;
+                (s, s.latency_ms * factor)
+            }
+            SmShare::Grant(grant) => {
+                let s = device.execute_batch_granted(bs, mtl, grant)?;
+                (s, s.latency_ms)
+            }
+        };
         window.record(lat_ms);
         wall_ms += lat_ms;
         let reqs = (bs * mtl) as f64;
@@ -827,7 +850,7 @@ fn run_closed(
             w,
             slo,
             (bs, mtl),
-            1.0,
+            SmShare::Inflate(1.0),
             pending_launch_ms,
             device,
             &mut window,
@@ -885,7 +908,7 @@ fn run_open(
         let (bs, mtl) = policy.operating_point();
         let mut win = WindowAccum::begin(&lp);
         for _ in 0..cfg.rounds_per_window {
-            if !lp.serve_round((bs, mtl), slo, 1.0, device, &mut win)? {
+            if !lp.serve_round((bs, mtl), slo, SmShare::Inflate(1.0), device, &mut win)? {
                 // Finite trace exhausted and drained: remaining rounds
                 // (and windows) have nothing left to serve.
                 break;

@@ -1,0 +1,163 @@
+//! Canonical JSON snapshots of serving outcomes — the golden-fixture
+//! substrate.
+//!
+//! `tests/golden.rs` runs seeded closed-loop scenarios, serializes their
+//! outcomes through this module, and diffs the bytes against fixtures
+//! checked in under `tests/fixtures/`. Any refactor that changes a
+//! number — device RNG consumption order, window accounting, admission
+//! decisions — shows up as fixture drift instead of rotting silently.
+//!
+//! The encoding is deliberately boring and deterministic:
+//!
+//! * objects serialize through [`crate::json`], whose maps are BTreeMaps
+//!   (sorted keys) and whose `f64` formatting is Rust's shortest
+//!   round-trip representation — stable bytes for identical numbers;
+//! * the raw per-request latency vector is folded into a count + weighted
+//!   sum digest (thousands of floats would bloat fixtures without adding
+//!   diagnostic power: any change that perturbs one latency also
+//!   perturbs the digest and the window trace).
+
+use crate::json::Json;
+
+use super::fleet::FleetOutcome;
+use super::session::{JobOutcome, WindowRecord};
+
+use std::collections::BTreeMap;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn window_to_json(r: &WindowRecord) -> Json {
+    obj(vec![
+        ("window", num(r.window as f64)),
+        ("bs", num(r.bs as f64)),
+        ("mtl", num(r.mtl as f64)),
+        ("slo_ms", num(r.slo_ms)),
+        ("p95_ms", num(r.p95_ms)),
+        ("mean_ms", num(r.mean_ms)),
+        ("throughput", num(r.throughput)),
+        ("duration_s", num(r.duration_s)),
+        ("power_w", num(r.power_w)),
+        ("queue_peak", num(r.queue_peak as f64)),
+        ("arrival_rate", num(r.arrival_rate)),
+        ("drops", num(r.drops as f64)),
+        ("drops_deadline", num(r.drops_deadline as f64)),
+    ])
+}
+
+/// Snapshot one job outcome (summary + full window trace + latency
+/// digest) as a deterministic JSON value.
+pub fn job_outcome_to_json(o: &JobOutcome) -> Json {
+    let lat_count: f64 = o.latencies.iter().map(|(_, w)| *w).sum();
+    let lat_weighted_ms: f64 = o.latencies.iter().map(|(l, w)| l * w).sum();
+    obj(vec![
+        ("job_id", num(o.job_id as f64)),
+        ("dnn", Json::Str(o.dnn.clone())),
+        ("controller", Json::Str(o.controller.clone())),
+        (
+            "method",
+            o.method.map_or(Json::Null, |m| Json::Str(format!("{m:?}"))),
+        ),
+        ("steady_bs", num(o.steady_bs as f64)),
+        ("steady_mtl", num(o.steady_mtl as f64)),
+        ("throughput", num(o.throughput)),
+        ("p95_ms", num(o.p95_ms)),
+        ("slo_attainment", num(o.slo_attainment)),
+        ("steady_attainment", num(o.steady_attainment)),
+        ("power_w", num(o.power_w)),
+        ("goodput", num(o.goodput)),
+        ("arrived", num(o.arrived as f64)),
+        ("drops", num(o.drops as f64)),
+        ("dropped_deadline", num(o.dropped_deadline as f64)),
+        ("queue_peak", num(o.queue_peak as f64)),
+        ("latency_count", num(lat_count)),
+        ("latency_weighted_sum_ms", num(lat_weighted_ms)),
+        ("trace", Json::Arr(o.trace.iter().map(window_to_json).collect())),
+    ])
+}
+
+/// Snapshot a fleet outcome (per-member snapshots + shared-GPU telemetry)
+/// as a deterministic JSON value.
+pub fn fleet_outcome_to_json(o: &FleetOutcome) -> Json {
+    obj(vec![
+        ("partition", Json::Str(o.partition.to_string())),
+        ("total_throughput", num(o.total_throughput)),
+        ("total_goodput", num(o.total_goodput)),
+        ("peak_mem_mb", num(o.peak_mem_mb)),
+        ("mem_capacity_mb", num(o.mem_capacity_mb)),
+        ("peak_contention", num(o.peak_contention)),
+        ("admission_clamps", num(o.admission_clamps as f64)),
+        (
+            "contention_trace",
+            Json::Arr(o.contention_trace.iter().map(|&c| num(c)).collect()),
+        ),
+        (
+            "grant_trace",
+            Json::Arr(
+                o.grant_trace
+                    .iter()
+                    .map(|g| Json::Arr(g.iter().map(|&v| num(v)).collect()))
+                    .collect(),
+            ),
+        ),
+        (
+            "members",
+            Json::Arr(o.members.iter().map(job_outcome_to_json).collect()),
+        ),
+    ])
+}
+
+/// Render a snapshot with a trailing newline (fixture file contents).
+pub fn render(v: &Json) -> String {
+    let mut s = crate::json::write(v);
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::paper_job;
+    use crate::coordinator::session::{PolicySpec, RunConfig, ServingSession};
+    use crate::gpusim::GpuSim;
+
+    fn run(seed: u64) -> crate::coordinator::session::JobOutcome {
+        let job = paper_job(1).unwrap();
+        let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
+        ServingSession::builder()
+            .config(RunConfig::windows(4, 4))
+            .job(job)
+            .device(sim)
+            .policy(PolicySpec::Static { bs: 2, mtl: 1 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_and_roundtrips() {
+        let a = render(&job_outcome_to_json(&run(9)));
+        let b = render(&job_outcome_to_json(&run(9)));
+        assert_eq!(a, b, "identical runs must produce identical bytes");
+        // Valid JSON with the expected top-level fields.
+        let v = crate::json::parse(a.trim()).unwrap();
+        assert_eq!(v.get("dnn").unwrap().as_str(), Some("inc-v1"));
+        assert_eq!(v.get("trace").unwrap().as_arr().unwrap().len(), 4);
+        assert!(v.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn different_seeds_produce_different_snapshots() {
+        assert_ne!(
+            render(&job_outcome_to_json(&run(9))),
+            render(&job_outcome_to_json(&run(10))),
+            "the snapshot must be sensitive to the numbers it guards"
+        );
+    }
+}

@@ -33,6 +33,8 @@ pub struct ExecSample {
 pub enum DeviceError {
     InvalidOperatingPoint { bs: u32, mtl: u32 },
     OutOfMemory { demand_mb: f64, capacity_mb: f64 },
+    /// A spatial SM grant outside `(0, 1]` was requested.
+    InvalidGrant { grant: f64 },
     Exec(String),
 }
 
@@ -44,6 +46,9 @@ impl fmt::Display for DeviceError {
             }
             DeviceError::OutOfMemory { demand_mb, capacity_mb } => {
                 write!(f, "out of GPU memory: need {demand_mb:.0} MB, have {capacity_mb:.0} MB")
+            }
+            DeviceError::InvalidGrant { grant } => {
+                write!(f, "SM grant must be in (0, 1], got {grant}")
             }
             DeviceError::Exec(e) => write!(f, "execution failed: {e}"),
         }
@@ -60,6 +65,22 @@ pub trait Device {
     /// Execute one batch of `bs` inputs while `mtl` instances are
     /// co-located, returning the observed sample.
     fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError>;
+
+    /// Execute one batch inside a spatial SM partition of fraction
+    /// `grant` (MPS share / MIG slice bundle). Devices that cannot model
+    /// partitioning (the real PJRT runtime) fall back to whole-device
+    /// execution; `GpuSim` overrides this with the granted perf model.
+    fn execute_batch_granted(
+        &mut self,
+        bs: u32,
+        mtl: u32,
+        grant: f64,
+    ) -> Result<ExecSample, DeviceError> {
+        if !grant.is_finite() || grant <= 0.0 || grant > 1.0 {
+            return Err(DeviceError::InvalidGrant { grant });
+        }
+        self.execute_batch(bs, mtl)
+    }
 
     /// Cost (ms of wall time) of launching one more co-located instance —
     /// the overhead the paper's matrix-completion seeding avoids paying
@@ -78,6 +99,14 @@ impl<D: Device + ?Sized> Device for &mut D {
     fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError> {
         (**self).execute_batch(bs, mtl)
     }
+    fn execute_batch_granted(
+        &mut self,
+        bs: u32,
+        mtl: u32,
+        grant: f64,
+    ) -> Result<ExecSample, DeviceError> {
+        (**self).execute_batch_granted(bs, mtl, grant)
+    }
     fn launch_overhead_ms(&self) -> f64 {
         (**self).launch_overhead_ms()
     }
@@ -90,6 +119,14 @@ impl Device for Box<dyn Device + Send> {
     }
     fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError> {
         (**self).execute_batch(bs, mtl)
+    }
+    fn execute_batch_granted(
+        &mut self,
+        bs: u32,
+        mtl: u32,
+        grant: f64,
+    ) -> Result<ExecSample, DeviceError> {
+        (**self).execute_batch_granted(bs, mtl, grant)
     }
     fn launch_overhead_ms(&self) -> f64 {
         (**self).launch_overhead_ms()

@@ -30,11 +30,16 @@
 //! simulator and the real PJRT runtime.
 
 pub mod noise;
+pub mod partition;
 pub mod perf;
 pub mod power;
 pub mod profiles;
 
 pub use noise::NoiseModel;
+pub use partition::{
+    plan_grants, quantize_to_slices, PartitionError, PartitionMode, SmPool, DEFAULT_MIG_SLICES,
+    MIN_GRANT,
+};
 pub use perf::{OperatingPoint, PerfBreakdown};
 pub use profiles::{dataset_multiplier, paper_profile, Dataset, DnnProfile, PAPER_DNNS};
 
@@ -89,6 +94,12 @@ impl GpuSim {
     /// Deterministic (noise-free) per-batch latency in ms at `(bs, mtl)`.
     pub fn mean_batch_latency_ms(&self, bs: u32, mtl: u32) -> f64 {
         perf::batch_latency_ms(&self.profile, self.dataset, bs, mtl).total_ms
+    }
+
+    /// Deterministic per-batch latency in ms at `(bs, mtl)` inside a
+    /// spatial SM partition of fraction `grant` (MPS share / MIG slices).
+    pub fn mean_batch_latency_ms_granted(&self, bs: u32, mtl: u32, grant: f64) -> f64 {
+        perf::batch_latency_ms_granted(&self.profile, self.dataset, bs, mtl, grant).total_ms
     }
 
     /// Full latency breakdown at `(bs, mtl)`.
@@ -163,6 +174,44 @@ impl Device for GpuSim {
         })
     }
 
+    fn execute_batch_granted(
+        &mut self,
+        bs: u32,
+        mtl: u32,
+        grant: f64,
+    ) -> Result<ExecSample, DeviceError> {
+        if bs == 0 || mtl == 0 {
+            return Err(DeviceError::InvalidOperatingPoint { bs, mtl });
+        }
+        if !grant.is_finite() || grant <= 0.0 || grant > 1.0 {
+            return Err(DeviceError::InvalidGrant { grant });
+        }
+        // Memory stays a whole-device resource (MPS does not partition
+        // it, and our MIG model partitions SMs only); the fleet's shared
+        // admission check guards the combined demand.
+        if self.mem_demand_mb(bs, mtl) > self.spec.mem_mb {
+            return Err(DeviceError::OutOfMemory {
+                demand_mb: self.mem_demand_mb(bs, mtl),
+                capacity_mb: self.spec.mem_mb,
+            });
+        }
+        let mean = self.mean_batch_latency_ms_granted(bs, mtl, grant);
+        let latency_ms = self.noise.sample_latency(mean);
+        Ok(ExecSample {
+            latency_ms,
+            batch_size: bs,
+            mtl,
+            power_w: self.power_w(bs, mtl),
+            sm_util: perf::sm_utilization_granted(
+                &self.profile,
+                self.dataset,
+                bs,
+                mtl,
+                grant,
+            ),
+        })
+    }
+
     fn launch_overhead_ms(&self) -> f64 {
         // Launching a new co-located instance costs a model load +
         // context creation; the paper calls frequent launch/terminate
@@ -218,6 +267,40 @@ mod tests {
             assert!(s.max_batch_size() >= 128, "{name} must support BS=128");
             assert!(s.max_mtl() >= 10, "{name} must support MTL=10");
         }
+    }
+
+    #[test]
+    fn granted_execution_matches_full_gpu_at_grant_one() {
+        // Same seed, same call count: a grant of 1.0 consumes the noise
+        // stream identically and lands on identical samples.
+        let mut a = GpuSim::for_paper_dnn("mobv1-05", Dataset::ImageNet, 5).unwrap();
+        let mut b = GpuSim::for_paper_dnn("mobv1-05", Dataset::ImageNet, 5).unwrap();
+        for _ in 0..20 {
+            let sa = a.execute_batch(2, 3).unwrap();
+            let sb = b.execute_batch_granted(2, 3, 1.0).unwrap();
+            assert_eq!(sa.latency_ms, sb.latency_ms);
+            assert_eq!(sa.sm_util, sb.sm_util);
+            assert_eq!(sa.power_w, sb.power_w);
+        }
+    }
+
+    #[test]
+    fn granted_execution_rejects_bad_grants() {
+        let mut s = sim("inc-v1");
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            assert!(matches!(
+                s.execute_batch_granted(1, 1, bad),
+                Err(DeviceError::InvalidGrant { .. })
+            ));
+        }
+        assert!(matches!(
+            s.execute_batch_granted(0, 1, 0.5),
+            Err(DeviceError::InvalidOperatingPoint { .. })
+        ));
+        // A half-GPU partition slows a contended member down on average.
+        let mean_full = s.mean_batch_latency_ms(1, 8);
+        let mean_half = s.mean_batch_latency_ms_granted(1, 8, 0.5);
+        assert!(mean_half > mean_full, "{mean_half} vs {mean_full}");
     }
 
     #[test]

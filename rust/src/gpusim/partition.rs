@@ -1,0 +1,374 @@
+//! Spatial SM partitioning: MPS fractional grants and MIG-style slices.
+//!
+//! The paper's Multi-Tenancy knob co-locates instances that *time-share*
+//! the GPU — the fleet models that with a single latency-inflation factor
+//! derived from combined SM utilization. Production multi-tenancy
+//! (D-STACK, the multi-tenant inference surveys) instead partitions the
+//! device *spatially*: CUDA MPS grants each client an arbitrary fraction
+//! of the SMs, and MIG carves the device into discrete isolated slices.
+//! The two regimes behave qualitatively differently — a spatially
+//! partitioned member cannot inflate its neighbour's latency, it can only
+//! run slower inside its own share.
+//!
+//! This module is the device-side vocabulary for that model:
+//!
+//! * [`PartitionMode`] — how a fleet divides the SMs (`TimeShare` keeps
+//!   the legacy inflation-factor coupling byte for byte; `Mps` grants
+//!   arbitrary fractions; `MigSlices` quantizes grants to `1/slices`
+//!   multiples, rounding *down* — conservative, never over-granting);
+//! * [`plan_grants`] — turn per-member reservations (some may be left
+//!   unset and default to an equal split of the remainder) into validated
+//!   capacity grants, with typed [`PartitionError`]s for over-subscription
+//!   and invalid reservations;
+//! * [`SmPool`] — the admission-side ledger: grants are taken from and
+//!   released back to a capacity-1.0 pool, which refuses to over-grant
+//!   under any interleaving (property-tested in `tests/partitioning.rs`).
+//!
+//! The perf model consumes a grant through
+//! [`batch_latency_ms_granted`](super::perf::batch_latency_ms_granted):
+//! a member with grant `g` runs as if on a GPU `g` as large (compute
+//! inflates by `max(1, n*d(b)/g)`), with `g = 1` reproducing the
+//! whole-GPU model exactly.
+
+use std::fmt;
+
+/// Smallest SM fraction a member may hold (guards against degenerate
+/// near-zero grants that would make latencies explode to infinity).
+pub const MIN_GRANT: f64 = 1.0 / 64.0;
+
+/// How a fleet divides the GPU's SMs between members.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionMode {
+    /// Legacy behaviour: members' combined SM utilization sets one
+    /// time-sharing inflation factor applied to every member's latency.
+    #[default]
+    TimeShare,
+    /// MPS-style fractional SM provisioning: each member holds an
+    /// arbitrary fraction of the SMs; members never inflate each other.
+    Mps,
+    /// MIG-style discrete slices: reservations are quantized *down* to
+    /// multiples of `1/slices` (conservative — the quantized grant never
+    /// exceeds the reservation, so the pool cannot over-subscribe).
+    MigSlices { slices: u32 },
+}
+
+/// The A100's 7-slice layout, the conventional MIG granularity.
+pub const DEFAULT_MIG_SLICES: u32 = 7;
+
+impl PartitionMode {
+    /// True for the spatial modes (`Mps`, `MigSlices`).
+    pub fn is_spatial(&self) -> bool {
+        !matches!(self, PartitionMode::TimeShare)
+    }
+
+    /// Parse a CLI spelling: `timeshare`, `mps`, `mig` (7 slices), or
+    /// `mig:N`.
+    pub fn parse(s: &str) -> Option<PartitionMode> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "timeshare" | "time-share" | "ts" => Some(PartitionMode::TimeShare),
+            "mps" => Some(PartitionMode::Mps),
+            "mig" => Some(PartitionMode::MigSlices { slices: DEFAULT_MIG_SLICES }),
+            _ => {
+                let n = s.strip_prefix("mig:")?;
+                n.parse().ok().map(|slices| PartitionMode::MigSlices { slices })
+            }
+        }
+    }
+}
+
+impl fmt::Display for PartitionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionMode::TimeShare => write!(f, "timeshare"),
+            PartitionMode::Mps => write!(f, "mps"),
+            PartitionMode::MigSlices { slices } => write!(f, "mig:{slices}"),
+        }
+    }
+}
+
+/// Why a partition plan was rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionError {
+    /// `MigSlices { slices: 0 }` describes no device at all.
+    ZeroSlices,
+    /// A reservation must be a finite fraction in `[MIN_GRANT, 1]`.
+    BadReservation { index: usize, value: f64 },
+    /// A MIG reservation below one slice quantizes to nothing.
+    BelowSliceFloor { index: usize, value: f64, slices: u32 },
+    /// Explicit reservations alone exceed the device (sum > 1).
+    Oversubscribed { total: f64 },
+    /// Every SM is explicitly reserved but some members have no
+    /// reservation — they would be granted nothing.
+    NoShareLeft { unreserved: usize },
+}
+
+impl fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionError::ZeroSlices => write!(f, "MIG slice count must be >= 1"),
+            PartitionError::BadReservation { index, value } => {
+                write!(
+                    f,
+                    "member {index}: SM reservation must be in [{MIN_GRANT}, 1], got {value}"
+                )
+            }
+            PartitionError::BelowSliceFloor { index, value, slices } => write!(
+                f,
+                "member {index}: reservation {value} is below one MIG slice (1/{slices})"
+            ),
+            PartitionError::Oversubscribed { total } => {
+                write!(f, "SM reservations sum to {total} > 1.0 (over-subscribed)")
+            }
+            PartitionError::NoShareLeft { unreserved } => write!(
+                f,
+                "explicit reservations consume the whole GPU but {unreserved} member(s) \
+                 have no reservation left to share"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// Quantize a fraction down to a whole number of `1/slices` slices.
+/// Conservative by construction: the result never exceeds `f` by more
+/// than the 1e-9 nudge, which only exists so a value that *is* a slice
+/// multiple (up to float error, e.g. `(1.0/7.0) * 7`) keeps its intended
+/// slice count instead of losing one to a unit-in-last-place wobble.
+pub fn quantize_to_slices(f: f64, slices: u32) -> f64 {
+    let slices = slices.max(1) as f64;
+    (f * slices + 1e-9).floor() / slices
+}
+
+/// Turn per-member reservations into validated capacity grants.
+///
+/// * `TimeShare` — every member notionally holds the whole device
+///   (grants of 1.0); the time-sharing factor does the coupling.
+/// * `Mps` — explicit reservations are granted verbatim; members without
+///   one split the unreserved remainder equally.
+/// * `MigSlices` — as `Mps`, then every grant is quantized down to whole
+///   slices ([`quantize_to_slices`]); a reservation below one slice is a
+///   typed error rather than a silent zero-grant.
+///
+/// Invariant (property-tested): on success the grants sum to at most
+/// 1.0 + 1e-9 and every grant is positive.
+pub fn plan_grants(
+    mode: PartitionMode,
+    reservations: &[Option<f64>],
+) -> Result<Vec<f64>, PartitionError> {
+    let n = reservations.len();
+    if let PartitionMode::MigSlices { slices: 0 } = mode {
+        return Err(PartitionError::ZeroSlices);
+    }
+    if matches!(mode, PartitionMode::TimeShare) {
+        return Ok(vec![1.0; n]);
+    }
+    let mut explicit = 0.0f64;
+    let mut unreserved = 0usize;
+    for (index, r) in reservations.iter().enumerate() {
+        match r {
+            Some(v) if !v.is_finite() || *v < MIN_GRANT || *v > 1.0 => {
+                return Err(PartitionError::BadReservation { index, value: *v });
+            }
+            Some(v) => explicit += *v,
+            None => unreserved += 1,
+        }
+    }
+    if explicit > 1.0 + 1e-9 {
+        return Err(PartitionError::Oversubscribed { total: explicit });
+    }
+    let remainder = (1.0 - explicit).max(0.0);
+    if unreserved > 0 && remainder / unreserved as f64 < MIN_GRANT {
+        return Err(PartitionError::NoShareLeft { unreserved });
+    }
+    let default_share = if unreserved > 0 {
+        remainder / unreserved as f64
+    } else {
+        0.0
+    };
+    let mut grants: Vec<f64> =
+        reservations.iter().map(|r| r.unwrap_or(default_share)).collect();
+    if let PartitionMode::MigSlices { slices } = mode {
+        for (index, g) in grants.iter_mut().enumerate() {
+            let q = quantize_to_slices(*g, slices);
+            if q <= 0.0 {
+                return Err(PartitionError::BelowSliceFloor {
+                    index,
+                    value: *g,
+                    slices,
+                });
+            }
+            *g = q;
+        }
+    }
+    Ok(grants)
+}
+
+/// The admission-side SM ledger: capacity 1.0, grants taken and released.
+///
+/// [`SmPool::try_grant`] refuses any request that would push the granted
+/// total past capacity — under *any* interleaving of grants and releases
+/// the pool holds `granted <= 1.0` (the property the fleet's partition
+/// admission relies on).
+#[derive(Debug, Clone, Default)]
+pub struct SmPool {
+    granted: f64,
+}
+
+impl SmPool {
+    pub fn new() -> Self {
+        SmPool { granted: 0.0 }
+    }
+
+    /// Fraction currently granted out, 0..=1.
+    pub fn granted(&self) -> f64 {
+        self.granted
+    }
+
+    /// Fraction still available.
+    pub fn available(&self) -> f64 {
+        (1.0 - self.granted).max(0.0)
+    }
+
+    /// Take `f` from the pool. Refused (with the would-be total) when the
+    /// request is invalid or would over-subscribe the device.
+    pub fn try_grant(&mut self, f: f64) -> Result<(), PartitionError> {
+        if !f.is_finite() || f <= 0.0 || f > 1.0 {
+            return Err(PartitionError::BadReservation { index: 0, value: f });
+        }
+        let total = self.granted + f;
+        if total > 1.0 + 1e-9 {
+            return Err(PartitionError::Oversubscribed { total });
+        }
+        self.granted = total.min(1.0);
+        Ok(())
+    }
+
+    /// Return `f` to the pool (clamped at empty).
+    pub fn release(&mut self, f: f64) {
+        self.granted = (self.granted - f.max(0.0)).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        assert_eq!(PartitionMode::parse("timeshare"), Some(PartitionMode::TimeShare));
+        assert_eq!(PartitionMode::parse("mps"), Some(PartitionMode::Mps));
+        assert_eq!(
+            PartitionMode::parse("mig"),
+            Some(PartitionMode::MigSlices { slices: DEFAULT_MIG_SLICES })
+        );
+        assert_eq!(PartitionMode::parse("MIG:4"), Some(PartitionMode::MigSlices { slices: 4 }));
+        assert_eq!(PartitionMode::parse("nvlink"), None);
+        for m in [
+            PartitionMode::TimeShare,
+            PartitionMode::Mps,
+            PartitionMode::MigSlices { slices: 3 },
+        ] {
+            assert_eq!(PartitionMode::parse(&m.to_string()), Some(m));
+        }
+        assert!(PartitionMode::Mps.is_spatial());
+        assert!(!PartitionMode::TimeShare.is_spatial());
+        assert_eq!(PartitionMode::default(), PartitionMode::TimeShare);
+    }
+
+    #[test]
+    fn timeshare_grants_everyone_the_whole_device() {
+        let g = plan_grants(PartitionMode::TimeShare, &[Some(0.2), None, Some(0.9)]).unwrap();
+        assert_eq!(g, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn mps_grants_explicit_fractions_and_splits_the_rest() {
+        let g = plan_grants(PartitionMode::Mps, &[Some(0.5), None, None]).unwrap();
+        assert_eq!(g[0], 0.5);
+        assert!((g[1] - 0.25).abs() < 1e-12);
+        assert!((g[2] - 0.25).abs() < 1e-12);
+        // All-default: equal split.
+        let g = plan_grants(PartitionMode::Mps, &[None, None]).unwrap();
+        assert_eq!(g, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn mps_rejects_bad_and_oversubscribed_reservations() {
+        for bad in [0.0, -0.1, 0.5 * MIN_GRANT, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(matches!(
+                plan_grants(PartitionMode::Mps, &[Some(bad)]),
+                Err(PartitionError::BadReservation { index: 0, .. })
+            ));
+        }
+        assert!(matches!(
+            plan_grants(PartitionMode::Mps, &[Some(0.7), Some(0.7)]),
+            Err(PartitionError::Oversubscribed { .. })
+        ));
+        // Fully reserved device with a default member left over.
+        assert_eq!(
+            plan_grants(PartitionMode::Mps, &[Some(1.0), None]),
+            Err(PartitionError::NoShareLeft { unreserved: 1 })
+        );
+    }
+
+    #[test]
+    fn mig_quantizes_down_and_rejects_sub_slice_reservations() {
+        let mode = PartitionMode::MigSlices { slices: 7 };
+        let g = plan_grants(mode, &[Some(0.5), Some(0.4)]).unwrap();
+        // 0.5 -> 3/7, 0.4 -> 2/7: both rounded DOWN.
+        assert!((g[0] - 3.0 / 7.0).abs() < 1e-12);
+        assert!((g[1] - 2.0 / 7.0).abs() < 1e-12);
+        assert!(g[0] <= 0.5 && g[1] <= 0.4, "quantization must be conservative");
+        assert_eq!(
+            plan_grants(mode, &[Some(0.05)]),
+            Err(PartitionError::BelowSliceFloor { index: 0, value: 0.05, slices: 7 })
+        );
+        assert_eq!(
+            plan_grants(PartitionMode::MigSlices { slices: 0 }, &[Some(0.5)]),
+            Err(PartitionError::ZeroSlices)
+        );
+    }
+
+    #[test]
+    fn quantize_is_conservative_and_slice_aligned() {
+        for slices in [1u32, 2, 3, 7, 8] {
+            for i in 0..=100 {
+                let f = i as f64 / 100.0;
+                let q = quantize_to_slices(f, slices);
+                assert!(q <= f + 1e-9, "quantize({f}, {slices}) = {q} over-grants");
+                let units = q * slices as f64;
+                assert!((units - units.round()).abs() < 1e-9, "{q} not slice-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_never_overgrants() {
+        let mut pool = SmPool::new();
+        assert!(pool.try_grant(0.6).is_ok());
+        assert!(pool.try_grant(0.5).is_err(), "0.6 + 0.5 must be refused");
+        assert!(pool.try_grant(0.4).is_ok());
+        assert!(pool.granted() <= 1.0 + 1e-9);
+        pool.release(0.6);
+        assert!((pool.available() - 0.6).abs() < 1e-9);
+        assert!(pool.try_grant(0.6).is_ok());
+        for bad in [0.0, -0.5, f64::NAN] {
+            assert!(pool.try_grant(bad).is_err());
+        }
+    }
+
+    #[test]
+    fn error_messages_name_the_problem() {
+        assert!(PartitionError::Oversubscribed { total: 1.4 }.to_string().contains("1.4"));
+        assert!(PartitionError::BadReservation { index: 2, value: -1.0 }
+            .to_string()
+            .contains("member 2"));
+        assert!(PartitionError::BelowSliceFloor { index: 0, value: 0.1, slices: 7 }
+            .to_string()
+            .contains("1/7"));
+        assert!(PartitionError::ZeroSlices.to_string().contains(">= 1"));
+        assert!(PartitionError::NoShareLeft { unreserved: 2 }.to_string().contains("2"));
+    }
+}

@@ -57,9 +57,39 @@ pub fn compute_ms(p: &DnnProfile, ds: Dataset, b: u32) -> f64 {
     p.t_fl_ms * (b as f64).max(p.bsat) * seq_mult
 }
 
-/// Full per-batch latency breakdown at `(b, n)`.
+/// Full per-batch latency breakdown at `(b, n)` on the whole GPU.
 pub fn batch_latency_ms(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> PerfBreakdown {
+    batch_latency_ms_granted(p, ds, b, n, 1.0)
+}
+
+/// Per-batch latency breakdown at `(b, n)` inside a spatial SM partition
+/// of fraction `grant` (MPS fractional provisioning / a MIG slice
+/// bundle). The member's `n` instances live entirely inside its grant:
+///
+/// ```text
+/// gpu(b, n, g) = (t_gpu_fixed + c(b) * max(1, n*d(b)/g)) * (1 + kappa*(n-1))
+/// ```
+///
+/// Squeezing demand `n*d(b)` into `g` of the SMs covers both spatial
+/// effects at once: an instance wider than its partition (`d > g`) slows
+/// by `d/g`, and instances time-share *within* the partition once their
+/// combined demand exceeds it — but never with their neighbours, which
+/// is exactly what distinguishes MPS/MIG from time-sharing. CPU prep and
+/// H2D copy are host-side and unaffected by the SM grant. `grant = 1`
+/// reproduces [`batch_latency_ms`] bit for bit (division by 1.0 is
+/// exact), which is what lets `TimeShare` fleets stay byte-identical.
+pub fn batch_latency_ms_granted(
+    p: &DnnProfile,
+    ds: Dataset,
+    b: u32,
+    n: u32,
+    grant: f64,
+) -> PerfBreakdown {
     assert!(b >= 1 && n >= 1, "operating point must be >= (1,1)");
+    assert!(
+        grant.is_finite() && grant > 0.0 && grant <= 1.0,
+        "SM grant must be in (0, 1], got {grant}"
+    );
     let bf = b as f64;
     let nf = n as f64;
     let mult = dataset_multiplier(ds);
@@ -71,7 +101,7 @@ pub fn batch_latency_ms(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> PerfBrea
     let cpu_ms = bf * p.t_prep_ms * mult * (1.0 + p.prep_growth * bf.min(32.0));
     let d = residency(p, b);
     let sm_demand = nf * d;
-    let sharing = sm_demand.max(1.0);
+    let sharing = (sm_demand / grant).max(1.0);
     let interference = 1.0 + p.kappa * (nf - 1.0);
     let gpu_ms = (p.t_gpu_fixed_ms + compute_ms(p, ds, b) * sharing) * interference;
 
@@ -91,13 +121,20 @@ pub fn throughput(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
 /// (Fig. 2 of the paper: Mobilenet climbs ~linearly with instances,
 /// Inception-V4 starts high and flattens).
 pub fn sm_utilization(p: &DnnProfile, ds: Dataset, b: u32, n: u32) -> f64 {
-    let bd = batch_latency_ms(p, ds, b, n);
+    sm_utilization_granted(p, ds, b, n, 1.0)
+}
+
+/// SM utilization of a member confined to an SM partition of fraction
+/// `grant`: the member can never occupy (or report) more than its own
+/// share of the device. `grant = 1` reproduces [`sm_utilization`].
+pub fn sm_utilization_granted(p: &DnnProfile, ds: Dataset, b: u32, n: u32, grant: f64) -> f64 {
+    let bd = batch_latency_ms_granted(p, ds, b, n, grant);
     let own_gpu_ms = p.t_gpu_fixed_ms + compute_ms(p, ds, b);
     let busy = ((n as f64) * own_gpu_ms / bd.total_ms).min(1.0);
-    let occupancy = bd.sm_demand.min(1.0);
+    let occupancy = bd.sm_demand.min(grant);
     // Busy-time fraction dominates what nvidia-smi reports; occupancy
     // softens it for very sparse instances.
-    busy * (0.35 + 0.65 * occupancy)
+    (busy * (0.35 + 0.65 * occupancy)).min(grant)
 }
 
 /// GPU memory demand (MB) at `(b, n)`.
@@ -224,6 +261,55 @@ mod tests {
                 let t = batch_latency_ms(p, Dataset::ImageNet, 1, n).total_ms;
                 assert!(t >= prev, "{}: latency not monotone in mtl", p.name);
                 prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn full_grant_reproduces_whole_gpu_model_bitwise() {
+        // TimeShare byte-identity rests on this: a grant of 1.0 must be
+        // the SAME computation as the ungranted model, not merely close.
+        for p in crate::gpusim::profiles::PAPER_DNNS {
+            for (b, n) in [(1u32, 1u32), (4, 2), (32, 1), (1, 8), (16, 4)] {
+                let base = batch_latency_ms(p, Dataset::ImageNet, b, n);
+                let granted = batch_latency_ms_granted(p, Dataset::ImageNet, b, n, 1.0);
+                assert_eq!(base.total_ms, granted.total_ms, "{} ({b},{n})", p.name);
+                assert_eq!(base.gpu_ms, granted.gpu_ms, "{} ({b},{n})", p.name);
+                assert_eq!(
+                    sm_utilization(p, Dataset::ImageNet, b, n),
+                    sm_utilization_granted(p, Dataset::ImageNet, b, n, 1.0),
+                    "{} ({b},{n})",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_grants_never_speed_a_member_up() {
+        let p = paper_profile("mobv1-05").unwrap();
+        let mut prev = 0.0;
+        for grant in [1.0, 0.75, 0.5, 0.25, 0.125] {
+            let t = batch_latency_ms_granted(&p, Dataset::ImageNet, 1, 4, grant).total_ms;
+            assert!(t >= prev, "latency must be monotone in shrinking grant: {t} < {prev}");
+            prev = t;
+        }
+        // A member whose demand fits its grant is NOT slowed at all:
+        // mobv1-025 at (1,1) demands r1 = 0.08 < 0.25.
+        let tiny = paper_profile("mobv1-025").unwrap();
+        let solo = batch_latency_ms(&tiny, Dataset::ImageNet, 1, 1).total_ms;
+        let quarter = batch_latency_ms_granted(&tiny, Dataset::ImageNet, 1, 1, 0.25).total_ms;
+        assert_eq!(solo, quarter, "under-demanded partition must not slow the member");
+    }
+
+    #[test]
+    fn granted_utilization_stays_inside_the_partition() {
+        let p = paper_profile("inc-v4").unwrap();
+        for grant in [0.25, 0.5, 1.0] {
+            for n in 1..=4u32 {
+                let u = sm_utilization_granted(&p, Dataset::ImageNet, 1, n, grant);
+                assert!(u <= grant + 1e-12, "util {u} escapes grant {grant}");
+                assert!(u >= 0.0);
             }
         }
     }

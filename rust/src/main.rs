@@ -30,11 +30,13 @@ use dnnscaler::coordinator::session::{
 };
 use dnnscaler::coordinator::{Fleet, Method, Profiler};
 use dnnscaler::device::real::RealDevice;
-use dnnscaler::gpusim::{Dataset, GpuSim, PAPER_DNNS};
+use dnnscaler::gpusim::{Dataset, GpuSim, PartitionMode, PAPER_DNNS};
 use dnnscaler::manifest::Manifest;
 use dnnscaler::metrics::report::{f1, f2};
 use dnnscaler::metrics::Table;
 use dnnscaler::workload::ArrivalPattern;
+
+use std::fmt;
 
 const USAGE: &str = "\
 dnnscaler — Batching or Multi-Tenancy? (CS.DC 2023 reproduction)
@@ -53,12 +55,17 @@ COMMANDS:
            Run the full 30-job workload (Fig. 5 summary).
   fleet    [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,.. | --trace PATH] [--shed] [--timeout-ms MS]
-           [--queue-cap N]
+           [--queue-cap N] [--partition timeshare|mps|mig[:N]]
+           [--reservations F1,F2,..]
            Serve several jobs concurrently on ONE shared simulated P40
            (shared memory admission + SM contention). With --rates (one
            Poisson rate per member, or one rate for all) or --trace, the
            fleet serves OPEN-LOOP: per-member arrivals through the shared
            event engine, with per-member drop/shed/goodput accounting.
+           --partition mps|mig switches the SMs from time-sharing to
+           spatial capacity grants (MIG quantizes down to 1/N slices);
+           --reservations pins per-member SM fractions (one value or one
+           per member; members without one split the rest equally).
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
   serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
@@ -136,6 +143,62 @@ impl Flags {
     fn has(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
+}
+
+/// Why a comma-separated numeric list flag (`--rates`, `--reservations`)
+/// was rejected. Typed so zero/negative/NaN values are refused at the
+/// CLI boundary instead of propagating garbage into the arrival
+/// generator or the partition planner.
+#[derive(Debug, Clone, PartialEq)]
+enum ListParseError {
+    Unparseable { flag: &'static str, token: String },
+    NotFinite { flag: &'static str, token: String },
+    NonPositive { flag: &'static str, value: f64 },
+    Empty { flag: &'static str },
+}
+
+impl fmt::Display for ListParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ListParseError::Unparseable { flag, token } => {
+                write!(f, "--{flag}: {token:?} is not a number")
+            }
+            ListParseError::NotFinite { flag, token } => {
+                write!(f, "--{flag}: {token:?} must be finite (NaN/inf rejected)")
+            }
+            ListParseError::NonPositive { flag, value } => {
+                write!(f, "--{flag}: values must be > 0 (got {value})")
+            }
+            ListParseError::Empty { flag } => write!(f, "--{flag}: needs at least one value"),
+        }
+    }
+}
+
+impl std::error::Error for ListParseError {}
+
+/// Parse a comma-separated list of strictly positive finite numbers.
+fn parse_positive_list(flag: &'static str, s: &str) -> Result<Vec<f64>, ListParseError> {
+    let mut out = Vec::new();
+    for raw in s.split(',') {
+        let token = raw.trim();
+        if token.is_empty() {
+            return Err(ListParseError::Unparseable { flag, token: raw.to_string() });
+        }
+        let v: f64 = token
+            .parse()
+            .map_err(|_| ListParseError::Unparseable { flag, token: token.to_string() })?;
+        if !v.is_finite() {
+            return Err(ListParseError::NotFinite { flag, token: token.to_string() });
+        }
+        if v <= 0.0 {
+            return Err(ListParseError::NonPositive { flag, value: v });
+        }
+        out.push(v);
+    }
+    if out.is_empty() {
+        return Err(ListParseError::Empty { flag });
+    }
+    Ok(out)
 }
 
 /// Flags shared by every open-loop-capable subcommand.
@@ -287,6 +350,8 @@ fn main() -> Result<()> {
                     "shed",
                     "timeout-ms",
                     "queue-cap",
+                    "partition",
+                    "reservations",
                 ],
             )?;
             cmd_fleet(&flags)
@@ -560,15 +625,11 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
     }
 
     // Open-loop fleet: per-member Poisson rates or one shared trace file.
+    // Zero/negative/NaN rates are refused here with a typed error rather
+    // than handed to the Poisson generator.
     let rates: Option<Vec<f64>> = match flags.get("rates") {
         None => None,
-        Some(s) => Some(
-            s.split(',')
-                .map(|tok| {
-                    tok.trim().parse().map_err(|_| anyhow!("--rates: bad rate {tok:?}"))
-                })
-                .collect::<Result<Vec<f64>>>()?,
-        ),
+        Some(s) => Some(parse_positive_list("rates", s)?),
     };
     if let Some(rs) = &rates {
         if rs.len() != 1 && rs.len() != jobs.len() {
@@ -593,7 +654,38 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         bail!("--shed/--timeout-ms/--queue-cap need --rates or --trace (open-loop fleet)");
     }
 
-    let mut b = Fleet::builder().windows(windows).rounds_per_window(20).seed(seed);
+    // Spatial SM partitioning: --partition selects the mode, optional
+    // --reservations pins per-member fractions (one value or one per
+    // member). Values are validated here (typed list errors) and again
+    // by the builder's partition planner.
+    let partition = match flags.get("partition") {
+        None => PartitionMode::TimeShare,
+        Some(s) => PartitionMode::parse(s).ok_or_else(|| {
+            anyhow!("--partition must be timeshare, mps, or mig[:SLICES] (got {s:?})")
+        })?,
+    };
+    let reservations: Option<Vec<f64>> = match flags.get("reservations") {
+        None => None,
+        Some(s) => Some(parse_positive_list("reservations", s)?),
+    };
+    if let Some(rs) = &reservations {
+        if !partition.is_spatial() {
+            bail!("--reservations needs --partition mps or mig (timeshare has no partitions)");
+        }
+        if rs.len() != 1 && rs.len() != jobs.len() {
+            bail!(
+                "--reservations needs 1 value or one per member ({} jobs, {} reservations)",
+                jobs.len(),
+                rs.len()
+            );
+        }
+    }
+
+    let mut b = Fleet::builder()
+        .windows(windows)
+        .rounds_per_window(20)
+        .seed(seed)
+        .partition_mode(partition);
     let picked: Vec<u32> = jobs.iter().map(|j| j.id).collect();
     for (i, job) in jobs.iter().enumerate() {
         // Every member serves under the same --method; PolicySpec is not
@@ -617,6 +709,9 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         } else {
             b = b.job(job, spec);
         }
+        if let Some(rs) = &reservations {
+            b = b.sm_reservation(if rs.len() == 1 { rs[0] } else { rs[i] });
+        }
     }
     let out = b
         .build()
@@ -624,9 +719,14 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         .run()
         .map_err(|e| anyhow!(e.to_string()))?;
 
+    let partition_tag = if partition.is_spatial() {
+        format!(" [partition {partition}]")
+    } else {
+        String::new()
+    };
     let title = format!(
-        "Fleet: jobs {picked:?} sharing one simulated P40{}",
-        if open { " [open-loop]" } else { "" }
+        "Fleet: jobs {picked:?} sharing one simulated P40{}{partition_tag}",
+        if open { " [open-loop]" } else { "" },
     );
     let mut t = Table::new(
         &title,
@@ -661,6 +761,10 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         out.peak_contention,
         out.admission_clamps
     );
+    if let Some(grants) = out.grant_trace.last() {
+        let shares: Vec<String> = grants.iter().map(|g| format!("{g:.3}")).collect();
+        println!("final SM grants ({}): [{}]", out.partition, shares.join(", "));
+    }
     Ok(())
 }
 
@@ -775,7 +879,10 @@ fn cmd_serve(
 
 #[cfg(test)]
 mod tests {
-    use super::{parse_method, parse_open, Flags, PolicySpec, OPEN_FLAGS};
+    use super::{
+        parse_method, parse_open, parse_positive_list, Flags, ListParseError, PolicySpec,
+        OPEN_FLAGS,
+    };
 
     fn flags(args: &[&str]) -> Flags {
         let owned: Vec<String> = args.iter().map(|s| s.to_string()).collect();
@@ -828,6 +935,50 @@ mod tests {
         ));
         let err = parse_method(&flags(&["--method", "magic"])).unwrap_err().to_string();
         assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn positive_list_accepts_good_values() {
+        assert_eq!(parse_positive_list("rates", "10").unwrap(), vec![10.0]);
+        assert_eq!(
+            parse_positive_list("rates", " 10, 20.5 ,0.25").unwrap(),
+            vec![10.0, 20.5, 0.25]
+        );
+    }
+
+    #[test]
+    fn positive_list_rejects_zero_negative_nan_and_garbage() {
+        // The regression this parser exists for: `--rates 0`, `--rates
+        // -5`, and `--rates nan` used to flow straight into the Poisson
+        // generator / partition planner.
+        assert_eq!(
+            parse_positive_list("rates", "0"),
+            Err(ListParseError::NonPositive { flag: "rates", value: 0.0 })
+        );
+        assert_eq!(
+            parse_positive_list("rates", "10,-5"),
+            Err(ListParseError::NonPositive { flag: "rates", value: -5.0 })
+        );
+        assert!(matches!(
+            parse_positive_list("reservations", "nan"),
+            Err(ListParseError::NotFinite { flag: "reservations", .. })
+        ));
+        assert!(matches!(
+            parse_positive_list("reservations", "inf"),
+            Err(ListParseError::NotFinite { .. })
+        ));
+        assert!(matches!(
+            parse_positive_list("rates", "10,abc"),
+            Err(ListParseError::Unparseable { .. })
+        ));
+        assert!(matches!(
+            parse_positive_list("rates", "10,,20"),
+            Err(ListParseError::Unparseable { .. })
+        ));
+        // The error message names the flag and the offending value.
+        let msg = parse_positive_list("rates", "-1").unwrap_err().to_string();
+        assert!(msg.contains("--rates"), "{msg}");
+        assert!(msg.contains("-1"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Golden-outcome regression fixtures.
+//!
+//! Each test runs a fully seeded closed-loop scenario, snapshots the
+//! outcome to canonical JSON (`coordinator::snapshot`), and compares the
+//! bytes against a fixture checked in under `tests/fixtures/`. Because
+//! every layer underneath is deterministic (seeded device noise, seeded
+//! arrivals, virtual time), ANY change to these bytes means serving
+//! behaviour changed — device RNG consumption order, window accounting,
+//! admission decisions, contention coupling. `PartitionMode::TimeShare`
+//! fleets must keep reproducing these numbers byte-identically; spatial
+//! modes get their own fixture so the granted path is pinned too.
+//!
+//! Lifecycle:
+//! * fixture missing  -> it is written (blessed) and the test passes —
+//!   commit the new file to establish the baseline;
+//! * `REGEN_FIXTURES=1` -> fixtures are rewritten unconditionally
+//!   (`make test-fixtures` drives this and fails on `git diff`);
+//! * otherwise        -> byte-exact comparison, with a diff pointer on
+//!   mismatch.
+
+use dnnscaler::coordinator::job::paper_job;
+use dnnscaler::coordinator::session::{PolicySpec, RunConfig, ServingSession};
+use dnnscaler::coordinator::snapshot::{fleet_outcome_to_json, job_outcome_to_json, render};
+use dnnscaler::coordinator::Fleet;
+use dnnscaler::gpusim::{GpuSim, PartitionMode};
+
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Compare `got` against the named fixture, blessing it when absent or
+/// when `REGEN_FIXTURES` is set.
+fn assert_matches_fixture(name: &str, got: &str) {
+    let path = fixture_path(name);
+    let regen = std::env::var_os("REGEN_FIXTURES").is_some();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        println!(
+            "golden: {} fixture {name} ({} bytes) — commit it to pin the baseline",
+            if regen { "regenerated" } else { "blessed new" },
+            got.len()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, got,
+        "\ngolden fixture drift: {name}\n\
+         Serving outcomes changed byte-for-byte. If this is an intended\n\
+         behaviour change, regenerate with `make test-fixtures` and commit\n\
+         the diff; otherwise the refactor broke determinism.\n"
+    );
+}
+
+#[test]
+fn golden_closed_loop_session() {
+    // The paper's own serving mode: closed-loop DNNScaler on job 1
+    // (profiler -> MT scaler), everything seeded.
+    let job = paper_job(1).unwrap();
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, 7).unwrap();
+    let out = ServingSession::builder()
+        .config(RunConfig::windows(12, 10))
+        .job(job)
+        .device(sim)
+        .policy(PolicySpec::DnnScaler)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_matches_fixture("session_closed_dnnscaler.json", &render(&job_outcome_to_json(&out)));
+}
+
+#[test]
+fn golden_closed_loop_three_member_fleet() {
+    // The PR 2 shared-GPU baseline: three DNNs in lockstep windows under
+    // TimeShare (the default). This is the byte-identity contract the
+    // partition refactor must keep.
+    let out = Fleet::builder()
+        .windows(12)
+        .rounds_per_window(8)
+        .seed(7)
+        .job(paper_job(1).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(3).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(4).unwrap(), PolicySpec::DnnScaler)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(out.partition, PartitionMode::TimeShare);
+    assert_matches_fixture("fleet_closed_3member.json", &render(&fleet_outcome_to_json(&out)));
+}
+
+#[test]
+fn golden_mps_partitioned_fleet() {
+    // The spatial path gets its own baseline: a 2-member MPS fleet with
+    // explicit reservations, closed loop for full determinism.
+    let out = Fleet::builder()
+        .windows(10)
+        .rounds_per_window(8)
+        .seed(11)
+        .partition_mode(PartitionMode::Mps)
+        .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 2, mtl: 2 })
+        .sm_reservation(0.6)
+        .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 1, mtl: 4 })
+        .sm_reservation(0.4)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(out.contention_trace.iter().all(|&c| c <= 1.0 + 1e-9));
+    assert_matches_fixture("fleet_mps_2member.json", &render(&fleet_outcome_to_json(&out)));
+}

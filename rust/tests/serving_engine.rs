@@ -83,6 +83,56 @@ fn session_serves_a_finite_trace_exactly_once() {
     assert_eq!(last.arrival_rate, 0.0);
 }
 
+/// The shipped Azure-Functions-style arrival trace (see `data/`).
+fn azure_trace_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../data/azure_functions_sample.txt")
+}
+
+#[test]
+fn shipped_azure_trace_parses_and_replays_to_completion() {
+    // The checked-in trace must validate (sorted, finite, non-negative)
+    // and carry the documented shape: a ~60 s span at roughly 9 req/s
+    // with timer-spike bursts.
+    let pattern = ArrivalPattern::from_trace_file(azure_trace_path())
+        .expect("data/azure_functions_sample.txt must parse");
+    let ArrivalPattern::Trace(ts) = &pattern else {
+        panic!("trace file must produce a Trace pattern")
+    };
+    let n = ts.len();
+    assert!(n > 400, "trace is suspiciously small: {n} arrivals");
+    assert!(*ts.last().unwrap() <= 60.0, "trace must be normalized to a 60 s span");
+    let rate = pattern.mean_rate();
+    assert!((5.0..15.0).contains(&rate), "mean rate {rate:.2}/s out of the documented band");
+
+    // Replay it end to end: a lightly loaded static point must admit
+    // every recorded arrival, serve all of them, and drop none.
+    let job = paper_job(1).unwrap();
+    let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, 17).unwrap();
+    let out = ServingSession::builder()
+        .config(RunConfig::windows(60, 20))
+        .job(job)
+        .device(sim)
+        .policy(PolicySpec::Static { bs: 1, mtl: 4 })
+        .arrivals(pattern)
+        .batch_timeout_ms(5.0)
+        .seed(17)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(out.arrived as usize, n, "every recorded arrival must be admitted");
+    let served: f64 = out.latencies.iter().map(|(_, w)| w).sum();
+    assert_eq!(served as usize, n, "every admitted request must be served");
+    assert_eq!(out.drops, 0);
+    assert_eq!(out.dropped_deadline, 0);
+    // The burst structure must be visible to policies: some window sees
+    // well above the mean offered rate.
+    assert!(
+        out.trace.iter().any(|r| r.arrival_rate > 1.5 * rate),
+        "timer spikes never surfaced in the per-window arrival telemetry"
+    );
+}
+
 #[test]
 fn builder_surfaces_trace_errors_as_config_errors() {
     let job = paper_job(1).unwrap();

@@ -2,7 +2,9 @@
 # Tier-1 verification: build, test, and format-check the rust crate,
 # plus the drift guards — examples and benches are compiled too (so a
 # library API change that rots an example fails `make verify` instead of
-# rotting silently), and clippy runs with -D warnings when installed.
+# rotting silently), clippy runs with -D warnings when installed, and
+# the golden outcome snapshots are regenerated and diffed against the
+# checked-in baseline (make test-fixtures).
 #
 # Usage: scripts/verify.sh   (or `make verify`)
 #
@@ -51,6 +53,10 @@ run_step "examples" cargo build --release --examples --manifest-path "$manifest"
 run_step "benches" cargo bench --no-run --manifest-path "$manifest"
 run_step "test" cargo test -q --manifest-path "$manifest"
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
+
+# Golden-fixture drift guard: regenerate the outcome snapshots and fail
+# if they no longer match the checked-in baseline (make test-fixtures).
+run_step "fixtures" make test-fixtures
 
 # Clippy is optional tooling (not in every image); when present, warnings
 # are errors so lint drift cannot accumulate unnoticed.
