@@ -1,15 +1,28 @@
 # Top-level convenience targets.
 #
 #   make verify         — tier-1 checks: cargo build --release, examples,
-#                         benches, cargo test -q, cargo fmt --check,
-#                         clippy when installed, and golden-fixture drift
+#                         benches (incl. a fleet_scale smoke run),
+#                         cargo test -q, cargo fmt --check, clippy when
+#                         installed, and golden-fixture drift
 #                         (see scripts/verify.sh)
 #   make test-fixtures  — regenerate the golden outcome snapshots under
 #                         rust/tests/fixtures/ and fail on drift vs git
+#   make bench-json     — run the fleet_scale scaling bench (scheduler
+#                         steps/s + fleet requests/s at M=1..256) and
+#                         write BENCH_hotpath.json at the repo root —
+#                         the tracked perf trajectory (see docs/perf.md)
 
-.PHONY: verify test-fixtures
+.PHONY: verify test-fixtures bench-json
 verify:
 	bash scripts/verify.sh
+
+bench-json:
+	@manifest=""; \
+	for c in Cargo.toml rust/Cargo.toml; do \
+		[ -f "$$c" ] && manifest="$$c" && break; \
+	done; \
+	if [ -z "$$manifest" ]; then echo "bench-json: no Cargo.toml found" >&2; exit 1; fi; \
+	cargo bench --bench fleet_scale --manifest-path "$$manifest" -- --json "$$(pwd)/BENCH_hotpath.json"
 
 test-fixtures:
 	@manifest=""; \

@@ -1,0 +1,233 @@
+//! fleet_scale: the serving engine's scaling benchmark (PR 4).
+//!
+//! Measures the two things the zero-allocation + event-calendar refactor
+//! is supposed to buy, at fleet sizes M in {1, 8, 64, 256}:
+//!
+//! * **scheduler steps/s** — the next-event pick, both through the
+//!   retained O(M) `LinearScan` baseline and the O(log M)
+//!   `EventCalendar` (the acceptance criterion: >= 5x steps/s at
+//!   M = 256). Both run the identical synthetic pop/advance/re-push
+//!   schedule, so the ratio isolates the scheduler;
+//! * **end-to-end fleet serving** — a real open-loop `Fleet` run per M
+//!   (overloaded bounded queues, full batches), reporting engine
+//!   steps/s (batch rounds) and requests/s of wall time, with >= 1M
+//!   simulated requests per fleet size at the default budget.
+//!
+//! Also times the request-queue hot pair (`push` + `take_batch_into`)
+//! so a regression in the ring buffer itself is visible in isolation.
+//!
+//! Run:  cargo bench --bench fleet_scale             (report only)
+//!       cargo bench --bench fleet_scale -- --json   (also write
+//!                                                    BENCH_hotpath.json
+//!                                                    at the repo root)
+//!       cargo bench --bench fleet_scale -- --smoke  (CI smoke: M = 8,
+//!                                                    tiny budget, no
+//!                                                    file output)
+//!
+//! `make bench-json` wraps the `--json` form; the checked-in
+//! BENCH_hotpath.json is the tracked perf trajectory (see docs/perf.md).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use dnnscaler::coordinator::calendar::{EventCalendar, LinearScan, NextEventQueue};
+use dnnscaler::coordinator::job::paper_job;
+use dnnscaler::coordinator::session::PolicySpec;
+use dnnscaler::gpusim::{GpuSpec, TESLA_P40};
+use dnnscaler::json::Json;
+use dnnscaler::workload::{ArrivalPattern, RequestQueue};
+use dnnscaler::Fleet;
+
+/// Synthetic scheduler workload: pop the earliest member, advance its
+/// clock pseudo-randomly, re-push — the exact op sequence one fleet
+/// serving round costs the scheduler. Returns steps/s.
+fn sched_steps_per_s(q: &mut dyn NextEventQueue, m: usize, steps: u64) -> f64 {
+    let mut t: Vec<f64> = (0..m).map(|i| (i % 7) as f64 * 1e-3).collect();
+    q.clear();
+    for (i, &ti) in t.iter().enumerate() {
+        q.push(i, ti);
+    }
+    let mut x = 0x9E3779B97F4A7C15u64;
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let k = q.pop().expect("scheduler never empties");
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        t[k] += 5e-4 + (x >> 40) as f64 * 1e-9;
+        q.push(k, t[k]);
+    }
+    let per_s = steps as f64 / t0.elapsed().as_secs_f64();
+    // Drain so repeated calls start clean.
+    q.clear();
+    per_s
+}
+
+struct FleetRun {
+    members: usize,
+    windows: usize,
+    rounds_per_window: usize,
+    requests_served: f64,
+    steps: u64,
+    wall_s: f64,
+}
+
+/// One overloaded open-loop fleet run at `m` members sized to serve
+/// roughly `request_target` requests (full 8-request batches).
+fn run_fleet(m: usize, request_target: u64) -> FleetRun {
+    // Small model so a 256-member fleet stays fast; a synthetic
+    // large-memory GPU so shared-memory admission is not the subject
+    // under test (256 members cannot fit a real 24 GB card).
+    let mut job = *paper_job(1).expect("paper job 1");
+    job.dnn = "mobv1-025";
+    let gpu = GpuSpec { mem_mb: 16.0 * 1024.0 * 1024.0, ..TESLA_P40 };
+    let windows = 8usize;
+    let per_round = 8u64; // bs * mtl, kept full by overload
+    let rounds_per_window =
+        (request_target.div_ceil(m as u64 * windows as u64 * per_round)).max(1) as usize;
+
+    let mut b = Fleet::builder().gpu(gpu).windows(windows).rounds_per_window(rounds_per_window);
+    for _ in 0..m {
+        b = b
+            .job_with_arrivals(
+                &job,
+                PolicySpec::Static { bs: 8, mtl: 1 },
+                // ~10x per-member service capacity: batches stay full
+                // (the round count fixes the request count) without the
+                // run degenerating into pure arrival synthesis.
+                ArrivalPattern::uniform(2_000.0),
+            )
+            .queue_capacity(1024);
+    }
+    let fleet = b.build().expect("fleet config");
+    let t0 = Instant::now();
+    let out = fleet.run().expect("fleet run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let requests_served: f64 =
+        out.members.iter().map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>()).sum();
+    FleetRun {
+        members: m,
+        windows,
+        rounds_per_window,
+        requests_served,
+        steps: m as u64 * windows as u64 * rounds_per_window as u64,
+        wall_s,
+    }
+}
+
+/// Steady-state queue hot pair: push + take_batch_into over a warmed
+/// ring (zero allocations). Returns ops/s (one op = 8 pushes + 1 drain).
+fn queue_ops_per_s(iters: u64) -> f64 {
+    let mut q = RequestQueue::bounded(64);
+    let mut scratch = Vec::with_capacity(8);
+    for i in 0..64 {
+        let _ = q.push(i as f64);
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        q.take_batch_into(8, &mut scratch);
+        for k in 0..8u64 {
+            let _ = q.push((i * 8 + k) as f64 * 1e-6);
+        }
+        std::hint::black_box(&scratch);
+    }
+    iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_out: Option<String> = args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1).filter(|p| !p.starts_with('-')).cloned().unwrap_or_else(|| {
+            // Default: BENCH_hotpath.json at the repo root. The crate
+            // manifest may live at rust/ or at the root itself; pick the
+            // directory that holds ROADMAP.md.
+            let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+            let root = if manifest.join("ROADMAP.md").exists() {
+                manifest.to_path_buf()
+            } else {
+                manifest.join("..")
+            };
+            root.join("BENCH_hotpath.json").to_string_lossy().into_owned()
+        })
+    });
+
+    let member_counts: &[usize] = if smoke { &[8] } else { &[1, 8, 64, 256] };
+    let sched_steps: u64 = if smoke { 20_000 } else { 2_000_000 };
+    let request_target: u64 = if smoke { 20_000 } else { 1_000_000 };
+
+    println!(
+        "{:<10} {:>16} {:>16} {:>9} {:>14} {:>14} {:>10}",
+        "members",
+        "linear steps/s",
+        "calendar steps/s",
+        "speedup",
+        "fleet steps/s",
+        "requests/s",
+        "requests"
+    );
+    println!("{}", "-".repeat(96));
+
+    let mut per_m: Vec<Json> = Vec::new();
+    for &m in member_counts {
+        let mut lin = LinearScan::with_capacity(m);
+        let mut cal = EventCalendar::with_capacity(m);
+        let linear = sched_steps_per_s(&mut lin, m, sched_steps);
+        let calendar = sched_steps_per_s(&mut cal, m, sched_steps);
+        let speedup = calendar / linear;
+        let fleet = run_fleet(m, request_target);
+        let fleet_steps_per_s = fleet.steps as f64 / fleet.wall_s;
+        let requests_per_s = fleet.requests_served / fleet.wall_s;
+        println!(
+            "{:<10} {:>16.0} {:>16.0} {:>8.1}x {:>14.0} {:>14.0} {:>10.0}",
+            m, linear, calendar, speedup, fleet_steps_per_s, requests_per_s, fleet.requests_served
+        );
+        let mut o = BTreeMap::new();
+        o.insert("members".into(), num(m as f64));
+        o.insert("sched_linear_steps_per_s".into(), num(linear));
+        o.insert("sched_calendar_steps_per_s".into(), num(calendar));
+        o.insert("sched_speedup".into(), num(speedup));
+        o.insert("fleet_windows".into(), num(fleet.windows as f64));
+        o.insert("fleet_rounds_per_window".into(), num(fleet.rounds_per_window as f64));
+        o.insert("fleet_steps".into(), num(fleet.steps as f64));
+        o.insert("fleet_wall_s".into(), num(fleet.wall_s));
+        o.insert("fleet_steps_per_s".into(), num(fleet_steps_per_s));
+        o.insert("fleet_requests_served".into(), num(fleet.requests_served));
+        o.insert("fleet_requests_per_s".into(), num(requests_per_s));
+        per_m.push(Json::Obj(o));
+        assert!(fleet.requests_served > 0.0, "fleet served nothing at M={m}");
+        if smoke {
+            // The smoke run exists so CI notices when the bench rots;
+            // keep its own sanity check strict but cheap.
+            assert!(
+                fleet.requests_served as u64 >= request_target / 2,
+                "smoke fleet under-served: {}",
+                fleet.requests_served
+            );
+        }
+    }
+
+    let queue_ops = queue_ops_per_s(if smoke { 50_000 } else { 2_000_000 });
+    println!("\nqueue: push x8 + take_batch_into(8)  {queue_ops:>14.0} ops/s");
+
+    if smoke {
+        println!("\nfleet_scale smoke OK");
+        return;
+    }
+
+    if let Some(path) = json_out {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("fleet_scale".into()));
+        root.insert("request_target".into(), num(request_target as f64));
+        root.insert("sched_steps".into(), num(sched_steps as f64));
+        root.insert("queue_hot_pair_ops_per_s".into(), num(queue_ops));
+        root.insert("per_member_count".into(), Json::Arr(per_m));
+        let text = dnnscaler::json::write(&Json::Obj(root));
+        std::fs::write(&path, text + "\n").expect("write BENCH_hotpath.json");
+        println!("\nwrote {path}");
+    }
+
+    println!("\nfleet_scale done");
+}

@@ -1,0 +1,287 @@
+//! O(log M) fleet event calendar.
+//!
+//! The open-loop `Fleet` interleaves its members' batch rounds by
+//! next-event time: every step serves the member whose virtual clock is
+//! furthest behind. Through PR 3 that pick was a linear scan over all M
+//! members — O(M) per step, O(M) steps per window round-robin, so a
+//! 256-member fleet paid ~256x more scheduler work per dispatched batch
+//! than a single job. This module replaces the scan with a binary-heap
+//! calendar keyed by `(next_event_time, member_index)`: push and pop are
+//! O(log M), and for finite clocks — every well-formed run; a clock is
+//! virtual time — the pick order is **exactly** the scan's: earliest
+//! time first, ties broken toward the lower member index. The one
+//! intentional divergence is a NaN clock (a device bug upstream): the
+//! scan's strict `<` let a NaN member at the lowest index monopolize
+//! the pick, while `total_cmp` orders NaN after every finite time.
+//!
+//! [`LinearScan`] is the pre-calendar implementation, retained behind
+//! the same [`NextEventQueue`] interface as the reference for
+//! differential tests (same pick order under ties/exhaustion, see
+//! `coordinator::engine`) and as the baseline the `fleet_scale` bench
+//! measures the calendar's speedup against (the PR's acceptance
+//! criterion: >= 5x steps/s at M = 256).
+//!
+//! Times are compared with [`f64::total_cmp`], so even a NaN clock
+//! degrades to a deterministic order (and a NaN-starved fleet still
+//! serves its healthy members) instead of a comparator panic mid-run.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// The scheduling interface both implementations share: schedule member
+/// `idx`'s next event at time `t`, pop the earliest. A member is
+/// scheduled at most once at a time (the fleet pops a member, serves its
+/// round, and re-pushes it at its advanced clock).
+pub trait NextEventQueue {
+    /// Drop every scheduled event (start of a new control window).
+    fn clear(&mut self);
+    /// Schedule member `idx` at time `t`. `idx` must not currently be
+    /// scheduled.
+    fn push(&mut self, idx: usize, t: f64);
+    /// Remove and return the member with the earliest event time; ties
+    /// break toward the lowest index. `None` when nothing is scheduled.
+    fn pop(&mut self) -> Option<usize>;
+    /// Number of currently scheduled members.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Heap entry ordered ascending by `(t, idx)` via `total_cmp`.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    t: f64,
+    idx: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t.total_cmp(&other.t).then_with(|| self.idx.cmp(&other.idx))
+    }
+}
+
+/// Binary-heap event calendar: O(log M) push/pop, identical pick order
+/// to [`LinearScan`].
+#[derive(Debug, Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Reverse<Entry>>,
+}
+
+impl EventCalendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Calendar with room for `n` members (the fleet size) so steady
+    /// per-window reuse never reallocates.
+    pub fn with_capacity(n: usize) -> Self {
+        EventCalendar { heap: BinaryHeap::with_capacity(n) }
+    }
+}
+
+impl NextEventQueue for EventCalendar {
+    fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    fn push(&mut self, idx: usize, t: f64) {
+        self.heap.push(Reverse(Entry { t, idx }));
+    }
+
+    fn pop(&mut self) -> Option<usize> {
+        self.heap.pop().map(|Reverse(e)| e.idx)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// The pre-calendar O(M) next-event scan, bit-for-bit the loop that
+/// lived in `Fleet::run_open` (`pick.map_or(true, |p| t[i] < t[p])`:
+/// strict `<`, so the first — lowest — index wins a tie). Kept as the
+/// reference implementation and the bench baseline; not used on any
+/// serving path.
+#[derive(Debug, Default)]
+pub struct LinearScan {
+    times: Vec<f64>,
+    active: Vec<bool>,
+    scheduled: usize,
+}
+
+impl LinearScan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        LinearScan {
+            times: Vec::with_capacity(n),
+            active: Vec::with_capacity(n),
+            scheduled: 0,
+        }
+    }
+}
+
+impl NextEventQueue for LinearScan {
+    fn clear(&mut self) {
+        self.times.clear();
+        self.active.clear();
+        self.scheduled = 0;
+    }
+
+    fn push(&mut self, idx: usize, t: f64) {
+        if idx >= self.times.len() {
+            self.times.resize(idx + 1, f64::INFINITY);
+            self.active.resize(idx + 1, false);
+        }
+        debug_assert!(!self.active[idx], "member {idx} scheduled twice");
+        self.times[idx] = t;
+        self.active[idx] = true;
+        self.scheduled += 1;
+    }
+
+    fn pop(&mut self) -> Option<usize> {
+        let mut pick: Option<usize> = None;
+        for i in 0..self.times.len() {
+            if !self.active[i] {
+                continue;
+            }
+            if pick.map_or(true, |p| self.times[i] < self.times[p]) {
+                pick = Some(i);
+            }
+        }
+        if let Some(k) = pick {
+            self.active[k] = false;
+            self.scheduled -= 1;
+        }
+        pick
+    }
+
+    fn len(&self) -> usize {
+        self.scheduled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Run the same (deterministic) schedule script against both
+    /// implementations and assert they pick identically. The script
+    /// receives the scheduler, drives it, and returns its observed pop
+    /// sequence.
+    fn differential(mut script: impl FnMut(&mut dyn NextEventQueue) -> Vec<Option<usize>>) {
+        let mut cal = EventCalendar::new();
+        let mut lin = LinearScan::new();
+        let from_calendar = script(&mut cal);
+        let from_scan = script(&mut lin);
+        assert_eq!(from_calendar, from_scan, "calendar and linear scan disagree on pick order");
+    }
+
+    #[test]
+    fn ties_break_toward_the_lowest_index() {
+        differential(|q| {
+            q.push(2, 1.0);
+            q.push(0, 1.0);
+            q.push(1, 1.0);
+            let pops = vec![q.pop(), q.pop(), q.pop(), q.pop()];
+            assert_eq!(pops, vec![Some(0), Some(1), Some(2), None]);
+            pops
+        });
+    }
+
+    #[test]
+    fn exhausted_members_simply_stop_being_pushed() {
+        differential(|q| {
+            let mut pops = Vec::new();
+            q.push(0, 0.0);
+            q.push(1, 0.5);
+            q.push(2, 0.25);
+            pops.push(q.pop());
+            // Member 0 exhausted (finite trace): not re-pushed.
+            pops.push(q.pop());
+            q.push(2, 0.75); // advanced past member 1
+            pops.push(q.pop());
+            pops.push(q.pop());
+            pops.push(q.pop());
+            assert_eq!(pops, vec![Some(0), Some(2), Some(1), Some(2), None]);
+            pops
+        });
+    }
+
+    #[test]
+    fn prop_random_schedules_pick_identically() {
+        // Random pop/re-push schedules with deliberately quantized times
+        // (so exact ties are common) and uneven round budgets (members
+        // drop out at different points) must produce the same pick
+        // sequence from both implementations — the O(log M) refactor
+        // cannot change the global serving order.
+        for seed in 0..50u64 {
+            differential(|q| {
+                let mut rng = Rng::new(0xD1FF ^ seed);
+                let m = 1 + rng.below(12);
+                let mut budget: Vec<u32> = (0..m).map(|_| 1 + rng.below(6) as u32).collect();
+                let mut clock: Vec<f64> = (0..m).map(|_| rng.below(4) as f64 * 0.125).collect();
+                for (i, &c) in clock.iter().enumerate() {
+                    q.push(i, c);
+                }
+                let mut pops = Vec::new();
+                loop {
+                    let got = q.pop();
+                    pops.push(got);
+                    let Some(k) = got else { break };
+                    budget[k] -= 1;
+                    // Quantized advance: ties with other members recur.
+                    clock[k] += (1 + rng.below(3)) as f64 * 0.125;
+                    if budget[k] > 0 {
+                        q.push(k, clock[k]);
+                    }
+                }
+                pops
+            });
+        }
+    }
+
+    #[test]
+    fn nan_times_do_not_panic_and_sort_last() {
+        let mut cal = EventCalendar::new();
+        cal.push(0, f64::NAN);
+        cal.push(1, 5.0);
+        assert_eq!(cal.pop(), Some(1));
+        assert_eq!(cal.pop(), Some(0));
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn clear_resets_both_implementations() {
+        let mut cal = EventCalendar::with_capacity(4);
+        let mut lin = LinearScan::with_capacity(4);
+        for q in [&mut cal as &mut dyn NextEventQueue, &mut lin] {
+            q.push(0, 1.0);
+            q.push(1, 2.0);
+            assert_eq!(q.len(), 2);
+            q.clear();
+            assert!(q.is_empty());
+            assert_eq!(q.pop(), None);
+            q.push(1, 0.5);
+            assert_eq!(q.pop(), Some(1));
+        }
+    }
+}

@@ -19,9 +19,25 @@
 //!   `WindowObservation` pair every policy consumes.
 //!
 //! `ServingSession` runs one `OpenLoop`; `Fleet` runs one per member and
-//! interleaves their rounds by next-event time (smallest member clock
-//! first), which is what makes per-member arrival processes, trace
-//! replay, and cross-job burst interference expressible at all.
+//! interleaves their rounds by next-event time through the O(log M)
+//! [`super::calendar::EventCalendar`], which is what makes per-member
+//! arrival processes, trace replay, and cross-job burst interference
+//! expressible at all.
+//!
+//! ## Allocation discipline (see `docs/perf.md`)
+//!
+//! The steady-state per-request/per-batch path performs **zero** heap
+//! allocations (asserted by the allocation-counter test below):
+//!
+//! * arrivals are synthesized in chunks into a recycled [`Feed`] buffer
+//!   (`workload::ARRIVAL_CHUNK` per refill, one generator call per chunk
+//!   instead of one per request);
+//! * batches drain into a per-member scratch `Vec<Request>` owned by
+//!   [`OpenLoop`] (`RequestQueue::take_batch_into`), never into a fresh
+//!   allocation;
+//! * [`WindowAccum`] is constructed once per member and *recycled*:
+//!   [`WindowAccum::begin`] clears (but keeps) the latency buffer and
+//!   the percentile scratch, so windows after the first reuse storage.
 //!
 //! Two modeling notes shared by every driver:
 //!
@@ -35,7 +51,7 @@
 //!   slot it can no longer use.
 
 use crate::device::{Device, DeviceError};
-use crate::workload::{ArrivalGenerator, ArrivalPattern, RequestQueue};
+use crate::workload::{ArrivalGenerator, ArrivalPattern, Request, RequestQueue, ARRIVAL_CHUNK};
 
 use super::policy::WindowObservation;
 use super::session::WindowRecord;
@@ -52,38 +68,76 @@ pub(crate) enum SmShare {
     Grant(f64),
 }
 
-/// Peekable arrival stream over an [`ArrivalGenerator`].
+/// Peekable arrival stream over an [`ArrivalGenerator`], prefetching
+/// [`ARRIVAL_CHUNK`] timestamps at a time into a recycled buffer. The
+/// emitted sequence is identical to calling the generator per request —
+/// chunking only amortizes the call overhead (and for traces replaces
+/// per-item copies with slice copies).
 pub(crate) struct Feed {
     gen: ArrivalGenerator,
-    next: f64,
+    /// Prefetched arrivals; `buf[pos..]` are not yet handed out.
+    buf: Vec<f64>,
+    pos: usize,
+    /// The generator returned no further arrivals (closed pattern or an
+    /// exhausted trace): `peek` is `INFINITY` forever.
+    exhausted: bool,
     count: u64,
 }
 
 impl Feed {
-    pub(crate) fn new(mut gen: ArrivalGenerator) -> Self {
-        let next = gen.next_arrival();
-        Feed { gen, next, count: 0 }
+    pub(crate) fn new(gen: ArrivalGenerator) -> Self {
+        let mut feed = Feed {
+            gen,
+            buf: Vec::with_capacity(ARRIVAL_CHUNK),
+            pos: 0,
+            exhausted: false,
+            count: 0,
+        };
+        feed.refill();
+        feed
     }
 
+    fn refill(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+        if self.gen.fill_next(&mut self.buf, ARRIVAL_CHUNK) == 0 {
+            self.exhausted = true;
+        }
+    }
+
+    #[inline]
     pub(crate) fn peek(&self) -> f64 {
-        self.next
+        match self.buf.get(self.pos) {
+            Some(&t) => t,
+            None => f64::INFINITY,
+        }
     }
 
+    /// Consume the next arrival. Only callable when [`Feed::peek`] is
+    /// finite (the serving loop never pops an exhausted stream).
     pub(crate) fn pop(&mut self) -> f64 {
-        let t = self.next;
-        self.next = self.gen.next_arrival();
+        debug_assert!(self.pos < self.buf.len(), "pop on an exhausted feed");
+        let t = self.buf[self.pos];
+        self.pos += 1;
         self.count += 1;
+        if self.pos == self.buf.len() && !self.exhausted {
+            self.refill();
+        }
         t
     }
 }
 
 /// One member's open-loop serving state: arrival feed, request queue,
-/// batch-formation timeout, shedding switch, and virtual clock.
+/// batch-formation timeout, shedding switch, batch scratch, and virtual
+/// clock.
 pub(crate) struct OpenLoop {
     feed: Feed,
     queue: RequestQueue,
     timeout_s: f64,
     shed_deadline: bool,
+    /// Reused batch scratch: `serve_round` drains each batch here, so the
+    /// steady-state path never allocates a per-batch `Vec`.
+    batch: Vec<Request>,
     /// Member-local virtual time (seconds).
     pub(crate) now_s: f64,
 }
@@ -107,6 +161,7 @@ impl OpenLoop {
             },
             timeout_s: batch_timeout_ms / 1000.0,
             shed_deadline,
+            batch: Vec::new(),
             now_s: start_s,
         }
     }
@@ -184,13 +239,13 @@ impl OpenLoop {
         if self.shed_deadline {
             self.queue.shed_expired(self.now_s, slo_ms);
         }
-        let batch = self.queue.take_batch(target);
-        if batch.is_empty() {
+        self.queue.take_batch_into(target, &mut self.batch);
+        if self.batch.is_empty() {
             // Everything waiting had already blown its deadline; the
             // round consumed (virtual) time but dispatched nothing.
             return Ok(true);
         }
-        let eff_bs = (batch.len().div_ceil(mtl as usize)).max(1) as u32;
+        let eff_bs = (self.batch.len().div_ceil(mtl as usize)).max(1) as u32;
         let (s, lat_ms) = match share {
             SmShare::Inflate(factor) => {
                 let s = device.execute_batch(eff_bs, mtl)?;
@@ -202,11 +257,11 @@ impl OpenLoop {
             }
         };
         self.now_s += lat_ms / 1000.0;
-        for r in &batch {
-            let sojourn_ms = (self.now_s - r.arrival_s) * 1000.0;
-            win.lat.push((sojourn_ms, 1.0));
+        let done_s = self.now_s;
+        for r in &self.batch {
+            win.lat.push((done_s - r.arrival_s) * 1000.0);
         }
-        win.served += batch.len() as f64;
+        win.served += self.batch.len() as f64;
         win.power_acc += s.power_w;
         win.sm_acc += s.sm_util;
         win.executed += 1;
@@ -216,13 +271,24 @@ impl OpenLoop {
 
 /// Per-window accumulator: counter snapshots taken at the window start
 /// plus everything [`OpenLoop::serve_round`] measured since.
+///
+/// Constructed ONCE per member and recycled across windows: `begin`
+/// re-snapshots the counters and clears the latency buffer without
+/// releasing its storage, and the percentile scratch lives here too —
+/// the per-member scratch pool that keeps window accumulation off the
+/// allocator. The window's latencies stay readable through
+/// [`WindowAccum::latencies`] until the next `begin`.
 pub(crate) struct WindowAccum {
     start_s: f64,
     arrived_before: u64,
     dropped_before: u64,
     shed_before: u64,
-    /// Per-request `(sojourn_ms, weight)` pairs served this window.
-    pub(crate) lat: Vec<(f64, f64)>,
+    /// Per-request sojourn latencies (ms) served this window. (This used
+    /// to carry a `(sojourn_ms, weight)` pair with the weight always 1.0
+    /// — open-loop requests are individually counted, unlike closed-loop
+    /// batch records — so the dead weight was dropped and the record
+    /// halved to a bare `f64`.)
+    pub(crate) lat: Vec<f64>,
     served: f64,
     power_acc: f64,
     sm_acc: f64,
@@ -231,69 +297,82 @@ pub(crate) struct WindowAccum {
     /// arrival stream; smaller once a finite trace drains mid-window.
     executed: usize,
     queue_peak: usize,
+    /// Reused percentile scratch (one quickselect per control decision,
+    /// no per-window alloc + sort).
+    scratch: Vec<f64>,
 }
 
 impl WindowAccum {
-    /// Snapshot the member counters at a window boundary.
-    pub(crate) fn begin(lp: &OpenLoop) -> Self {
+    /// Fresh accumulator; call [`WindowAccum::begin`] at every window
+    /// boundary (including before the first window).
+    pub(crate) fn new() -> Self {
         WindowAccum {
-            start_s: lp.now_s,
-            arrived_before: lp.arrived(),
-            dropped_before: lp.dropped(),
-            shed_before: lp.dropped_deadline(),
+            start_s: 0.0,
+            arrived_before: 0,
+            dropped_before: 0,
+            shed_before: 0,
             lat: Vec::new(),
             served: 0.0,
             power_acc: 0.0,
             sm_acc: 0.0,
             executed: 0,
             queue_peak: 0,
+            scratch: Vec::new(),
         }
     }
 
+    /// Snapshot the member counters at a window boundary, recycling the
+    /// latency buffer (cleared, storage kept).
+    pub(crate) fn begin(&mut self, lp: &OpenLoop) {
+        self.start_s = lp.now_s;
+        self.arrived_before = lp.arrived();
+        self.dropped_before = lp.dropped();
+        self.shed_before = lp.dropped_deadline();
+        self.lat.clear();
+        self.served = 0.0;
+        self.power_acc = 0.0;
+        self.sm_acc = 0.0;
+        self.executed = 0;
+        self.queue_peak = 0;
+    }
+
+    /// This window's per-request sojourn latencies (ms), valid until the
+    /// next [`WindowAccum::begin`]. Every open-loop request counts with
+    /// weight 1 in SLO attainment and CDFs.
+    pub(crate) fn latencies(&self) -> &[f64] {
+        &self.lat
+    }
+
     /// Fold the window into its trace record + policy observation.
-    /// `scratch` is reused percentile space (one quickselect per control
-    /// decision, no per-window alloc + sort). Also returns the window's
-    /// `(latency, weight)` pairs for SLO-attainment accounting.
     pub(crate) fn finish(
-        self,
+        &mut self,
         window: usize,
         slo_ms: f64,
         (bs, mtl): (u32, u32),
         lp: &OpenLoop,
-        scratch: &mut Vec<f64>,
-    ) -> (WindowRecord, WindowObservation, Vec<(f64, f64)>) {
-        let WindowAccum {
-            start_s,
-            arrived_before,
-            dropped_before,
-            shed_before,
-            lat,
-            served,
-            power_acc,
-            sm_acc,
-            executed,
-            queue_peak,
-        } = self;
-        let duration_s = (lp.now_s - start_s).max(1e-9);
-        let n = lat.len();
+    ) -> (WindowRecord, WindowObservation) {
+        let duration_s = (lp.now_s - self.start_s).max(1e-9);
+        let n = self.lat.len();
         let (p95, mean) = if n == 0 {
             // A window can be empty once a finite trace has drained.
             (0.0, 0.0)
         } else {
-            scratch.clear();
-            scratch.extend(lat.iter().map(|(l, _)| *l));
+            self.scratch.clear();
+            self.scratch.extend_from_slice(&self.lat);
             let rank = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
+            // total_cmp: a NaN sample (device bug) must degrade to a NaN
+            // percentile, never panic the comparator mid-run.
             let (_, p95, _) =
-                scratch.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).unwrap());
-            (*p95, lat.iter().map(|(l, _)| *l).sum::<f64>() / n as f64)
+                self.scratch.select_nth_unstable_by(rank - 1, |a, b| a.total_cmp(b));
+            (*p95, self.lat.iter().sum::<f64>() / n as f64)
         };
-        let throughput = served / duration_s;
+        let throughput = self.served / duration_s;
         // Means over batches actually executed (a drained finite trace
         // can end a window early; an idle window honestly reports 0).
-        let power_w = power_acc / executed.max(1) as f64;
-        let arrival_rate = (lp.arrived() - arrived_before) as f64 / duration_s;
-        let drops = lp.dropped() - dropped_before;
-        let drops_deadline = lp.dropped_deadline() - shed_before;
+        let power_w = self.power_acc / self.executed.max(1) as f64;
+        let arrival_rate = (lp.arrived() - self.arrived_before) as f64 / duration_s;
+        let drops = lp.dropped() - self.dropped_before;
+        let drops_deadline = lp.dropped_deadline() - self.shed_before;
 
         let record = WindowRecord {
             window,
@@ -305,7 +384,7 @@ impl WindowAccum {
             throughput,
             duration_s,
             power_w,
-            queue_peak,
+            queue_peak: self.queue_peak,
             arrival_rate,
             drops,
             drops_deadline,
@@ -317,12 +396,175 @@ impl WindowAccum {
             mean_ms: mean,
             throughput,
             power_w,
-            sm_util: sm_acc / executed.max(1) as f64,
+            sm_util: self.sm_acc / self.executed.max(1) as f64,
             queue_depth: lp.queue_len(),
             arrival_rate,
             drops,
             drops_deadline,
         };
-        (record, obs, lat)
+        (record, obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calendar::{EventCalendar, LinearScan, NextEventQueue};
+    use crate::device::ExecSample;
+    use crate::gpusim::{Dataset, GpuSim};
+
+    /// Drive a 3-member open-loop "fleet" with the given scheduler and
+    /// record the global dispatch order plus every member's sojourn
+    /// latencies and final clock.
+    fn drive(mut sched: impl NextEventQueue) -> (Vec<usize>, Vec<Vec<f64>>, Vec<f64>) {
+        // Members 0 and 1 replay the IDENTICAL trace (their next-event
+        // times tie exactly, starting at clock 0.0 for all three); member
+        // 2's one-arrival trace exhausts in the first window.
+        let traces: [Vec<f64>; 3] = [
+            vec![0.0, 0.010, 0.010, 0.020, 0.100, 0.400],
+            vec![0.0, 0.010, 0.010, 0.020, 0.100, 0.400],
+            vec![0.005],
+        ];
+        let mut lps: Vec<OpenLoop> = traces
+            .iter()
+            .map(|t| OpenLoop::new(ArrivalPattern::Trace(t.clone()), 1, None, 5.0, false, 0.0))
+            .collect();
+        let mut sims: Vec<GpuSim> = (0..3)
+            .map(|i| GpuSim::for_paper_dnn("inc-v1", Dataset::ImageNet, 10 + i).unwrap())
+            .collect();
+        let mut wins: Vec<WindowAccum> = (0..3).map(|_| WindowAccum::new()).collect();
+        let mut order: Vec<usize> = Vec::new();
+        let mut lat: Vec<Vec<f64>> = vec![Vec::new(); 3];
+        for w in 0..3 {
+            for i in 0..3 {
+                wins[i].begin(&lps[i]);
+            }
+            let mut remaining = [4usize; 3];
+            sched.clear();
+            for i in 0..3 {
+                sched.push(i, lps[i].now_s);
+            }
+            while let Some(k) = sched.pop() {
+                remaining[k] -= 1;
+                order.push(k);
+                let more = lps[k]
+                    .serve_round((2, 1), 50.0, SmShare::Inflate(1.0), &mut sims[k], &mut wins[k])
+                    .unwrap();
+                if more && remaining[k] > 0 {
+                    sched.push(k, lps[k].now_s);
+                }
+            }
+            for i in 0..3 {
+                let (_record, _obs) = wins[i].finish(w, 50.0, (2, 1), &lps[i]);
+                lat[i].extend_from_slice(wins[i].latencies());
+            }
+        }
+        (order, lat, lps.iter().map(|l| l.now_s).collect())
+    }
+
+    #[test]
+    fn calendar_serves_in_exactly_the_linear_scan_order() {
+        // The O(log M) event calendar must reproduce the pre-refactor
+        // linear scan bit for bit on a scenario with exact next-event
+        // ties and a member whose finite trace exhausts mid-run: same
+        // global dispatch order, same latencies, same final clocks.
+        let (order_cal, lat_cal, clocks_cal) = drive(EventCalendar::new());
+        let (order_lin, lat_lin, clocks_lin) = drive(LinearScan::new());
+        assert_eq!(order_cal, order_lin, "global dispatch order changed");
+        assert_eq!(lat_cal, lat_lin, "per-member sojourn latencies changed");
+        assert_eq!(clocks_cal, clocks_lin, "member clocks diverged");
+        // Sanity: the tie at t=0 was really exercised (member 0 before 1)
+        // and the exhausted member 2 stopped being scheduled.
+        assert_eq!(&order_cal[..2], &[0, 1]);
+        let last_windows = &order_cal[order_cal.len() - 8..];
+        assert!(!last_windows.contains(&2), "exhausted member kept being served");
+    }
+
+    /// Device returning NaN latencies (a misbehaving backend): the
+    /// percentile scratch must never panic on the comparator.
+    struct NanDevice;
+
+    impl Device for NanDevice {
+        fn model(&self) -> &str {
+            "nan-device"
+        }
+        fn execute_batch(&mut self, bs: u32, mtl: u32) -> Result<ExecSample, DeviceError> {
+            Ok(ExecSample { latency_ms: f64::NAN, batch_size: bs, mtl, power_w: 0.0, sm_util: 0.0 })
+        }
+    }
+
+    #[test]
+    fn nan_latency_samples_cannot_panic_window_accumulation() {
+        let mut lp = OpenLoop::new(ArrivalPattern::uniform(1000.0), 3, None, 1.0, false, 0.0);
+        let mut dev = NanDevice;
+        let mut win = WindowAccum::new();
+        win.begin(&lp);
+        for _ in 0..8 {
+            lp.serve_round((2, 1), 50.0, SmShare::Inflate(1.0), &mut dev, &mut win).unwrap();
+        }
+        let (record, obs) = win.finish(0, 50.0, (2, 1), &lp);
+        // The NaN propagates into the percentile instead of panicking.
+        assert!(record.p95_ms.is_nan());
+        assert!(obs.p95_ms.is_nan());
+    }
+
+    #[test]
+    fn steady_state_serving_path_does_not_allocate() {
+        // The acceptance criterion of the zero-allocation refactor: once
+        // every recycled buffer has reached its steady capacity, a full
+        // window of serve_round + window accumulation performs ZERO heap
+        // allocations on this thread. Overload a bounded queue so the
+        // ring, the batch scratch, the arrival chunk buffer, and the
+        // latency/percentile buffers all hit their high-water marks
+        // during warm-up. Shedding stays OFF so every round dispatches a
+        // full batch and each window's latency count is identical —
+        // deterministic buffer demand, no flaky capacity edge. (The shed
+        // path itself is branch-and-counter arithmetic on the ring; it
+        // has no allocation to hide.)
+        let mut sim = GpuSim::for_paper_dnn("inc-v1", Dataset::ImageNet, 9).unwrap();
+        let mut lp = OpenLoop::new(ArrivalPattern::uniform(2000.0), 9, Some(64), 2.0, false, 0.0);
+        let mut win = WindowAccum::new();
+        for w in 0..5 {
+            win.begin(&lp);
+            for _ in 0..100 {
+                lp.serve_round((4, 1), 50.0, SmShare::Inflate(1.0), &mut sim, &mut win).unwrap();
+            }
+            let _ = win.finish(w, 50.0, (4, 1), &lp);
+        }
+        let before = crate::alloc_probe::thread_allocs();
+        win.begin(&lp);
+        for _ in 0..100 {
+            lp.serve_round((4, 1), 50.0, SmShare::Inflate(1.0), &mut sim, &mut win).unwrap();
+        }
+        let (record, _obs) = win.finish(5, 50.0, (4, 1), &lp);
+        let allocs = crate::alloc_probe::thread_allocs() - before;
+        assert!(record.throughput > 0.0);
+        assert_eq!(allocs, 0, "steady-state serving path allocated {allocs} times");
+    }
+
+    #[test]
+    fn feed_chunking_preserves_the_arrival_stream() {
+        // The Feed must hand out exactly the generator's sequence across
+        // chunk refills (ARRIVAL_CHUNK boundaries included).
+        let pattern = ArrivalPattern::poisson(500.0);
+        let mut feed = Feed::new(ArrivalGenerator::new(pattern.clone(), 42));
+        let mut gen = ArrivalGenerator::new(pattern, 42);
+        for i in 0..(3 * ARRIVAL_CHUNK + 7) {
+            assert!(feed.peek().is_finite());
+            assert_eq!(feed.pop(), gen.next_arrival(), "arrival #{i} diverged");
+            assert_eq!(feed.count, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn feed_reports_exhaustion_as_infinity() {
+        let mut feed =
+            Feed::new(ArrivalGenerator::new(ArrivalPattern::trace(vec![0.25, 0.5]).unwrap(), 1));
+        assert_eq!(feed.pop(), 0.25);
+        assert_eq!(feed.pop(), 0.5);
+        assert_eq!(feed.peek(), f64::INFINITY);
+        assert_eq!(feed.count, 2);
+        let closed = Feed::new(ArrivalGenerator::new(ArrivalPattern::Closed, 1));
+        assert_eq!(closed.peek(), f64::INFINITY);
     }
 }

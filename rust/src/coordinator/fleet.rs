@@ -60,6 +60,7 @@ use crate::gpusim::{
 };
 use crate::workload::ArrivalPattern;
 
+use super::calendar::{EventCalendar, NextEventQueue};
 use super::engine::{OpenLoop, SmShare, WindowAccum};
 use super::job::JobSpec;
 use super::latency::LatencyWindow;
@@ -417,7 +418,7 @@ fn admit_window(
             .iter()
             .enumerate()
             .filter(|&(i, _)| points[i] != (1, 1))
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
         else {
             return Err(DeviceError::OutOfMemory {
                 demand_mb: total,
@@ -741,7 +742,13 @@ impl<'a> Fleet<'a> {
         let mut admission_clamps = 0u64;
         let mut contention_trace = Vec::with_capacity(cfg.windows);
         let mut grant_trace: Vec<Vec<f64>> = Vec::new();
-        let mut scratch: Vec<f64> = Vec::new();
+        // Per-member scratch pool: one recycled WindowAccum per member
+        // (latency buffer + percentile scratch are cleared, not freed, at
+        // each window boundary), plus the reused event calendar and the
+        // per-window round budgets.
+        let mut wins: Vec<WindowAccum> = (0..n).map(|_| WindowAccum::new()).collect();
+        let mut calendar = EventCalendar::with_capacity(n);
+        let mut remaining = vec![0usize; n];
 
         for w in 0..cfg.windows {
             let requested: Vec<(u32, u32)> =
@@ -769,43 +776,39 @@ impl<'a> Fleet<'a> {
             )?;
 
             let slos: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
-            let mut wins: Vec<WindowAccum> =
-                states.iter().map(|m| WindowAccum::begin(&m.lp)).collect();
-            let mut remaining = vec![cfg.rounds_per_window; n];
+            calendar.clear();
+            for (i, (st, win)) in states.iter().zip(wins.iter_mut()).enumerate() {
+                win.begin(&st.lp);
+                remaining[i] = cfg.rounds_per_window;
+                calendar.push(i, st.lp.now_s);
+            }
 
             // Global event loop: always advance the member whose virtual
             // clock is furthest behind (ties break toward the lower
             // index), so batch dispatches happen in global time order.
-            loop {
-                let mut pick: Option<usize> = None;
-                for i in 0..n {
-                    if remaining[i] == 0 {
-                        continue;
-                    }
-                    if pick.map_or(true, |p| states[i].lp.now_s < states[p].lp.now_s) {
-                        pick = Some(i);
-                    }
-                }
-                let Some(k) = pick else { break };
+            // The calendar pops that member in O(log M) — each member is
+            // scheduled at most once, keyed at its current clock, so one
+            // pop + re-push replaces the old O(M) scan per round.
+            while let Some(k) = calendar.pop() {
                 remaining[k] -= 1;
                 let st = &mut states[k];
                 let more =
                     st.lp.serve_round(points[k], slos[k], shares[k], &mut st.sim, &mut wins[k])?;
-                if !more {
-                    // Finite trace exhausted and drained: this member has
-                    // nothing left to serve, this window or ever.
-                    remaining[k] = 0;
+                // A member leaves the window's calendar when its round
+                // budget is spent — or for good when its finite trace is
+                // exhausted and drained (`more == false`).
+                if more && remaining[k] > 0 {
+                    calendar.push(k, st.lp.now_s);
                 }
             }
 
             let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(n);
-            for (i, win) in wins.into_iter().enumerate() {
+            for (i, win) in wins.iter_mut().enumerate() {
                 let st = &mut states[i];
                 st.admitted = points[i];
-                let (record, obs, mut win_lat) =
-                    win.finish(w, slos[i], points[i], &st.lp, &mut scratch);
-                st.acc.absorb(w, slos[i], &win_lat);
-                st.latencies.append(&mut win_lat);
+                let (record, obs) = win.finish(w, slos[i], points[i], &st.lp);
+                st.acc.absorb(w, slos[i], win.latencies());
+                st.latencies.extend(win.latencies().iter().map(|&l| (l, 1.0)));
                 st.trace.push(record);
                 // As in single-job open-loop serving, instance launches
                 // are not charged as a queue-draining stall (existing

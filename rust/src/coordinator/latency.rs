@@ -63,7 +63,9 @@ impl LatencyWindow {
     /// Exact percentile (nearest-rank) of the current window; `None` when
     /// empty. `q` in [0, 1]. O(n) via quickselect on a reused scratch
     /// buffer (was O(n log n) with an allocation; see EXPERIMENTS.md
-    /// §Perf).
+    /// §Perf). Samples are ordered with [`f64::total_cmp`], so a NaN
+    /// sample (a misbehaving device) sorts above every real latency and
+    /// degrades the percentile to NaN instead of panicking mid-run.
     pub fn percentile(&mut self, q: f64) -> Option<f64> {
         if self.samples.is_empty() {
             return None;
@@ -72,8 +74,7 @@ impl LatencyWindow {
         self.scratch.clear();
         self.scratch.extend_from_slice(&self.samples);
         let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
-        let (_, v, _) =
-            self.scratch.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).unwrap());
+        let (_, v, _) = self.scratch.select_nth_unstable_by(rank - 1, |a, b| a.total_cmp(b));
         Some(*v)
     }
 
@@ -151,5 +152,24 @@ mod tests {
     #[should_panic]
     fn zero_capacity_panics() {
         let _ = LatencyWindow::new(0);
+    }
+
+    #[test]
+    fn nan_sample_cannot_panic_percentile() {
+        // Regression: percentile used `partial_cmp(..).unwrap()`, so one
+        // NaN latency from a misbehaving device panicked the whole run.
+        // With total_cmp, NaN sorts above every real sample: low
+        // percentiles stay meaningful, the top rank degrades to NaN.
+        let mut w = LatencyWindow::new(8);
+        for v in [1.0, f64::NAN, 3.0] {
+            w.record(v);
+        }
+        assert_eq!(w.percentile(0.5), Some(3.0)); // rank 2 of [1, 3, NaN]
+        assert!(w.percentile(1.0).unwrap().is_nan());
+        assert!(w.p95().unwrap().is_nan());
+        // A NaN-free window is unaffected.
+        w.reset();
+        w.record(2.0);
+        assert_eq!(w.p95(), Some(2.0));
     }
 }

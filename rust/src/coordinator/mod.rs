@@ -26,6 +26,11 @@
 //! * [`runner`] — the deprecated closed-loop `JobRunner` shim over
 //!   `ServingSession`, kept for legacy call sites.
 //!
+//! Open-loop fleets schedule their members through the O(log M)
+//! [`calendar::EventCalendar`] (a binary heap keyed by next-event time;
+//! ties break toward the lower member index, exactly like the linear
+//! scan it replaced — see `docs/perf.md` and the `fleet_scale` bench).
+//!
 //! ## Control algorithms (all [`policy::Policy`] implementations)
 //!
 //! * [`profiler`] — run-time probe deciding Batching vs Multi-Tenancy
@@ -49,6 +54,7 @@
 //! * [`latency`] — windowed tail-latency (p95) monitor;
 //! * [`job`] — the 30-job workload of Table 4.
 
+pub mod calendar;
 pub mod clipper;
 pub mod controller;
 pub(crate) mod engine;

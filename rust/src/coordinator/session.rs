@@ -664,20 +664,34 @@ impl AttainAcc {
         AttainAcc { steady_from, met: 0.0, total: 0.0, steady_met: 0.0, steady_total: 0.0 }
     }
 
-    /// Absorb one window's `(latency, weight)` pairs against its SLO.
-    pub(crate) fn absorb(&mut self, window: usize, slo_ms: f64, latencies: &[(f64, f64)]) {
-        for (lat, weight) in latencies {
-            let ok = *lat <= slo_ms;
+    /// Absorb one window's per-request latencies against its SLO (open
+    /// loop: every request counts with weight 1).
+    pub(crate) fn absorb(&mut self, window: usize, slo_ms: f64, latencies: &[f64]) {
+        for &lat in latencies {
+            self.absorb_one(window, slo_ms, lat, 1.0);
+        }
+    }
+
+    /// Absorb one window's `(latency, weight)` pairs against its SLO
+    /// (closed loop: one batch record weighted by its request count).
+    pub(crate) fn absorb_weighted(&mut self, window: usize, slo_ms: f64, latencies: &[(f64, f64)]) {
+        for &(lat, weight) in latencies {
+            self.absorb_one(window, slo_ms, lat, weight);
+        }
+    }
+
+    #[inline]
+    fn absorb_one(&mut self, window: usize, slo_ms: f64, lat: f64, weight: f64) {
+        let ok = lat <= slo_ms;
+        if ok {
+            self.met += weight;
+        }
+        self.total += weight;
+        if window >= self.steady_from {
             if ok {
-                self.met += weight;
+                self.steady_met += weight;
             }
-            self.total += weight;
-            if window >= self.steady_from {
-                if ok {
-                    self.steady_met += weight;
-                }
-                self.steady_total += weight;
-            }
+            self.steady_total += weight;
         }
     }
 
@@ -714,7 +728,9 @@ pub(crate) fn assemble_outcome(
     let throughput = steady.iter().map(|r| r.throughput).sum::<f64>() / steady.len() as f64;
     let power_w = steady.iter().map(|r| r.power_w).sum::<f64>() / steady.len() as f64;
     let mut steady_lat: Vec<f64> = steady.iter().map(|r| r.p95_ms).collect();
-    steady_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN window percentile (possible only if a device
+    // returned NaN latencies) must not panic the final fold.
+    steady_lat.sort_by(|a, b| a.total_cmp(b));
     let p95_ms = steady_lat
         [((steady_lat.len() as f64 * 0.95).ceil() as usize - 1).min(steady_lat.len() - 1)];
     let steady_attainment = acc.steady_attainment();
@@ -795,7 +811,7 @@ pub(crate) fn serve_closed_window(
     let mean = window.mean().unwrap_or(0.0);
     let throughput = requests / (wall_ms / 1000.0);
     let power_w = power_acc / cfg.rounds_per_window as f64;
-    acc.absorb(w, slo, &win_lat);
+    acc.absorb_weighted(w, slo, &win_lat);
     let record = WindowRecord {
         window: w,
         bs,
@@ -899,14 +915,15 @@ fn run_open(
     let mut trace = Vec::with_capacity(cfg.windows);
     let mut latencies: Vec<(f64, f64)> = Vec::new();
     let mut acc = AttainAcc::new(cfg.windows / 2);
-    // Reused percentile scratch (same idiom as LatencyWindow: one
-    // quickselect per control decision, no per-window alloc + sort).
-    let mut scratch: Vec<f64> = Vec::new();
+    // One recycled accumulator for the whole run: the latency buffer and
+    // percentile scratch inside it are cleared, never reallocated, at
+    // each window boundary (the engine's zero-allocation discipline).
+    let mut win = WindowAccum::new();
 
     for w in 0..cfg.windows {
         let slo = schedule.at(w);
         let (bs, mtl) = policy.operating_point();
-        let mut win = WindowAccum::begin(&lp);
+        win.begin(&lp);
         for _ in 0..cfg.rounds_per_window {
             if !lp.serve_round((bs, mtl), slo, SmShare::Inflate(1.0), device, &mut win)? {
                 // Finite trace exhausted and drained: remaining rounds
@@ -914,9 +931,9 @@ fn run_open(
                 break;
             }
         }
-        let (record, obs, mut win_lat) = win.finish(w, slo, (bs, mtl), &lp, &mut scratch);
-        acc.absorb(w, slo, &win_lat);
-        latencies.append(&mut win_lat);
+        let (record, obs) = win.finish(w, slo, (bs, mtl), &lp);
+        acc.absorb(w, slo, win.latencies());
+        latencies.extend(win.latencies().iter().map(|&l| (l, 1.0)));
         trace.push(record);
         // Unlike the closed loop, instance launches are not charged as a
         // serving stall here: co-located instances are independent

@@ -169,6 +169,13 @@ impl ArrivalPattern {
     }
 }
 
+/// How many arrivals the serving engine's feed prefetches per refill
+/// (see `coordinator::engine::Feed`). Chunked synthesis amortizes the
+/// per-arrival call and keeps the generator's RNG state hot in cache;
+/// the stream itself is identical — a generator produces the same
+/// timestamp sequence whether it is drained one at a time or in chunks.
+pub const ARRIVAL_CHUNK: usize = 64;
+
 /// Generates request arrival timestamps (seconds).
 #[derive(Debug, Clone)]
 pub struct ArrivalGenerator {
@@ -236,6 +243,43 @@ impl ArrivalGenerator {
         };
         self.now_s += gap;
         self.now_s
+    }
+
+    /// Append up to `max` upcoming arrivals to `out`, stopping early when
+    /// the stream ends (`Closed`, or an exhausted `Trace`). Returns how
+    /// many were appended; 0 means the stream is exhausted for good.
+    ///
+    /// This is the chunked form of [`ArrivalGenerator::next_arrival`]:
+    /// the timestamps produced are exactly the same sequence (traces are
+    /// copied verbatim; synthetic patterns consume the RNG in the same
+    /// order), just synthesized in batches so the serving engine pays one
+    /// refill per [`ARRIVAL_CHUNK`] requests instead of one generator
+    /// call per request.
+    pub fn fill_next(&mut self, out: &mut Vec<f64>, max: usize) -> usize {
+        // Trace fast path: memcpy the next slice of recorded timestamps.
+        // (Skipped when a horizon-overshooting sample is pending — the
+        // generic loop below consumes it first via `next_arrival`.)
+        if self.pending.is_none() {
+            if let ArrivalPattern::Trace(ts) = &self.pattern {
+                let take = max.min(ts.len().saturating_sub(self.trace_idx));
+                out.extend_from_slice(&ts[self.trace_idx..self.trace_idx + take]);
+                self.trace_idx += take;
+                if take > 0 {
+                    self.now_s = ts[self.trace_idx - 1];
+                }
+                return take;
+            }
+        }
+        let mut n = 0;
+        while n < max {
+            let t = self.next_arrival();
+            if !t.is_finite() {
+                break;
+            }
+            out.push(t);
+            n += 1;
+        }
+        n
     }
 
     /// All arrivals in `[0, horizon_s)`. The first arrival at or past the
@@ -368,6 +412,66 @@ mod tests {
         ));
         // Equal timestamps (simultaneous arrivals) are allowed.
         assert!(ArrivalPattern::trace(vec![1.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn fill_next_matches_one_at_a_time_synthesis() {
+        // Chunked synthesis must produce the identical timestamp stream,
+        // for every pattern kind, whatever the chunk size.
+        let patterns = [
+            ArrivalPattern::uniform(50.0),
+            ArrivalPattern::poisson(120.0),
+            ArrivalPattern::bursty(80.0, 4.0, 1.0, 0.25),
+            ArrivalPattern::trace(vec![0.0, 0.1, 0.1, 0.4, 2.5]).unwrap(),
+        ];
+        for pattern in patterns {
+            for chunk in [1usize, 3, 64] {
+                let mut one = ArrivalGenerator::new(pattern.clone(), 77);
+                let mut many = ArrivalGenerator::new(pattern.clone(), 77);
+                let mut got: Vec<f64> = Vec::new();
+                while got.len() < 200 {
+                    if many.fill_next(&mut got, chunk) == 0 {
+                        break;
+                    }
+                }
+                for &want in &got {
+                    assert_eq!(one.next_arrival(), want);
+                }
+                // Both generators agree on what comes next (INFINITY for
+                // an exhausted trace, the same sample otherwise).
+                assert_eq!(one.next_arrival(), {
+                    let mut rest = Vec::new();
+                    if many.fill_next(&mut rest, 1) == 0 {
+                        f64::INFINITY
+                    } else {
+                        rest[0]
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn fill_next_is_silent_for_closed_and_exhausted_streams() {
+        let mut g = ArrivalGenerator::new(ArrivalPattern::closed(), 1);
+        let mut out = Vec::new();
+        assert_eq!(g.fill_next(&mut out, 16), 0);
+        assert!(out.is_empty());
+        let mut t = ArrivalGenerator::new(ArrivalPattern::trace(vec![0.5]).unwrap(), 1);
+        assert_eq!(t.fill_next(&mut out, 16), 1);
+        assert_eq!(t.fill_next(&mut out, 16), 0);
+        assert_eq!(out, vec![0.5]);
+    }
+
+    #[test]
+    fn fill_next_respects_a_pending_horizon_sample() {
+        // arrivals_until stashes its overshooting sample; the next chunk
+        // must begin with it (trace and synthetic alike).
+        let mut g = ArrivalGenerator::new(ArrivalPattern::trace(vec![0.1, 0.9, 1.2]).unwrap(), 1);
+        assert_eq!(g.arrivals_until(0.5), vec![0.1]);
+        let mut out = Vec::new();
+        assert_eq!(g.fill_next(&mut out, 8), 2);
+        assert_eq!(out, vec![0.9, 1.2]);
     }
 
     #[test]

@@ -7,8 +7,19 @@
 //! request whose queueing delay alone already exceeds the SLO can never
 //! meet it, so serving it only wastes GPU time — the serving engine
 //! drops it at dispatch and counts it separately from capacity drops.
-
-use std::collections::VecDeque;
+//!
+//! ## Allocation discipline (see `docs/perf.md`)
+//!
+//! The queue is a hand-rolled power-of-two ring buffer, not a
+//! `VecDeque`: the storage grows geometrically until it reaches the
+//! queue's high-water mark and is never reallocated after that, and
+//! [`RequestQueue::take_batch_into`] drains a batch into a caller-owned
+//! scratch buffer instead of collecting a fresh `Vec` per batch. Steady-
+//! state serving therefore performs **zero** heap allocations on the
+//! queue (asserted by the engine's allocation-counter test). The ring is
+//! behaviorally identical to a `VecDeque` FIFO — `tests/properties.rs`
+//! checks it against exactly that model under random interleavings of
+//! `push` / `take_batch` / `shed_expired`.
 
 /// A pending inference request.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,10 +29,24 @@ pub struct Request {
     pub arrival_s: f64,
 }
 
-/// FIFO request queue with batch draining and optional capacity bound.
+/// Placeholder filling unused ring slots (never observable: `head`/`len`
+/// bound every read).
+const EMPTY_SLOT: Request = Request { id: u64::MAX, arrival_s: f64::NEG_INFINITY };
+
+/// Smallest ring allocation (slots) once the queue holds anything.
+const MIN_RING: usize = 8;
+
+/// FIFO request queue with batch draining and optional capacity bound,
+/// backed by a growable power-of-two ring buffer.
 #[derive(Debug, Default)]
 pub struct RequestQueue {
-    q: VecDeque<Request>,
+    /// Ring storage; `buf.len()` is 0 (nothing ever queued) or a power
+    /// of two, so slot indices are computed with a mask, not a modulo.
+    buf: Vec<Request>,
+    /// Slot of the oldest waiting request.
+    head: usize,
+    /// Number of waiting requests.
+    len: usize,
     next_id: u64,
     capacity: Option<usize>,
     /// High-water mark (backpressure signal).
@@ -49,19 +74,51 @@ impl RequestQueue {
         self.capacity
     }
 
+    /// Current ring allocation in slots (0 until the first push). Grows
+    /// to the smallest power of two holding the high-water mark, then
+    /// stays put — the zero-steady-state-allocation invariant.
+    pub fn ring_slots(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    fn slot(&self, offset: usize) -> usize {
+        debug_assert!(self.buf.len().is_power_of_two());
+        (self.head + offset) & (self.buf.len() - 1)
+    }
+
+    /// Double the ring (or create it), re-linearizing the live requests
+    /// to the front of the new storage.
+    fn grow(&mut self) {
+        let old = self.buf.len();
+        let new_cap = (old * 2).max(MIN_RING);
+        let mut nbuf = Vec::with_capacity(new_cap);
+        for k in 0..self.len {
+            nbuf.push(self.buf[(self.head + k) & (old - 1)]);
+        }
+        nbuf.resize(new_cap, EMPTY_SLOT);
+        self.buf = nbuf;
+        self.head = 0;
+    }
+
     /// Enqueue one arrival; `None` when the queue is full (the request is
     /// dropped and counted).
     pub fn push(&mut self, arrival_s: f64) -> Option<u64> {
         if let Some(cap) = self.capacity {
-            if self.q.len() >= cap {
+            if self.len >= cap {
                 self.dropped += 1;
                 return None;
             }
         }
+        if self.len == self.buf.len() {
+            self.grow();
+        }
         let id = self.next_id;
         self.next_id += 1;
-        self.q.push_back(Request { id, arrival_s });
-        self.max_depth = self.max_depth.max(self.q.len());
+        let tail = self.slot(self.len);
+        self.buf[tail] = Request { id, arrival_s };
+        self.len += 1;
+        self.max_depth = self.max_depth.max(self.len);
         Some(id)
     }
 
@@ -72,10 +129,39 @@ impl RequestQueue {
         }
     }
 
-    /// Drain up to `bs` requests for one batch (FIFO order).
+    #[inline]
+    fn pop_front(&mut self) -> Option<Request> {
+        if self.len == 0 {
+            return None;
+        }
+        let r = self.buf[self.head];
+        self.head = self.slot(1);
+        self.len -= 1;
+        Some(r)
+    }
+
+    /// Drain up to `bs` requests for one batch (FIFO order) into `out`,
+    /// which is cleared first. `out` is caller-owned scratch: the serving
+    /// engine passes the same buffer every round, so a steady-state batch
+    /// costs no heap allocation (the old `take_batch` collected a fresh
+    /// `Vec<Request>` per batch).
+    pub fn take_batch_into(&mut self, bs: usize, out: &mut Vec<Request>) {
+        out.clear();
+        let n = bs.min(self.len);
+        for _ in 0..n {
+            // `n <= len` by construction, so the pop cannot fail.
+            out.push(self.pop_front().expect("ring underflow"));
+        }
+    }
+
+    /// Drain up to `bs` requests for one batch (FIFO order). Allocating
+    /// convenience wrapper over [`RequestQueue::take_batch_into`] for
+    /// tests and one-shot callers; the serving hot path uses the scratch
+    /// variant.
     pub fn take_batch(&mut self, bs: usize) -> Vec<Request> {
-        let n = bs.min(self.q.len());
-        self.q.drain(..n).collect()
+        let mut out = Vec::with_capacity(bs.min(self.len));
+        self.take_batch_into(bs, &mut out);
+        out
     }
 
     /// SLO-aware deadline shedding: drop every waiting request whose
@@ -86,9 +172,10 @@ impl RequestQueue {
     /// [`RequestQueue::dropped_deadline`], separate from capacity drops.
     pub fn shed_expired(&mut self, now_s: f64, deadline_ms: f64) -> u64 {
         let mut shed = 0u64;
-        while let Some(front) = self.q.front() {
-            if (now_s - front.arrival_s) * 1000.0 > deadline_ms {
-                self.q.pop_front();
+        while self.len > 0 {
+            if (now_s - self.buf[self.head].arrival_s) * 1000.0 > deadline_ms {
+                self.head = self.slot(1);
+                self.len -= 1;
                 shed += 1;
             } else {
                 break;
@@ -99,16 +186,20 @@ impl RequestQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.q.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.q.is_empty()
+        self.len == 0
     }
 
     /// Oldest waiting request's arrival time, if any.
     pub fn oldest_arrival(&self) -> Option<f64> {
-        self.q.front().map(|r| r.arrival_s)
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.buf[self.head].arrival_s)
+        }
     }
 }
 
@@ -199,5 +290,92 @@ mod tests {
         assert_eq!(q.dropped, 0);
         assert_eq!(q.max_depth, 10_000);
         assert_eq!(q.capacity(), None);
+    }
+
+    #[test]
+    fn ring_wraps_around_without_reordering() {
+        // Force head to travel around the ring repeatedly: with MIN_RING
+        // slots, interleaved push/drain wraps the ring many times while
+        // the FIFO contract must hold exactly.
+        let mut q = RequestQueue::new();
+        let mut next_in = 0u64;
+        let mut next_out = 0u64;
+        for round in 0..100 {
+            let burst = 1 + (round % MIN_RING as u64);
+            for _ in 0..burst {
+                let _ = q.push(next_in as f64 * 0.001);
+                next_in += 1;
+            }
+            for r in q.take_batch(burst as usize) {
+                assert_eq!(r.id, next_out, "ids must leave in FIFO order");
+                assert_eq!(r.arrival_s, next_out as f64 * 0.001);
+                next_out += 1;
+            }
+        }
+        assert!(q.is_empty());
+        assert_eq!(next_in, next_out);
+        // Depth never exceeded one burst, so the ring never had to grow
+        // past the minimum allocation.
+        assert_eq!(q.ring_slots(), MIN_RING);
+    }
+
+    #[test]
+    fn ring_grows_across_a_wrapped_boundary() {
+        // Queue contents straddling the wrap point when growth hits must
+        // be re-linearized, not scrambled.
+        let mut q = RequestQueue::new();
+        for i in 0..MIN_RING {
+            let _ = q.push(i as f64);
+        }
+        // Advance head past the ring midpoint, then refill past the old
+        // allocation so grow() copies a wrapped range.
+        let _ = q.take_batch(5);
+        for i in MIN_RING..(3 * MIN_RING) {
+            let _ = q.push(i as f64);
+        }
+        assert!(q.ring_slots() > MIN_RING);
+        let all = q.take_batch(usize::MAX >> 1);
+        let want: Vec<f64> = (5..3 * MIN_RING).map(|i| i as f64).collect();
+        let got: Vec<f64> = all.iter().map(|r| r.arrival_s).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn take_batch_into_reuses_the_scratch_buffer() {
+        let mut q = RequestQueue::new();
+        let mut scratch = Vec::new();
+        q.extend([0.1, 0.2, 0.3, 0.4]);
+        q.take_batch_into(3, &mut scratch);
+        assert_eq!(scratch.len(), 3);
+        let cap = scratch.capacity();
+        // A second, smaller batch must clear and refill the same storage.
+        q.take_batch_into(3, &mut scratch);
+        assert_eq!(scratch.len(), 1);
+        assert_eq!(scratch[0].arrival_s, 0.4);
+        assert_eq!(scratch.capacity(), cap, "scratch must not be reallocated");
+        // Draining an empty queue leaves the scratch empty but intact.
+        q.take_batch_into(8, &mut scratch);
+        assert!(scratch.is_empty());
+        assert_eq!(scratch.capacity(), cap);
+    }
+
+    #[test]
+    fn steady_state_ring_never_reallocates() {
+        let mut q = RequestQueue::bounded(64);
+        let mut scratch = Vec::with_capacity(16);
+        // Warm up to the high-water mark.
+        for i in 0..64 {
+            let _ = q.push(i as f64);
+        }
+        let slots = q.ring_slots();
+        assert_eq!(slots, 64);
+        // Sustained churn at that depth must never touch the allocation.
+        for i in 0..1000 {
+            q.take_batch_into(16, &mut scratch);
+            for k in 0..16 {
+                let _ = q.push((64 + i * 16 + k) as f64);
+            }
+            assert_eq!(q.ring_slots(), slots);
+        }
     }
 }

@@ -407,6 +407,76 @@ fn prop_bounded_queue_fifo_and_drop_accounting() {
 }
 
 #[test]
+fn prop_ring_queue_is_a_vecdeque_under_arbitrary_interleavings() {
+    // The PR 4 ring-buffer rewrite of RequestQueue must be behaviorally
+    // indistinguishable from the straightforward VecDeque implementation
+    // it replaced, under arbitrary interleavings of push / take_batch /
+    // shed_expired — contents, FIFO order, ids, and every counter
+    // (drops, deadline sheds, depth high-water mark) included. Small
+    // capacities keep the ring wrapping and regrowing constantly.
+    use std::collections::VecDeque;
+    forall(250, |seed, rng| {
+        let cap = if rng.chance(0.5) { Some(rng.below(10) + 1) } else { None };
+        let mut q = cap.map_or_else(RequestQueue::new, RequestQueue::bounded);
+        let mut model: VecDeque<(u64, f64)> = VecDeque::new();
+        let mut next_id = 0u64;
+        let mut dropped = 0u64;
+        let mut shed_total = 0u64;
+        let mut max_depth = 0usize;
+        let mut clock = 0.0f64;
+        let mut scratch = Vec::new();
+        for _ in 0..250 {
+            match rng.below(4) {
+                // Weighted toward arrivals so depth actually builds.
+                0 | 1 => {
+                    clock += rng.uniform_range(0.0, 0.05);
+                    let got = q.push(clock);
+                    if cap.is_some_and(|c| model.len() >= c) {
+                        assert!(got.is_none(), "seed {seed}: push at cap must drop");
+                        dropped += 1;
+                    } else {
+                        assert_eq!(got, Some(next_id), "seed {seed}: id sequence");
+                        model.push_back((next_id, clock));
+                        next_id += 1;
+                        max_depth = max_depth.max(model.len());
+                    }
+                }
+                2 => {
+                    let k = rng.below(6);
+                    q.take_batch_into(k, &mut scratch);
+                    assert_eq!(scratch.len(), k.min(model.len()), "seed {seed}");
+                    for r in &scratch {
+                        let (id, t) = model.pop_front().expect("model underflow");
+                        assert_eq!((r.id, r.arrival_s), (id, t), "seed {seed}: FIFO broken");
+                    }
+                }
+                _ => {
+                    let deadline_ms = rng.uniform_range(0.0, 60.0);
+                    let now = clock + rng.uniform_range(0.0, 0.03);
+                    let shed = q.shed_expired(now, deadline_ms);
+                    let mut want = 0u64;
+                    while model
+                        .front()
+                        .is_some_and(|&(_, t)| (now - t) * 1000.0 > deadline_ms)
+                    {
+                        model.pop_front();
+                        want += 1;
+                    }
+                    assert_eq!(shed, want, "seed {seed}: shed count");
+                    shed_total += shed;
+                }
+            }
+            assert_eq!(q.len(), model.len(), "seed {seed}");
+            assert_eq!(q.is_empty(), model.is_empty(), "seed {seed}");
+            assert_eq!(q.oldest_arrival(), model.front().map(|&(_, t)| t), "seed {seed}");
+            assert_eq!(q.dropped, dropped, "seed {seed}");
+            assert_eq!(q.dropped_deadline, shed_total, "seed {seed}");
+            assert_eq!(q.max_depth, max_depth, "seed {seed}");
+        }
+    });
+}
+
+#[test]
 fn prop_poisson_rate_concentrates() {
     forall(20, |seed, rng| {
         let rate = rng.uniform_range(50.0, 2000.0);

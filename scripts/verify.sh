@@ -50,7 +50,11 @@ run_step() {
 
 run_step "build" cargo build --release --manifest-path "$manifest"
 run_step "examples" cargo build --release --examples --manifest-path "$manifest"
-run_step "benches" cargo bench --no-run --manifest-path "$manifest"
+run_step "bench-build" cargo bench --no-run --manifest-path "$manifest"
+# Smoke-run the scaling bench (M=8, tiny request budget, no file output)
+# so fleet_scale — and the BENCH_hotpath.json pipeline behind `make
+# bench-json` — can never rot unnoticed.
+run_step "bench-smoke" cargo bench --bench fleet_scale --manifest-path "$manifest" -- --smoke
 run_step "test" cargo test -q --manifest-path "$manifest"
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
 
