@@ -2,15 +2,16 @@
 #
 #   make verify         — tier-1 checks: cargo build --release, examples,
 #                         benches (incl. a fleet_scale smoke run),
-#                         cargo test -q, cargo fmt --check, clippy when
-#                         installed, and golden-fixture drift
-#                         (see scripts/verify.sh)
+#                         cargo test -q, a 2-device cluster CLI smoke
+#                         run, cargo fmt --check, clippy when installed,
+#                         and golden-fixture drift (see scripts/verify.sh)
 #   make test-fixtures  — regenerate the golden outcome snapshots under
 #                         rust/tests/fixtures/ and fail on drift vs git
 #   make bench-json     — run the fleet_scale scaling bench (scheduler
-#                         steps/s + fleet requests/s at M=1..256) and
-#                         write BENCH_hotpath.json at the repo root —
-#                         the tracked perf trajectory (see docs/perf.md)
+#                         steps/s + fleet requests/s at M=1..256 +
+#                         cluster requests/s at D=1..16) and write
+#                         BENCH_hotpath.json at the repo root — the
+#                         tracked perf trajectory (see docs/perf.md)
 
 .PHONY: verify test-fixtures bench-json
 verify:

@@ -14,7 +14,10 @@
 //!   simulated requests per fleet size at the default budget.
 //!
 //! Also times the request-queue hot pair (`push` + `take_batch_into`)
-//! so a regression in the ring buffer itself is visible in isolation.
+//! so a regression in the ring buffer itself is visible in isolation,
+//! and (PR 5) a `cluster_scale` case: end-to-end requests/s of a
+//! multi-device `Cluster` at D in {1, 4, 16} whole devices (2 members
+//! each), which prices the global cross-device event loop.
 //!
 //! Run:  cargo bench --bench fleet_scale             (report only)
 //!       cargo bench --bench fleet_scale -- --json   (also write
@@ -31,6 +34,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use dnnscaler::coordinator::calendar::{EventCalendar, LinearScan, NextEventQueue};
+use dnnscaler::coordinator::cluster::{Cluster, RoundRobin};
 use dnnscaler::coordinator::job::paper_job;
 use dnnscaler::coordinator::session::PolicySpec;
 use dnnscaler::gpusim::{GpuSpec, TESLA_P40};
@@ -70,19 +74,30 @@ struct FleetRun {
     wall_s: f64,
 }
 
+/// Shared scaling-bench workload: the smallest model (so big runs stay
+/// fast) on a synthetic 16 TiB-memory GPU — memory admission is not the
+/// subject under test here, and hundreds of members cannot fit a real
+/// 24 GB card. Used identically by the fleet and cluster cases so the
+/// two stay comparable.
+fn bench_workload() -> (dnnscaler::JobSpec, GpuSpec) {
+    let mut job = *paper_job(1).expect("paper job 1");
+    job.dnn = "mobv1-025";
+    (job, GpuSpec { mem_mb: 16.0 * 1024.0 * 1024.0, ..TESLA_P40 })
+}
+
+/// Rounds per window so `members` members at 8 requests/round over 8
+/// windows serve roughly `request_target` requests (batches kept full
+/// by overload).
+fn rounds_for_target(members: u64, windows: u64, request_target: u64) -> usize {
+    (request_target.div_ceil(members * windows * 8)).max(1) as usize
+}
+
 /// One overloaded open-loop fleet run at `m` members sized to serve
 /// roughly `request_target` requests (full 8-request batches).
 fn run_fleet(m: usize, request_target: u64) -> FleetRun {
-    // Small model so a 256-member fleet stays fast; a synthetic
-    // large-memory GPU so shared-memory admission is not the subject
-    // under test (256 members cannot fit a real 24 GB card).
-    let mut job = *paper_job(1).expect("paper job 1");
-    job.dnn = "mobv1-025";
-    let gpu = GpuSpec { mem_mb: 16.0 * 1024.0 * 1024.0, ..TESLA_P40 };
+    let (job, gpu) = bench_workload();
     let windows = 8usize;
-    let per_round = 8u64; // bs * mtl, kept full by overload
-    let rounds_per_window =
-        (request_target.div_ceil(m as u64 * windows as u64 * per_round)).max(1) as usize;
+    let rounds_per_window = rounds_for_target(m as u64, windows as u64, request_target);
 
     let mut b = Fleet::builder().gpu(gpu).windows(windows).rounds_per_window(rounds_per_window);
     for _ in 0..m {
@@ -111,6 +126,52 @@ fn run_fleet(m: usize, request_target: u64) -> FleetRun {
         steps: m as u64 * windows as u64 * rounds_per_window as u64,
         wall_s,
     }
+}
+
+struct ClusterRun {
+    devices: usize,
+    jobs: usize,
+    requests_served: f64,
+    wall_s: f64,
+}
+
+/// One overloaded open-loop cluster run at `d` whole devices (2 jobs
+/// per device, round-robin placement) sized to serve roughly
+/// `request_target` requests in total — the multi-device analogue of
+/// [`run_fleet`], measuring what the D-device global event loop costs.
+fn run_cluster(d: usize, request_target: u64) -> ClusterRun {
+    let (job, gpu) = bench_workload();
+    let jobs = 2 * d;
+    let windows = 8usize;
+    let rounds_per_window = rounds_for_target(jobs as u64, windows as u64, request_target);
+
+    let mut b = Cluster::builder()
+        .windows(windows)
+        .rounds_per_window(rounds_per_window)
+        .placement(RoundRobin::new());
+    for _ in 0..d {
+        b = b.device(gpu.clone());
+    }
+    for _ in 0..jobs {
+        b = b
+            .job_with_arrivals(
+                &job,
+                PolicySpec::Static { bs: 8, mtl: 1 },
+                ArrivalPattern::uniform(2_000.0),
+            )
+            .queue_capacity(1024);
+    }
+    let cluster = b.build().expect("cluster config");
+    let t0 = Instant::now();
+    let out = cluster.run().expect("cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let requests_served: f64 = out
+        .devices
+        .iter()
+        .flat_map(|dev| dev.fleet.members.iter())
+        .map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>())
+        .sum();
+    ClusterRun { devices: d, jobs, requests_served, wall_s }
 }
 
 /// Steady-state queue hot pair: push + take_batch_into over a warmed
@@ -209,6 +270,33 @@ fn main() {
         }
     }
 
+    // Cluster scaling: requests/s at D devices (2 members per device,
+    // round-robin placement, same overloaded per-member workload).
+    let device_counts: &[usize] = if smoke { &[2] } else { &[1, 4, 16] };
+    let cluster_target: u64 = if smoke { 20_000 } else { 1_000_000 };
+    println!(
+        "\n{:<10} {:>6} {:>14} {:>14} {:>10}",
+        "devices", "jobs", "wall_s", "requests/s", "requests"
+    );
+    println!("{}", "-".repeat(60));
+    let mut per_d: Vec<Json> = Vec::new();
+    for &d in device_counts {
+        let run = run_cluster(d, cluster_target);
+        let requests_per_s = run.requests_served / run.wall_s;
+        println!(
+            "{:<10} {:>6} {:>14.3} {:>14.0} {:>10.0}",
+            run.devices, run.jobs, run.wall_s, requests_per_s, run.requests_served
+        );
+        assert!(run.requests_served > 0.0, "cluster served nothing at D={d}");
+        let mut o = BTreeMap::new();
+        o.insert("devices".into(), num(run.devices as f64));
+        o.insert("jobs".into(), num(run.jobs as f64));
+        o.insert("wall_s".into(), num(run.wall_s));
+        o.insert("requests_served".into(), num(run.requests_served));
+        o.insert("requests_per_s".into(), num(requests_per_s));
+        per_d.push(Json::Obj(o));
+    }
+
     let queue_ops = queue_ops_per_s(if smoke { 50_000 } else { 2_000_000 });
     println!("\nqueue: push x8 + take_batch_into(8)  {queue_ops:>14.0} ops/s");
 
@@ -224,6 +312,7 @@ fn main() {
         root.insert("sched_steps".into(), num(sched_steps as f64));
         root.insert("queue_hot_pair_ops_per_s".into(), num(queue_ops));
         root.insert("per_member_count".into(), Json::Arr(per_m));
+        root.insert("cluster_scale".into(), Json::Arr(per_d));
         let text = dnnscaler::json::write(&Json::Obj(root));
         std::fs::write(&path, text + "\n").expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");

@@ -1,0 +1,1248 @@
+//! `Cluster`: heterogeneous multi-device serving with pluggable job
+//! placement — the scheduling layer *above* one device.
+//!
+//! The paper's DNNScaler tunes batch size or co-location on a single
+//! GPU. Warehouse-scale interactive services run on pools of unequal
+//! devices — big and small GPUs, plus MIG slices rented out as if they
+//! were whole cards — where *which device a job lands on* dominates
+//! anything a per-device knob can recover afterwards (the multi-tenant
+//! GPU inference surveys and D-STACK's spatio-temporal multiplexing
+//! both make this point). This module is that layer:
+//!
+//! * [`DeviceDesc`] — one serving target: a catalogued [`GpuSpec`]
+//!   (`p40`, `p4`, `t4`), its SM capacity as a fraction of the
+//!   calibration P40 (`perf_fraction`), and its memory ceiling. A MIG'd
+//!   GPU is exposed as `slices` *virtual devices*, carved through
+//!   `gpusim::partition` ([`plan_grants`] for the SM split,
+//!   [`plan_mem_ceilings`] for the per-slice memory) — "slice as
+//!   device": members on a slice execute inside its grant and can never
+//!   touch their physical neighbours.
+//! * [`Placement`] — the pluggable assignment of jobs to devices:
+//!   [`RoundRobin`] (order-blind spreading), [`BestFit`] (memory-aware
+//!   bin packing, largest footprint first), and [`InterferenceAware`]
+//!   (per-device SM-demand estimates weighted by arrival burstiness, so
+//!   two bursty SM hogs never share a device while anything better is
+//!   free). Every placer returns a feasible [`Assignment`] or a typed
+//!   [`PlacementError`]; whatever a (custom) placer returns is
+//!   re-validated before serving.
+//! * [`ClusterBuilder`] / [`Cluster`] — jobs carry the same arrival
+//!   processes, queueing knobs, and policies as fleet members; serving
+//!   runs through the *same* per-device engine the fleet uses
+//!   ([`fleet::run_open_devices`] / [`fleet::run_closed_devices`]): per
+//!   device, the PR 1–4 semantics (memory admission, SM contention,
+//!   deadline shedding, zero-allocation steady state) apply unchanged,
+//!   and ONE global virtual-time event calendar interleaves every
+//!   member of every device. A single-device cluster therefore
+//!   reproduces [`Fleet`] byte for byte (golden-fixture enforced in
+//!   `tests/cluster.rs`).
+//! * [`ClusterOutcome`] — per-device [`FleetOutcome`]s plus the
+//!   placement metadata (placer name, assignment). Placement is decided
+//!   once at `build()` — migration-free by design in this PR.
+//!
+//! ```ignore
+//! let out = Cluster::builder()
+//!     .device(TESLA_P40)             // one big card ...
+//!     .mig_device(TESLA_P40, 2)      // ... plus two half-card slices
+//!     .job_with_arrivals(job_a, PolicySpec::QueueAware,
+//!                        ArrivalPattern::bursty(80.0, 4.0, 4.0, 1.0))
+//!     .job_with_arrivals(job_b, PolicySpec::DnnScaler,
+//!                        ArrivalPattern::poisson(30.0))
+//!     .placement(InterferenceAware::new())
+//!     .build()?                      // placement happens HERE (typed errors)
+//!     .run()?;                       // ClusterOutcome
+//! ```
+//!
+//! [`plan_grants`]: crate::gpusim::plan_grants
+//! [`plan_mem_ceilings`]: crate::gpusim::plan_mem_ceilings
+//! [`fleet::run_open_devices`]: super::fleet
+//! [`fleet::run_closed_devices`]: super::fleet
+//! [`Fleet`]: super::fleet::Fleet
+//! [`FleetOutcome`]: super::fleet::FleetOutcome
+
+use crate::device::DeviceError;
+use crate::gpusim::{
+    gpu_by_name, paper_profile, perf, plan_grants, plan_mem_ceilings, GpuSpec, PartitionMode,
+    MIN_GRANT, TESLA_P40,
+};
+use crate::workload::ArrivalPattern;
+
+use super::fleet::{
+    self, arrival_seed, finish_fleet, new_closed_member, new_open_member, validate_arrival_modes,
+    validate_member_cfg, ClosedDevice, DeviceCtx, FleetOutcome, MemberCfg, OpenDevice,
+    Partitioner,
+};
+use super::job::JobSpec;
+use super::session::{ConfigError, PolicySpec, RunConfig};
+
+use std::fmt;
+
+/// One serving target of a cluster: a whole GPU, or one MIG slice of a
+/// GPU exposed as a virtual device.
+#[derive(Debug, Clone)]
+pub struct DeviceDesc {
+    /// Display name, e.g. `p40#0` or `p40#1[2/4]` (slice 2 of 4).
+    pub name: String,
+    /// The physical accelerator this (virtual) device lives on.
+    pub spec: GpuSpec,
+    /// SM capacity as a fraction of the calibration GPU (Tesla P40):
+    /// the grant this device's members execute inside. 1.0 only for a
+    /// whole P40-class card; smaller catalogued GPUs and MIG slices
+    /// hold proportionally less.
+    pub perf_fraction: f64,
+    /// Memory admission ceiling (MB): the whole card's memory, or the
+    /// slice's share of it under MIG.
+    pub mem_mb: f64,
+    /// Index of the physical GPU (devices carved from one card share it).
+    pub physical: usize,
+    /// `Some((slice_index, slices))` when this is a MIG virtual device.
+    pub slice: Option<(u32, u32)>,
+}
+
+/// A parsed CLI device spec: `NAME` or `NAME:migN` with `NAME` one of
+/// the catalogued GPUs (`p40`, `p4`, `t4`).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub gpu: GpuSpec,
+    /// `Some(n)` = expose the card as `n` MIG virtual devices.
+    pub mig: Option<u32>,
+}
+
+impl DeviceSpec {
+    /// Parse one spec token (`p40`, `t4`, `p40:mig4`, ...).
+    pub fn parse(s: &str) -> Option<DeviceSpec> {
+        let s = s.trim();
+        if let Some((name, rest)) = s.split_once(':') {
+            let n = rest.trim().strip_prefix("mig")?;
+            let slices: u32 = n.parse().ok().filter(|&n| n >= 1)?;
+            Some(DeviceSpec { gpu: gpu_by_name(name)?, mig: Some(slices) })
+        } else {
+            Some(DeviceSpec { gpu: gpu_by_name(s)?, mig: None })
+        }
+    }
+
+    /// Parse a comma-separated device list (the CLI's `--devices`).
+    pub fn parse_list(s: &str) -> Result<Vec<DeviceSpec>, ConfigError> {
+        s.split(',')
+            .map(|tok| {
+                DeviceSpec::parse(tok)
+                    .ok_or_else(|| ConfigError::BadDeviceSpec { spec: tok.trim().to_string() })
+            })
+            .collect()
+    }
+}
+
+/// What the placement sees of one job: the spec plus the demand
+/// estimates placement heuristics act on (all derived from the
+/// calibrated device model and the job's arrival process — no serving
+/// has happened yet when placement runs).
+#[derive(Debug, Clone)]
+pub struct PlacementJob {
+    pub spec: JobSpec,
+    /// Bare model footprint at (bs = 1, mtl = 1), MB — the least memory
+    /// the job can ever occupy on its device.
+    pub mem_floor_mb: f64,
+    /// One instance's SM residency on the calibration GPU (0..=1): the
+    /// per-device SM-demand estimate. A `resv2`/`inc-v4`-class model
+    /// (~0.9) fills a device on its own; a mobilenet (~0.1) co-locates
+    /// freely.
+    pub sm_demand: f64,
+    /// Mean offered arrival rate, requests/s (0 for closed-loop jobs).
+    pub mean_rate: f64,
+    /// Peak-to-mean arrival ratio: the `factor` of a bursty pattern,
+    /// 1.0 for smooth (uniform/Poisson/closed) arrivals and for traces
+    /// (whose shape is not summarized here).
+    pub burstiness: f64,
+}
+
+impl PlacementJob {
+    fn from_cfg(m: &MemberCfg<'_>) -> Self {
+        // The builder validated the DNN before placement runs.
+        let p = paper_profile(m.job.dnn).expect("validated DNN");
+        let burstiness = match &m.arrivals {
+            ArrivalPattern::Bursty { factor, .. } => *factor,
+            _ => 1.0,
+        };
+        PlacementJob {
+            spec: m.job,
+            // The same footprint definition MIG admission uses, so
+            // placement feasibility and slice admission cannot disagree.
+            mem_floor_mb: fleet::model_footprint_mb(m.job.dnn),
+            sm_demand: perf::residency(&p, 1),
+            mean_rate: m.arrivals.mean_rate(),
+            burstiness,
+        }
+    }
+
+    /// The interference weight heuristics rank by: SM demand scaled by
+    /// how bursty the offered load is (a bursty SM hog is the worst
+    /// possible neighbour).
+    pub fn interference_weight(&self) -> f64 {
+        self.sm_demand * self.burstiness.max(1.0)
+    }
+}
+
+/// Job-to-device assignment: `device_of[j]` is the device index serving
+/// job `j` (indices into the builder's job and device orders).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    pub device_of: Vec<usize>,
+}
+
+impl Assignment {
+    /// Check feasibility: one device per job, every index in range, and
+    /// no device memory over-committed by the bare model footprints.
+    /// Run on every assignment a [`Placement`] returns — a buggy custom
+    /// placer yields a typed error here, never a mid-serve OOM surprise.
+    pub fn validate(
+        &self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<(), PlacementError> {
+        if self.device_of.len() != jobs.len() {
+            return Err(PlacementError::WrongLength {
+                got: self.device_of.len(),
+                jobs: jobs.len(),
+            });
+        }
+        let mut demand = vec![0.0f64; devices.len()];
+        for (job, &d) in self.device_of.iter().enumerate() {
+            if d >= devices.len() {
+                return Err(PlacementError::DeviceOutOfRange {
+                    job,
+                    device: d,
+                    devices: devices.len(),
+                });
+            }
+            demand[d] += jobs[job].mem_floor_mb;
+        }
+        for (device, (&demand_mb, desc)) in demand.iter().zip(devices).enumerate() {
+            if demand_mb > desc.mem_mb {
+                return Err(PlacementError::MemoryOverCommit {
+                    device,
+                    demand_mb,
+                    capacity_mb: desc.mem_mb,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a placement failed. Every variant is a *configuration* verdict:
+/// placement runs at `build()`, so these surface as
+/// [`ConfigError::Placement`] before any serving happens.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlacementError {
+    /// The cluster has no devices to place onto.
+    NoDevices,
+    /// The assignment does not cover every job exactly once.
+    WrongLength { got: usize, jobs: usize },
+    /// An assignment points at a device that does not exist.
+    DeviceOutOfRange { job: usize, device: usize, devices: usize },
+    /// No device has enough free memory left for this job's footprint.
+    NoDeviceFits { job: usize, need_mb: f64 },
+    /// The finished assignment over-commits a device's memory.
+    MemoryOverCommit { device: usize, demand_mb: f64, capacity_mb: f64 },
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlacementError::NoDevices => write!(f, "no devices to place jobs onto"),
+            PlacementError::WrongLength { got, jobs } => {
+                write!(f, "assignment covers {got} job(s), cluster has {jobs}")
+            }
+            PlacementError::DeviceOutOfRange { job, device, devices } => write!(
+                f,
+                "job {job} assigned to device {device}, but only {devices} device(s) exist"
+            ),
+            PlacementError::NoDeviceFits { job, need_mb } => write!(
+                f,
+                "job {job} (footprint {need_mb:.0} MB) fits no device's remaining memory"
+            ),
+            PlacementError::MemoryOverCommit { device, demand_mb, capacity_mb } => write!(
+                f,
+                "device {device} over-committed: {demand_mb:.0} MB of model footprints on \
+                 {capacity_mb:.0} MB"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// A job-placement strategy: map jobs onto devices once, up front.
+///
+/// Contract: on success the returned [`Assignment`] covers every job
+/// with an in-range device and over-commits no device's memory (the
+/// cluster re-validates via [`Assignment::validate`] regardless); on
+/// failure a typed [`PlacementError`] names the first obstacle.
+/// Placement is pure configuration — it sees demand *estimates*
+/// ([`PlacementJob`]), never serving results.
+pub trait Placement {
+    /// Human-readable name for reports/snapshots.
+    fn name(&self) -> &'static str;
+
+    /// Assign every job a device.
+    fn place(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<Assignment, PlacementError>;
+}
+
+/// Forwarding impl so a boxed placement (e.g. one picked at runtime
+/// from a CLI flag) plugs into [`ClusterBuilder::placement`] directly.
+impl<P: Placement + ?Sized> Placement for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn place(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<Assignment, PlacementError> {
+        (**self).place(jobs, devices)
+    }
+}
+
+/// Order-blind spreading: job `j` lands on device `j mod D`. The
+/// baseline every demand-aware placer must beat — and the one that
+/// co-locates two bursty neighbours whenever the job order happens to
+/// align them.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRobin;
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        RoundRobin
+    }
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn place(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<Assignment, PlacementError> {
+        if devices.is_empty() {
+            return Err(PlacementError::NoDevices);
+        }
+        let a = Assignment {
+            device_of: (0..jobs.len()).map(|j| j % devices.len()).collect(),
+        };
+        // Modulo placement is memory-blind; keep the contract honest by
+        // reporting the infeasibility as a typed error instead of
+        // handing back an assignment that cannot serve.
+        a.validate(jobs, devices)?;
+        Ok(a)
+    }
+}
+
+/// Memory-aware bin packing: jobs in decreasing footprint order, each
+/// onto the device whose remaining memory is *smallest but sufficient*
+/// (classic best-fit-decreasing). Packing tight preserves the largest
+/// contiguous free memory for jobs still to come — the placement that
+/// minimizes "nothing fits" failures, not the one that spreads load
+/// (it happily stacks every job onto one device if that device keeps
+/// fitting them; use [`InterferenceAware`] when SM pressure matters).
+#[derive(Debug, Clone, Default)]
+pub struct BestFit;
+
+impl BestFit {
+    pub fn new() -> Self {
+        BestFit
+    }
+}
+
+impl Placement for BestFit {
+    fn name(&self) -> &'static str {
+        "bestfit"
+    }
+
+    fn place(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<Assignment, PlacementError> {
+        if devices.is_empty() {
+            return Err(PlacementError::NoDevices);
+        }
+        let mut free: Vec<f64> = devices.iter().map(|d| d.mem_mb).collect();
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            jobs[b]
+                .mem_floor_mb
+                .total_cmp(&jobs[a].mem_floor_mb)
+                .then(a.cmp(&b))
+        });
+        let mut device_of = vec![0usize; jobs.len()];
+        for job in order {
+            let need = jobs[job].mem_floor_mb;
+            let best = free
+                .iter()
+                .enumerate()
+                .filter(|(_, &f)| f >= need)
+                .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)));
+            let Some((d, _)) = best else {
+                return Err(PlacementError::NoDeviceFits { job, need_mb: need });
+            };
+            free[d] -= need;
+            device_of[job] = d;
+        }
+        let a = Assignment { device_of };
+        a.validate(jobs, devices)?;
+        Ok(a)
+    }
+}
+
+/// Interference-aware greedy placement: jobs in decreasing
+/// [`PlacementJob::interference_weight`] order (bursty SM hogs first),
+/// each onto the memory-feasible device with the lowest projected SM
+/// pressure — the sum of already-placed interference weights divided by
+/// the device's capacity fraction, with an extra penalty for pairing
+/// two bursty jobs. The effect the acceptance test pins down: two
+/// bursty neighbours never share a device while a quieter one is free.
+#[derive(Debug, Clone)]
+pub struct InterferenceAware {
+    /// Extra pressure charged for co-locating a bursty job (factor > 1)
+    /// with a device that already hosts one.
+    bursty_penalty: f64,
+}
+
+impl InterferenceAware {
+    pub fn new() -> Self {
+        InterferenceAware { bursty_penalty: 1.0 }
+    }
+}
+
+impl Default for InterferenceAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Placement for InterferenceAware {
+    fn name(&self) -> &'static str {
+        "interference"
+    }
+
+    fn place(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+    ) -> Result<Assignment, PlacementError> {
+        if devices.is_empty() {
+            return Err(PlacementError::NoDevices);
+        }
+        let mut free: Vec<f64> = devices.iter().map(|d| d.mem_mb).collect();
+        let mut pressure: Vec<f64> = vec![0.0; devices.len()];
+        let mut hosts_bursty: Vec<bool> = vec![false; devices.len()];
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            jobs[b]
+                .interference_weight()
+                .total_cmp(&jobs[a].interference_weight())
+                .then(a.cmp(&b))
+        });
+        let mut device_of = vec![0usize; jobs.len()];
+        for job in order {
+            let j = &jobs[job];
+            let bursty = j.burstiness > 1.0;
+            let best = (0..devices.len())
+                .filter(|&d| free[d] >= j.mem_floor_mb)
+                .min_by(|&a, &b| {
+                    let cost = |d: usize| {
+                        let mut c = (pressure[d] + j.interference_weight())
+                            / devices[d].perf_fraction.max(MIN_GRANT);
+                        if bursty && hosts_bursty[d] {
+                            c += self.bursty_penalty;
+                        }
+                        c
+                    };
+                    cost(a).total_cmp(&cost(b)).then(a.cmp(&b))
+                });
+            let Some(d) = best else {
+                return Err(PlacementError::NoDeviceFits { job, need_mb: j.mem_floor_mb });
+            };
+            free[d] -= j.mem_floor_mb;
+            pressure[d] += j.interference_weight();
+            hosts_bursty[d] |= bursty;
+            device_of[job] = d;
+        }
+        let a = Assignment { device_of };
+        a.validate(jobs, devices)?;
+        Ok(a)
+    }
+}
+
+/// Builder for [`Cluster`]. Devices and jobs accumulate in order; jobs
+/// take the same per-member knobs as [`super::fleet::FleetBuilder`]
+/// (applying to the most recently added job). Placement runs at
+/// [`ClusterBuilder::build`], so every placement problem is a typed
+/// [`ConfigError`] before any serving starts.
+pub struct ClusterBuilder<'a> {
+    cfg: RunConfig,
+    seed: u64,
+    devices: Vec<DeviceDesc>,
+    n_physical: usize,
+    jobs: Vec<MemberCfg<'a>>,
+    placement: Box<dyn Placement + 'a>,
+    rate_list: Option<Vec<f64>>,
+    knob_before_job: Option<&'static str>,
+    device_error: Option<ConfigError>,
+}
+
+impl<'a> ClusterBuilder<'a> {
+    fn new() -> Self {
+        ClusterBuilder {
+            cfg: RunConfig::default(),
+            seed: 42,
+            devices: Vec::new(),
+            n_physical: 0,
+            jobs: Vec::new(),
+            placement: Box::new(RoundRobin::new()),
+            rate_list: None,
+            knob_before_job: None,
+            device_error: None,
+        }
+    }
+
+    /// Replace the shared serving config.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn windows(mut self, windows: usize) -> Self {
+        self.cfg.windows = windows;
+        self
+    }
+
+    pub fn rounds_per_window(mut self, rounds: usize) -> Self {
+        self.cfg.rounds_per_window = rounds;
+        self
+    }
+
+    /// Seed for member simulators and arrival streams. Job `j` derives
+    /// its streams from `seed + j` regardless of where placement puts
+    /// it, so two placements of the same cluster face *identical*
+    /// per-job load and noise — placements are directly comparable.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Add one whole GPU to the pool.
+    pub fn device(mut self, spec: GpuSpec) -> Self {
+        let physical = self.n_physical;
+        self.n_physical += 1;
+        let fraction = whole_device_fraction(&spec);
+        self.devices.push(DeviceDesc {
+            name: format!("{}#{physical}", short_name(&spec)),
+            perf_fraction: fraction,
+            mem_mb: spec.mem_mb,
+            spec,
+            physical,
+            slice: None,
+        });
+        self
+    }
+
+    /// Add one GPU carved into `slices` MIG virtual devices: the SM
+    /// split comes from [`plan_grants`] (equal whole-slice bundles) and
+    /// each slice's memory ceiling from [`plan_mem_ceilings`] — slice
+    /// as device, with both resources partitioned.
+    pub fn mig_device(mut self, spec: GpuSpec, slices: u32) -> Self {
+        let physical = self.n_physical;
+        self.n_physical += 1;
+        let mode = PartitionMode::MigSlices { slices };
+        let grants = match plan_grants(mode, &vec![None; slices as usize]) {
+            Ok(g) => g,
+            Err(e) => {
+                if self.device_error.is_none() {
+                    self.device_error = Some(ConfigError::BadPartition(e));
+                }
+                return self;
+            }
+        };
+        let ceilings = plan_mem_ceilings(mode, &grants, spec.mem_mb);
+        let base = whole_device_fraction(&spec);
+        for (k, (&g, &mem)) in grants.iter().zip(&ceilings).enumerate() {
+            let fraction = base * g;
+            // A slice of a smaller-than-P40 card can undercut MIN_GRANT
+            // even when the slice count alone is fine (e.g. p4:mig32).
+            if fraction < MIN_GRANT {
+                if self.device_error.is_none() {
+                    self.device_error = Some(ConfigError::SliceTooSmall {
+                        gpu: spec.name.to_string(),
+                        slices,
+                        fraction,
+                    });
+                }
+                return self;
+            }
+            self.devices.push(DeviceDesc {
+                name: format!("{}#{physical}[{}/{slices}]", short_name(&spec), k + 1),
+                spec: spec.clone(),
+                perf_fraction: fraction,
+                mem_mb: mem,
+                physical,
+                slice: Some((k as u32 + 1, slices)),
+            });
+        }
+        self
+    }
+
+    /// Add a device from a parsed CLI spec (`p40`, `t4:mig2`, ...).
+    pub fn device_spec(self, spec: &DeviceSpec) -> Self {
+        match spec.mig {
+            None => self.device(spec.gpu.clone()),
+            Some(slices) => self.mig_device(spec.gpu.clone(), slices),
+        }
+    }
+
+    /// The placement strategy (default: [`RoundRobin`]).
+    pub fn placement(mut self, placement: impl Placement + 'a) -> Self {
+        self.placement = Box::new(placement);
+        self
+    }
+
+    /// Add a closed-loop job with its serving policy.
+    pub fn job(self, job: &JobSpec, policy: PolicySpec<'a>) -> Self {
+        self.job_with_arrivals(job, policy, ArrivalPattern::Closed)
+    }
+
+    /// Add a job with its own open-loop arrival process. Follow with
+    /// [`ClusterBuilder::queue_capacity`] /
+    /// [`ClusterBuilder::batch_timeout_ms`] /
+    /// [`ClusterBuilder::shed_deadline`] to tune that job's queueing.
+    pub fn job_with_arrivals(
+        mut self,
+        job: &JobSpec,
+        policy: PolicySpec<'a>,
+        arrivals: ArrivalPattern,
+    ) -> Self {
+        self.jobs.push(MemberCfg::new(job, policy, arrivals));
+        self
+    }
+
+    /// Give every job a Poisson arrival process: one rate (broadcast)
+    /// or exactly one per job, in job order. Any other count is the
+    /// same typed [`ConfigError::ListCountMismatch`] the fleet's
+    /// reservation list gets — a list longer than the job count is
+    /// refused, never silently truncated — and combining the list with
+    /// jobs that already carry their own open-loop arrival process is a
+    /// typed [`ConfigError::ListOverridesMemberKnob`], not a silent
+    /// overwrite.
+    pub fn poisson_rates(mut self, rates: &[f64]) -> Self {
+        self.rate_list = Some(rates.to_vec());
+        self
+    }
+
+    fn last_job(&mut self, knob: &'static str) -> Option<&mut MemberCfg<'a>> {
+        if self.jobs.is_empty() && self.knob_before_job.is_none() {
+            self.knob_before_job = Some(knob);
+        }
+        self.jobs.last_mut()
+    }
+
+    /// Bound the most recently added job's request queue.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        if let Some(m) = self.last_job("queue_capacity") {
+            m.queue_capacity = Some(capacity);
+        }
+        self
+    }
+
+    /// Batch-formation timeout for the most recently added job.
+    pub fn batch_timeout_ms(mut self, timeout_ms: f64) -> Self {
+        if let Some(m) = self.last_job("batch_timeout_ms") {
+            m.batch_timeout_ms = Some(timeout_ms);
+        }
+        self
+    }
+
+    /// SLO deadline shedding for the most recently added job.
+    pub fn shed_deadline(mut self, enabled: bool) -> Self {
+        if let Some(m) = self.last_job("shed_deadline") {
+            m.shed_deadline = enabled;
+        }
+        self
+    }
+
+    /// Validate the configuration, run the placement, and assemble the
+    /// cluster. All placement failures surface here as
+    /// [`ConfigError::Placement`].
+    pub fn build(mut self) -> Result<Cluster<'a>, ConfigError> {
+        if let Some(e) = self.device_error.take() {
+            return Err(e);
+        }
+        if let Some(knob) = self.knob_before_job {
+            return Err(ConfigError::MemberKnobBeforeJob { knob });
+        }
+        if self.cfg.windows == 0 {
+            return Err(ConfigError::ZeroWindows);
+        }
+        if self.cfg.rounds_per_window == 0 {
+            return Err(ConfigError::ZeroRounds);
+        }
+        if self.cfg.max_bs == 0 || self.cfg.max_mtl == 0 {
+            return Err(ConfigError::ZeroKnobCeiling {
+                max_bs: self.cfg.max_bs,
+                max_mtl: self.cfg.max_mtl,
+            });
+        }
+        if self.devices.is_empty() {
+            return Err(ConfigError::NoClusterDevices);
+        }
+        if self.jobs.is_empty() {
+            return Err(ConfigError::NoFleetMembers);
+        }
+        // A rate list maps onto the jobs through the same expansion
+        // policy as the fleet's reservation list (broadcast one value or
+        // match one-per-job; other counts and conflicts with jobs that
+        // already carry open-loop arrivals are typed errors).
+        if let Some(list) = self.rate_list.take() {
+            let expanded = fleet::expand_member_list(
+                "poisson_rates",
+                "job_with_arrivals",
+                list,
+                self.jobs.len(),
+                self.jobs.iter().any(|m| !m.arrivals.is_closed()),
+            )?;
+            for (m, rate) in self.jobs.iter_mut().zip(expanded) {
+                m.arrivals = ArrivalPattern::Poisson { rate };
+            }
+        }
+        for m in &self.jobs {
+            validate_member_cfg(m)?;
+        }
+        validate_arrival_modes(&self.jobs)?;
+        // Placement: decided once, re-validated whatever the placer
+        // claims, and recorded in the outcome.
+        let pjobs: Vec<PlacementJob> = self.jobs.iter().map(PlacementJob::from_cfg).collect();
+        let assignment = self
+            .placement
+            .place(&pjobs, &self.devices)
+            .map_err(ConfigError::Placement)?;
+        assignment.validate(&pjobs, &self.devices).map_err(ConfigError::Placement)?;
+        Ok(Cluster {
+            cfg: self.cfg,
+            seed: self.seed,
+            devices: self.devices,
+            jobs: self.jobs,
+            placement: self.placement.name().to_string(),
+            assignment,
+        })
+    }
+}
+
+/// Short CLI-ish name for a catalogued spec (`Tesla P40` -> `p40`).
+fn short_name(spec: &GpuSpec) -> String {
+    spec.name
+        .rsplit(' ')
+        .next()
+        .unwrap_or(spec.name)
+        .to_ascii_lowercase()
+}
+
+/// A device's SM capacity relative to the calibration GPU. The perf
+/// model is calibrated on the P40, so a smaller catalogued card is
+/// modelled as a fractional-capacity P40 (members execute inside the
+/// fraction as a grant); anything at least as fast serves as a whole
+/// calibration device.
+fn whole_device_fraction(spec: &GpuSpec) -> f64 {
+    (spec.peak_tflops / TESLA_P40.peak_tflops).min(1.0)
+}
+
+/// One cluster device's serving context: its own memory ceiling and SM
+/// fraction, members time-sharing within it (single source for both the
+/// open- and closed-loop branches of [`Cluster::run`]).
+fn timeshare_ctx<'x>(desc: &DeviceDesc, members: usize, cfg: &RunConfig) -> DeviceCtx<'x> {
+    DeviceCtx::new(
+        desc.mem_mb,
+        desc.perf_fraction,
+        Partitioner::timeshare(members),
+        cfg.windows,
+    )
+}
+
+/// Fold finished per-device serving states into [`DeviceOutcome`]s:
+/// `split` extracts each device's context and member outcomes (the only
+/// part that differs between the open and closed paths).
+fn fold_device_outcomes<'a, T>(
+    devices: &[DeviceDesc],
+    groups: &[Vec<usize>],
+    devs: Vec<T>,
+    split: impl Fn(T) -> (DeviceCtx<'a>, Vec<super::session::JobOutcome>),
+) -> Vec<DeviceOutcome> {
+    devices
+        .iter()
+        .zip(groups)
+        .zip(devs)
+        .map(|((desc, group), dev)| {
+            let (ctx, members) = split(dev);
+            DeviceOutcome {
+                device: desc.clone(),
+                jobs: group.clone(),
+                fleet: finish_fleet(members, ctx, PartitionMode::TimeShare),
+            }
+        })
+        .collect()
+}
+
+/// A validated, placed cluster, ready to run.
+pub struct Cluster<'a> {
+    cfg: RunConfig,
+    seed: u64,
+    devices: Vec<DeviceDesc>,
+    jobs: Vec<MemberCfg<'a>>,
+    placement: String,
+    assignment: Assignment,
+}
+
+/// One device's slice of a finished cluster run.
+#[derive(Debug, Clone)]
+pub struct DeviceOutcome {
+    pub device: DeviceDesc,
+    /// Global job indices served on this device, in member order.
+    pub jobs: Vec<usize>,
+    /// The device's serving result — the same shape a single-device
+    /// [`super::fleet::Fleet`] run produces (per-member outcomes,
+    /// admission/contention telemetry).
+    pub fleet: FleetOutcome,
+}
+
+/// Result of one cluster run: per-device fleet outcomes plus the
+/// placement metadata that produced them.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub devices: Vec<DeviceOutcome>,
+    /// Name of the placement strategy that assigned the jobs.
+    pub placement: String,
+    /// Device index per job, in job order.
+    pub assignment: Vec<usize>,
+    /// Sum of device total throughputs (inferences/s).
+    pub total_throughput: f64,
+    /// Sum of device total goodputs (SLO-met inferences/s).
+    pub total_goodput: f64,
+}
+
+impl<'a> Cluster<'a> {
+    pub fn builder() -> ClusterBuilder<'a> {
+        ClusterBuilder::new()
+    }
+
+    /// The placement decided at build time (device index per job).
+    pub fn assignment(&self) -> &Assignment {
+        &self.assignment
+    }
+
+    /// The devices jobs were placed onto.
+    pub fn devices(&self) -> &[DeviceDesc] {
+        &self.devices
+    }
+
+    /// Serve every job to completion on its assigned device, all
+    /// devices interleaved in one global virtual-time loop.
+    pub fn run(self) -> Result<ClusterOutcome, DeviceError> {
+        let Cluster { cfg, seed, devices, jobs, placement, assignment } = self;
+        let open = !jobs.iter().all(|m| m.arrivals.is_closed());
+        // Group global job indices per device, preserving job order.
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); devices.len()];
+        for (j, &d) in assignment.device_of.iter().enumerate() {
+            groups[d].push(j);
+        }
+        // Job j's simulator/arrival seeds derive from its GLOBAL index,
+        // exactly as fleet member j's would — a single-device cluster is
+        // bit-identical to the fleet, and re-placing jobs never changes
+        // the load they offer.
+        let mut cfgs: Vec<Option<MemberCfg<'a>>> = jobs.into_iter().map(Some).collect();
+
+        let outcomes: Vec<DeviceOutcome> = if open {
+            let mut devs: Vec<OpenDevice<'_>> = Vec::with_capacity(devices.len());
+            for (desc, group) in devices.iter().zip(&groups) {
+                let mut members = Vec::with_capacity(group.len());
+                for &j in group {
+                    let m = cfgs[j].take().expect("job placed once");
+                    members.push(new_open_member(
+                        m,
+                        &cfg,
+                        seed + j as u64,
+                        arrival_seed(seed, j),
+                    )?);
+                }
+                devs.push(OpenDevice::new(timeshare_ctx(desc, group.len(), &cfg), members));
+            }
+            fleet::run_open_devices(&cfg, &mut devs)?;
+            fold_device_outcomes(&devices, &groups, devs, |dev| {
+                (dev.ctx, dev.members.into_iter().map(fleet::open_member_outcome).collect())
+            })
+        } else {
+            let mut devs: Vec<ClosedDevice<'_>> = Vec::with_capacity(devices.len());
+            for (desc, group) in devices.iter().zip(&groups) {
+                let mut members = Vec::with_capacity(group.len());
+                for &j in group {
+                    let m = cfgs[j].take().expect("job placed once");
+                    members.push(new_closed_member(m, &cfg, seed + j as u64)?);
+                }
+                devs.push(ClosedDevice {
+                    ctx: timeshare_ctx(desc, group.len(), &cfg),
+                    members,
+                });
+            }
+            fleet::run_closed_devices(&cfg, &mut devs)?;
+            fold_device_outcomes(&devices, &groups, devs, |dev| {
+                (dev.ctx, dev.members.into_iter().map(fleet::closed_member_outcome).collect())
+            })
+        };
+        let total_throughput = outcomes.iter().map(|d| d.fleet.total_throughput).sum();
+        let total_goodput = outcomes.iter().map(|d| d.fleet.total_goodput).sum();
+        Ok(ClusterOutcome {
+            devices: outcomes,
+            placement,
+            assignment: assignment.device_of,
+            total_throughput,
+            total_goodput,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::paper_job;
+    use crate::gpusim::{TESLA_P4, TESLA_T4};
+
+    fn pj(dnn: &'static str, burstiness: f64, mem: f64, demand: f64) -> PlacementJob {
+        let mut spec = *paper_job(1).unwrap();
+        spec.dnn = dnn;
+        PlacementJob {
+            spec,
+            mem_floor_mb: mem,
+            sm_demand: demand,
+            mean_rate: 50.0,
+            burstiness,
+        }
+    }
+
+    fn whole(mem_mb: f64) -> DeviceDesc {
+        DeviceDesc {
+            name: "test".into(),
+            spec: TESLA_P40,
+            perf_fraction: 1.0,
+            mem_mb,
+            physical: 0,
+            slice: None,
+        }
+    }
+
+    #[test]
+    fn device_spec_parsing() {
+        let d = DeviceSpec::parse("p40").unwrap();
+        assert_eq!(d.gpu.name, "Tesla P40");
+        assert_eq!(d.mig, None);
+        let d = DeviceSpec::parse(" t4:mig2 ").unwrap();
+        assert_eq!(d.gpu.name, "Tesla T4");
+        assert_eq!(d.mig, Some(2));
+        assert!(DeviceSpec::parse("p40:mig0").is_none());
+        assert!(DeviceSpec::parse("h100").is_none());
+        assert!(DeviceSpec::parse("p40:nvlink").is_none());
+        let list = DeviceSpec::parse_list("p40,p4,t4:mig2").unwrap();
+        assert_eq!(list.len(), 3);
+        assert!(matches!(
+            DeviceSpec::parse_list("p40,bogus").unwrap_err(),
+            ConfigError::BadDeviceSpec { spec } if spec == "bogus"
+        ));
+    }
+
+    #[test]
+    fn mig_device_splits_sm_and_memory() {
+        let b = Cluster::builder().mig_device(TESLA_P40, 4).device(TESLA_P4);
+        assert_eq!(b.devices.len(), 5);
+        for k in 0..4 {
+            let d = &b.devices[k];
+            assert_eq!(d.physical, 0);
+            assert_eq!(d.slice, Some((k as u32 + 1, 4)));
+            assert!((d.perf_fraction - 0.25).abs() < 1e-9, "{}", d.perf_fraction);
+            assert!((d.mem_mb - TESLA_P40.mem_mb / 4.0).abs() < 1e-6);
+        }
+        let p4 = &b.devices[4];
+        assert_eq!(p4.physical, 1);
+        assert_eq!(p4.slice, None);
+        assert!((p4.perf_fraction - 5.5 / 11.76).abs() < 1e-9);
+        assert_eq!(p4.mem_mb, TESLA_P4.mem_mb);
+        assert!(p4.name.starts_with("p4#1"), "{}", p4.name);
+    }
+
+    #[test]
+    fn builder_rejects_missing_parts_and_bad_lists() {
+        let job = paper_job(1).unwrap();
+        assert_eq!(
+            Cluster::builder().job(job, PolicySpec::Clipper).build().err(),
+            Some(ConfigError::NoClusterDevices)
+        );
+        assert_eq!(
+            Cluster::builder().device(TESLA_P40).build().err(),
+            Some(ConfigError::NoFleetMembers)
+        );
+        assert_eq!(
+            Cluster::builder().queue_capacity(4).device(TESLA_P40).build().err(),
+            Some(ConfigError::MemberKnobBeforeJob { knob: "queue_capacity" })
+        );
+        // The PR 5 bugfix check, cluster side: a rate list longer than
+        // the job count is typed, not truncated.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job(job, PolicySpec::Clipper)
+                .poisson_rates(&[10.0, 20.0, 30.0])
+                .build()
+                .err(),
+            Some(ConfigError::ListCountMismatch {
+                knob: "poisson_rates",
+                got: 3,
+                members: 1
+            })
+        );
+        // Rates must still be valid arrival rates.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job(job, PolicySpec::Clipper)
+                .poisson_rates(&[0.0])
+                .build()
+                .err(),
+            Some(ConfigError::BadArrivalRate { rate: 0.0 })
+        );
+        // Queueing knobs still require open-loop arrivals.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job(job, PolicySpec::Clipper)
+                .shed_deadline(true)
+                .build()
+                .err(),
+            Some(ConfigError::ShedRequiresOpenLoop)
+        );
+        // A MIG split of a small card whose slices undercut MIN_GRANT
+        // is named truthfully (not blamed on a reservation nobody set).
+        assert!(matches!(
+            Cluster::builder()
+                .mig_device(TESLA_P4, 32)
+                .job(job, PolicySpec::Clipper)
+                .build()
+                .err(),
+            Some(ConfigError::SliceTooSmall { slices: 32, .. })
+        ));
+        // The rate list refuses to silently overwrite a job's own
+        // open-loop arrival process.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job_with_arrivals(
+                    job,
+                    PolicySpec::Clipper,
+                    ArrivalPattern::bursty(20.0, 2.0, 4.0, 1.0)
+                )
+                .poisson_rates(&[10.0])
+                .build()
+                .err(),
+            Some(ConfigError::ListOverridesMemberKnob {
+                list: "poisson_rates",
+                knob: "job_with_arrivals"
+            })
+        );
+    }
+
+    #[test]
+    fn round_robin_spreads_and_reports_infeasibility() {
+        let jobs = vec![pj("inc-v1", 1.0, 700.0, 0.4); 5];
+        let devices = vec![whole(24_000.0), whole(24_000.0)];
+        let mut rr = RoundRobin::new();
+        let a = rr.place(&jobs, &devices).unwrap();
+        assert_eq!(a.device_of, vec![0, 1, 0, 1, 0]);
+        // Memory-blind modulo placement must still refuse infeasible
+        // outcomes with a typed error.
+        let tight = vec![whole(1_000.0), whole(24_000.0)];
+        assert!(matches!(
+            rr.place(&jobs, &tight).unwrap_err(),
+            PlacementError::MemoryOverCommit { device: 0, .. }
+        ));
+        assert_eq!(rr.place(&jobs, &[]).unwrap_err(), PlacementError::NoDevices);
+    }
+
+    #[test]
+    fn bestfit_packs_by_memory() {
+        // A 2 GB model must land on the big-memory card; the small
+        // device keeps the small models.
+        let jobs = vec![
+            pj("mobv1-025", 1.0, 400.0, 0.1),
+            pj("nas-large", 1.0, 2022.0, 0.9),
+            pj("mobv1-05", 1.0, 450.0, 0.2),
+        ];
+        let devices = vec![whole(1_000.0), whole(24_000.0)];
+        let a = BestFit::new().place(&jobs, &devices).unwrap();
+        assert_eq!(a.device_of[1], 1, "big model must go to the big device");
+        a.validate(&jobs, &devices).unwrap();
+        // Nothing fits a cluster of tiny devices: typed error.
+        let tiny = vec![whole(100.0)];
+        assert!(matches!(
+            BestFit::new().place(&jobs, &tiny).unwrap_err(),
+            PlacementError::NoDeviceFits { .. }
+        ));
+    }
+
+    #[test]
+    fn interference_aware_separates_bursty_hogs() {
+        // Two bursty SM hogs + two quiet small jobs, ordered so round
+        // robin would co-locate the hogs on device 0.
+        let jobs = vec![
+            pj("inc-v4", 4.0, 1418.0, 0.95),
+            pj("mobv1-025", 1.0, 400.0, 0.08),
+            pj("inc-v4", 4.0, 1418.0, 0.95),
+            pj("mobv1-025", 1.0, 400.0, 0.08),
+        ];
+        let devices = vec![whole(24_000.0), whole(24_000.0)];
+        let rr = RoundRobin::new().place(&jobs, &devices).unwrap();
+        assert_eq!(rr.device_of[0], rr.device_of[2], "RR co-locates the hogs");
+        let ia = InterferenceAware::new().place(&jobs, &devices).unwrap();
+        assert_ne!(
+            ia.device_of[0], ia.device_of[2],
+            "interference-aware placement must separate the bursty hogs: {:?}",
+            ia.device_of
+        );
+        ia.validate(&jobs, &devices).unwrap();
+    }
+
+    #[test]
+    fn assignment_validation_catches_bad_placers() {
+        let jobs = vec![pj("inc-v1", 1.0, 700.0, 0.4); 2];
+        let devices = vec![whole(24_000.0)];
+        let short = Assignment { device_of: vec![0] };
+        assert!(matches!(
+            short.validate(&jobs, &devices).unwrap_err(),
+            PlacementError::WrongLength { got: 1, jobs: 2 }
+        ));
+        let oob = Assignment { device_of: vec![0, 3] };
+        assert!(matches!(
+            oob.validate(&jobs, &devices).unwrap_err(),
+            PlacementError::DeviceOutOfRange { job: 1, device: 3, devices: 1 }
+        ));
+        let ok = Assignment { device_of: vec![0, 0] };
+        ok.validate(&jobs, &devices).unwrap();
+    }
+
+    #[test]
+    fn placement_errors_name_the_problem() {
+        assert!(PlacementError::NoDevices.to_string().contains("no devices"));
+        assert!(PlacementError::WrongLength { got: 1, jobs: 3 }.to_string().contains("3"));
+        assert!(PlacementError::DeviceOutOfRange { job: 0, device: 9, devices: 2 }
+            .to_string()
+            .contains("9"));
+        assert!(PlacementError::NoDeviceFits { job: 2, need_mb: 2022.0 }
+            .to_string()
+            .contains("2022"));
+        assert!(PlacementError::MemoryOverCommit {
+            device: 1,
+            demand_mb: 9000.0,
+            capacity_mb: 8192.0
+        }
+        .to_string()
+        .contains("8192"));
+    }
+
+    #[test]
+    fn heterogeneous_cluster_serves_on_every_device() {
+        // 1 whole T4 + a P40 in two MIG halves, three open-loop jobs:
+        // every device with members must serve, and per-job load must
+        // be identical however the totals split.
+        let out = Cluster::builder()
+            .device(TESLA_T4)
+            .mig_device(TESLA_P40, 2)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(40.0),
+            )
+            .job_with_arrivals(
+                paper_job(5).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(30.0),
+            )
+            .job_with_arrivals(
+                paper_job(4).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(20.0),
+            )
+            .placement(BestFit::new())
+            .windows(8)
+            .rounds_per_window(10)
+            .seed(5)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.devices.len(), 3);
+        assert_eq!(out.assignment.len(), 3);
+        let served: usize = out.devices.iter().map(|d| d.jobs.len()).sum();
+        assert_eq!(served, 3, "every job served exactly once");
+        assert!(out.total_throughput > 0.0);
+        for dev in &out.devices {
+            assert_eq!(dev.fleet.members.len(), dev.jobs.len());
+            for m in &dev.fleet.members {
+                assert!(m.throughput > 0.0, "{} on {}: zero throughput", m.dnn, dev.device.name);
+            }
+            // A device's admission capacity is its OWN ceiling (a MIG
+            // half exposes half the card).
+            assert_eq!(dev.fleet.mem_capacity_mb, dev.device.mem_mb);
+            assert!(dev.fleet.peak_mem_mb <= dev.fleet.mem_capacity_mb + 1e-9);
+        }
+    }
+
+    #[test]
+    fn slice_devices_serve_slower_than_whole_devices() {
+        // The same job at the same static point and offered load: a
+        // half-card MIG slice must deliver a worse (or equal) sojourn
+        // tail than a whole card, never a better one — slice-as-device
+        // really executes inside the grant.
+        let run = |mig: bool| {
+            let b = Cluster::builder();
+            let b = if mig { b.mig_device(TESLA_P40, 2) } else { b.device(TESLA_P40) };
+            b.job_with_arrivals(
+                paper_job(3).unwrap(),
+                PolicySpec::Static { bs: 8, mtl: 1 },
+                ArrivalPattern::poisson(60.0),
+            )
+            .windows(8)
+            .rounds_per_window(12)
+            .seed(9)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+        };
+        let whole = run(false);
+        let sliced = run(true);
+        let wj = &whole.devices[0].fleet.members[0];
+        let sj = sliced
+            .devices
+            .iter()
+            .find(|d| !d.fleet.members.is_empty())
+            .map(|d| &d.fleet.members[0])
+            .unwrap();
+        assert!(
+            sj.p95_ms >= wj.p95_ms,
+            "half-card p95 {:.2} ms beat whole-card {:.2} ms",
+            sj.p95_ms,
+            wj.p95_ms
+        );
+        assert!(whole.total_throughput > 0.0 && sliced.total_throughput > 0.0);
+    }
+}

@@ -45,8 +45,8 @@ pub trait Controller {
     fn observe_window(&mut self, p95_ms: f64, slo_ms: f64) -> Decision;
 }
 
-/// Forwarding impl so `&mut dyn Controller` (the legacy `JobRunner::serve`
-/// argument) plugs into the `AsPolicy` adapter without reboxing.
+/// Forwarding impl so a `&mut dyn Controller` borrow plugs into the
+/// `AsPolicy` adapter without reboxing.
 impl<C: Controller + ?Sized> Controller for &mut C {
     fn name(&self) -> &'static str {
         (**self).name()

@@ -66,6 +66,12 @@ pub(crate) enum SmShare {
     /// Spatial partition: execute inside an SM capacity grant (MPS
     /// fraction / MIG slice bundle); no cross-member inflation at all.
     Grant(f64),
+    /// Slice-as-device (`coordinator::cluster`): execute inside the
+    /// virtual device's SM grant *and* inflate by the time-sharing
+    /// factor of the members co-located on that same slice. `grant = 1,
+    /// factor = f` is byte-identical to `Inflate(f)` (a full grant
+    /// consumes the device model and its noise stream identically).
+    GrantInflate { grant: f64, factor: f64 },
 }
 
 /// Peekable arrival stream over an [`ArrivalGenerator`], prefetching
@@ -254,6 +260,10 @@ impl OpenLoop {
             SmShare::Grant(grant) => {
                 let s = device.execute_batch_granted(eff_bs, mtl, grant)?;
                 (s, s.latency_ms)
+            }
+            SmShare::GrantInflate { grant, factor } => {
+                let s = device.execute_batch_granted(eff_bs, mtl, grant)?;
+                (s, s.latency_ms * factor)
             }
         };
         self.now_s += lat_ms / 1000.0;

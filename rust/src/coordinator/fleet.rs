@@ -1,15 +1,19 @@
 //! `Fleet`: multiple jobs served concurrently on one shared-capacity GPU.
 //!
-//! The paper (and the legacy `JobRunner`) serve one job per device; real
-//! clusters co-locate *different* models on one accelerator ("No DNN Left
-//! Behind"-style multi-tenancy). `Fleet` expresses that scenario on the
-//! simulated Tesla P40:
+//! The paper (and the legacy closed-loop runner) serve one job per
+//! device; real clusters co-locate *different* models on one accelerator
+//! ("No DNN Left Behind"-style multi-tenancy). `Fleet` expresses that
+//! scenario on the simulated Tesla P40:
 //!
 //! * **Shared memory** — before every control window the members'
 //!   requested operating points pass an admission check against the
 //!   GPU's memory capacity; the greediest member is shrunk (batch halved,
 //!   then instances shed) until the combined demand fits, so the fleet
-//!   never OOMs.
+//!   never OOMs. Under `MigSlices` each member additionally owns only its
+//!   slice bundle's share of the memory ([`plan_mem_ceilings`]): a model
+//!   whose footprint cannot fit its slice is refused at build time
+//!   (typed [`PartitionError::MemoryExceeded`]), and per window the
+//!   member's operating point is clamped down to its slice ceiling.
 //! * **Shared SMs** — how the members share compute is set by the
 //!   fleet's [`PartitionMode`]:
 //!   - `TimeShare` (default, the paper's regime): the members' combined
@@ -51,12 +55,31 @@
 //! members profile themselves alone at fleet start, as the paper's
 //! profiler would.
 //!
+//! ## One serving core, any number of devices
+//!
+//! Since PR 5 the window/event machinery here is written over a *slice
+//! of devices*: [`run_closed_devices`] / [`run_open_devices`] drive one
+//! [`DeviceCtx`] (admission capacity + SM capacity fraction +
+//! partitioner + telemetry) per device, with ONE global
+//! [`EventCalendar`] interleaving every member of every device by
+//! next-event time. `Fleet::run` is the single-device call of that core
+//! (byte-identical to the pre-cluster fleet — golden-fixture enforced),
+//! and [`super::cluster::Cluster`] is the heterogeneous multi-device
+//! call, so cluster serving reuses admission, partitioning, shedding,
+//! and the zero-allocation steady state per device instead of
+//! reimplementing them.
+//!
 //! [`workload::RequestQueue`]: crate::workload::RequestQueue
 //! [`engine::OpenLoop`]: super::engine::OpenLoop
+//! [`run_closed_devices`]: run_closed_devices
+//! [`run_open_devices`]: run_open_devices
+//! [`plan_mem_ceilings`]: crate::gpusim::plan_mem_ceilings
+//! [`PartitionError::MemoryExceeded`]: crate::gpusim::PartitionError
 
 use crate::device::{Device, DeviceError};
 use crate::gpusim::{
-    plan_grants, GpuSim, GpuSpec, PartitionMode, SmPool, MIN_GRANT, TESLA_P40,
+    check_mem_ceilings, plan_grants, GpuSim, GpuSpec, PartitionMode, SmPool, MIN_GRANT,
+    TESLA_P40,
 };
 use crate::workload::ArrivalPattern;
 
@@ -105,19 +128,113 @@ pub struct FleetOutcome {
 }
 
 /// One member's configuration: job, policy, and (open loop only) its
-/// arrival process and queueing knobs.
-struct MemberCfg<'a> {
-    job: JobSpec,
-    policy: PolicySpec<'a>,
-    arrivals: ArrivalPattern,
-    queue_capacity: Option<usize>,
+/// arrival process and queueing knobs. Shared with
+/// [`super::cluster::ClusterBuilder`], whose jobs carry the identical
+/// per-member knobs before placement scatters them across devices.
+pub(crate) struct MemberCfg<'a> {
+    pub(crate) job: JobSpec,
+    pub(crate) policy: PolicySpec<'a>,
+    pub(crate) arrivals: ArrivalPattern,
+    pub(crate) queue_capacity: Option<usize>,
     /// None = engine default (5 ms); kept optional so `build()` can tell
     /// "never set" apart from "set on a closed-loop member" (an error).
-    batch_timeout_ms: Option<f64>,
-    shed_deadline: bool,
+    pub(crate) batch_timeout_ms: Option<f64>,
+    pub(crate) shed_deadline: bool,
     /// SM fraction reserved for this member under a spatial
     /// [`PartitionMode`]; None = an equal share of the unreserved rest.
-    sm_reservation: Option<f64>,
+    pub(crate) sm_reservation: Option<f64>,
+}
+
+impl<'a> MemberCfg<'a> {
+    pub(crate) fn new(job: &JobSpec, policy: PolicySpec<'a>, arrivals: ArrivalPattern) -> Self {
+        MemberCfg {
+            job: *job,
+            policy,
+            arrivals,
+            queue_capacity: None,
+            batch_timeout_ms: None,
+            shed_deadline: false,
+            sm_reservation: None,
+        }
+    }
+}
+
+/// Validate one member configuration the way both `FleetBuilder` and
+/// `ClusterBuilder` must: known DNN, sane arrival pattern, queueing
+/// knobs only on open-loop arrivals.
+pub(crate) fn validate_member_cfg(m: &MemberCfg<'_>) -> Result<(), ConfigError> {
+    if crate::gpusim::paper_profile(m.job.dnn).is_none() {
+        return Err(ConfigError::UnknownDnn { dnn: m.job.dnn.to_string() });
+    }
+    validate_pattern(&m.arrivals)?;
+    if m.queue_capacity == Some(0) {
+        return Err(ConfigError::ZeroQueueCapacity);
+    }
+    if let Some(t) = m.batch_timeout_ms {
+        if !t.is_finite() || t < 0.0 {
+            return Err(ConfigError::BadBatchTimeout { timeout_ms: t });
+        }
+    }
+    // Every queueing knob is meaningless on a closed-loop member
+    // (there is no queue); refuse to silently discard any of them.
+    if m.arrivals.is_closed() {
+        if m.shed_deadline {
+            return Err(ConfigError::ShedRequiresOpenLoop);
+        }
+        if m.queue_capacity.is_some() {
+            return Err(ConfigError::KnobRequiresOpenLoop { knob: "queue_capacity" });
+        }
+        if m.batch_timeout_ms.is_some() {
+            return Err(ConfigError::KnobRequiresOpenLoop { knob: "batch_timeout_ms" });
+        }
+    }
+    Ok(())
+}
+
+/// Bare model footprint (MB) of a validated DNN at `(bs, mtl) = (1, 1)`
+/// — the least memory the job can ever occupy. THE footprint definition
+/// shared by build-time MIG admission, rebalance guarding, and cluster
+/// placement feasibility, so the three can never disagree. Panics on an
+/// unknown DNN: every caller runs after `validate_member_cfg`.
+pub(crate) fn model_footprint_mb(dnn: &str) -> f64 {
+    let p = crate::gpusim::paper_profile(dnn).expect("validated DNN");
+    crate::gpusim::perf::mem_demand_mb(&p, 1, 1)
+}
+
+/// Map a whole-list knob onto `members` members: one value broadcasts,
+/// a full-length list applies in member order, any other count is a
+/// typed [`ConfigError::ListCountMismatch`]; and when the per-member
+/// form of the knob was already used, the list is refused
+/// ([`ConfigError::ListOverridesMemberKnob`]) instead of silently
+/// overwriting those values. One implementation for
+/// `FleetBuilder::sm_reservations` and `ClusterBuilder::poisson_rates`,
+/// so the two count/conflict policies cannot drift.
+pub(crate) fn expand_member_list(
+    list_knob: &'static str,
+    member_knob: &'static str,
+    values: Vec<f64>,
+    members: usize,
+    member_form_used: bool,
+) -> Result<Vec<f64>, ConfigError> {
+    if member_form_used {
+        return Err(ConfigError::ListOverridesMemberKnob { list: list_knob, knob: member_knob });
+    }
+    if values.len() == 1 {
+        return Ok(vec![values[0]; members]);
+    }
+    if values.len() == members {
+        return Ok(values);
+    }
+    Err(ConfigError::ListCountMismatch { knob: list_knob, got: values.len(), members })
+}
+
+/// Reject a member set that mixes lockstep windows and the event loop.
+pub(crate) fn validate_arrival_modes(members: &[MemberCfg<'_>]) -> Result<(), ConfigError> {
+    let closed = members.iter().filter(|m| m.arrivals.is_closed()).count();
+    if closed != 0 && closed != members.len() {
+        return Err(ConfigError::MixedArrivalModes);
+    }
+    Ok(())
 }
 
 /// Builder for [`Fleet`].
@@ -128,6 +245,10 @@ pub struct FleetBuilder<'a> {
     members: Vec<MemberCfg<'a>>,
     partition: PartitionMode,
     partition_policy: Option<Box<dyn PartitionPolicy + 'a>>,
+    /// Whole reservation list supplied through
+    /// [`FleetBuilder::sm_reservations`] (applied, and count-checked, at
+    /// `build()`).
+    reservation_list: Option<Vec<f64>>,
     /// First per-member knob that was set before any member existed
     /// (reported as a typed error at `build()`).
     knob_before_job: Option<&'static str>,
@@ -142,6 +263,7 @@ impl<'a> FleetBuilder<'a> {
             members: Vec::new(),
             partition: PartitionMode::TimeShare,
             partition_policy: None,
+            reservation_list: None,
             knob_before_job: None,
         }
     }
@@ -190,15 +312,7 @@ impl<'a> FleetBuilder<'a> {
         policy: PolicySpec<'a>,
         arrivals: ArrivalPattern,
     ) -> Self {
-        self.members.push(MemberCfg {
-            job: *job,
-            policy,
-            arrivals,
-            queue_capacity: None,
-            batch_timeout_ms: None,
-            shed_deadline: false,
-            sm_reservation: None,
-        });
+        self.members.push(MemberCfg::new(job, policy, arrivals));
         self
     }
 
@@ -220,6 +334,17 @@ impl<'a> FleetBuilder<'a> {
         if let Some(m) = self.last_member("sm_reservation") {
             m.sm_reservation = Some(fraction);
         }
+        self
+    }
+
+    /// Reserve SM fractions for ALL members at once: one value
+    /// (broadcast to every member) or exactly one per member, in member
+    /// order. Any other count — in particular a list *longer* than the
+    /// member count, which used to be possible to silently truncate at
+    /// the CLI boundary — is a typed
+    /// [`ConfigError::ListCountMismatch`] at `build()`.
+    pub fn sm_reservations(mut self, fractions: &[f64]) -> Self {
+        self.reservation_list = Some(fractions.to_vec());
         self
     }
 
@@ -268,7 +393,7 @@ impl<'a> FleetBuilder<'a> {
     }
 
     /// Validate and assemble the fleet.
-    pub fn build(self) -> Result<Fleet<'a>, ConfigError> {
+    pub fn build(mut self) -> Result<Fleet<'a>, ConfigError> {
         if let Some(knob) = self.knob_before_job {
             return Err(ConfigError::MemberKnobBeforeJob { knob });
         }
@@ -287,49 +412,42 @@ impl<'a> FleetBuilder<'a> {
         if self.members.is_empty() {
             return Err(ConfigError::NoFleetMembers);
         }
+        // A whole reservation list maps onto the members here (the
+        // longer-than-members case is the PR 5 bugfix; mixing with
+        // per-member sm_reservation calls is refused, not overwritten).
+        if let Some(list) = self.reservation_list.take() {
+            let expanded = expand_member_list(
+                "sm_reservations",
+                "sm_reservation",
+                list,
+                self.members.len(),
+                self.members.iter().any(|m| m.sm_reservation.is_some()),
+            )?;
+            for (m, f) in self.members.iter_mut().zip(expanded) {
+                m.sm_reservation = Some(f);
+            }
+        }
         for m in &self.members {
-            if crate::gpusim::paper_profile(m.job.dnn).is_none() {
-                return Err(ConfigError::UnknownDnn { dnn: m.job.dnn.to_string() });
-            }
-            validate_pattern(&m.arrivals)?;
-            if m.queue_capacity == Some(0) {
-                return Err(ConfigError::ZeroQueueCapacity);
-            }
-            if let Some(t) = m.batch_timeout_ms {
-                if !t.is_finite() || t < 0.0 {
-                    return Err(ConfigError::BadBatchTimeout { timeout_ms: t });
-                }
-            }
-            // Every queueing knob is meaningless on a closed-loop member
-            // (there is no queue); refuse to silently discard any of them.
-            if m.arrivals.is_closed() {
-                if m.shed_deadline {
-                    return Err(ConfigError::ShedRequiresOpenLoop);
-                }
-                if m.queue_capacity.is_some() {
-                    return Err(ConfigError::KnobRequiresOpenLoop {
-                        knob: "queue_capacity",
-                    });
-                }
-                if m.batch_timeout_ms.is_some() {
-                    return Err(ConfigError::KnobRequiresOpenLoop {
-                        knob: "batch_timeout_ms",
-                    });
-                }
-            }
+            validate_member_cfg(m)?;
         }
         // Lockstep windows and the event loop cannot be mixed in one run.
-        let closed = self.members.iter().filter(|m| m.arrivals.is_closed()).count();
-        if closed != 0 && closed != self.members.len() {
-            return Err(ConfigError::MixedArrivalModes);
-        }
+        validate_arrival_modes(&self.members)?;
         // Partition plan: spatial modes validate the reservations up
         // front (typed error, not a mid-run surprise); TimeShare has no
         // partitions, so partition knobs on it are refused outright.
         if self.partition.is_spatial() {
             let reservations: Vec<Option<f64>> =
                 self.members.iter().map(|m| m.sm_reservation).collect();
-            plan_grants(self.partition, &reservations).map_err(ConfigError::BadPartition)?;
+            let grants =
+                plan_grants(self.partition, &reservations).map_err(ConfigError::BadPartition)?;
+            // MIG partitions memory along with the SMs: a member whose
+            // bare model footprint cannot fit its slice bundle's memory
+            // ceiling can never serve, whatever the admission check
+            // later shrinks it to.
+            let footprints: Vec<f64> =
+                self.members.iter().map(|m| model_footprint_mb(m.job.dnn)).collect();
+            check_mem_ceilings(self.partition, &grants, self.gpu.mem_mb, &footprints)
+                .map_err(ConfigError::BadPartition)?;
         } else {
             if self.members.iter().any(|m| m.sm_reservation.is_some()) {
                 return Err(ConfigError::KnobRequiresPartition { knob: "sm_reservation" });
@@ -360,7 +478,7 @@ pub struct Fleet<'a> {
 }
 
 /// Closed-loop member state (lockstep windows).
-struct Member<'a> {
+pub(crate) struct Member<'a> {
     job: JobSpec,
     sim: GpuSim,
     policy: Box<dyn Policy + 'a>,
@@ -378,8 +496,35 @@ struct Member<'a> {
     admitted: (u32, u32),
 }
 
+/// Build one closed-loop member: resolve its policy (DNNScaler members
+/// profile themselves alone) on a simulator seeded with `sim_seed`.
+pub(crate) fn new_closed_member<'a>(
+    m: MemberCfg<'a>,
+    cfg: &RunConfig,
+    sim_seed: u64,
+) -> Result<Member<'a>, DeviceError> {
+    let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, sim_seed)
+        .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
+    let (policy, profile, label) = resolve_policy(m.policy, cfg, &m.job, &mut sim)?;
+    let admitted = policy.operating_point();
+    Ok(Member {
+        schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
+        window: LatencyWindow::new(cfg.rounds_per_window),
+        trace: Vec::with_capacity(cfg.windows),
+        latencies: Vec::new(),
+        acc: AttainAcc::new(cfg.windows / 2),
+        pending_launch_ms: 0.0,
+        admitted,
+        job: m.job,
+        sim,
+        policy,
+        profile,
+        label,
+    })
+}
+
 /// Open-loop member state (per-member engine core).
-struct OpenMember<'a> {
+pub(crate) struct OpenMember<'a> {
     job: JobSpec,
     sim: GpuSim,
     policy: Box<dyn Policy + 'a>,
@@ -393,17 +538,107 @@ struct OpenMember<'a> {
     admitted: (u32, u32),
 }
 
+/// Build one open-loop member (engine core seeded independently of the
+/// device noise — the same u64 would replay the identical RNG stream).
+pub(crate) fn new_open_member<'a>(
+    m: MemberCfg<'a>,
+    cfg: &RunConfig,
+    sim_seed: u64,
+    arrival_seed: u64,
+) -> Result<OpenMember<'a>, DeviceError> {
+    let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, sim_seed)
+        .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
+    let (policy, profile, label) = resolve_policy(m.policy, cfg, &m.job, &mut sim)?;
+    // Profiling consumed virtual time: arrivals during it form the
+    // member's starting backlog, as in single-job serving.
+    let overhead_ms = profile.as_ref().map_or(0.0, |p| p.overhead_ms);
+    let admitted = policy.operating_point();
+    Ok(OpenMember {
+        schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
+        lp: OpenLoop::new(
+            m.arrivals,
+            arrival_seed,
+            m.queue_capacity,
+            m.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
+            m.shed_deadline,
+            overhead_ms / 1000.0,
+        ),
+        trace: Vec::with_capacity(cfg.windows),
+        latencies: Vec::new(),
+        acc: AttainAcc::new(cfg.windows / 2),
+        admitted,
+        job: m.job,
+        sim,
+        policy,
+        profile,
+        label,
+    })
+}
+
+/// Derive a member's arrival-stream seed from the fleet seed and the
+/// member's (global) index, independent of its simulator seed.
+pub(crate) fn arrival_seed(seed: u64, index: usize) -> u64 {
+    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(index as u64)
+}
+
+/// Fold a finished closed-loop member into its outcome.
+pub(crate) fn closed_member_outcome(m: Member<'_>) -> JobOutcome {
+    let mut out = assemble_outcome(
+        &m.job,
+        m.policy.name().to_string(),
+        m.admitted,
+        m.trace,
+        m.latencies,
+        &m.acc,
+        0,
+        0,
+        0,
+        0,
+    );
+    if let Some(name) = m.label {
+        out.controller = name.to_string();
+    }
+    out.method = m.profile.as_ref().map(|p| p.method);
+    out.profile = m.profile;
+    out
+}
+
+/// Fold a finished open-loop member into its outcome.
+pub(crate) fn open_member_outcome(m: OpenMember<'_>) -> JobOutcome {
+    let mut out = assemble_outcome(
+        &m.job,
+        m.policy.name().to_string(),
+        m.admitted,
+        m.trace,
+        m.latencies,
+        &m.acc,
+        m.lp.arrived(),
+        m.lp.dropped(),
+        m.lp.dropped_deadline(),
+        m.lp.max_depth(),
+    );
+    if let Some(name) = m.label {
+        out.controller = name.to_string();
+    }
+    out.method = m.profile.as_ref().map(|p| p.method);
+    out.profile = m.profile;
+    out
+}
+
 /// Shared-memory admission: shrink the greediest *shrinkable* consumer
 /// (batch halved first, then instances shed) until the fleet fits.
 /// Members already at (1, 1) are passed over — OOM is only an error when
-/// nobody can give anything back. Used verbatim by both serving paths so
-/// the admission semantics cannot drift between them.
-fn admit_window(
+/// nobody can give anything back. Used verbatim by both serving paths
+/// (and per device by the cluster) so the admission semantics cannot
+/// drift. Peak-memory telemetry is recorded by the caller from the
+/// final served points (the MIG slice clamp can shrink them further
+/// after this admission — the peak must reflect demand that was
+/// actually resident, not a point that never served).
+pub(crate) fn admit_window(
     demand: &dyn Fn(usize, (u32, u32)) -> f64,
     n_members: usize,
     requested: &[(u32, u32)],
     mem_capacity_mb: f64,
-    peak_mem_mb: &mut f64,
     admission_clamps: &mut u64,
 ) -> Result<Vec<(u32, u32)>, DeviceError> {
     let mut points = requested.to_vec();
@@ -411,7 +646,6 @@ fn admit_window(
         let demands: Vec<f64> = (0..n_members).map(|i| demand(i, points[i])).collect();
         let total: f64 = demands.iter().sum();
         if total <= mem_capacity_mb {
-            *peak_mem_mb = peak_mem_mb.max(total);
             break;
         }
         let Some((k, _)) = demands
@@ -436,13 +670,58 @@ fn admit_window(
     Ok(points)
 }
 
+/// MIG memory-ceiling admission: clamp each member's admitted point
+/// until its demand fits its slice bundle's share of device memory
+/// (`grant * mem_mb`), same shrink discipline as [`admit_window`]
+/// (batch halved first, then instances shed). No-op for modes that do
+/// not partition memory. A member whose (1, 1) footprint still exceeds
+/// its ceiling is a hard OOM — defensive only: the builder refuses such
+/// configurations up front, and `Partitioner::maybe_rebalance` rejects
+/// any rebalance whose ceilings would drop below a member's footprint.
+pub(crate) fn clamp_to_slice_ceilings(
+    mode: PartitionMode,
+    grants: &[f64],
+    mem_mb: f64,
+    demand: &dyn Fn(usize, (u32, u32)) -> f64,
+    points: &mut [(u32, u32)],
+    admission_clamps: &mut u64,
+) -> Result<(), DeviceError> {
+    if !matches!(mode, PartitionMode::MigSlices { .. }) {
+        return Ok(());
+    }
+    for (i, p) in points.iter_mut().enumerate() {
+        let ceiling_mb = grants[i] * mem_mb;
+        while demand(i, *p) > ceiling_mb {
+            if *p == (1, 1) {
+                return Err(DeviceError::OutOfMemory {
+                    demand_mb: demand(i, *p),
+                    capacity_mb: ceiling_mb,
+                });
+            }
+            if p.0 > 1 {
+                p.0 = (p.0 / 2).max(1);
+            } else {
+                p.1 -= 1;
+            }
+            *admission_clamps += 1;
+        }
+    }
+    Ok(())
+}
+
 /// Per-run spatial-partition ledger shared by both serving paths: holds
 /// the live reservations, plans + admits each window's grants through an
 /// [`SmPool`], and applies (re-validated) `PartitionPolicy` rebalances.
-struct Partitioner<'a> {
+pub(crate) struct Partitioner<'a> {
     mode: PartitionMode,
     reservations: Vec<Option<f64>>,
     policy: Option<Box<dyn PartitionPolicy + 'a>>,
+    /// Per-member bare model footprints (MB) and the device memory they
+    /// are measured against: a MIG rebalance must keep every member's
+    /// slice ceiling above its footprint, or the run would OOM at the
+    /// next window's slice clamp.
+    mem_floors_mb: Vec<f64>,
+    mem_mb: f64,
 }
 
 impl<'a> Partitioner<'a> {
@@ -450,12 +729,40 @@ impl<'a> Partitioner<'a> {
         mode: PartitionMode,
         members: &[MemberCfg<'_>],
         policy: Option<Box<dyn PartitionPolicy + 'a>>,
+        mem_mb: f64,
     ) -> Self {
         Partitioner {
             mode,
             reservations: members.iter().map(|m| m.sm_reservation).collect(),
             policy,
+            // Only MIG partitions memory; other modes never read the
+            // floors (check_mem_ceilings is vacuous for them).
+            mem_floors_mb: if matches!(mode, PartitionMode::MigSlices { .. }) {
+                members.iter().map(|m| model_footprint_mb(m.job.dnn)).collect()
+            } else {
+                Vec::new()
+            },
+            mem_mb,
         }
+    }
+
+    /// A time-sharing partitioner over `n` members — what every cluster
+    /// device uses (within a device, members time-share; spatial
+    /// partitioning across devices is the cluster's job). TimeShare
+    /// records no grants, so rebalancing (and its memory-floor check)
+    /// never runs.
+    pub(crate) fn timeshare(n: usize) -> Self {
+        Partitioner {
+            mode: PartitionMode::TimeShare,
+            reservations: vec![None; n],
+            policy: None,
+            mem_floors_mb: Vec::new(),
+            mem_mb: f64::INFINITY,
+        }
+    }
+
+    pub(crate) fn mode(&self) -> PartitionMode {
+        self.mode
     }
 
     /// Plan this window's grants and admit them against the SM pool.
@@ -475,12 +782,18 @@ impl<'a> Partitioner<'a> {
     /// This window's SM shares plus telemetry: spatial modes plan + admit
     /// per-member grants (recorded in `grant_trace`, totals in
     /// `contention_trace`); `TimeShare` evaluates `contention` (the
-    /// members' combined SM utilization) and inflates everyone by it.
-    /// One implementation for both serving paths, like `admit_window`.
+    /// members' combined SM utilization, relative to the device's
+    /// `perf_fraction` of the calibration GPU) and inflates everyone by
+    /// it. A whole device (`perf_fraction = 1`) takes the exact legacy
+    /// path (division by 1.0 is exact); a slice-as-device executes
+    /// inside its grant AND time-shares within it
+    /// ([`SmShare::GrantInflate`]). One implementation for both serving
+    /// paths — and for every cluster device — like [`admit_window`].
     fn window_shares(
         &self,
         contention: impl FnOnce() -> f64,
         n_members: usize,
+        perf_fraction: f64,
         peak_contention: &mut f64,
         contention_trace: &mut Vec<f64>,
         grant_trace: &mut Vec<Vec<f64>>,
@@ -494,10 +807,18 @@ impl<'a> Partitioner<'a> {
             grant_trace.push(grants);
             Ok(shares)
         } else {
-            let contention = contention();
+            let contention = contention() / perf_fraction;
             *peak_contention = peak_contention.max(contention);
             contention_trace.push(contention);
-            Ok(vec![SmShare::Inflate(contention.max(1.0)); n_members])
+            let factor = contention.max(1.0);
+            if perf_fraction >= 1.0 {
+                Ok(vec![SmShare::Inflate(factor); n_members])
+            } else {
+                Ok(vec![
+                    SmShare::GrantInflate { grant: perf_fraction, factor };
+                    n_members
+                ])
+            }
         }
     }
 
@@ -514,9 +835,12 @@ impl<'a> Partitioner<'a> {
     /// accepted rebalance replaces the reservations, an invalid one is
     /// rejected and counted against `admission_clamps`. Proposals are
     /// sanitized, not trusted: a wrong-length or non-finite vector is
-    /// rejected outright, and values are lifted to the mode's smallest
+    /// rejected outright, values are lifted to the mode's smallest
     /// grantable share first — a policy that nudges a member just below
-    /// one MIG slice must not deadlock rebalancing forever.
+    /// one MIG slice must not deadlock rebalancing forever — and (MIG)
+    /// a rebalance whose slice memory ceiling would drop below any
+    /// member's model footprint is rejected like any other invalid
+    /// proposal, instead of OOMing the run at the next window's clamp.
     fn maybe_rebalance(
         &mut self,
         obs: &[WindowObservation],
@@ -532,94 +856,136 @@ impl<'a> Partitioner<'a> {
         let floor = self.min_share();
         let proposed: Vec<Option<f64>> =
             next.into_iter().map(|v| Some(v.max(floor))).collect();
-        if plan_grants(self.mode, &proposed).is_ok() {
-            self.reservations = proposed;
-        } else {
-            *admission_clamps += 1;
+        match plan_grants(self.mode, &proposed) {
+            Ok(planned)
+                if check_mem_ceilings(self.mode, &planned, self.mem_mb, &self.mem_floors_mb)
+                    .is_ok() =>
+            {
+                self.reservations = proposed;
+            }
+            _ => *admission_clamps += 1,
         }
     }
 }
 
-impl<'a> Fleet<'a> {
-    pub fn builder() -> FleetBuilder<'a> {
-        FleetBuilder::new()
-    }
+/// One (virtual) device's context in a serving run: admission capacity,
+/// SM capacity fraction, partitioner, and shared-GPU telemetry. `Fleet`
+/// runs one of these; [`super::cluster::Cluster`] runs one per device.
+pub(crate) struct DeviceCtx<'a> {
+    /// Memory admission capacity (MB) — a whole GPU's memory, or a MIG
+    /// virtual device's slice ceiling.
+    pub(crate) mem_capacity_mb: f64,
+    /// SM capacity as a fraction of the calibration GPU (1.0 = a whole
+    /// P40-class device; a MIG virtual device or a smaller catalogued
+    /// GPU holds less).
+    pub(crate) perf_fraction: f64,
+    pub(crate) parts: Partitioner<'a>,
+    pub(crate) peak_mem_mb: f64,
+    pub(crate) peak_contention: f64,
+    pub(crate) admission_clamps: u64,
+    pub(crate) contention_trace: Vec<f64>,
+    pub(crate) grant_trace: Vec<Vec<f64>>,
+}
 
-    /// Serve every member to completion on the shared GPU.
-    pub fn run(self) -> Result<FleetOutcome, DeviceError> {
-        // The builder guarantees the modes are not mixed.
-        if self.members.iter().all(|m| m.arrivals.is_closed()) {
-            self.run_closed()
-        } else {
-            self.run_open()
+impl<'a> DeviceCtx<'a> {
+    pub(crate) fn new(
+        mem_capacity_mb: f64,
+        perf_fraction: f64,
+        parts: Partitioner<'a>,
+        windows: usize,
+    ) -> Self {
+        DeviceCtx {
+            mem_capacity_mb,
+            perf_fraction,
+            parts,
+            peak_mem_mb: 0.0,
+            peak_contention: 0.0,
+            admission_clamps: 0,
+            contention_trace: Vec::with_capacity(windows),
+            grant_trace: Vec::new(),
         }
     }
+}
 
-    /// Closed-loop lockstep windows — byte-identical to the pre-engine
-    /// `Fleet` (same device-RNG consumption order, same accounting) in
-    /// `TimeShare` mode; spatial modes swap the contention factor for
-    /// per-member SM grants.
-    fn run_closed(self) -> Result<FleetOutcome, DeviceError> {
-        let Fleet { gpu, cfg, seed, members, partition, partition_policy } = self;
-        let mut parts = Partitioner::new(partition, &members, partition_policy);
-        let mut states: Vec<Member<'a>> = Vec::with_capacity(members.len());
-        for (i, m) in members.into_iter().enumerate() {
-            let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, seed + i as u64)
-                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
-            // DNNScaler members profile themselves alone at fleet start.
-            let (policy, profile, label) = resolve_policy(m.policy, &cfg, &m.job, &mut sim)?;
-            let admitted = policy.operating_point();
-            states.push(Member {
-                schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
-                window: LatencyWindow::new(cfg.rounds_per_window),
-                trace: Vec::with_capacity(cfg.windows),
-                latencies: Vec::new(),
-                acc: AttainAcc::new(cfg.windows / 2),
-                pending_launch_ms: 0.0,
-                admitted,
-                job: m.job,
-                sim,
-                policy,
-                profile,
-                label,
-            });
-        }
+/// One closed-loop device: its context plus lockstep members.
+pub(crate) struct ClosedDevice<'a> {
+    pub(crate) ctx: DeviceCtx<'a>,
+    pub(crate) members: Vec<Member<'a>>,
+}
 
-        let mut peak_mem_mb: f64 = 0.0;
-        let mut peak_contention: f64 = 0.0;
-        let mut admission_clamps = 0u64;
-        let mut contention_trace = Vec::with_capacity(cfg.windows);
-        let mut grant_trace: Vec<Vec<f64>> = Vec::new();
-
-        for w in 0..cfg.windows {
+/// Serve every control window of every closed-loop device. Devices are
+/// independent (each member owns its simulator; coupling is per-device
+/// admission + contention), so iterating them in order preserves the
+/// single-device byte-for-byte behaviour exactly.
+pub(crate) fn run_closed_devices(
+    cfg: &RunConfig,
+    devs: &mut [ClosedDevice<'_>],
+) -> Result<(), DeviceError> {
+    for w in 0..cfg.windows {
+        for dev in devs.iter_mut() {
+            let ClosedDevice { ctx, members: states } = dev;
+            if states.is_empty() {
+                continue;
+            }
             // Requested operating points, then shared-memory admission.
             let requested: Vec<(u32, u32)> =
                 states.iter().map(|m| m.policy.operating_point()).collect();
-            let points = admit_window(
+            let mut points = admit_window(
                 &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
                 states.len(),
                 &requested,
-                gpu.mem_mb,
-                &mut peak_mem_mb,
-                &mut admission_clamps,
+                ctx.mem_capacity_mb,
+                &mut ctx.admission_clamps,
             )?;
 
             // SM regime for the window: the combined-pressure time-sharing
             // factor, or (spatial modes) per-member capacity grants taken
-            // from the SM pool.
-            let shares = parts.window_shares(
+            // from the SM pool. On a fractional device each member's
+            // utilization is measured inside the device grant (capped at
+            // it), so a lone member on a slice is slowed only by the
+            // grant itself, never additionally by "contention" with
+            // nobody; the whole-device path is the exact legacy call.
+            let g = ctx.perf_fraction;
+            let shares = ctx.parts.window_shares(
                 || {
                     states
                         .iter()
                         .zip(&points)
-                        .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
+                        .map(|(m, &(bs, mtl))| {
+                            if g >= 1.0 {
+                                m.sim.sm_utilization(bs, mtl)
+                            } else {
+                                m.sim.sm_utilization_granted(bs, mtl, g)
+                            }
+                        })
                         .sum()
                 },
                 states.len(),
-                &mut peak_contention,
-                &mut contention_trace,
-                &mut grant_trace,
+                ctx.perf_fraction,
+                &mut ctx.peak_contention,
+                &mut ctx.contention_trace,
+                &mut ctx.grant_trace,
             )?;
+            // MIG also partitions memory: clamp each member to its slice
+            // bundle's memory ceiling (no-op for other modes).
+            if let Some(grants) = ctx.grant_trace.last() {
+                clamp_to_slice_ceilings(
+                    ctx.parts.mode(),
+                    grants,
+                    ctx.mem_capacity_mb,
+                    &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+                    &mut points,
+                    &mut ctx.admission_clamps,
+                )?;
+            }
+            // Peak telemetry from the points that actually serve (the
+            // slice clamp may have shrunk them below the admitted ones).
+            let resident: f64 = states
+                .iter()
+                .zip(&points)
+                .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+                .sum();
+            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
 
             let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
             for (i, m) in states.iter_mut().enumerate() {
@@ -629,7 +995,7 @@ impl<'a> Fleet<'a> {
                 m.pending_launch_ms = 0.0;
                 m.admitted = (bs, mtl);
                 let (record, obs) = serve_closed_window(
-                    &cfg,
+                    cfg,
                     w,
                     slo,
                     (bs, mtl),
@@ -653,42 +1019,215 @@ impl<'a> Fleet<'a> {
                 }
                 window_obs.push(obs);
             }
-            if let Some(grants) = grant_trace.last() {
-                parts.maybe_rebalance(&window_obs, grants, &mut admission_clamps);
+            if let Some(grants) = ctx.grant_trace.last() {
+                ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One open-loop device: context, engine members, recycled window
+/// accumulators.
+pub(crate) struct OpenDevice<'a> {
+    pub(crate) ctx: DeviceCtx<'a>,
+    pub(crate) members: Vec<OpenMember<'a>>,
+    wins: Vec<WindowAccum>,
+}
+
+impl<'a> OpenDevice<'a> {
+    pub(crate) fn new(ctx: DeviceCtx<'a>, members: Vec<OpenMember<'a>>) -> Self {
+        let wins = (0..members.len()).map(|_| WindowAccum::new()).collect();
+        OpenDevice { ctx, members, wins }
+    }
+}
+
+/// Serve every control window of every open-loop device through ONE
+/// global event loop: each window, every device runs its admission +
+/// SM-share planning, then a single [`EventCalendar`] interleaves ALL
+/// members of ALL devices by next-event time (ties break toward the
+/// lower flattened index — device order, then member order). Members of
+/// different devices never couple (admission and contention are
+/// per-device), so the single-device case reproduces the pre-cluster
+/// `Fleet` loop bit for bit while a heterogeneous cluster reuses the
+/// same engine cores, scratch recycling, and O(log M) scheduling.
+pub(crate) fn run_open_devices(
+    cfg: &RunConfig,
+    devs: &mut [OpenDevice<'_>],
+) -> Result<(), DeviceError> {
+    let total: usize = devs.iter().map(|d| d.members.len()).sum();
+    // Flat index = device offset + member index (the calendar's key),
+    // with an O(1) flat -> device table for the hot event loop.
+    let mut offsets = Vec::with_capacity(devs.len());
+    let mut device_of_flat = Vec::with_capacity(total);
+    let mut off = 0usize;
+    for (d, dev) in devs.iter().enumerate() {
+        offsets.push(off);
+        off += dev.members.len();
+        device_of_flat.resize(off, d);
+    }
+    let mut calendar = EventCalendar::with_capacity(total);
+    let mut remaining = vec![0usize; total];
+    // Per-device, per-window plans (points / shares / slos), index-aligned
+    // with the device's members and rebuilt every window.
+    let mut points: Vec<Vec<(u32, u32)>> = devs.iter().map(|_| Vec::new()).collect();
+    let mut shares: Vec<Vec<SmShare>> = devs.iter().map(|_| Vec::new()).collect();
+    let mut slos: Vec<Vec<f64>> = devs.iter().map(|_| Vec::new()).collect();
+
+    for w in 0..cfg.windows {
+        calendar.clear();
+        for (d, dev) in devs.iter_mut().enumerate() {
+            let OpenDevice { ctx, members: states, wins } = dev;
+            if states.is_empty() {
+                continue;
+            }
+            let requested: Vec<(u32, u32)> =
+                states.iter().map(|m| m.policy.operating_point()).collect();
+            let mut pts = admit_window(
+                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+                states.len(),
+                &requested,
+                ctx.mem_capacity_mb,
+                &mut ctx.admission_clamps,
+            )?;
+            let g = ctx.perf_fraction;
+            let shr = ctx.parts.window_shares(
+                || {
+                    states
+                        .iter()
+                        .zip(&pts)
+                        .map(|(m, &(bs, mtl))| {
+                            if g >= 1.0 {
+                                m.sim.sm_utilization(bs, mtl)
+                            } else {
+                                m.sim.sm_utilization_granted(bs, mtl, g)
+                            }
+                        })
+                        .sum()
+                },
+                states.len(),
+                ctx.perf_fraction,
+                &mut ctx.peak_contention,
+                &mut ctx.contention_trace,
+                &mut ctx.grant_trace,
+            )?;
+            if let Some(grants) = ctx.grant_trace.last() {
+                clamp_to_slice_ceilings(
+                    ctx.parts.mode(),
+                    grants,
+                    ctx.mem_capacity_mb,
+                    &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+                    &mut pts,
+                    &mut ctx.admission_clamps,
+                )?;
+            }
+            // Peak telemetry from the points that actually serve (the
+            // slice clamp may have shrunk them below the admitted ones).
+            let resident: f64 = states
+                .iter()
+                .zip(&pts)
+                .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+                .sum();
+            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+            let sl: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
+            for (i, (st, win)) in states.iter().zip(wins.iter_mut()).enumerate() {
+                win.begin(&st.lp);
+                remaining[offsets[d] + i] = cfg.rounds_per_window;
+                calendar.push(offsets[d] + i, st.lp.now_s);
+            }
+            points[d] = pts;
+            shares[d] = shr;
+            slos[d] = sl;
+        }
+
+        // Global event loop: always advance the member whose virtual
+        // clock is furthest behind (ties break toward the lower flat
+        // index), so batch dispatches happen in global time order
+        // across every device. The calendar pops that member in
+        // O(log M) — each member is scheduled at most once, keyed at
+        // its current clock.
+        while let Some(flat) = calendar.pop() {
+            let d = device_of_flat[flat];
+            let k = flat - offsets[d];
+            remaining[flat] -= 1;
+            let dev = &mut devs[d];
+            let st = &mut dev.members[k];
+            let more = st.lp.serve_round(
+                points[d][k],
+                slos[d][k],
+                shares[d][k],
+                &mut st.sim,
+                &mut dev.wins[k],
+            )?;
+            // A member leaves the window's calendar when its round
+            // budget is spent — or for good when its finite trace is
+            // exhausted and drained (`more == false`).
+            if more && remaining[flat] > 0 {
+                calendar.push(flat, st.lp.now_s);
             }
         }
 
-        let mut outcomes = Vec::with_capacity(states.len());
-        for m in states {
-            let mut out = assemble_outcome(
-                &m.job,
-                m.policy.name().to_string(),
-                m.admitted,
-                m.trace,
-                m.latencies,
-                &m.acc,
-                0,
-                0,
-                0,
-                0,
-            );
-            if let Some(name) = m.label {
-                out.controller = name.to_string();
+        for (d, dev) in devs.iter_mut().enumerate() {
+            let OpenDevice { ctx, members: states, wins } = dev;
+            if states.is_empty() {
+                continue;
             }
-            out.method = m.profile.as_ref().map(|p| p.method);
-            out.profile = m.profile;
-            outcomes.push(out);
+            let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
+            for (i, win) in wins.iter_mut().enumerate() {
+                let st = &mut states[i];
+                st.admitted = points[d][i];
+                let (record, obs) = win.finish(w, slos[d][i], points[d][i], &st.lp);
+                st.acc.absorb(w, slos[d][i], win.latencies());
+                st.latencies.extend(win.latencies().iter().map(|&l| (l, 1.0)));
+                st.trace.push(record);
+                // As in single-job open-loop serving, instance launches
+                // are not charged as a queue-draining stall (existing
+                // instances keep serving while a new one spins up).
+                st.policy.observe(&obs);
+                window_obs.push(obs);
+            }
+            if let Some(grants) = ctx.grant_trace.last() {
+                ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+            }
         }
-        Ok(finish_fleet(
-            outcomes,
-            gpu,
-            peak_mem_mb,
-            peak_contention,
-            contention_trace,
-            admission_clamps,
-            partition,
-            grant_trace,
-        ))
+    }
+    Ok(())
+}
+
+impl<'a> Fleet<'a> {
+    pub fn builder() -> FleetBuilder<'a> {
+        FleetBuilder::new()
+    }
+
+    /// Serve every member to completion on the shared GPU.
+    pub fn run(self) -> Result<FleetOutcome, DeviceError> {
+        // The builder guarantees the modes are not mixed.
+        if self.members.iter().all(|m| m.arrivals.is_closed()) {
+            self.run_closed()
+        } else {
+            self.run_open()
+        }
+    }
+
+    /// Closed-loop lockstep windows — byte-identical to the pre-engine
+    /// `Fleet` (same device-RNG consumption order, same accounting) in
+    /// `TimeShare` mode; spatial modes swap the contention factor for
+    /// per-member SM grants.
+    fn run_closed(self) -> Result<FleetOutcome, DeviceError> {
+        let Fleet { gpu, cfg, seed, members, partition, partition_policy } = self;
+        let parts = Partitioner::new(partition, &members, partition_policy, gpu.mem_mb);
+        let mut states: Vec<Member<'a>> = Vec::with_capacity(members.len());
+        for (i, m) in members.into_iter().enumerate() {
+            states.push(new_closed_member(m, &cfg, seed + i as u64)?);
+        }
+        let mut devs = [ClosedDevice {
+            ctx: DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows),
+            members: states,
+        }];
+        run_closed_devices(&cfg, &mut devs)?;
+        let [dev] = devs;
+        let outcomes = dev.members.into_iter().map(closed_member_outcome).collect();
+        Ok(finish_fleet(outcomes, dev.ctx, partition))
     }
 
     /// Open-loop fleet: one engine core per member, one global event loop
@@ -701,171 +1240,25 @@ impl<'a> Fleet<'a> {
     /// can only slow itself down.
     fn run_open(self) -> Result<FleetOutcome, DeviceError> {
         let Fleet { gpu, cfg, seed, members, partition, partition_policy } = self;
-        let mut parts = Partitioner::new(partition, &members, partition_policy);
-        let n = members.len();
-        let mut states: Vec<OpenMember<'a>> = Vec::with_capacity(n);
+        let parts = Partitioner::new(partition, &members, partition_policy, gpu.mem_mb);
+        let mut states: Vec<OpenMember<'a>> = Vec::with_capacity(members.len());
         for (i, m) in members.into_iter().enumerate() {
-            let mut sim = GpuSim::for_paper_dnn(m.job.dnn, m.job.dataset, seed + i as u64)
-                .ok_or_else(|| DeviceError::Exec(format!("unknown DNN {:?}", m.job.dnn)))?;
-            let (policy, profile, label) = resolve_policy(m.policy, &cfg, &m.job, &mut sim)?;
-            // Arrival streams get seeds independent of the device-noise
-            // seeds (same u64 would replay the identical RNG stream).
-            let arrival_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
-            // Profiling consumed virtual time: arrivals during it form
-            // the member's starting backlog, as in single-job serving.
-            let overhead_ms = profile.as_ref().map_or(0.0, |p| p.overhead_ms);
-            let admitted = policy.operating_point();
-            states.push(OpenMember {
-                schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
-                lp: OpenLoop::new(
-                    m.arrivals,
-                    arrival_seed,
-                    m.queue_capacity,
-                    m.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
-                    m.shed_deadline,
-                    overhead_ms / 1000.0,
-                ),
-                trace: Vec::with_capacity(cfg.windows),
-                latencies: Vec::new(),
-                acc: AttainAcc::new(cfg.windows / 2),
-                admitted,
-                job: m.job,
-                sim,
-                policy,
-                profile,
-                label,
-            });
+            states.push(new_open_member(m, &cfg, seed + i as u64, arrival_seed(seed, i))?);
         }
-
-        let mut peak_mem_mb: f64 = 0.0;
-        let mut peak_contention: f64 = 0.0;
-        let mut admission_clamps = 0u64;
-        let mut contention_trace = Vec::with_capacity(cfg.windows);
-        let mut grant_trace: Vec<Vec<f64>> = Vec::new();
-        // Per-member scratch pool: one recycled WindowAccum per member
-        // (latency buffer + percentile scratch are cleared, not freed, at
-        // each window boundary), plus the reused event calendar and the
-        // per-window round budgets.
-        let mut wins: Vec<WindowAccum> = (0..n).map(|_| WindowAccum::new()).collect();
-        let mut calendar = EventCalendar::with_capacity(n);
-        let mut remaining = vec![0usize; n];
-
-        for w in 0..cfg.windows {
-            let requested: Vec<(u32, u32)> =
-                states.iter().map(|m| m.policy.operating_point()).collect();
-            let points = admit_window(
-                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
-                n,
-                &requested,
-                gpu.mem_mb,
-                &mut peak_mem_mb,
-                &mut admission_clamps,
-            )?;
-            let shares = parts.window_shares(
-                || {
-                    states
-                        .iter()
-                        .zip(&points)
-                        .map(|(m, &(bs, mtl))| m.sim.sm_utilization(bs, mtl))
-                        .sum()
-                },
-                n,
-                &mut peak_contention,
-                &mut contention_trace,
-                &mut grant_trace,
-            )?;
-
-            let slos: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
-            calendar.clear();
-            for (i, (st, win)) in states.iter().zip(wins.iter_mut()).enumerate() {
-                win.begin(&st.lp);
-                remaining[i] = cfg.rounds_per_window;
-                calendar.push(i, st.lp.now_s);
-            }
-
-            // Global event loop: always advance the member whose virtual
-            // clock is furthest behind (ties break toward the lower
-            // index), so batch dispatches happen in global time order.
-            // The calendar pops that member in O(log M) — each member is
-            // scheduled at most once, keyed at its current clock, so one
-            // pop + re-push replaces the old O(M) scan per round.
-            while let Some(k) = calendar.pop() {
-                remaining[k] -= 1;
-                let st = &mut states[k];
-                let more =
-                    st.lp.serve_round(points[k], slos[k], shares[k], &mut st.sim, &mut wins[k])?;
-                // A member leaves the window's calendar when its round
-                // budget is spent — or for good when its finite trace is
-                // exhausted and drained (`more == false`).
-                if more && remaining[k] > 0 {
-                    calendar.push(k, st.lp.now_s);
-                }
-            }
-
-            let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(n);
-            for (i, win) in wins.iter_mut().enumerate() {
-                let st = &mut states[i];
-                st.admitted = points[i];
-                let (record, obs) = win.finish(w, slos[i], points[i], &st.lp);
-                st.acc.absorb(w, slos[i], win.latencies());
-                st.latencies.extend(win.latencies().iter().map(|&l| (l, 1.0)));
-                st.trace.push(record);
-                // As in single-job open-loop serving, instance launches
-                // are not charged as a queue-draining stall (existing
-                // instances keep serving while a new one spins up).
-                st.policy.observe(&obs);
-                window_obs.push(obs);
-            }
-            if let Some(grants) = grant_trace.last() {
-                parts.maybe_rebalance(&window_obs, grants, &mut admission_clamps);
-            }
-        }
-
-        let mut outcomes = Vec::with_capacity(states.len());
-        for m in states {
-            let mut out = assemble_outcome(
-                &m.job,
-                m.policy.name().to_string(),
-                m.admitted,
-                m.trace,
-                m.latencies,
-                &m.acc,
-                m.lp.arrived(),
-                m.lp.dropped(),
-                m.lp.dropped_deadline(),
-                m.lp.max_depth(),
-            );
-            if let Some(name) = m.label {
-                out.controller = name.to_string();
-            }
-            out.method = m.profile.as_ref().map(|p| p.method);
-            out.profile = m.profile;
-            outcomes.push(out);
-        }
-        Ok(finish_fleet(
-            outcomes,
-            gpu,
-            peak_mem_mb,
-            peak_contention,
-            contention_trace,
-            admission_clamps,
-            partition,
-            grant_trace,
-        ))
+        let mut devs =
+            [OpenDevice::new(DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows), states)];
+        run_open_devices(&cfg, &mut devs)?;
+        let [dev] = devs;
+        let outcomes = dev.members.into_iter().map(open_member_outcome).collect();
+        Ok(finish_fleet(outcomes, dev.ctx, partition))
     }
 }
 
-/// Fold per-member outcomes into the fleet-level result.
-#[allow(clippy::too_many_arguments)]
-fn finish_fleet(
+/// Fold per-member outcomes + device telemetry into the fleet result.
+pub(crate) fn finish_fleet(
     members: Vec<JobOutcome>,
-    gpu: GpuSpec,
-    peak_mem_mb: f64,
-    peak_contention: f64,
-    contention_trace: Vec<f64>,
-    admission_clamps: u64,
+    ctx: DeviceCtx<'_>,
     partition: PartitionMode,
-    grant_trace: Vec<Vec<f64>>,
 ) -> FleetOutcome {
     let total_throughput = members.iter().map(|o| o.throughput).sum();
     let total_goodput = members.iter().map(|o| o.goodput).sum();
@@ -873,13 +1266,13 @@ fn finish_fleet(
         members,
         total_throughput,
         total_goodput,
-        peak_mem_mb,
-        mem_capacity_mb: gpu.mem_mb,
-        peak_contention,
-        contention_trace,
-        admission_clamps,
+        peak_mem_mb: ctx.peak_mem_mb,
+        mem_capacity_mb: ctx.mem_capacity_mb,
+        peak_contention: ctx.peak_contention,
+        contention_trace: ctx.contention_trace,
+        admission_clamps: ctx.admission_clamps,
         partition,
-        grant_trace,
+        grant_trace: ctx.grant_trace,
     }
 }
 
@@ -1014,6 +1407,159 @@ mod tests {
     }
 
     #[test]
+    fn reservation_list_count_is_checked_not_truncated() {
+        // The PR 5 bugfix: a reservation list longer (or shorter, when
+        // not 1) than the member count is a typed error, never silently
+        // truncated or ignored.
+        let job = paper_job(1).unwrap();
+        assert_eq!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .job(job, PolicySpec::Clipper)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservations(&[0.3, 0.3, 0.3])
+                .build()
+                .err(),
+            Some(ConfigError::ListCountMismatch {
+                knob: "sm_reservations",
+                got: 3,
+                members: 2
+            })
+        );
+        // One value broadcasts; one per member assigns in order.
+        let out = Fleet::builder()
+            .windows(2)
+            .rounds_per_window(2)
+            .partition_mode(PartitionMode::Mps)
+            .job(job, PolicySpec::Static { bs: 1, mtl: 1 })
+            .job(job, PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservations(&[0.7, 0.3])
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!((out.grant_trace[0][0] - 0.7).abs() < 1e-12);
+        assert!((out.grant_trace[0][1] - 0.3).abs() < 1e-12);
+        let out = Fleet::builder()
+            .windows(2)
+            .rounds_per_window(2)
+            .partition_mode(PartitionMode::Mps)
+            .job(job, PolicySpec::Static { bs: 1, mtl: 1 })
+            .job(job, PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservations(&[0.4])
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!((out.grant_trace[0][0] - 0.4).abs() < 1e-12);
+        assert!((out.grant_trace[0][1] - 0.4).abs() < 1e-12);
+        // The broadcast still goes through the partition planner: a
+        // broadcast that over-subscribes is the usual typed error.
+        assert!(matches!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .job(job, PolicySpec::Clipper)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservations(&[0.8])
+                .build()
+                .err(),
+            Some(ConfigError::BadPartition(_))
+        ));
+        // Mixing the whole-list form with a per-member reservation would
+        // silently overwrite the latter — refused, not applied.
+        assert_eq!(
+            Fleet::builder()
+                .partition_mode(PartitionMode::Mps)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservation(0.5)
+                .job(job, PolicySpec::Clipper)
+                .sm_reservations(&[0.2, 0.2])
+                .build()
+                .err(),
+            Some(ConfigError::ListOverridesMemberKnob {
+                list: "sm_reservations",
+                knob: "sm_reservation"
+            })
+        );
+    }
+
+    #[test]
+    fn mig_memory_ceiling_rejects_oversized_models_at_build() {
+        use crate::gpusim::PartitionError;
+        // inc-v4's bare footprint is ~1.4 GB; a quarter slice of a 4 GB
+        // device holds 1 GB. The builder must refuse the configuration
+        // with the typed memory error, not let serving OOM later.
+        let small = GpuSpec { mem_mb: 4096.0, ..TESLA_P40 };
+        let err = Fleet::builder()
+            .gpu(small)
+            .partition_mode(PartitionMode::MigSlices { slices: 4 })
+            .job(paper_job(3).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.25)
+            .job(paper_job(5).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .build()
+            .err();
+        assert!(
+            matches!(err, Some(ConfigError::BadPartition(PartitionError::MemoryExceeded {
+                index: 0, ..
+            }))),
+            "{err:?}"
+        );
+        // The same jobs fit whole-device MIG slices of the real P40.
+        assert!(Fleet::builder()
+            .partition_mode(PartitionMode::MigSlices { slices: 4 })
+            .job(paper_job(3).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.25)
+            .job(paper_job(5).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn mig_memory_ceiling_clamps_the_operating_point_per_window() {
+        // nas-large at (16, 8) demands ~18.8 GB — fine for the whole
+        // 24 GB card (no global clamp) but far over the 12.3 GB ceiling
+        // of its 1-of-2 MIG slice: the slice admission must shrink the
+        // point (batch halved first, then instances shed) and count
+        // every step.
+        let out = Fleet::builder()
+            .windows(4)
+            .rounds_per_window(4)
+            .seed(3)
+            .partition_mode(PartitionMode::MigSlices { slices: 2 })
+            .job(paper_job(7).unwrap(), PolicySpec::Static { bs: 16, mtl: 8 })
+            .job(paper_job(5).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(out.admission_clamps > 0, "slice ceiling never clamped");
+        let big = &out.members[0];
+        let slice_ceiling = 0.5 * out.mem_capacity_mb;
+        let sim = GpuSim::for_paper_dnn("nas-large", paper_job(7).unwrap().dataset, 0).unwrap();
+        let admitted_demand =
+            sim.mem_demand_mb(big.steady_bs, big.steady_mtl);
+        assert!(
+            admitted_demand <= slice_ceiling,
+            "admitted point {}x{} demands {admitted_demand:.0} MB > slice ceiling \
+             {slice_ceiling:.0} MB",
+            big.steady_bs,
+            big.steady_mtl
+        );
+        assert!(
+            (big.steady_bs, big.steady_mtl) < (16, 8),
+            "requested point served unshrunk"
+        );
+        // Peak-memory telemetry reflects the demand that actually
+        // served (post-clamp ~12.5 GB), not the admitted-then-clamped
+        // ~18.8 GB request that was never resident.
+        assert!(
+            out.peak_mem_mb > 0.0 && out.peak_mem_mb < 13_000.0,
+            "peak mem {:.0} MB reports a pre-clamp demand",
+            out.peak_mem_mb
+        );
+    }
+
+    #[test]
     fn mps_fleet_records_grants_and_never_oversubscribes() {
         let out = Fleet::builder()
             .windows(8)
@@ -1135,6 +1681,47 @@ mod tests {
         let last = out.grant_trace.last().unwrap();
         assert!((last[0] - 5.0 / 7.0).abs() < 1e-12, "0.8 quantizes to 5 slices");
         assert!((last[1] - 1.0 / 7.0).abs() < 1e-12, "0.1 is lifted to one slice");
+    }
+
+    #[test]
+    fn rebalance_cannot_shrink_a_slice_below_a_model_footprint() {
+        use crate::coordinator::policy::PartitionPolicy;
+
+        /// Proposes swapping the two members' slice counts every window.
+        struct Swap;
+        impl PartitionPolicy for Swap {
+            fn name(&self) -> &'static str {
+                "swap"
+            }
+            fn rebalance(&mut self, _: &[WindowObservation], _: &[f64]) -> Option<Vec<f64>> {
+                Some(vec![0.25, 0.5])
+            }
+        }
+
+        // 4 GB card in 4 MIG slices: inc-v4's ~1.4 GB footprint needs 2
+        // slices (2 GB ceiling); the swap proposal would leave it 1
+        // slice (1 GB) — SM-valid, memory-impossible. It must be
+        // rejected and counted, never accepted to OOM the next window.
+        let gpu = GpuSpec { mem_mb: 4096.0, ..TESLA_P40 };
+        let out = Fleet::builder()
+            .gpu(gpu)
+            .windows(6)
+            .rounds_per_window(4)
+            .seed(2)
+            .partition_mode(PartitionMode::MigSlices { slices: 4 })
+            .partition_policy(Swap)
+            .job(paper_job(3).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.5)
+            .job(paper_job(5).unwrap(), PolicySpec::Static { bs: 1, mtl: 1 })
+            .sm_reservation(0.25)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(out.admission_clamps >= 5, "memory-impossible rebalances must be counted");
+        for grants in &out.grant_trace {
+            assert!((grants[0] - 0.5).abs() < 1e-12, "inc-v4 must keep its 2 slices");
+        }
     }
 
     #[test]

@@ -23,13 +23,21 @@
 //!   shedding switch, and one global event loop interleaves their batch
 //!   rounds by next-event time — the "No DNN Left Behind" cross-job
 //!   burst-interference setting;
-//! * [`runner`] — the deprecated closed-loop `JobRunner` shim over
-//!   `ServingSession`, kept for legacy call sites.
+//! * [`cluster`] — **`Cluster`**, the scheduling layer above one device:
+//!   a heterogeneous pool of GPUs and MIG slices (each slice a virtual
+//!   device with its own SM grant and memory ceiling), a pluggable
+//!   [`cluster::Placement`] deciding which device each job lands on
+//!   (round-robin, memory best-fit, interference-aware), and per-device
+//!   serving through the very same fleet engine — a single-device
+//!   cluster reproduces `Fleet` byte for byte (see `docs/cluster.md`).
 //!
-//! Open-loop fleets schedule their members through the O(log M)
-//! [`calendar::EventCalendar`] (a binary heap keyed by next-event time;
-//! ties break toward the lower member index, exactly like the linear
-//! scan it replaced — see `docs/perf.md` and the `fleet_scale` bench).
+//! Open-loop fleets and clusters schedule their members through the
+//! O(log M) [`calendar::EventCalendar`] (a binary heap keyed by
+//! next-event time; ties break toward the lower member index, exactly
+//! like the linear scan it replaced — see `docs/perf.md` and the
+//! `fleet_scale` bench). The legacy closed-loop `JobRunner` shim was
+//! removed in PR 5; [`session::ServingSession`] is the single-job entry
+//! point.
 //!
 //! ## Control algorithms (all [`policy::Policy`] implementations)
 //!
@@ -56,6 +64,7 @@
 
 pub mod calendar;
 pub mod clipper;
+pub mod cluster;
 pub mod controller;
 pub(crate) mod engine;
 pub mod fleet;
@@ -64,12 +73,15 @@ pub mod latency;
 pub mod matcomp;
 pub mod policy;
 pub mod profiler;
-pub mod runner;
 pub mod scaler_batching;
 pub mod scaler_mt;
 pub mod session;
 pub mod snapshot;
 
+pub use cluster::{
+    Assignment, BestFit, Cluster, ClusterBuilder, ClusterOutcome, DeviceDesc, DeviceOutcome,
+    DeviceSpec, InterferenceAware, Placement, PlacementError, PlacementJob, RoundRobin,
+};
 pub use controller::{Controller, Decision, Method};
 pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
 pub use policy::{

@@ -22,9 +22,9 @@
 //!     .run()?;       // JobOutcome
 //! ```
 //!
-//! Closed-loop runs reproduce the legacy `JobRunner` results exactly
-//! (same device-RNG consumption order, same accounting), so every paper
-//! figure/table regenerates unchanged through this API.
+//! Closed-loop runs reproduce the original (pre-PR 1) serving loop
+//! exactly (same device-RNG consumption order, same accounting), so
+//! every paper figure/table regenerates unchanged through this API.
 
 use crate::device::{Device, DeviceError};
 use crate::gpusim::PartitionError;
@@ -229,6 +229,25 @@ pub enum ConfigError {
     /// A partition knob (`sm_reservation`, `partition_policy`) was set on
     /// a `TimeShare` fleet, where there are no partitions to configure.
     KnobRequiresPartition { knob: &'static str },
+    /// A list-valued knob (`sm_reservations`, `poisson_rates`) carried
+    /// neither one value (broadcast) nor exactly one per member. Longer
+    /// lists used to be silently truncated; now they are refused.
+    ListCountMismatch { knob: &'static str, got: usize, members: usize },
+    /// Both the whole-list form of a knob and its per-member form were
+    /// set; applying the list would silently overwrite the per-member
+    /// values, so the combination is refused.
+    ListOverridesMemberKnob { list: &'static str, knob: &'static str },
+    /// A cluster needs at least one device before jobs can be placed.
+    NoClusterDevices,
+    /// A cluster device spec string (`p40`, `t4`, `p40:mig4`, ...) could
+    /// not be parsed.
+    BadDeviceSpec { spec: String },
+    /// Carving this GPU into that many MIG slices leaves each virtual
+    /// device an SM fraction below the model's `MIN_GRANT` floor.
+    SliceTooSmall { gpu: String, slices: u32, fraction: f64 },
+    /// The cluster's job placement failed or produced an infeasible
+    /// assignment (see `coordinator::cluster`).
+    Placement(super::cluster::PlacementError),
 }
 
 impl fmt::Display for ConfigError {
@@ -282,6 +301,31 @@ impl fmt::Display for ConfigError {
                 "{knob} was set but the fleet partition mode is timeshare; \
                  select --partition mps or mig (PartitionMode::Mps/MigSlices) first"
             ),
+            ConfigError::ListCountMismatch { knob, got, members } => write!(
+                f,
+                "{knob} needs 1 value or one per member ({members} member(s), got {got} values)"
+            ),
+            ConfigError::ListOverridesMemberKnob { list, knob } => write!(
+                f,
+                "{list} would overwrite per-member {knob} values already set; \
+                 use either the whole-list form or the per-member form, not both"
+            ),
+            ConfigError::NoClusterDevices => {
+                write!(f, "cluster needs at least one device (.device(..))")
+            }
+            ConfigError::BadDeviceSpec { spec } => write!(
+                f,
+                "cannot parse device spec {spec:?} (expected NAME or NAME:migN, \
+                 with NAME one of p40, p4, t4)"
+            ),
+            ConfigError::SliceTooSmall { gpu, slices, fraction } => write!(
+                f,
+                "{gpu} split into {slices} MIG slices leaves each virtual device only \
+                 {fraction:.4} of the calibration GPU's SMs, below the {MIN_GRANT} \
+                 minimum grant; use fewer slices or a bigger card",
+                MIN_GRANT = crate::gpusim::MIN_GRANT
+            ),
+            ConfigError::Placement(e) => write!(f, "job placement failed: {e}"),
         }
     }
 }
@@ -796,6 +840,10 @@ pub(crate) fn serve_closed_window(
                 let s = device.execute_batch_granted(bs, mtl, grant)?;
                 (s, s.latency_ms)
             }
+            SmShare::GrantInflate { grant, factor } => {
+                let s = device.execute_batch_granted(bs, mtl, grant)?;
+                (s, s.latency_ms * factor)
+            }
         };
         window.record(lat_ms);
         wall_ms += lat_ms;
@@ -843,8 +891,8 @@ pub(crate) fn serve_closed_window(
     Ok((record, obs))
 }
 
-/// Closed-loop serve: a byte-faithful port of the legacy `JobRunner`
-/// loop, so figures/tables regenerate identically through the new API.
+/// Closed-loop serve: a byte-faithful port of the original closed-loop
+/// runner, so figures/tables regenerate identically through this API.
 fn run_closed(
     cfg: &RunConfig,
     job: &JobSpec,
@@ -963,11 +1011,32 @@ fn run_open(
 mod tests {
     use super::*;
     use crate::coordinator::job::paper_job;
-    use crate::coordinator::runner::JobRunner;
     use crate::gpusim::GpuSim;
 
     fn sim(job: &JobSpec, seed: u64) -> GpuSim {
         GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap()
+    }
+
+    /// Seeded closed-loop DNNScaler-vs-Clipper pair (ported from the
+    /// deleted `JobRunner` shim's tests: same seeds, same expectations —
+    /// these pin the paper-calibrated serving behaviour itself).
+    fn run_pair(job_id: u32, windows: usize) -> (JobOutcome, JobOutcome) {
+        let job = paper_job(job_id).unwrap();
+        let cfg = RunConfig::windows(windows, 20);
+        let run = |spec: PolicySpec<'static>, seed: u64| {
+            ServingSession::builder()
+                .config(cfg.clone())
+                .job(job)
+                .device(sim(job, seed))
+                .policy(spec)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let scaler = run(PolicySpec::DnnScaler, 1000 + job_id as u64);
+        let clipper = run(PolicySpec::Clipper, 2000 + job_id as u64);
+        (scaler, clipper)
     }
 
     #[test]
@@ -1034,34 +1103,91 @@ mod tests {
     }
 
     #[test]
-    fn builder_and_shim_paths_agree_bit_for_bit() {
-        // Guards the shim's config/policy mapping: JobRunner must wire
-        // RunConfig + PolicySpec into the builder so that both entry
-        // points consume the device RNG identically. (Both sides execute
-        // run_closed, so this does NOT re-verify the port against the
-        // deleted legacy loop — the runner.rs seeded tests, whose
-        // expected numbers predate the port, do that.)
+    fn job1_mt_beats_clipper() {
+        // Job 1 (inc-v1): the paper reports MT with ~7x throughput.
+        let (scaler, clipper) = run_pair(1, 40);
+        assert_eq!(scaler.method, Some(crate::coordinator::Method::MultiTenancy));
+        assert!(scaler.steady_mtl >= 6, "steady mtl {}", scaler.steady_mtl);
+        assert!(
+            scaler.throughput > 1.5 * clipper.throughput,
+            "DNNScaler {:.0}/s must beat Clipper {:.0}/s",
+            scaler.throughput,
+            clipper.throughput
+        );
+        assert!(scaler.slo_attainment > 0.9, "attainment {}", scaler.slo_attainment);
+        // Clipper's +4 step massively overshoots job 1's knee (BS ~ 4),
+        // so its sawtooth spends most windows in violation. The paper
+        // shows the same collapse: Table 6 reports Clipper at 32.9 inf/s
+        // on job 1 versus 118.7 inf/s base throughput.
+        assert!(clipper.slo_attainment > 0.1, "attainment {}", clipper.slo_attainment);
+        assert!(clipper.slo_attainment < scaler.slo_attainment);
+    }
+
+    #[test]
+    fn job3_batching_parity_with_clipper() {
+        // Job 3 (inc-v4): both use batching; throughput parity (±20%).
+        let (scaler, clipper) = run_pair(3, 40);
+        assert_eq!(scaler.method, Some(crate::coordinator::Method::Batching));
+        let ratio = scaler.throughput / clipper.throughput;
+        assert!((0.8..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn steady_knob_close_to_paper_for_batching_jobs() {
+        // Jobs 3 and 12 (inc-v4, resv2-152 on ImageNet): the paper's two
+        // canonical batching jobs. Job 17's Caltech knee is dominated by
+        // prep calibration we only bound loosely, so it is not asserted.
+        use crate::coordinator::job::SteadyKnob;
+        for id in [3u32, 12] {
+            let job = paper_job(id).unwrap();
+            let (scaler, _) = run_pair(id, 40);
+            if let SteadyKnob::Bs(paper_bs) = job.paper_steady {
+                let got = scaler.steady_bs;
+                // Within a factor of ~3 of the paper's steady BS — the
+                // absolute knee depends on absolute latency calibration,
+                // which we only bound to coarse bands (DESIGN.md §7).
+                assert!(
+                    got as f64 >= paper_bs as f64 / 3.0 && got as f64 <= paper_bs as f64 * 3.0,
+                    "job {id}: steady bs {got} vs paper {paper_bs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_slo_schedule_sheds_instances() {
         let job = paper_job(1).unwrap();
-        let cfg = RunConfig::windows(12, 10);
-        let mut d1 = sim(job, 9);
-        let a = JobRunner::new(cfg.clone()).run_dnnscaler(job, &mut d1).unwrap();
-        let b = ServingSession::builder()
-            .config(cfg)
+        let out = ServingSession::builder()
+            .config(RunConfig {
+                windows: 30,
+                rounds_per_window: 10,
+                slo_schedule: vec![(15, 10.0)],
+                ..Default::default()
+            })
             .job(job)
-            .device(sim(job, 9))
+            .device(sim(job, 5))
             .policy(PolicySpec::DnnScaler)
             .build()
             .unwrap()
             .run()
             .unwrap();
-        assert_eq!(a.throughput, b.throughput);
-        assert_eq!(a.p95_ms, b.p95_ms);
-        assert_eq!(a.steady_bs, b.steady_bs);
-        assert_eq!(a.steady_mtl, b.steady_mtl);
-        assert_eq!(a.slo_attainment, b.slo_attainment);
-        assert_eq!(a.method, b.method);
-        assert_eq!(a.controller, b.controller);
-        assert_eq!(a.trace.len(), b.trace.len());
+        assert_eq!(out.trace[14].slo_ms, 35.0);
+        assert_eq!(out.trace[15].slo_ms, 10.0);
+        // MT must shed instances when the SLO halves (Fig. 10(a)).
+        let before = out.trace[14].mtl;
+        let after = out.trace.last().unwrap().mtl;
+        assert!(after < before, "mtl {before} -> {after} must shrink");
+    }
+
+    #[test]
+    fn outcome_accounting_consistent() {
+        let (scaler, _) = run_pair(26, 30);
+        assert_eq!(scaler.trace.len(), 30);
+        assert!(scaler.throughput > 0.0);
+        assert!(scaler.p95_ms > 0.0);
+        assert!((0.0..=1.0).contains(&scaler.slo_attainment));
+        let total_reqs: f64 = scaler.latencies.iter().map(|(_, w)| w).sum();
+        assert!(total_reqs > 0.0);
     }
 
     #[test]

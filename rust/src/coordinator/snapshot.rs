@@ -19,6 +19,7 @@
 
 use crate::json::Json;
 
+use super::cluster::ClusterOutcome;
 use super::fleet::FleetOutcome;
 use super::session::{JobOutcome, WindowRecord};
 
@@ -108,6 +109,43 @@ pub fn fleet_outcome_to_json(o: &FleetOutcome) -> Json {
         (
             "members",
             Json::Arr(o.members.iter().map(job_outcome_to_json).collect()),
+        ),
+    ])
+}
+
+/// Snapshot a cluster outcome: placement metadata, the assignment, and
+/// one full fleet snapshot per device (device descriptor included, so a
+/// drifting perf fraction or memory ceiling is fixture-visible too).
+pub fn cluster_outcome_to_json(o: &ClusterOutcome) -> Json {
+    obj(vec![
+        ("placement", Json::Str(o.placement.clone())),
+        (
+            "assignment",
+            Json::Arr(o.assignment.iter().map(|&d| num(d as f64)).collect()),
+        ),
+        ("total_throughput", num(o.total_throughput)),
+        ("total_goodput", num(o.total_goodput)),
+        (
+            "devices",
+            Json::Arr(
+                o.devices
+                    .iter()
+                    .map(|d| {
+                        obj(vec![
+                            ("name", Json::Str(d.device.name.clone())),
+                            ("gpu", Json::Str(d.device.spec.name.to_string())),
+                            ("perf_fraction", num(d.device.perf_fraction)),
+                            ("mem_mb", num(d.device.mem_mb)),
+                            ("physical", num(d.device.physical as f64)),
+                            (
+                                "jobs",
+                                Json::Arr(d.jobs.iter().map(|&j| num(j as f64)).collect()),
+                            ),
+                            ("fleet", fleet_outcome_to_json(&d.fleet)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
     ])
 }

@@ -37,8 +37,8 @@ pub mod profiles;
 
 pub use noise::NoiseModel;
 pub use partition::{
-    plan_grants, quantize_to_slices, PartitionError, PartitionMode, SmPool, DEFAULT_MIG_SLICES,
-    MIN_GRANT,
+    check_mem_ceilings, plan_grants, plan_mem_ceilings, quantize_to_slices, PartitionError,
+    PartitionMode, SmPool, DEFAULT_MIG_SLICES, MIN_GRANT,
 };
 pub use perf::{OperatingPoint, PerfBreakdown};
 pub use profiles::{dataset_multiplier, paper_profile, Dataset, DnnProfile, PAPER_DNNS};
@@ -69,6 +69,43 @@ pub const TESLA_P40: GpuSpec = GpuSpec {
     peak_tflops: 11.76,
     pcie_gbps: 12.0,
 };
+
+/// The P40's low-profile inference sibling (same Pascal generation,
+/// ~47% of the compute, a third of the memory) — the canonical "small"
+/// device of a heterogeneous inference pool.
+pub const TESLA_P4: GpuSpec = GpuSpec {
+    name: "Tesla P4",
+    cuda_cores: 2560,
+    mem_mb: 8192.0,
+    idle_w: 25.0,
+    max_w: 75.0,
+    peak_tflops: 5.5,
+    pcie_gbps: 12.0,
+};
+
+/// The Turing inference card that replaced the P4 in most fleets:
+/// ~69% of a P40's f32 compute with 16 GB of memory.
+pub const TESLA_T4: GpuSpec = GpuSpec {
+    name: "Tesla T4",
+    cuda_cores: 2560,
+    mem_mb: 16384.0,
+    idle_w: 17.0,
+    max_w: 70.0,
+    peak_tflops: 8.1,
+    pcie_gbps: 12.0,
+};
+
+/// Lookup a catalogued accelerator by its CLI spelling (`p40`, `p4`,
+/// `t4`). The perf model is calibrated on the P40; smaller devices are
+/// modelled as fractional-capacity P40s (see `coordinator::cluster`).
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "p40" | "tesla-p40" => Some(TESLA_P40),
+        "p4" | "tesla-p4" => Some(TESLA_P4),
+        "t4" | "tesla-t4" => Some(TESLA_T4),
+        _ => None,
+    }
+}
 
 /// A simulated GPU serving one DNN job at a given operating point.
 #[derive(Debug, Clone)]
@@ -116,6 +153,13 @@ impl GpuSim {
     /// SM utilization (nvidia-smi style busy fraction x residency), 0..1.
     pub fn sm_utilization(&self, bs: u32, mtl: u32) -> f64 {
         perf::sm_utilization(&self.profile, self.dataset, bs, mtl)
+    }
+
+    /// SM utilization of this job confined to an SM partition of
+    /// fraction `grant` (never exceeds the grant); `grant = 1`
+    /// reproduces [`GpuSim::sm_utilization`] bit for bit.
+    pub fn sm_utilization_granted(&self, bs: u32, mtl: u32, grant: f64) -> f64 {
+        perf::sm_utilization_granted(&self.profile, self.dataset, bs, mtl, grant)
     }
 
     /// Board power draw (W) at `(bs, mtl)`.
@@ -301,6 +345,20 @@ mod tests {
         let mean_full = s.mean_batch_latency_ms(1, 8);
         let mean_half = s.mean_batch_latency_ms_granted(1, 8, 0.5);
         assert!(mean_half > mean_full, "{mean_half} vs {mean_full}");
+    }
+
+    #[test]
+    fn gpu_catalogue_lookup_and_sanity() {
+        assert_eq!(gpu_by_name("p40").unwrap().name, "Tesla P40");
+        assert_eq!(gpu_by_name("P4").unwrap().name, "Tesla P4");
+        assert_eq!(gpu_by_name(" t4 ").unwrap().name, "Tesla T4");
+        assert!(gpu_by_name("a100").is_none());
+        // The catalogue's heterogeneity is real: every non-P40 device is
+        // strictly smaller than the calibration GPU in compute.
+        for g in [TESLA_P4, TESLA_T4] {
+            assert!(g.peak_tflops < TESLA_P40.peak_tflops, "{}", g.name);
+            assert!(g.mem_mb < TESLA_P40.mem_mb, "{}", g.name);
+        }
     }
 
     #[test]

@@ -101,6 +101,10 @@ pub enum PartitionError {
     /// Every SM is explicitly reserved but some members have no
     /// reservation — they would be granted nothing.
     NoShareLeft { unreserved: usize },
+    /// A member's model footprint does not fit the memory ceiling of its
+    /// MIG slice bundle (MIG partitions memory along with the SMs; see
+    /// [`plan_mem_ceilings`]).
+    MemoryExceeded { index: usize, demand_mb: f64, ceiling_mb: f64 },
 }
 
 impl fmt::Display for PartitionError {
@@ -124,6 +128,11 @@ impl fmt::Display for PartitionError {
                 f,
                 "explicit reservations consume the whole GPU but {unreserved} member(s) \
                  have no reservation left to share"
+            ),
+            PartitionError::MemoryExceeded { index, demand_mb, ceiling_mb } => write!(
+                f,
+                "member {index}: model footprint {demand_mb:.0} MB exceeds its MIG slice \
+                 memory ceiling {ceiling_mb:.0} MB"
             ),
         }
     }
@@ -203,6 +212,41 @@ pub fn plan_grants(
         }
     }
     Ok(grants)
+}
+
+/// Per-member GPU-memory ceilings (MB) implied by a set of SM grants.
+///
+/// MIG is the only mode that partitions memory: each slice bundle owns
+/// the same fraction of device memory as of the SMs, so a member granted
+/// `k/slices` of the SMs may touch at most `k/slices` of the memory.
+/// `Mps` (and `TimeShare`) leave memory a whole-device resource — CUDA
+/// MPS shares the memory space, so every member's ceiling is the full
+/// device and only the fleet's combined-demand admission applies.
+pub fn plan_mem_ceilings(mode: PartitionMode, grants: &[f64], mem_mb: f64) -> Vec<f64> {
+    match mode {
+        PartitionMode::MigSlices { .. } => grants.iter().map(|g| g * mem_mb).collect(),
+        _ => vec![mem_mb; grants.len()],
+    }
+}
+
+/// Check per-member memory demands against the ceilings of their slice
+/// bundles ([`plan_mem_ceilings`]). The first member whose demand
+/// exceeds its ceiling is reported as a typed
+/// [`PartitionError::MemoryExceeded`]; modes that do not partition
+/// memory always pass.
+pub fn check_mem_ceilings(
+    mode: PartitionMode,
+    grants: &[f64],
+    mem_mb: f64,
+    demands_mb: &[f64],
+) -> Result<(), PartitionError> {
+    let ceilings = plan_mem_ceilings(mode, grants, mem_mb);
+    for (index, (&demand_mb, &ceiling_mb)) in demands_mb.iter().zip(&ceilings).enumerate() {
+        if demand_mb > ceiling_mb {
+            return Err(PartitionError::MemoryExceeded { index, demand_mb, ceiling_mb });
+        }
+    }
+    Ok(())
 }
 
 /// The admission-side SM ledger: capacity 1.0, grants taken and released.
@@ -342,6 +386,39 @@ mod tests {
                 assert!((units - units.round()).abs() < 1e-9, "{q} not slice-aligned");
             }
         }
+    }
+
+    #[test]
+    fn mig_splits_memory_with_the_slices_but_mps_does_not() {
+        let mode = PartitionMode::MigSlices { slices: 4 };
+        let grants = plan_grants(mode, &[Some(0.5), Some(0.25), None]).unwrap();
+        // 0.5 -> 2/4, 0.25 -> 1/4, default 0.25 -> 1/4.
+        let ceilings = plan_mem_ceilings(mode, &grants, 16_000.0);
+        assert!((ceilings[0] - 8_000.0).abs() < 1e-6);
+        assert!((ceilings[1] - 4_000.0).abs() < 1e-6);
+        assert!((ceilings[2] - 4_000.0).abs() < 1e-6);
+        // MPS shares the memory space: every ceiling is the whole device.
+        assert_eq!(
+            plan_mem_ceilings(PartitionMode::Mps, &[0.7, 0.3], 16_000.0),
+            vec![16_000.0, 16_000.0]
+        );
+    }
+
+    #[test]
+    fn mem_ceiling_check_reports_the_offender() {
+        let mode = PartitionMode::MigSlices { slices: 4 };
+        let grants = vec![0.5, 0.25];
+        // Member 1's 5 GB footprint cannot live in a 4 GB quarter slice.
+        let err = check_mem_ceilings(mode, &grants, 16_000.0, &[1_000.0, 5_000.0]).unwrap_err();
+        assert_eq!(
+            err,
+            PartitionError::MemoryExceeded { index: 1, demand_mb: 5_000.0, ceiling_mb: 4_000.0 }
+        );
+        assert!(err.to_string().contains("5000 MB"), "{err}");
+        // Same demands are fine when memory is not partitioned (MPS).
+        assert!(check_mem_ceilings(PartitionMode::Mps, &grants, 16_000.0, &[1_000.0, 5_000.0])
+            .is_ok());
+        assert!(check_mem_ceilings(mode, &grants, 16_000.0, &[1_000.0, 3_999.0]).is_ok());
     }
 
     #[test]

@@ -86,6 +86,15 @@
 //!   plugs in through an adapter. [`coordinator::policy::QueuePolicy`]
 //!   uses the demand-side fields to scale *before* p95 degrades.
 //!
+//! [`coordinator::cluster::Cluster`] is the scheduling layer ABOVE one
+//! device: jobs placed across a heterogeneous pool of GPUs and MIG
+//! slices (each slice a virtual device with its own SM grant and memory
+//! ceiling) by a pluggable [`coordinator::cluster::Placement`]
+//! (round-robin, memory best-fit, interference-aware), every device
+//! served by the same fleet engine in one global virtual-time loop — a
+//! single-device cluster reproduces `Fleet` byte for byte (see
+//! `docs/cluster.md`).
+//!
 //! Everything the paper's evaluation section reports is regenerated by
 //! `cargo bench` (see DESIGN.md §6).
 
@@ -100,13 +109,16 @@ pub mod rng;
 pub mod runtime;
 pub mod workload;
 
+pub use coordinator::cluster::{
+    Assignment, BestFit, Cluster, ClusterBuilder, ClusterOutcome, DeviceDesc, DeviceOutcome,
+    DeviceSpec, InterferenceAware, Placement, PlacementError, PlacementJob, RoundRobin,
+};
 pub use coordinator::fleet::{Fleet, FleetBuilder, FleetOutcome};
 pub use coordinator::job::{JobSpec, PAPER_JOBS};
 pub use coordinator::policy::{
     Action, DemandPartition, PartitionPolicy, Policy, QueuePolicy, StaticPolicy,
     WindowObservation,
 };
-pub use coordinator::runner::JobRunner;
 pub use coordinator::session::{
     ConfigError, JobOutcome, PolicySpec, RunConfig, ServingSession, SessionBuilder,
 };

@@ -24,6 +24,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use dnnscaler::coordinator::cluster::{
+    BestFit, Cluster, DeviceSpec, InterferenceAware, Placement, RoundRobin,
+};
 use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
 use dnnscaler::coordinator::session::{
     JobOutcome, PolicySpec, RunConfig, ServingSession, DEFAULT_BATCH_TIMEOUT_MS,
@@ -66,6 +69,18 @@ COMMANDS:
            spatial capacity grants (MIG quantizes down to 1/N slices);
            --reservations pins per-member SM fractions (one value or one
            per member; members without one split the rest equally).
+  cluster  --devices SPEC1,SPEC2,.. [--placement rr|bestfit|interference]
+           [--ids 1,4,10] [--windows N] [--seed N] [--method M]
+           [--rates R1,R2,..] [--shed] [--timeout-ms MS] [--queue-cap N]
+           Serve jobs across a HETEROGENEOUS pool of devices — the
+           scheduling layer above one GPU. Device specs: p40 | p4 | t4,
+           optionally :migN to expose the card as N MIG virtual devices
+           (each with 1/N of the SMs and memory). --placement picks which
+           device each job lands on: rr (round robin), bestfit
+           (memory bin packing), interference (separates bursty SM hogs).
+           With --rates (one Poisson rate per job, or one for all) jobs
+           serve open-loop through the shared event engine; without, the
+           cluster serves closed-loop.
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
   serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
@@ -355,6 +370,24 @@ fn main() -> Result<()> {
                 ],
             )?;
             cmd_fleet(&flags)
+        }
+        "cluster" => {
+            let flags = Flags::parse(
+                rest,
+                &[
+                    "devices",
+                    "placement",
+                    "ids",
+                    "windows",
+                    "seed",
+                    "method",
+                    "rates",
+                    "shed",
+                    "timeout-ms",
+                    "queue-cap",
+                ],
+            )?;
+            cmd_cluster(&flags)
         }
         "sweep" => {
             let flags = Flags::parse(rest, &["dnn", "dataset", "knob"])?;
@@ -668,17 +701,8 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         None => None,
         Some(s) => Some(parse_positive_list("reservations", s)?),
     };
-    if let Some(rs) = &reservations {
-        if !partition.is_spatial() {
-            bail!("--reservations needs --partition mps or mig (timeshare has no partitions)");
-        }
-        if rs.len() != 1 && rs.len() != jobs.len() {
-            bail!(
-                "--reservations needs 1 value or one per member ({} jobs, {} reservations)",
-                jobs.len(),
-                rs.len()
-            );
-        }
+    if reservations.is_some() && !partition.is_spatial() {
+        bail!("--reservations needs --partition mps or mig (timeshare has no partitions)");
     }
 
     let mut b = Fleet::builder()
@@ -709,9 +733,12 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         } else {
             b = b.job(job, spec);
         }
-        if let Some(rs) = &reservations {
-            b = b.sm_reservation(if rs.len() == 1 { rs[0] } else { rs[i] });
-        }
+    }
+    // The whole-list form: the builder broadcasts one value or matches
+    // one per member, and rejects any other count with a typed
+    // ConfigError (a longer list used to be possible to truncate here).
+    if let Some(rs) = &reservations {
+        b = b.sm_reservations(rs);
     }
     let out = b
         .build()
@@ -764,6 +791,140 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
     if let Some(grants) = out.grant_trace.last() {
         let shares: Vec<String> = grants.iter().map(|g| format!("{g:.3}")).collect();
         println!("final SM grants ({}): [{}]", out.partition, shares.join(", "));
+    }
+    Ok(())
+}
+
+/// Parse `--placement` into the placer it names.
+fn parse_placement(s: &str) -> Result<Box<dyn Placement>> {
+    match s {
+        "rr" | "roundrobin" | "round-robin" => Ok(Box::new(RoundRobin::new())),
+        "bestfit" | "best-fit" => Ok(Box::new(BestFit::new())),
+        "interference" | "interference-aware" => Ok(Box::new(InterferenceAware::new())),
+        other => bail!("--placement must be rr, bestfit, or interference (got {other:?})"),
+    }
+}
+
+fn cmd_cluster(flags: &Flags) -> Result<()> {
+    let devices_arg = flags
+        .get("devices")
+        .ok_or_else(|| anyhow!("cluster needs --devices SPEC1,SPEC2,.. (e.g. p40,t4:mig2)"))?;
+    let specs = DeviceSpec::parse_list(devices_arg).map_err(|e| anyhow!(e.to_string()))?;
+    let placement = parse_placement(&flags.str_or("placement", "rr"))?;
+    let ids = flags.str_or("ids", "1,4,10");
+    let windows = flags.num_or("windows", 20usize)?;
+    let seed = flags.num_or("seed", 42u64)?;
+    let shed = flags.has("shed");
+    let timeout_ms: f64 = flags.num_or("timeout-ms", DEFAULT_BATCH_TIMEOUT_MS)?;
+    let queue_cap: Option<usize> = match flags.get("queue-cap") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("--queue-cap: cannot parse {v:?}"))?),
+    };
+
+    let mut jobs = Vec::new();
+    for tok in ids.split(',') {
+        let id: u32 = tok.trim().parse().map_err(|_| anyhow!("--ids: bad job id {tok:?}"))?;
+        jobs.push(paper_job(id).ok_or_else(|| anyhow!("job id must be 1..=30, got {id}"))?);
+    }
+    let rates: Option<Vec<f64>> = match flags.get("rates") {
+        None => None,
+        Some(s) => Some(parse_positive_list("rates", s)?),
+    };
+    if rates.is_none() && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
+        bail!("--shed/--timeout-ms/--queue-cap need --rates (open-loop cluster)");
+    }
+
+    let mut b = Cluster::builder()
+        .windows(windows)
+        .rounds_per_window(20)
+        .seed(seed)
+        .placement(placement);
+    for spec in &specs {
+        b = b.device_spec(spec);
+    }
+    for job in &jobs {
+        let spec = parse_method(flags)?;
+        b = b.job(job, spec);
+        if rates.is_some() {
+            b = b.batch_timeout_ms(timeout_ms).shed_deadline(shed);
+            if let Some(cap) = queue_cap {
+                b = b.queue_capacity(cap);
+            }
+        }
+    }
+    // One rate (broadcast) or one per job; the builder refuses any
+    // other count with a typed ConfigError and turns every job open-loop.
+    if let Some(rs) = &rates {
+        b = b.poisson_rates(rs);
+    }
+    let cluster = b.build().map_err(|e| anyhow!(e.to_string()))?;
+    let out = cluster.run().map_err(|e| anyhow!(e.to_string()))?;
+
+    let open = rates.is_some();
+    let picked: Vec<u32> = jobs.iter().map(|j| j.id).collect();
+    let title = format!(
+        "Cluster: jobs {picked:?} on {} device(s) [placement {}]{}",
+        out.devices.len(),
+        out.placement,
+        if open { " [open-loop]" } else { "" },
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "device", "sm", "mem(MB)", "job", "dnn", "policy", "knob", "thr", "goodput",
+            "p95(ms)", "attain%",
+        ],
+    );
+    for dev in &out.devices {
+        if dev.fleet.members.is_empty() {
+            t.row(&[
+                dev.device.name.clone(),
+                f2(dev.device.perf_fraction),
+                format!("{:.0}", dev.device.mem_mb),
+                "-".into(),
+                "(idle)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        for (m, &j) in dev.fleet.members.iter().zip(&dev.jobs) {
+            t.row(&[
+                dev.device.name.clone(),
+                f2(dev.device.perf_fraction),
+                format!("{:.0}", dev.device.mem_mb),
+                format!("{} (#{j})", m.job_id),
+                m.dnn.clone(),
+                m.controller.clone(),
+                format!("bs={} mtl={}", m.steady_bs, m.steady_mtl),
+                f1(m.throughput),
+                f1(m.goodput),
+                f2(m.p95_ms),
+                f1(m.slo_attainment * 100.0),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "cluster total {:.1} inf/s (goodput {:.1}) | assignment {:?}",
+        out.total_throughput, out.total_goodput, out.assignment
+    );
+    for dev in &out.devices {
+        if !dev.fleet.members.is_empty() {
+            println!(
+                "  {}: {:.1} inf/s, peak mem {:.0}/{:.0} MB, peak SM pressure {:.2}, clamps {}",
+                dev.device.name,
+                dev.fleet.total_throughput,
+                dev.fleet.peak_mem_mb,
+                dev.fleet.mem_capacity_mb,
+                dev.fleet.peak_contention,
+                dev.fleet.admission_clamps
+            );
+        }
     }
     Ok(())
 }
@@ -920,6 +1081,20 @@ mod tests {
             .unwrap();
         assert!(cfg.shed);
         assert_eq!(cfg.queue_cap, Some(32));
+    }
+
+    #[test]
+    fn placement_flag_selects_placers() {
+        use super::parse_placement;
+        use dnnscaler::coordinator::cluster::Placement;
+        assert_eq!(parse_placement("rr").unwrap().name(), "rr");
+        assert_eq!(parse_placement("bestfit").unwrap().name(), "bestfit");
+        assert_eq!(
+            parse_placement("interference-aware").unwrap().name(),
+            "interference"
+        );
+        let err = parse_placement("magic").unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Cluster-layer tests: the Fleet-equivalence contract, the golden
+//! heterogeneous fixture, placement feasibility properties, and the
+//! interference-aware-beats-round-robin acceptance scenario.
+//!
+//! The golden fixture follows the PR 3 lifecycle: missing -> blessed
+//! (commit it), `REGEN_FIXTURES=1` -> rewritten, otherwise byte-diffed.
+
+use dnnscaler::coordinator::cluster::{
+    BestFit, Cluster, DeviceDesc, InterferenceAware, Placement, PlacementJob, RoundRobin,
+};
+use dnnscaler::coordinator::job::{paper_job, PAPER_JOBS};
+use dnnscaler::coordinator::session::{PolicySpec, RunConfig};
+use dnnscaler::coordinator::snapshot::{cluster_outcome_to_json, fleet_outcome_to_json, render};
+use dnnscaler::coordinator::Fleet;
+use dnnscaler::gpusim::{paper_profile, perf, GpuSpec, TESLA_P4, TESLA_P40, TESLA_T4};
+use dnnscaler::rng::Rng;
+use dnnscaler::workload::ArrivalPattern;
+
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Same lifecycle as tests/golden.rs: bless when absent or regenerating,
+/// byte-compare otherwise.
+fn assert_matches_fixture(name: &str, got: &str) {
+    let path = fixture_path(name);
+    let regen = std::env::var_os("REGEN_FIXTURES").is_some();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        println!(
+            "golden: {} fixture {name} ({} bytes) — commit it to pin the baseline",
+            if regen { "regenerated" } else { "blessed new" },
+            got.len()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, got,
+        "\ngolden fixture drift: {name}\n\
+         Cluster serving outcomes changed byte-for-byte. If intended,\n\
+         regenerate with `make test-fixtures` and commit the diff.\n"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fleet equivalence: a single-device cluster IS the fleet
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_device_cluster_reproduces_open_loop_fleet_byte_for_byte() {
+    // Same jobs, same policies, same knobs, same seed: the fleet's
+    // outcome snapshot and the 1-device cluster's device snapshot must
+    // be BYTE-identical — the cluster really is the fleet engine lifted
+    // over devices, not a reimplementation that merely agrees on
+    // averages.
+    let fleet = Fleet::builder()
+        .windows(10)
+        .rounds_per_window(8)
+        .seed(13)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::DnnScaler,
+            ArrivalPattern::poisson(40.0),
+        )
+        .queue_capacity(128)
+        .job_with_arrivals(
+            paper_job(4).unwrap(),
+            PolicySpec::QueueAware,
+            ArrivalPattern::bursty(25.0, 3.0, 4.0, 1.0),
+        )
+        .shed_deadline(true)
+        .job_with_arrivals(
+            paper_job(5).unwrap(),
+            PolicySpec::Static { bs: 2, mtl: 2 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .batch_timeout_ms(3.0)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let cluster = Cluster::builder()
+        .device(TESLA_P40)
+        .windows(10)
+        .rounds_per_window(8)
+        .seed(13)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::DnnScaler,
+            ArrivalPattern::poisson(40.0),
+        )
+        .queue_capacity(128)
+        .job_with_arrivals(
+            paper_job(4).unwrap(),
+            PolicySpec::QueueAware,
+            ArrivalPattern::bursty(25.0, 3.0, 4.0, 1.0),
+        )
+        .shed_deadline(true)
+        .job_with_arrivals(
+            paper_job(5).unwrap(),
+            PolicySpec::Static { bs: 2, mtl: 2 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .batch_timeout_ms(3.0)
+        .placement(RoundRobin::new())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(cluster.devices.len(), 1);
+    assert_eq!(cluster.assignment, vec![0, 0, 0]);
+    let fleet_bytes = render(&fleet_outcome_to_json(&fleet));
+    let cluster_bytes = render(&fleet_outcome_to_json(&cluster.devices[0].fleet));
+    assert_eq!(
+        fleet_bytes, cluster_bytes,
+        "single-device cluster diverged from the fleet engine"
+    );
+}
+
+#[test]
+fn single_device_cluster_reproduces_closed_loop_fleet_byte_for_byte() {
+    let fleet = Fleet::builder()
+        .windows(12)
+        .rounds_per_window(8)
+        .seed(7)
+        .job(paper_job(1).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(3).unwrap(), PolicySpec::Clipper)
+        .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 2, mtl: 2 })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let cluster = Cluster::builder()
+        .device(TESLA_P40)
+        .windows(12)
+        .rounds_per_window(8)
+        .seed(7)
+        .job(paper_job(1).unwrap(), PolicySpec::DnnScaler)
+        .job(paper_job(3).unwrap(), PolicySpec::Clipper)
+        .job(paper_job(4).unwrap(), PolicySpec::Static { bs: 2, mtl: 2 })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        render(&fleet_outcome_to_json(&fleet)),
+        render(&fleet_outcome_to_json(&cluster.devices[0].fleet)),
+        "closed-loop single-device cluster diverged from the fleet engine"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixture: heterogeneous 2-physical-GPU cluster
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_heterogeneous_cluster() {
+    // One whole GPU plus two MIG virtual devices carved from a second
+    // card (the issue's canonical heterogeneous pool), three open-loop
+    // jobs placed by memory best-fit. Fully seeded, so these bytes pin
+    // placement, per-device admission, slice-as-device execution, and
+    // outcome aggregation at once.
+    let out = Cluster::builder()
+        .device(TESLA_T4)
+        .mig_device(TESLA_P40, 2)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 2 },
+            ArrivalPattern::poisson(40.0),
+        )
+        .job_with_arrivals(
+            paper_job(5).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 2 },
+            ArrivalPattern::poisson(30.0),
+        )
+        .job_with_arrivals(
+            paper_job(4).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(20.0),
+        )
+        .placement(BestFit::new())
+        .windows(8)
+        .rounds_per_window(8)
+        .seed(11)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_matches_fixture("cluster_hetero_3dev.json", &render(&cluster_outcome_to_json(&out)));
+}
+
+// ---------------------------------------------------------------------------
+// Placement feasibility property
+// ---------------------------------------------------------------------------
+
+fn random_device(rng: &mut Rng, physical: usize) -> DeviceDesc {
+    let spec: GpuSpec = [TESLA_P40, TESLA_T4, TESLA_P4][rng.below(3)].clone();
+    // Whole cards and synthetic fractions (a slice-as-device stand-in).
+    let fraction = match rng.below(3) {
+        0 => 1.0,
+        1 => 0.5,
+        _ => 0.25,
+    };
+    DeviceDesc {
+        name: format!("dev{physical}"),
+        perf_fraction: (spec.peak_tflops / TESLA_P40.peak_tflops).min(1.0) * fraction,
+        mem_mb: spec.mem_mb * fraction,
+        spec,
+        physical,
+        slice: None,
+    }
+}
+
+fn random_job(rng: &mut Rng) -> PlacementJob {
+    let spec = PAPER_JOBS[rng.below(PAPER_JOBS.len())];
+    let p = paper_profile(spec.dnn).unwrap();
+    let burstiness = if rng.chance(0.4) { rng.uniform_range(1.0, 8.0) } else { 1.0 };
+    PlacementJob {
+        spec,
+        mem_floor_mb: perf::mem_demand_mb(&p, 1, 1),
+        sm_demand: perf::residency(&p, 1),
+        mean_rate: rng.uniform_range(1.0, 200.0),
+        burstiness,
+    }
+}
+
+#[test]
+fn prop_every_placement_is_feasible_or_typed_error() {
+    // For arbitrary job mixes and device pools, EVERY placer either
+    // returns an assignment that validates (every job placed, every
+    // index in range, no device memory over-commit) or a typed
+    // PlacementError — never a silently infeasible assignment, never a
+    // panic.
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(0xC1_05_7E_12 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let devices: Vec<DeviceDesc> =
+            (0..1 + rng.below(4)).map(|i| random_device(&mut rng, i)).collect();
+        let jobs: Vec<PlacementJob> = (0..1 + rng.below(8)).map(|_| random_job(&mut rng)).collect();
+        let mut placers: Vec<Box<dyn Placement>> = vec![
+            Box::new(RoundRobin::new()),
+            Box::new(BestFit::new()),
+            Box::new(InterferenceAware::new()),
+        ];
+        for placer in &mut placers {
+            match placer.place(&jobs, &devices) {
+                Ok(a) => {
+                    a.validate(&jobs, &devices).unwrap_or_else(|e| {
+                        panic!(
+                            "seed {seed}: {} returned an infeasible assignment {:?}: {e}",
+                            placer.name(),
+                            a.device_of
+                        )
+                    });
+                    assert_eq!(a.device_of.len(), jobs.len(), "seed {seed}: job dropped");
+                }
+                // A typed refusal is a legitimate outcome (e.g. nothing
+                // fits); the property here is that an Ok is never a lie.
+                // (Refusal-completeness is NOT asserted: the greedy
+                // placers order jobs differently, and a greedy order can
+                // fail on a set another order packs.)
+                Err(_) => {}
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: interference-aware beats round robin under bursty neighbours
+// ---------------------------------------------------------------------------
+
+/// Two bursty SM hogs (inc-v4 at 4 instances: ~0.9 residency each, load
+/// near capacity) and two tiny smooth jobs, ordered so round robin
+/// co-locates the hogs on device 0. Time-sharing two hogs cuts each
+/// one's capacity below its offered load -> sustained backlog -> the
+/// sojourn tail blows the SLO -> goodput collapses. Interference-aware
+/// placement puts one hog per device and keeps everyone stable.
+fn bursty_neighbour_cluster(placement: impl Placement + 'static) -> dnnscaler::ClusterOutcome {
+    let hog = paper_job(3).unwrap(); // inc-v4, SLO 419 ms
+    let smooth = paper_job(5).unwrap(); // mobv1-025, SLO 186 ms
+    Cluster::builder()
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            hog,
+            PolicySpec::Static { bs: 1, mtl: 4 },
+            ArrivalPattern::bursty(24.0, 4.0, 2.0, 0.5),
+        )
+        .job_with_arrivals(
+            smooth,
+            PolicySpec::Static { bs: 1, mtl: 2 },
+            ArrivalPattern::poisson(30.0),
+        )
+        .job_with_arrivals(
+            hog,
+            PolicySpec::Static { bs: 1, mtl: 4 },
+            ArrivalPattern::bursty(24.0, 4.0, 2.0, 0.5),
+        )
+        .job_with_arrivals(
+            smooth,
+            PolicySpec::Static { bs: 1, mtl: 2 },
+            ArrivalPattern::poisson(30.0),
+        )
+        .placement(placement)
+        .windows(16)
+        .rounds_per_window(20)
+        .seed(17)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn interference_aware_beats_round_robin_on_goodput() {
+    let rr = bursty_neighbour_cluster(RoundRobin::new());
+    let ia = bursty_neighbour_cluster(InterferenceAware::new());
+    // The scenario is only meaningful if the placements actually differ
+    // the way the setup intends.
+    assert_eq!(
+        rr.assignment[0], rr.assignment[2],
+        "round robin was supposed to co-locate the hogs: {:?}",
+        rr.assignment
+    );
+    assert_ne!(
+        ia.assignment[0], ia.assignment[2],
+        "interference-aware was supposed to separate the hogs: {:?}",
+        ia.assignment
+    );
+    // Identical offered load (same job seeds regardless of placement):
+    // separating the bursty hogs must win on total goodput — the
+    // acceptance criterion.
+    assert!(
+        ia.total_goodput > rr.total_goodput,
+        "interference-aware goodput {:.1} must beat round robin {:.1}",
+        ia.total_goodput,
+        rr.total_goodput
+    );
+    // And the win comes from the hogs' tails, not an accounting quirk:
+    // under RR the co-located hogs' joint goodput collapses vs IA's.
+    let hog_goodput = |out: &dnnscaler::ClusterOutcome| -> f64 {
+        out.devices
+            .iter()
+            .flat_map(|d| d.fleet.members.iter())
+            .filter(|m| m.dnn == "inc-v4")
+            .map(|m| m.goodput)
+            .sum()
+    };
+    assert!(
+        hog_goodput(&ia) > hog_goodput(&rr),
+        "hog goodput: ia {:.1} vs rr {:.1}",
+        hog_goodput(&ia),
+        hog_goodput(&rr)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Assignment surface sanity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cluster_reports_placement_metadata() {
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .device(TESLA_P4)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(10.0),
+        )
+        .job_with_arrivals(
+            paper_job(5).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(10.0),
+        )
+        .placement(RoundRobin::new())
+        .windows(4)
+        .rounds_per_window(4)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(out.placement, "rr");
+    assert_eq!(out.assignment, vec![0, 1]);
+    assert_eq!(out.devices[0].jobs, vec![0]);
+    assert_eq!(out.devices[1].jobs, vec![1]);
+    // Totals aggregate the per-device fleets.
+    let sum: f64 = out.devices.iter().map(|d| d.fleet.total_throughput).sum();
+    assert!((out.total_throughput - sum).abs() < 1e-9);
+    // The validated assignment survives into a feasible serve: the P4
+    // device's admission ceiling is its own 8 GB, not the P40's.
+    assert_eq!(out.devices[1].fleet.mem_capacity_mb, TESLA_P4.mem_mb);
+}

@@ -15,7 +15,7 @@ fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// Closed-loop session on a fresh simulator (the legacy JobRunner path).
+/// Closed-loop session on a fresh simulator (the paper's serving mode).
 fn run_closed(job: &JobSpec, cfg: RunConfig, seed: u64, spec: PolicySpec<'static>) -> JobOutcome {
     let sim = GpuSim::for_paper_dnn(job.dnn, job.dataset, seed).unwrap();
     ServingSession::builder()

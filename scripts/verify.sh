@@ -56,6 +56,12 @@ run_step "bench-build" cargo bench --no-run --manifest-path "$manifest"
 # bench-json` — can never rot unnoticed.
 run_step "bench-smoke" cargo bench --bench fleet_scale --manifest-path "$manifest" -- --smoke
 run_step "test" cargo test -q --manifest-path "$manifest"
+# Cluster smoke: a tiny heterogeneous 2-physical-device run through the
+# CLI, so the cluster subcommand (device specs, placement, per-device
+# serving, report rendering) cannot rot unnoticed.
+run_step "cluster-smoke" cargo run --release --manifest-path "$manifest" -- \
+    cluster --devices p40,p40:mig2 --ids 1,5 --rates 40,20 --windows 4 \
+    --placement interference
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
 
 # Golden-fixture drift guard: regenerate the outcome snapshots and fail
