@@ -17,7 +17,10 @@
 //! so a regression in the ring buffer itself is visible in isolation,
 //! and (PR 5) a `cluster_scale` case: end-to-end requests/s of a
 //! multi-device `Cluster` at D in {1, 4, 16} whole devices (2 members
-//! each), which prices the global cross-device event loop.
+//! each), which prices the global cross-device event loop. PR 6 adds a
+//! `churn_scale` case: the same cluster run through the dynamic window
+//! loop (job churn + threshold autoscaling), pricing warehouse dynamics
+//! against the static path.
 //!
 //! Run:  cargo bench --bench fleet_scale             (report only)
 //!       cargo bench --bench fleet_scale -- --json   (also write
@@ -35,6 +38,7 @@ use std::time::Instant;
 
 use dnnscaler::coordinator::calendar::{EventCalendar, LinearScan, NextEventQueue};
 use dnnscaler::coordinator::cluster::{Cluster, RoundRobin};
+use dnnscaler::coordinator::dynamics::{ChurnSchedule, ThresholdAutoscaler};
 use dnnscaler::coordinator::job::paper_job;
 use dnnscaler::coordinator::session::PolicySpec;
 use dnnscaler::gpusim::{GpuSpec, TESLA_P40};
@@ -174,6 +178,67 @@ fn run_cluster(d: usize, request_target: u64) -> ClusterRun {
     ClusterRun { devices: d, jobs, requests_served, wall_s }
 }
 
+/// One overloaded open-loop cluster run at `d` devices UNDER CHURN
+/// (PR 6): two resident jobs per device plus two mid-run launches and
+/// one retirement, with the threshold autoscaler free to resize the
+/// pool. Prices what the dynamic window loop (membership rebuild,
+/// migration checks, pool billing) costs relative to `run_cluster`.
+fn run_churn(d: usize, request_target: u64) -> ClusterRun {
+    let (job, gpu) = bench_workload();
+    let jobs = 2 * d;
+    let windows = 8usize;
+    let rounds_per_window = rounds_for_target(jobs as u64, windows as u64, request_target);
+
+    let mut launched = job;
+    launched.id = 1000;
+    let churn = ChurnSchedule::new()
+        .launch(
+            2,
+            &launched,
+            PolicySpec::Static { bs: 8, mtl: 1 },
+            ArrivalPattern::uniform(2_000.0),
+        )
+        .launch(
+            3,
+            &launched,
+            PolicySpec::Static { bs: 8, mtl: 1 },
+            ArrivalPattern::uniform(2_000.0),
+        )
+        .retire(6, 1000);
+
+    let mut b = Cluster::builder()
+        .windows(windows)
+        .rounds_per_window(rounds_per_window)
+        .placement(RoundRobin::new())
+        .churn(churn)
+        .autoscaler(ThresholdAutoscaler::new(1, d + 1));
+    for _ in 0..d {
+        b = b.device(gpu.clone());
+    }
+    for _ in 0..jobs {
+        b = b
+            .job_with_arrivals(
+                &job,
+                PolicySpec::Static { bs: 8, mtl: 1 },
+                ArrivalPattern::uniform(2_000.0),
+            )
+            .queue_capacity(1024);
+    }
+    let cluster = b.build().expect("churn cluster config");
+    let t0 = Instant::now();
+    let out = cluster.run().expect("churn cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let dy = out.dynamics.as_ref().expect("dynamic run reports telemetry");
+    assert!(dy.launches + dy.failed_launches == 2 && dy.retires <= 1);
+    let requests_served: f64 = out
+        .devices
+        .iter()
+        .flat_map(|dev| dev.fleet.members.iter())
+        .map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>())
+        .sum();
+    ClusterRun { devices: d, jobs, requests_served, wall_s }
+}
+
 /// Steady-state queue hot pair: push + take_batch_into over a warmed
 /// ring (zero allocations). Returns ops/s (one op = 8 pushes + 1 drain).
 fn queue_ops_per_s(iters: u64) -> f64 {
@@ -297,6 +362,32 @@ fn main() {
         per_d.push(Json::Obj(o));
     }
 
+    // Churn scaling: the same cluster workload through the dynamic
+    // window loop (launches, a retirement, threshold autoscaling) —
+    // what warehouse dynamics cost on top of the static path.
+    println!(
+        "\n{:<10} {:>6} {:>14} {:>14} {:>10}   (under churn + autoscale)",
+        "devices", "jobs", "wall_s", "requests/s", "requests"
+    );
+    println!("{}", "-".repeat(90));
+    let mut per_c: Vec<Json> = Vec::new();
+    for &d in device_counts {
+        let run = run_churn(d, cluster_target);
+        let requests_per_s = run.requests_served / run.wall_s;
+        println!(
+            "{:<10} {:>6} {:>14.3} {:>14.0} {:>10.0}",
+            run.devices, run.jobs, run.wall_s, requests_per_s, run.requests_served
+        );
+        assert!(run.requests_served > 0.0, "churn cluster served nothing at D={d}");
+        let mut o = BTreeMap::new();
+        o.insert("devices".into(), num(run.devices as f64));
+        o.insert("jobs".into(), num(run.jobs as f64));
+        o.insert("wall_s".into(), num(run.wall_s));
+        o.insert("requests_served".into(), num(run.requests_served));
+        o.insert("requests_per_s".into(), num(requests_per_s));
+        per_c.push(Json::Obj(o));
+    }
+
     let queue_ops = queue_ops_per_s(if smoke { 50_000 } else { 2_000_000 });
     println!("\nqueue: push x8 + take_batch_into(8)  {queue_ops:>14.0} ops/s");
 
@@ -313,6 +404,7 @@ fn main() {
         root.insert("queue_hot_pair_ops_per_s".into(), num(queue_ops));
         root.insert("per_member_count".into(), Json::Arr(per_m));
         root.insert("cluster_scale".into(), Json::Arr(per_d));
+        root.insert("churn_scale".into(), Json::Arr(per_c));
         let text = dnnscaler::json::write(&Json::Obj(root));
         std::fs::write(&path, text + "\n").expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");

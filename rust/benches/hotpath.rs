@@ -196,6 +196,7 @@ fn main() {
             Ok(pattern) => {
                 let n = match &pattern {
                     ArrivalPattern::Trace(ts) => ts.len(),
+                    ArrivalPattern::Streamed(src) => src.len(),
                     _ => 0,
                 };
                 let job = dnnscaler::coordinator::job::paper_job(1).unwrap();
@@ -231,6 +232,12 @@ fn main() {
         }
     }
 
+    #[cfg(not(feature = "xla"))]
+    if run("real") {
+        println!("real PJRT: skipped (built without the `xla` feature)");
+    }
+
+    #[cfg(feature = "xla")]
     if run("real") {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("manifest.json").exists() {

@@ -66,6 +66,7 @@ use crate::gpusim::{
 };
 use crate::workload::ArrivalPattern;
 
+use super::dynamics::{Autoscaler, ChurnSchedule, DynamicsCfg, DynamicsOutcome, PlacementPolicy};
 use super::fleet::{
     self, arrival_seed, finish_fleet, new_closed_member, new_open_member, validate_arrival_modes,
     validate_member_cfg, ClosedDevice, DeviceCtx, FleetOutcome, MemberCfg, OpenDevice,
@@ -96,6 +97,14 @@ pub struct DeviceDesc {
     pub physical: usize,
     /// `Some((slice_index, slices))` when this is a MIG virtual device.
     pub slice: Option<(u32, u32)>,
+    /// `$ / device-hour` billed while the device is active — from the
+    /// [`dynamics::price_per_hour`] catalogue (a MIG slice costs its
+    /// grant's share of the card), overridable per device with
+    /// [`ClusterBuilder::prices`]. Only the dynamics layer bills it;
+    /// static runs carry it as metadata.
+    ///
+    /// [`dynamics::price_per_hour`]: super::dynamics::price_per_hour
+    pub price_per_hour: f64,
 }
 
 /// A parsed CLI device spec: `NAME` or `NAME:migN` with `NAME` one of
@@ -155,7 +164,7 @@ pub struct PlacementJob {
 }
 
 impl PlacementJob {
-    fn from_cfg(m: &MemberCfg<'_>) -> Self {
+    pub(crate) fn from_cfg(m: &MemberCfg<'_>) -> Self {
         // The builder validated the DNN before placement runs.
         let p = paper_profile(m.job.dnn).expect("validated DNN");
         let burstiness = match &m.arrivals {
@@ -496,6 +505,10 @@ pub struct ClusterBuilder<'a> {
     rate_list: Option<Vec<f64>>,
     knob_before_job: Option<&'static str>,
     device_error: Option<ConfigError>,
+    churn: ChurnSchedule<'a>,
+    placement_policy: Option<Box<dyn PlacementPolicy + 'a>>,
+    autoscaler: Option<Box<dyn Autoscaler + 'a>>,
+    price_list: Option<Vec<f64>>,
 }
 
 impl<'a> ClusterBuilder<'a> {
@@ -510,6 +523,10 @@ impl<'a> ClusterBuilder<'a> {
             rate_list: None,
             knob_before_job: None,
             device_error: None,
+            churn: ChurnSchedule::new(),
+            placement_policy: None,
+            autoscaler: None,
+            price_list: None,
         }
     }
 
@@ -542,15 +559,7 @@ impl<'a> ClusterBuilder<'a> {
     pub fn device(mut self, spec: GpuSpec) -> Self {
         let physical = self.n_physical;
         self.n_physical += 1;
-        let fraction = whole_device_fraction(&spec);
-        self.devices.push(DeviceDesc {
-            name: format!("{}#{physical}", short_name(&spec)),
-            perf_fraction: fraction,
-            mem_mb: spec.mem_mb,
-            spec,
-            physical,
-            slice: None,
-        });
+        self.devices.push(whole_desc(spec, physical));
         self
     }
 
@@ -589,11 +598,13 @@ impl<'a> ClusterBuilder<'a> {
             }
             self.devices.push(DeviceDesc {
                 name: format!("{}#{physical}[{}/{slices}]", short_name(&spec), k + 1),
-                spec: spec.clone(),
                 perf_fraction: fraction,
                 mem_mb: mem,
                 physical,
                 slice: Some((k as u32 + 1, slices)),
+                // A rented slice costs its share of the card.
+                price_per_hour: super::dynamics::price_per_hour(&spec) * g,
+                spec: spec.clone(),
             });
         }
         self
@@ -610,6 +621,37 @@ impl<'a> ClusterBuilder<'a> {
     /// The placement strategy (default: [`RoundRobin`]).
     pub fn placement(mut self, placement: impl Placement + 'a) -> Self {
         self.placement = Box::new(placement);
+        self
+    }
+
+    /// Job churn: launch/retire events fired at window boundaries.
+    /// Any non-empty schedule switches the run onto the dynamics path
+    /// (requires every job to be open-loop).
+    pub fn churn(mut self, schedule: ChurnSchedule<'a>) -> Self {
+        self.churn = schedule;
+        self
+    }
+
+    /// Live migration: a [`PlacementPolicy`] consulted at every window
+    /// boundary. Switches the run onto the dynamics path.
+    pub fn placement_policy(mut self, policy: impl PlacementPolicy + 'a) -> Self {
+        self.placement_policy = Some(Box::new(policy));
+        self
+    }
+
+    /// Price-aware elasticity: an [`Autoscaler`] consulted at every
+    /// window boundary. Switches the run onto the dynamics path.
+    pub fn autoscaler(mut self, scaler: impl Autoscaler + 'a) -> Self {
+        self.autoscaler = Some(Box::new(scaler));
+        self
+    }
+
+    /// Override the catalogue `$ / device-hour` prices: one value
+    /// (broadcast to every device) or exactly one per device, in device
+    /// order — any other count is a typed
+    /// [`ConfigError::ListCountMismatch`].
+    pub fn prices(mut self, prices: &[f64]) -> Self {
+        self.price_list = Some(prices.to_vec());
         self
     }
 
@@ -724,6 +766,34 @@ impl<'a> ClusterBuilder<'a> {
             validate_member_cfg(m)?;
         }
         validate_arrival_modes(&self.jobs)?;
+        // Per-device price overrides expand like every other list knob.
+        if let Some(list) = self.price_list.take() {
+            let expanded =
+                fleet::expand_member_list("prices", "device", list, self.devices.len(), false)?;
+            for (d, price) in self.devices.iter_mut().zip(expanded) {
+                d.price_per_hour = price;
+            }
+        }
+        // Dynamics: any churn / migration / autoscaling request switches
+        // the run onto the dynamic path; nothing requested leaves the
+        // static path (and its snapshot bytes) untouched.
+        let dynamics = if !self.churn.is_empty()
+            || self.placement_policy.is_some()
+            || self.autoscaler.is_some()
+        {
+            if self.jobs.iter().any(|m| m.arrivals.is_closed()) {
+                return Err(ConfigError::DynamicsRequireOpenLoop);
+            }
+            let ids: Vec<u32> = self.jobs.iter().map(|m| m.job.id).collect();
+            self.churn.validate(self.cfg.windows, &ids)?;
+            Some(DynamicsCfg {
+                churn: self.churn,
+                policy: self.placement_policy,
+                autoscaler: self.autoscaler,
+            })
+        } else {
+            None
+        };
         // Placement: decided once, re-validated whatever the placer
         // claims, and recorded in the outcome.
         let pjobs: Vec<PlacementJob> = self.jobs.iter().map(PlacementJob::from_cfg).collect();
@@ -739,7 +809,23 @@ impl<'a> ClusterBuilder<'a> {
             jobs: self.jobs,
             placement: self.placement.name().to_string(),
             assignment,
+            dynamics,
         })
+    }
+}
+
+/// Build the [`DeviceDesc`] for one whole GPU — shared by
+/// [`ClusterBuilder::device`] and the autoscaler's pool growth, so a
+/// grown device is indistinguishable from a built one.
+pub(crate) fn whole_desc(spec: GpuSpec, physical: usize) -> DeviceDesc {
+    DeviceDesc {
+        name: format!("{}#{physical}", short_name(&spec)),
+        perf_fraction: whole_device_fraction(&spec),
+        mem_mb: spec.mem_mb,
+        physical,
+        slice: None,
+        price_per_hour: super::dynamics::price_per_hour(&spec),
+        spec,
     }
 }
 
@@ -764,7 +850,7 @@ fn whole_device_fraction(spec: &GpuSpec) -> f64 {
 /// One cluster device's serving context: its own memory ceiling and SM
 /// fraction, members time-sharing within it (single source for both the
 /// open- and closed-loop branches of [`Cluster::run`]).
-fn timeshare_ctx<'x>(desc: &DeviceDesc, members: usize, cfg: &RunConfig) -> DeviceCtx<'x> {
+pub(crate) fn timeshare_ctx<'x>(desc: &DeviceDesc, members: usize, cfg: &RunConfig) -> DeviceCtx<'x> {
     DeviceCtx::new(
         desc.mem_mb,
         desc.perf_fraction,
@@ -805,6 +891,7 @@ pub struct Cluster<'a> {
     jobs: Vec<MemberCfg<'a>>,
     placement: String,
     assignment: Assignment,
+    dynamics: Option<DynamicsCfg<'a>>,
 }
 
 /// One device's slice of a finished cluster run.
@@ -832,6 +919,93 @@ pub struct ClusterOutcome {
     pub total_throughput: f64,
     /// Sum of device total goodputs (SLO-met inferences/s).
     pub total_goodput: f64,
+    /// Dynamics telemetry (churn, migration, autoscaling, billing).
+    /// `None` on the static path — the snapshot for a dynamics-free run
+    /// stays byte-identical to what it was before dynamics existed.
+    pub dynamics: Option<DynamicsOutcome>,
+}
+
+/// A conservation invariant the finished outcome violates. These are
+/// accounting identities, not tuning judgements: every arrived request
+/// must be served, dropped, shed, or still in flight; spatial SM grants
+/// must never exceed the whole device; peak memory must respect the
+/// capacity the run claimed to enforce.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AuditError {
+    /// A job finished more requests than ever arrived:
+    /// `served + dropped + shed > arrived`.
+    Conservation { job: usize, arrived: u64, served: u64, dropped: u64, shed: u64 },
+    /// A window granted more than the whole device's SMs.
+    OverSubscribed { device: usize, window: usize, granted: f64 },
+    /// Peak combined memory demand exceeded the device's capacity.
+    MemoryOverCeiling { device: usize, peak_mem_mb: f64, capacity_mb: f64 },
+}
+
+impl fmt::Display for AuditError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AuditError::Conservation { job, arrived, served, dropped, shed } => write!(
+                f,
+                "job {job}: served {served} + dropped {dropped} + shed {shed} \
+                 exceeds arrived {arrived}"
+            ),
+            AuditError::OverSubscribed { device, window, granted } => write!(
+                f,
+                "device {device}, window {window}: granted SM fraction {granted:.4} > 1"
+            ),
+            AuditError::MemoryOverCeiling { device, peak_mem_mb, capacity_mb } => write!(
+                f,
+                "device {device}: peak memory {peak_mem_mb:.1} MB over \
+                 capacity {capacity_mb:.1} MB"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AuditError {}
+
+impl ClusterOutcome {
+    /// Check the conservation invariants every finished run must satisfy.
+    ///
+    /// Returns the first violation found; `run()` debug-asserts this in
+    /// test builds, and callers that assemble outcomes by hand (or
+    /// deserialize them) can audit explicitly. Requests still in flight
+    /// when the run ends are legitimate, so request conservation is an
+    /// inequality: `served + dropped + shed <= arrived`.
+    pub fn audit(&self) -> Result<(), AuditError> {
+        for (d, dev) in self.devices.iter().enumerate() {
+            for (j, m) in dev.fleet.members.iter().enumerate() {
+                if m.arrived == 0 {
+                    continue; // closed-loop member: no arrival process to conserve
+                }
+                let served: u64 =
+                    m.latencies.iter().map(|&(_, w)| w).sum::<f64>().round() as u64;
+                if served + m.drops + m.dropped_deadline > m.arrived {
+                    return Err(AuditError::Conservation {
+                        job: dev.jobs.get(j).copied().unwrap_or(j),
+                        arrived: m.arrived,
+                        served,
+                        dropped: m.drops,
+                        shed: m.dropped_deadline,
+                    });
+                }
+            }
+            for (w, grants) in dev.fleet.grant_trace.iter().enumerate() {
+                let granted: f64 = grants.iter().sum();
+                if granted > 1.0 + 1e-9 {
+                    return Err(AuditError::OverSubscribed { device: d, window: w, granted });
+                }
+            }
+            if dev.fleet.peak_mem_mb > dev.fleet.mem_capacity_mb + 1e-6 {
+                return Err(AuditError::MemoryOverCeiling {
+                    device: d,
+                    peak_mem_mb: dev.fleet.peak_mem_mb,
+                    capacity_mb: dev.fleet.mem_capacity_mb,
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 impl<'a> Cluster<'a> {
@@ -852,7 +1026,12 @@ impl<'a> Cluster<'a> {
     /// Serve every job to completion on its assigned device, all
     /// devices interleaved in one global virtual-time loop.
     pub fn run(self) -> Result<ClusterOutcome, DeviceError> {
-        let Cluster { cfg, seed, devices, jobs, placement, assignment } = self;
+        let Cluster { cfg, seed, devices, jobs, placement, assignment, dynamics } = self;
+        if let Some(dc) = dynamics {
+            // Churn / migration / autoscaling requested: the dynamic
+            // runner owns the whole window loop.
+            return super::dynamics::run_dynamic(&cfg, seed, devices, jobs, placement, assignment, dc);
+        }
         let open = !jobs.iter().all(|m| m.arrivals.is_closed());
         // Group global job indices per device, preserving job order.
         let mut groups: Vec<Vec<usize>> = vec![Vec::new(); devices.len()];
@@ -904,13 +1083,16 @@ impl<'a> Cluster<'a> {
         };
         let total_throughput = outcomes.iter().map(|d| d.fleet.total_throughput).sum();
         let total_goodput = outcomes.iter().map(|d| d.fleet.total_goodput).sum();
-        Ok(ClusterOutcome {
+        let out = ClusterOutcome {
             devices: outcomes,
             placement,
             assignment: assignment.device_of,
             total_throughput,
             total_goodput,
-        })
+            dynamics: None,
+        };
+        debug_assert!(out.audit().is_ok(), "conservation audit failed: {:?}", out.audit());
+        Ok(out)
     }
 }
 
@@ -940,6 +1122,7 @@ mod tests {
             mem_mb,
             physical: 0,
             slice: None,
+            price_per_hour: 1.20,
         }
     }
 
@@ -1244,5 +1427,53 @@ mod tests {
             wj.p95_ms
         );
         assert!(whole.total_throughput > 0.0 && sliced.total_throughput > 0.0);
+    }
+
+    #[test]
+    fn audit_passes_on_real_runs_and_catches_mock_violations() {
+        let mut out = Cluster::builder()
+            .device(TESLA_T4)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(40.0),
+            )
+            .windows(4)
+            .rounds_per_window(10)
+            .seed(3)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(out.audit(), Ok(()));
+
+        // Forge more served work than ever arrived: conservation breaks.
+        let mut forged = out.clone();
+        forged.devices[0].fleet.members[0].latencies.push((5.0, 1e9));
+        assert!(
+            matches!(forged.audit(), Err(AuditError::Conservation { job: 0, .. })),
+            "got {:?}",
+            forged.audit()
+        );
+
+        // Forge a window granting more SMs than the whole device has.
+        let mut forged = out.clone();
+        forged.devices[0].fleet.grant_trace.push(vec![0.7, 0.7]);
+        assert!(
+            matches!(
+                forged.audit(),
+                Err(AuditError::OverSubscribed { device: 0, window: 0, .. })
+            ),
+            "got {:?}",
+            forged.audit()
+        );
+
+        // Forge a peak memory demand above the advertised capacity.
+        out.devices[0].fleet.peak_mem_mb = out.devices[0].fleet.mem_capacity_mb + 1.0;
+        assert!(
+            matches!(out.audit(), Err(AuditError::MemoryOverCeiling { device: 0, .. })),
+            "got {:?}",
+            out.audit()
+        );
     }
 }

@@ -1,0 +1,997 @@
+//! Warehouse-scale cluster dynamics: job churn, live migration, and
+//! price-aware autoscaling — the layer that turns the static
+//! [`Cluster`](super::cluster::Cluster) into a living fleet.
+//!
+//! The paper's DNNScaler tunes batch size and instance count for a
+//! *fixed* set of co-located DNNs; a warehouse-scale inference service
+//! sees jobs launch and retire all day, re-places them as load shifts,
+//! and pays per device-hour. "No DNN Left Behind" frames inference
+//! multi-tenancy as exactly this cloud-economics problem: the metric
+//! that matters is cost per goodput, not raw throughput. This module
+//! adds three window-boundary control loops on top of the unchanged
+//! per-round serving engine:
+//!
+//! * **Job churn** ([`ChurnSchedule`], [`JobEvent`]) — launches and
+//!   retirements keyed by control-window index (the cluster's control
+//!   tick; member virtual clocks are per-member, so the window is the
+//!   only globally meaningful time). A launched job pays its model-load
+//!   overhead as a virtual-clock stall, so the arrivals that land during
+//!   the load become first-window backlog and inflate its early
+//!   latencies — the same mechanism profiling overhead uses.
+//! * **Live migration** ([`PlacementPolicy`], [`PeriodicReplace`]) —
+//!   the window-boundary analogue of `PartitionPolicy`: every window the
+//!   policy may propose a new job-to-device assignment (re-using any
+//!   [`Placement`] heuristic); each moved job is charged a migration
+//!   stall ([`model_load_ms`] of its footprint — the weights must be
+//!   loaded on the destination) and the move is counted in
+//!   [`DynamicsOutcome::migrations`]. Proposals are sanitized like any
+//!   custom placer's output: wrong length, unknown devices, or memory
+//!   over-commit reject the whole proposal (counted, never applied).
+//! * **Price-aware autoscaling** ([`Autoscaler`],
+//!   [`ThresholdAutoscaler`]) — grows or shrinks the active device pool
+//!   against the `$ / device-hour` on each
+//!   [`DeviceDesc`](super::cluster::DeviceDesc) (see
+//!   [`price_per_hour`]). Shrinking evacuates the victim's jobs (a
+//!   forced migration, charged like any other) and never proceeds when
+//!   the survivors cannot hold the evacuees' model footprints. The run
+//!   reports accumulated device-hours, dollars, and
+//!   [`DynamicsOutcome::cost_per_goodput`].
+//!
+//! Dynamics run only when requested: a churn-free, migration-free,
+//! autoscale-free cluster takes the static [`fleet::run_open_devices`]
+//! path untouched and its `ClusterOutcome` snapshot stays byte-identical
+//! (`dynamics: None` is simply not serialized).
+//!
+//! [`fleet::run_open_devices`]: super::fleet
+
+use crate::device::DeviceError;
+use crate::gpusim::{GpuSpec, PartitionMode};
+use crate::workload::ArrivalPattern;
+
+use super::calendar::{EventCalendar, NextEventQueue};
+use super::cluster::{
+    whole_desc, Assignment, ClusterOutcome, DeviceDesc, DeviceOutcome, Placement, PlacementJob,
+};
+use super::engine::{SmShare, WindowAccum};
+use super::fleet::{
+    admit_window, arrival_seed, finish_fleet, new_open_member, open_member_outcome,
+    validate_member_cfg, DeviceCtx, MemberCfg, OpenMember, Partitioner,
+};
+use super::job::JobSpec;
+use super::policy::WindowObservation;
+use super::session::{ConfigError, JobOutcome, PolicySpec, RunConfig};
+
+use std::fmt;
+
+/// `$ / device-hour` list price of a catalogued GPU — the catalogue the
+/// autoscaler's cost accounting runs against (on-demand cloud pricing
+/// ballpark; override per device with `ClusterBuilder::prices`). A MIG
+/// slice exposed as a virtual device costs its grant's share of the
+/// card.
+pub fn price_per_hour(spec: &GpuSpec) -> f64 {
+    match spec.name {
+        "Tesla P40" => 1.20,
+        "Tesla T4" => 0.53,
+        "Tesla P4" => 0.60,
+        // Uncatalogued hardware: price like the calibration card.
+        _ => 1.20,
+    }
+}
+
+/// Model-(re)load stall in ms charged to a launched or migrated job:
+/// the same fixed-cost-plus-PCIe-transfer shape as
+/// `GpuSim::launch_overhead_ms`, evaluated on the job's bare model
+/// footprint (the destination device must load the weights before the
+/// first batch can run).
+pub fn model_load_ms(footprint_mb: f64) -> f64 {
+    2000.0 + 2.0 * footprint_mb
+}
+
+/// One churn event, keyed by control-window index.
+pub enum JobEvent<'a> {
+    /// A new job enters the cluster at the start of `window`. It is
+    /// placed on the feasible active device with the most free footprint
+    /// memory and charged [`model_load_ms`] of its footprint as a
+    /// virtual-clock stall (first-window backlog). If no active device
+    /// can hold its footprint the launch fails (counted, not served).
+    Launch {
+        window: usize,
+        job: JobSpec,
+        policy: PolicySpec<'a>,
+        arrivals: ArrivalPattern,
+    },
+    /// The first live job with paper id `job_id` leaves the cluster at
+    /// the start of `window`; its outcome is finalized with whatever it
+    /// served up to that point.
+    Retire { window: usize, job_id: u32 },
+}
+
+impl fmt::Debug for JobEvent<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobEvent::Launch { window, job, .. } => f
+                .debug_struct("Launch")
+                .field("window", window)
+                .field("job", &job.id)
+                .field("dnn", &job.dnn)
+                .finish(),
+            JobEvent::Retire { window, job_id } => f
+                .debug_struct("Retire")
+                .field("window", window)
+                .field("job_id", job_id)
+                .finish(),
+        }
+    }
+}
+
+impl JobEvent<'_> {
+    pub(crate) fn window(&self) -> usize {
+        match self {
+            JobEvent::Launch { window, .. } | JobEvent::Retire { window, .. } => *window,
+        }
+    }
+}
+
+/// An ordered schedule of [`JobEvent`]s. Events fire at the start of
+/// their window, grouped by window in insertion order.
+#[derive(Debug, Default)]
+pub struct ChurnSchedule<'a> {
+    pub(crate) events: Vec<JobEvent<'a>>,
+}
+
+impl<'a> ChurnSchedule<'a> {
+    pub fn new() -> Self {
+        ChurnSchedule { events: Vec::new() }
+    }
+
+    /// Launch `job` (with its policy and open-loop arrivals) at the
+    /// start of `window`.
+    pub fn launch(
+        mut self,
+        window: usize,
+        job: &JobSpec,
+        policy: PolicySpec<'a>,
+        arrivals: ArrivalPattern,
+    ) -> Self {
+        self.events.push(JobEvent::Launch { window, job: *job, policy, arrivals });
+        self
+    }
+
+    /// Retire the (first live) job with paper id `job_id` at the start
+    /// of `window`.
+    pub fn retire(mut self, window: usize, job_id: u32) -> Self {
+        self.events.push(JobEvent::Retire { window, job_id });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Build-time validation: every event window inside the run, every
+    /// launch a valid open-loop member, every retire matched by an
+    /// initial job or an earlier launch that is still live at its
+    /// window. Typed [`ConfigError::BadChurn`] otherwise.
+    pub(crate) fn validate(
+        &self,
+        windows: usize,
+        initial_ids: &[u32],
+    ) -> Result<(), ConfigError> {
+        let bad = |reason: String| Err(ConfigError::BadChurn { reason });
+        // Replay the schedule window by window against the live id
+        // multiset, exactly as the runtime will apply it.
+        let mut live: Vec<u32> = initial_ids.to_vec();
+        for w in 0..windows.max(
+            self.events.iter().map(|e| e.window() + 1).max().unwrap_or(0),
+        ) {
+            for e in self.events.iter().filter(|e| e.window() == w) {
+                if e.window() >= windows {
+                    return bad(format!(
+                        "event at window {} but the run has only {windows} window(s)",
+                        e.window()
+                    ));
+                }
+                match e {
+                    JobEvent::Launch { job, arrivals, .. } => {
+                        if arrivals.is_closed() {
+                            return bad(format!(
+                                "launch of job {} is closed-loop; churned jobs need an \
+                                 open-loop arrival process",
+                                job.id
+                            ));
+                        }
+                        // Same member validation the builder applies to
+                        // initial jobs (unknown DNN, bad rates, ...).
+                        // The real policy spec is only borrowed here, so
+                        // a throwaway static stand-in fills the slot;
+                        // resolve_policy handles the real spec at launch.
+                        let probe = MemberCfg::new(
+                            job,
+                            PolicySpec::Static { bs: 1, mtl: 1 },
+                            arrivals.clone(),
+                        );
+                        validate_member_cfg(&probe)?;
+                        live.push(job.id);
+                    }
+                    JobEvent::Retire { window, job_id } => {
+                        let Some(pos) = live.iter().position(|id| id == job_id) else {
+                            return bad(format!(
+                                "retire of job {job_id} at window {window}: no such job \
+                                 is live (not an initial job or an earlier launch)"
+                            ));
+                        };
+                        live.remove(pos);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A live re-placement strategy: the window-boundary analogue of
+/// `PartitionPolicy`, deciding *which device each job runs on* instead
+/// of how one device's SMs are split.
+///
+/// Called at every window boundary with the live jobs (stable global-job
+/// order), the currently *active* devices (pool order), the current
+/// assignment into that device list, and the previous window's
+/// observations (index-aligned with `jobs`). Return `None` to keep the
+/// current assignment, or `Some(assignment)` to migrate — the proposal
+/// is validated like any custom placer's output and rejected wholesale
+/// (counted in [`DynamicsOutcome::rejected_proposals`]) if it is
+/// malformed or over-commits memory.
+pub trait PlacementPolicy {
+    fn name(&self) -> &'static str;
+
+    fn replace(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+        current: &[usize],
+        obs: &[WindowObservation],
+    ) -> Option<Vec<usize>>;
+}
+
+/// Re-run a [`Placement`] heuristic every `every` windows and migrate to
+/// its assignment when it differs from the current one — the baseline
+/// migration policy (placement heuristics are already demand-aware; the
+/// period bounds migration churn).
+#[derive(Debug)]
+pub struct PeriodicReplace<P> {
+    inner: P,
+    every: usize,
+    ticks: usize,
+}
+
+impl<P: Placement> PeriodicReplace<P> {
+    /// `every` is clamped to at least 1 (re-place every window).
+    pub fn new(inner: P, every: usize) -> Self {
+        PeriodicReplace { inner, every: every.max(1), ticks: 0 }
+    }
+}
+
+impl<P: Placement> PlacementPolicy for PeriodicReplace<P> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn replace(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+        current: &[usize],
+        _obs: &[WindowObservation],
+    ) -> Option<Vec<usize>> {
+        self.ticks += 1;
+        if self.ticks % self.every != 0 || jobs.is_empty() {
+            return None;
+        }
+        let proposed = self.inner.place(jobs, devices).ok()?.device_of;
+        if proposed == current {
+            None
+        } else {
+            Some(proposed)
+        }
+    }
+}
+
+/// What the autoscaler sees of the pool at a window boundary (the
+/// previous window's aggregate telemetry).
+#[derive(Debug)]
+pub struct PoolObservation<'x> {
+    /// The window about to start.
+    pub window: usize,
+    /// Devices currently powered on (and billed).
+    pub active_devices: usize,
+    /// Jobs currently live.
+    pub live_jobs: usize,
+    /// Mean combined SM pressure across *active* devices last window
+    /// (idle-but-billed devices contribute 0; > 1 on a device means its
+    /// members time-slice an oversubscribed card).
+    pub mean_pressure: f64,
+    /// Peak single-device SM pressure last window.
+    pub max_pressure: f64,
+    /// Requests left queued across all live jobs at the boundary.
+    pub queue_depth: usize,
+    /// Requests dropped or shed across all live jobs last window.
+    pub drops: u64,
+    /// The full device pool, `active[i]` flagging the powered-on ones.
+    pub devices: &'x [DeviceDesc],
+    pub active: &'x [bool],
+}
+
+/// The autoscaler's verdict for the next window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Hold,
+    /// Power on one more device (re-activating a parked one, or renting
+    /// a new instance of the pool's template card).
+    Grow,
+    /// Evacuate and power off one device (refused by the runtime when
+    /// the survivors cannot hold the evacuated model footprints).
+    Shrink,
+}
+
+/// An elasticity strategy: one verdict per window boundary.
+pub trait Autoscaler {
+    fn name(&self) -> &'static str;
+
+    fn scale(&mut self, obs: &PoolObservation<'_>) -> ScaleAction;
+}
+
+/// Threshold autoscaling baseline: grow when mean SM pressure exceeds
+/// `grow_above`, shrink when it falls below `shrink_below`, always
+/// keeping the pool inside `[min_devices, max_devices]`. The classic
+/// reactive policy every smarter autoscaler must beat.
+#[derive(Debug, Clone)]
+pub struct ThresholdAutoscaler {
+    pub grow_above: f64,
+    pub shrink_below: f64,
+    pub min_devices: usize,
+    pub max_devices: usize,
+}
+
+impl ThresholdAutoscaler {
+    /// Default thresholds (grow above 0.85, shrink below 0.30) over the
+    /// given pool bounds. `min_devices` is clamped to at least 1.
+    pub fn new(min_devices: usize, max_devices: usize) -> Self {
+        let min = min_devices.max(1);
+        ThresholdAutoscaler {
+            grow_above: 0.85,
+            shrink_below: 0.30,
+            min_devices: min,
+            max_devices: max_devices.max(min),
+        }
+    }
+}
+
+impl Autoscaler for ThresholdAutoscaler {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn scale(&mut self, obs: &PoolObservation<'_>) -> ScaleAction {
+        if obs.active_devices < self.min_devices {
+            return ScaleAction::Grow;
+        }
+        if obs.mean_pressure > self.grow_above && obs.active_devices < self.max_devices {
+            return ScaleAction::Grow;
+        }
+        if obs.mean_pressure < self.shrink_below && obs.active_devices > self.min_devices {
+            return ScaleAction::Shrink;
+        }
+        ScaleAction::Hold
+    }
+}
+
+/// Telemetry of one dynamic cluster run, reported as
+/// `ClusterOutcome::dynamics` (absent — and absent from snapshots — on
+/// static runs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DynamicsOutcome {
+    /// Jobs launched by the churn schedule (successfully placed).
+    pub launches: u64,
+    /// Launches refused because no active device could hold the model
+    /// footprint (the job never serves).
+    pub failed_launches: u64,
+    /// Jobs retired by the churn schedule.
+    pub retires: u64,
+    /// Individual job moves, both policy-proposed and shrink-forced.
+    pub migrations: u64,
+    /// Total virtual-clock stall charged for migrations (ms).
+    pub migration_stall_ms: f64,
+    /// Placement-policy proposals rejected by validation.
+    pub rejected_proposals: u64,
+    /// Devices powered on by the autoscaler.
+    pub scale_ups: u64,
+    /// Devices evacuated and powered off by the autoscaler.
+    pub scale_downs: u64,
+    /// Active device count at each window (after scaling).
+    pub pool_trace: Vec<usize>,
+    /// Billed device-hours: active devices integrated over served
+    /// virtual time.
+    pub device_hours: f64,
+    /// Billed cost: per-device `$ / device-hour` integrated likewise.
+    pub cost_usd: f64,
+    /// `cost_usd` per unit of cluster goodput ($ per SLO-met
+    /// inference/s) — the metric the autoscaler optimizes. `None` when
+    /// the run produced no goodput at all.
+    pub cost_per_goodput: Option<f64>,
+}
+
+/// The dynamic knobs a cluster was built with (all optional; the
+/// builder normalizes "nothing requested" to no `DynamicsCfg` at all,
+/// which keeps the static path byte-identical).
+pub(crate) struct DynamicsCfg<'a> {
+    pub(crate) churn: ChurnSchedule<'a>,
+    pub(crate) policy: Option<Box<dyn PlacementPolicy + 'a>>,
+    pub(crate) autoscaler: Option<Box<dyn Autoscaler + 'a>>,
+}
+
+/// One live job: its engine member plus the placement-facing metadata
+/// that must survive the member's `MemberCfg` being consumed.
+struct Live<'a> {
+    /// Global job index (seed derivation, outcome ordering).
+    job_idx: usize,
+    /// Pool device index currently hosting the job.
+    device: usize,
+    pjob: PlacementJob,
+    m: OpenMember<'a>,
+    win: WindowAccum,
+    last_obs: Option<WindowObservation>,
+}
+
+/// Free footprint memory per pool device given the current residents.
+fn free_mb(descs: &[DeviceDesc], lives: &[Live<'_>]) -> Vec<f64> {
+    let mut free: Vec<f64> = descs.iter().map(|d| d.mem_mb).collect();
+    for l in lives {
+        free[l.device] -= l.pjob.mem_floor_mb;
+    }
+    free
+}
+
+/// The active device with the most free memory that fits `need_mb`
+/// (ties break toward the lower index); `None` when nothing fits.
+fn most_free_fit(free: &[f64], active: &[bool], need_mb: f64) -> Option<usize> {
+    (0..free.len())
+        .filter(|&d| active[d] && free[d] >= need_mb)
+        .max_by(|&a, &b| free[a].total_cmp(&free[b]).then(b.cmp(&a)))
+}
+
+/// Serve a churning, migrating, autoscaling cluster. Mirrors
+/// `fleet::run_open_devices` — same per-window admission, SM-share
+/// planning, and global event calendar — but rebuilds the membership
+/// plan every window, because churn, migration, and scaling may have
+/// changed who runs where.
+pub(crate) fn run_dynamic<'a>(
+    cfg: &RunConfig,
+    seed: u64,
+    mut descs: Vec<DeviceDesc>,
+    jobs: Vec<MemberCfg<'a>>,
+    placement: String,
+    assignment: Assignment,
+    dynamics: DynamicsCfg<'a>,
+) -> Result<ClusterOutcome, DeviceError> {
+    let DynamicsCfg { churn, mut policy, mut autoscaler } = dynamics;
+    let mut dyn_out = DynamicsOutcome::default();
+
+    // Group churn events by firing window, preserving insertion order.
+    let mut events_at: Vec<Vec<JobEvent<'a>>> = (0..cfg.windows).map(|_| Vec::new()).collect();
+    for e in churn.events {
+        let w = e.window();
+        events_at[w].push(e);
+    }
+
+    // Device pool: per-device serving contexts (telemetry lives here)
+    // plus the active flags the autoscaler flips. Grown devices clone
+    // the pool's template card (device 0).
+    let template = descs[0].spec.clone();
+    let mut next_physical = descs.iter().map(|d| d.physical + 1).max().unwrap_or(0);
+    let mut ctxs: Vec<DeviceCtx<'a>> = descs
+        .iter()
+        .map(|d| {
+            DeviceCtx::new(d.mem_mb, d.perf_fraction, Partitioner::timeshare(0), cfg.windows)
+        })
+        .collect();
+    let mut active = vec![true; descs.len()];
+
+    // Live members. Global job index j keeps the fleet-identical seed
+    // derivation (`seed + j`, `arrival_seed(seed, j)`) whatever device
+    // a job lands on — or later migrates to.
+    let mut lives: Vec<Live<'a>> = Vec::new();
+    let mut ended: Vec<(usize, usize, JobOutcome)> = Vec::new();
+    let mut next_job_idx = 0usize;
+    for (m, &d) in jobs.into_iter().zip(&assignment.device_of) {
+        let j = next_job_idx;
+        next_job_idx += 1;
+        let pjob = PlacementJob::from_cfg(&m);
+        lives.push(Live {
+            job_idx: j,
+            device: d,
+            pjob,
+            m: new_open_member(m, cfg, seed + j as u64, arrival_seed(seed, j))?,
+            win: WindowAccum::new(),
+            last_obs: None,
+        });
+    }
+
+    let mut calendar = EventCalendar::with_capacity(lives.len());
+    let mut remaining: Vec<usize> = Vec::new();
+    // Flat slot -> live index, plus the per-slot serving plan, rebuilt
+    // every window (membership is no longer static).
+    let mut flat: Vec<usize> = Vec::new();
+    let mut plan: Vec<((u32, u32), SmShare, f64)> = Vec::new();
+    // Billed virtual time: the furthest-ahead member clock, monotone.
+    let mut elapsed_s = 0.0f64;
+    // Last window's pool pressure per device (0 while idle).
+    let mut pressures: Vec<f64> = vec![0.0; descs.len()];
+
+    for w in 0..cfg.windows {
+        // -- 1. Churn: retire first-match live jobs, launch new ones. --
+        for e in std::mem::take(&mut events_at[w]) {
+            match e {
+                JobEvent::Retire { job_id, .. } => {
+                    // validate() guaranteed a live match exists.
+                    if let Some(pos) = lives.iter().position(|l| l.m.job.id == job_id) {
+                        let l = lives.remove(pos);
+                        ended.push((l.job_idx, l.device, open_member_outcome(l.m)));
+                        dyn_out.retires += 1;
+                    }
+                }
+                JobEvent::Launch { job, policy: pol, arrivals, .. } => {
+                    let j = next_job_idx;
+                    next_job_idx += 1;
+                    let cfg_m = MemberCfg::new(&job, pol, arrivals);
+                    let pjob = PlacementJob::from_cfg(&cfg_m);
+                    let free = free_mb(&descs, &lives);
+                    let Some(d) = most_free_fit(&free, &active, pjob.mem_floor_mb) else {
+                        dyn_out.failed_launches += 1;
+                        continue;
+                    };
+                    let mut m =
+                        new_open_member(cfg_m, cfg, seed + j as u64, arrival_seed(seed, j))?;
+                    // Model load: arrivals during it become the job's
+                    // first-window backlog.
+                    m.lp.stall_ms(model_load_ms(pjob.mem_floor_mb));
+                    lives.push(Live {
+                        job_idx: j,
+                        device: d,
+                        pjob,
+                        m,
+                        win: WindowAccum::new(),
+                        last_obs: None,
+                    });
+                    dyn_out.launches += 1;
+                }
+            }
+        }
+
+        // -- 2. Live migration: the policy may re-place the survivors. --
+        if let Some(pol) = policy.as_mut() {
+            // The policy sees only the active slice of the pool.
+            let active_idx: Vec<usize> = (0..descs.len()).filter(|&d| active[d]).collect();
+            let active_descs: Vec<DeviceDesc> =
+                active_idx.iter().map(|&d| descs[d].clone()).collect();
+            let pjobs: Vec<PlacementJob> = lives.iter().map(|l| l.pjob.clone()).collect();
+            let current: Vec<usize> = lives
+                .iter()
+                .map(|l| {
+                    active_idx.iter().position(|&d| d == l.device).unwrap_or(0)
+                })
+                .collect();
+            let obs: Vec<WindowObservation> = lives
+                .iter()
+                .map(|l| l.last_obs.unwrap_or_else(|| blank_obs(w)))
+                .collect();
+            if let Some(proposal) = pol.replace(&pjobs, &active_descs, &current, &obs) {
+                let a = Assignment { device_of: proposal };
+                if a.validate(&pjobs, &active_descs).is_ok() {
+                    for (l, &to_active) in lives.iter_mut().zip(&a.device_of) {
+                        let to = active_idx[to_active];
+                        if to != l.device {
+                            let stall = model_load_ms(l.pjob.mem_floor_mb);
+                            l.m.lp.stall_ms(stall);
+                            l.device = to;
+                            dyn_out.migrations += 1;
+                            dyn_out.migration_stall_ms += stall;
+                        }
+                    }
+                } else {
+                    dyn_out.rejected_proposals += 1;
+                }
+            }
+        }
+
+        // -- 3. Autoscaling on last window's pressure. --
+        if let Some(scaler) = autoscaler.as_mut() {
+            let n_active = active.iter().filter(|&&a| a).count();
+            let (sum_p, max_p) = (0..descs.len()).filter(|&d| active[d]).fold(
+                (0.0f64, 0.0f64),
+                |(s, mx), d| (s + pressures[d], mx.max(pressures[d])),
+            );
+            // Decide inside a block so the observation's borrows of the
+            // pool end before the arms mutate it.
+            let action = {
+                let obs = PoolObservation {
+                    window: w,
+                    active_devices: n_active,
+                    live_jobs: lives.len(),
+                    mean_pressure: if n_active > 0 { sum_p / n_active as f64 } else { 0.0 },
+                    max_pressure: max_p,
+                    queue_depth: lives.iter().map(|l| l.m.lp.queue_len()).sum(),
+                    drops: lives
+                        .iter()
+                        .filter_map(|l| l.last_obs.as_ref())
+                        .map(|o| o.drops + o.drops_deadline)
+                        .sum(),
+                    devices: &descs,
+                    active: &active,
+                };
+                scaler.scale(&obs)
+            };
+            match action {
+                ScaleAction::Hold => {}
+                ScaleAction::Grow => {
+                    // Re-activate the lowest-index parked device, else
+                    // rent a fresh template card.
+                    if let Some(d) = (0..descs.len()).find(|&d| !active[d]) {
+                        active[d] = true;
+                    } else {
+                        let desc = whole_desc(template.clone(), next_physical);
+                        next_physical += 1;
+                        ctxs.push(DeviceCtx::new(
+                            desc.mem_mb,
+                            desc.perf_fraction,
+                            Partitioner::timeshare(0),
+                            cfg.windows,
+                        ));
+                        descs.push(desc);
+                        active.push(true);
+                        pressures.push(0.0);
+                    }
+                    dyn_out.scale_ups += 1;
+                }
+                ScaleAction::Shrink => {
+                    // Victim: the active device hosting the fewest jobs
+                    // (ties toward the higher index — drain newest
+                    // first). Evacuation must fit or the shrink is off.
+                    let victim = (0..descs.len()).filter(|&d| active[d]).min_by_key(|&d| {
+                        (lives.iter().filter(|l| l.device == d).count(), usize::MAX - d)
+                    });
+                    if let Some(v) = victim {
+                        if try_evacuate(v, &descs, &active, &mut lives, &mut dyn_out) {
+                            active[v] = false;
+                            dyn_out.scale_downs += 1;
+                        }
+                    }
+                }
+            }
+        }
+        dyn_out.pool_trace.push(active.iter().filter(|&&a| a).count());
+
+        // -- 4. Serve the window: per-device admission + shares, then
+        //       one global event loop (run_open_devices, membership
+        //       edition). --
+        calendar.clear();
+        flat.clear();
+        plan.clear();
+        for p in pressures.iter_mut() {
+            *p = 0.0;
+        }
+        // Stable per-window grouping: devices in pool order, members in
+        // live order (insertion order — initial jobs then launches).
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); descs.len()];
+        for (li, l) in lives.iter().enumerate() {
+            groups[l.device].push(li);
+        }
+        for d in 0..descs.len() {
+            if groups[d].is_empty() {
+                continue;
+            }
+            let ctx = &mut ctxs[d];
+            let members = &groups[d];
+            let requested: Vec<(u32, u32)> = members
+                .iter()
+                .map(|&li| lives[li].m.policy.operating_point())
+                .collect();
+            let pts = admit_window(
+                &|i, (bs, mtl)| lives[members[i]].m.sim.mem_demand_mb(bs, mtl),
+                members.len(),
+                &requested,
+                ctx.mem_capacity_mb,
+                &mut ctx.admission_clamps,
+            )?;
+            let g = ctx.perf_fraction;
+            let shr = ctx.parts.window_shares(
+                || {
+                    members
+                        .iter()
+                        .zip(&pts)
+                        .map(|(&li, &(bs, mtl))| {
+                            let sim = &lives[li].m.sim;
+                            if g >= 1.0 {
+                                sim.sm_utilization(bs, mtl)
+                            } else {
+                                sim.sm_utilization_granted(bs, mtl, g)
+                            }
+                        })
+                        .sum()
+                },
+                members.len(),
+                ctx.perf_fraction,
+                &mut ctx.peak_contention,
+                &mut ctx.contention_trace,
+                &mut ctx.grant_trace,
+            )?;
+            pressures[d] = ctx.contention_trace.last().copied().unwrap_or(0.0);
+            let resident: f64 = members
+                .iter()
+                .zip(&pts)
+                .map(|(&li, &(bs, mtl))| lives[li].m.sim.mem_demand_mb(bs, mtl))
+                .sum();
+            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+            for ((&li, &pt), sh) in members.iter().zip(&pts).zip(shr) {
+                let l = &mut lives[li];
+                let slo = l.m.schedule.at(w);
+                l.win.begin(&l.m.lp);
+                let f = flat.len();
+                flat.push(li);
+                plan.push((pt, sh, slo));
+                if remaining.len() <= f {
+                    remaining.push(0);
+                }
+                remaining[f] = cfg.rounds_per_window;
+                calendar.push(f, l.m.lp.now_s);
+            }
+        }
+
+        while let Some(f) = calendar.pop() {
+            remaining[f] -= 1;
+            let l = &mut lives[flat[f]];
+            let (pt, sh, slo) = plan[f];
+            let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
+            if more && remaining[f] > 0 {
+                calendar.push(f, l.m.lp.now_s);
+            }
+        }
+
+        // -- 5. Close the window per member (same sequence as the
+        //       static loop) and record the boundary observations. --
+        for (f, &li) in flat.iter().enumerate() {
+            let l = &mut lives[li];
+            let (pt, _, slo) = plan[f];
+            l.m.admitted = pt;
+            let (record, obs) = l.win.finish(w, slo, pt, &l.m.lp);
+            l.m.acc.absorb(w, slo, l.win.latencies());
+            l.m.latencies.extend(l.win.latencies().iter().map(|&lat| (lat, 1.0)));
+            l.m.trace.push(record);
+            l.m.policy.observe(&obs);
+            l.last_obs = Some(obs);
+        }
+
+        // -- 6. Bill the window: active devices * advanced virtual time.
+        let now_max = lives.iter().map(|l| l.m.lp.now_s).fold(elapsed_s, f64::max);
+        let span_h = (now_max - elapsed_s) / 3600.0;
+        elapsed_s = now_max;
+        for d in 0..descs.len() {
+            if active[d] {
+                dyn_out.device_hours += span_h;
+                dyn_out.cost_usd += descs[d].price_per_hour * span_h;
+            }
+        }
+    }
+
+    // Survivors finish with the run.
+    for l in lives {
+        ended.push((l.job_idx, l.device, open_member_outcome(l.m)));
+    }
+    ended.sort_by_key(|&(j, _, _)| j);
+
+    // Final device-of-job assignment over every job that ever served
+    // (launched jobs append after the initial ones; failed launches
+    // never enter).
+    let device_of: Vec<usize> = ended.iter().map(|&(_, d, _)| d).collect();
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); descs.len()];
+    let mut outs: Vec<Vec<JobOutcome>> = (0..descs.len()).map(|_| Vec::new()).collect();
+    for (j, d, out) in ended {
+        groups[d].push(j);
+        outs[d].push(out);
+    }
+    let devices: Vec<DeviceOutcome> = descs
+        .iter()
+        .zip(groups)
+        .zip(ctxs.into_iter().zip(outs))
+        .map(|((desc, group), (ctx, members))| DeviceOutcome {
+            device: desc.clone(),
+            jobs: group,
+            fleet: finish_fleet(members, ctx, PartitionMode::TimeShare),
+        })
+        .collect();
+    let total_throughput = devices.iter().map(|d| d.fleet.total_throughput).sum();
+    let total_goodput: f64 = devices.iter().map(|d| d.fleet.total_goodput).sum();
+    dyn_out.cost_per_goodput =
+        (total_goodput > 0.0).then(|| dyn_out.cost_usd / total_goodput);
+    let out = ClusterOutcome {
+        devices,
+        placement,
+        assignment: device_of,
+        total_throughput,
+        total_goodput,
+        dynamics: Some(dyn_out),
+    };
+    debug_assert!(out.audit().is_ok(), "dynamic run broke conservation: {:?}", out.audit());
+    Ok(out)
+}
+
+/// A neutral observation for jobs that have not served a window yet
+/// (launched this very boundary).
+fn blank_obs(window: usize) -> WindowObservation {
+    WindowObservation {
+        window,
+        slo_ms: 0.0,
+        p95_ms: 0.0,
+        mean_ms: 0.0,
+        throughput: 0.0,
+        power_w: 0.0,
+        sm_util: 0.0,
+        queue_depth: 0,
+        arrival_rate: 0.0,
+        drops: 0,
+        drops_deadline: 0,
+    }
+}
+
+/// Move every job off device `victim` onto the remaining active
+/// devices, most-free-fit per job in live order, charging each move as
+/// a migration. All-or-nothing: when any evacuee does not fit, nothing
+/// moves and the shrink is refused (`false`) — the pool can never
+/// shrink below its live jobs' memory demand.
+fn try_evacuate(
+    victim: usize,
+    descs: &[DeviceDesc],
+    active: &[bool],
+    lives: &mut [Live<'_>],
+    dyn_out: &mut DynamicsOutcome,
+) -> bool {
+    let mut free = free_mb(descs, lives);
+    let mut moves: Vec<(usize, usize)> = Vec::new();
+    for (li, l) in lives.iter().enumerate() {
+        if l.device != victim {
+            continue;
+        }
+        let fits = (0..descs.len())
+            .filter(|&d| active[d] && d != victim && free[d] >= l.pjob.mem_floor_mb)
+            .max_by(|&a, &b| free[a].total_cmp(&free[b]).then(b.cmp(&a)));
+        let Some(d) = fits else {
+            return false;
+        };
+        free[d] -= l.pjob.mem_floor_mb;
+        moves.push((li, d));
+    }
+    for (li, d) in moves {
+        let stall = model_load_ms(lives[li].pjob.mem_floor_mb);
+        lives[li].m.lp.stall_ms(stall);
+        lives[li].device = d;
+        dyn_out.migrations += 1;
+        dyn_out.migration_stall_ms += stall;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::paper_job;
+    use crate::gpusim::{TESLA_P4, TESLA_P40, TESLA_T4};
+
+    #[test]
+    fn price_catalogue_covers_the_gpus() {
+        assert_eq!(price_per_hour(&TESLA_P40), 1.20);
+        assert_eq!(price_per_hour(&TESLA_T4), 0.53);
+        assert_eq!(price_per_hour(&TESLA_P4), 0.60);
+    }
+
+    #[test]
+    fn model_load_grows_with_footprint() {
+        assert_eq!(model_load_ms(0.0), 2000.0);
+        assert!(model_load_ms(1000.0) > model_load_ms(100.0));
+    }
+
+    #[test]
+    fn churn_schedule_validation() {
+        let job = paper_job(1).unwrap();
+        // Window out of range.
+        let s = ChurnSchedule::new().retire(9, job.id);
+        assert!(matches!(
+            s.validate(4, &[job.id]),
+            Err(ConfigError::BadChurn { .. })
+        ));
+        // Retire of a job that is never live.
+        let s = ChurnSchedule::new().retire(1, 999);
+        assert!(matches!(s.validate(4, &[job.id]), Err(ConfigError::BadChurn { .. })));
+        // Retire of an earlier launch is fine; a second retire of the
+        // same id is not.
+        let launch_ok = |s: ChurnSchedule| {
+            s.launch(
+                1,
+                job,
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(10.0),
+            )
+        };
+        let s = launch_ok(ChurnSchedule::new()).retire(2, job.id).retire(3, job.id);
+        assert!(s.validate(6, &[]).is_err());
+        let s = launch_ok(ChurnSchedule::new()).retire(2, job.id);
+        assert!(s.validate(6, &[]).is_ok());
+        // Closed-loop launches are refused.
+        let s = ChurnSchedule::new().launch(
+            1,
+            job,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::closed(),
+        );
+        assert!(matches!(s.validate(4, &[]), Err(ConfigError::BadChurn { .. })));
+        // Unknown DNNs are caught at build time, not at launch time.
+        let mut bogus = *job;
+        bogus.dnn = "vgg16";
+        let s = ChurnSchedule::new().launch(
+            1,
+            &bogus,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(10.0),
+        );
+        assert_eq!(s.validate(4, &[]), Err(ConfigError::UnknownDnn { dnn: "vgg16".into() }));
+    }
+
+    #[test]
+    fn threshold_autoscaler_respects_bounds() {
+        let descs = vec![whole_desc(TESLA_P40, 0)];
+        let active = vec![true];
+        let mut s = ThresholdAutoscaler::new(1, 3);
+        let obs = |pressure: f64, n: usize| PoolObservation {
+            window: 1,
+            active_devices: n,
+            live_jobs: 2,
+            mean_pressure: pressure,
+            max_pressure: pressure,
+            queue_depth: 0,
+            drops: 0,
+            devices: &descs,
+            active: &active,
+        };
+        assert_eq!(s.scale(&obs(2.0, 1)), ScaleAction::Grow);
+        assert_eq!(s.scale(&obs(2.0, 3)), ScaleAction::Hold, "at max: must not grow");
+        assert_eq!(s.scale(&obs(0.1, 1)), ScaleAction::Hold, "at min: must not shrink");
+        assert_eq!(s.scale(&obs(0.1, 2)), ScaleAction::Shrink);
+        assert_eq!(s.scale(&obs(0.5, 2)), ScaleAction::Hold);
+        assert_eq!(s.scale(&obs(0.0, 0)), ScaleAction::Grow, "below min: grow back");
+    }
+
+    #[test]
+    fn periodic_replace_fires_on_period_and_skips_no_ops() {
+        use crate::coordinator::cluster::RoundRobin;
+        let job = paper_job(1).unwrap();
+        let pjob = PlacementJob {
+            spec: *job,
+            mem_floor_mb: 100.0,
+            sm_demand: 0.2,
+            mean_rate: 10.0,
+            burstiness: 1.0,
+        };
+        let descs = vec![whole_desc(TESLA_P40, 0), whole_desc(TESLA_P40, 1)];
+        let jobs = vec![pjob.clone(), pjob];
+        let mut p = PeriodicReplace::new(RoundRobin::new(), 2);
+        assert_eq!(p.name(), "rr");
+        // Window 1: off-period. Window 2: proposes rr = [0, 1]; current
+        // already matches -> None. Window 4: current differs -> Some.
+        assert_eq!(p.replace(&jobs, &descs, &[0, 1], &[]), None);
+        assert_eq!(p.replace(&jobs, &descs, &[0, 1], &[]), None);
+        assert_eq!(p.replace(&jobs, &descs, &[0, 1], &[]), None);
+        assert_eq!(p.replace(&jobs, &descs, &[1, 1], &[]), Some(vec![0, 1]));
+    }
+}

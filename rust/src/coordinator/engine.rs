@@ -197,6 +197,16 @@ impl OpenLoop {
         self.queue.max_depth
     }
 
+    /// Advance this member's virtual clock by a stall — a model (re)load
+    /// on launch or live migration. Open-loop arrivals keep flowing on
+    /// the wall clock, so every request that lands during the stall
+    /// queues up as backlog and the stall is charged to the sojourn
+    /// latencies of the member's next served batches (the same backlog
+    /// mechanism `start_s` uses for profiling overhead).
+    pub(crate) fn stall_ms(&mut self, ms: f64) {
+        self.now_s += ms / 1000.0;
+    }
+
     /// Form and execute one batch at `(bs, mtl)` under `share` — either
     /// time-sharing (observed latency inflated by the fleet's contention
     /// factor; `SmShare::Inflate(1.0)` solo) or a spatial SM grant

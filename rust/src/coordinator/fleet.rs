@@ -523,19 +523,21 @@ pub(crate) fn new_closed_member<'a>(
     })
 }
 
-/// Open-loop member state (per-member engine core).
+/// Open-loop member state (per-member engine core). Fields are
+/// crate-visible so `coordinator::dynamics` can drive the same members
+/// through churn, migration, and autoscaling window loops.
 pub(crate) struct OpenMember<'a> {
-    job: JobSpec,
-    sim: GpuSim,
-    policy: Box<dyn Policy + 'a>,
-    profile: Option<ProfileOutcome>,
-    label: Option<&'static str>,
-    schedule: SloSchedule,
-    lp: OpenLoop,
-    trace: Vec<WindowRecord>,
-    latencies: Vec<(f64, f64)>,
-    acc: AttainAcc,
-    admitted: (u32, u32),
+    pub(crate) job: JobSpec,
+    pub(crate) sim: GpuSim,
+    pub(crate) policy: Box<dyn Policy + 'a>,
+    pub(crate) profile: Option<ProfileOutcome>,
+    pub(crate) label: Option<&'static str>,
+    pub(crate) schedule: SloSchedule,
+    pub(crate) lp: OpenLoop,
+    pub(crate) trace: Vec<WindowRecord>,
+    pub(crate) latencies: Vec<(f64, f64)>,
+    pub(crate) acc: AttainAcc,
+    pub(crate) admitted: (u32, u32),
 }
 
 /// Build one open-loop member (engine core seeded independently of the
@@ -789,7 +791,7 @@ impl<'a> Partitioner<'a> {
     /// inside its grant AND time-shares within it
     /// ([`SmShare::GrantInflate`]). One implementation for both serving
     /// paths — and for every cluster device — like [`admit_window`].
-    fn window_shares(
+    pub(crate) fn window_shares(
         &self,
         contention: impl FnOnce() -> f64,
         n_members: usize,

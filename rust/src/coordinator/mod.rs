@@ -29,7 +29,13 @@
 //!   [`cluster::Placement`] deciding which device each job lands on
 //!   (round-robin, memory best-fit, interference-aware), and per-device
 //!   serving through the very same fleet engine — a single-device
-//!   cluster reproduces `Fleet` byte for byte (see `docs/cluster.md`).
+//!   cluster reproduces `Fleet` byte for byte (see `docs/cluster.md`);
+//! * [`dynamics`] — warehouse-scale dynamics driving the cluster at
+//!   window boundaries: job churn ([`dynamics::ChurnSchedule`]), live
+//!   migration ([`dynamics::PlacementPolicy`]), and price-aware
+//!   autoscaling ([`dynamics::Autoscaler`] billing $/device-hour into
+//!   cost-per-goodput). Inactive dynamics leave the static path
+//!   byte-identical (see `docs/dynamics.md`).
 //!
 //! Open-loop fleets and clusters schedule their members through the
 //! O(log M) [`calendar::EventCalendar`] (a binary heap keyed by
@@ -66,6 +72,7 @@ pub mod calendar;
 pub mod clipper;
 pub mod cluster;
 pub mod controller;
+pub mod dynamics;
 pub(crate) mod engine;
 pub mod fleet;
 pub mod job;
@@ -79,10 +86,15 @@ pub mod session;
 pub mod snapshot;
 
 pub use cluster::{
-    Assignment, BestFit, Cluster, ClusterBuilder, ClusterOutcome, DeviceDesc, DeviceOutcome,
-    DeviceSpec, InterferenceAware, Placement, PlacementError, PlacementJob, RoundRobin,
+    Assignment, AuditError, BestFit, Cluster, ClusterBuilder, ClusterOutcome, DeviceDesc,
+    DeviceOutcome, DeviceSpec, InterferenceAware, Placement, PlacementError, PlacementJob,
+    RoundRobin,
 };
 pub use controller::{Controller, Decision, Method};
+pub use dynamics::{
+    Autoscaler, ChurnSchedule, DynamicsOutcome, JobEvent, PeriodicReplace, PlacementPolicy,
+    PoolObservation, ScaleAction, ThresholdAutoscaler,
+};
 pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
 pub use policy::{
     Action, AsPolicy, DemandPartition, PartitionPolicy, Policy, QueuePolicy, StaticPolicy,

@@ -248,6 +248,14 @@ pub enum ConfigError {
     /// The cluster's job placement failed or produced an infeasible
     /// assignment (see `coordinator::cluster`).
     Placement(super::cluster::PlacementError),
+    /// A churn schedule references a window or job the run cannot honor
+    /// (window out of range, retiring an unknown/already-retired job,
+    /// launching a closed-loop job, or a launch whose spec is invalid).
+    BadChurn { reason: String },
+    /// Churn, migration, and autoscaling all run on the window-boundary
+    /// event loop, which only exists for open-loop (arrival-driven)
+    /// clusters.
+    DynamicsRequireOpenLoop,
 }
 
 impl fmt::Display for ConfigError {
@@ -326,6 +334,11 @@ impl fmt::Display for ConfigError {
                 MIN_GRANT = crate::gpusim::MIN_GRANT
             ),
             ConfigError::Placement(e) => write!(f, "job placement failed: {e}"),
+            ConfigError::BadChurn { reason } => write!(f, "bad churn schedule: {reason}"),
+            ConfigError::DynamicsRequireOpenLoop => write!(
+                f,
+                "churn/migration/autoscaling require open-loop arrivals on every job"
+            ),
         }
     }
 }
@@ -563,6 +576,9 @@ pub(crate) fn validate_pattern(pattern: &ArrivalPattern) -> Result<(), ConfigErr
             Ok(())
         }
         ArrivalPattern::Trace(ts) => validate_trace(ts).map_err(ConfigError::BadTrace),
+        // Streamed traces were fully validated when the source was opened
+        // (`TraceSource::open` rejects unsorted/negative/empty traces).
+        ArrivalPattern::Streamed(_) => Ok(()),
     }
 }
 

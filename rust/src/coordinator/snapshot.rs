@@ -117,7 +117,7 @@ pub fn fleet_outcome_to_json(o: &FleetOutcome) -> Json {
 /// one full fleet snapshot per device (device descriptor included, so a
 /// drifting perf fraction or memory ceiling is fixture-visible too).
 pub fn cluster_outcome_to_json(o: &ClusterOutcome) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("placement", Json::Str(o.placement.clone())),
         (
             "assignment",
@@ -147,7 +147,33 @@ pub fn cluster_outcome_to_json(o: &ClusterOutcome) -> Json {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // Dynamics telemetry only exists on the dynamic path; omitting the
+    // key entirely keeps static-run snapshots byte-identical to the
+    // fixtures blessed before dynamics existed.
+    if let Some(dy) = &o.dynamics {
+        fields.push((
+            "dynamics",
+            obj(vec![
+                ("launches", num(dy.launches as f64)),
+                ("failed_launches", num(dy.failed_launches as f64)),
+                ("retires", num(dy.retires as f64)),
+                ("migrations", num(dy.migrations as f64)),
+                ("migration_stall_ms", num(dy.migration_stall_ms)),
+                ("rejected_proposals", num(dy.rejected_proposals as f64)),
+                ("scale_ups", num(dy.scale_ups as f64)),
+                ("scale_downs", num(dy.scale_downs as f64)),
+                (
+                    "pool_trace",
+                    Json::Arr(dy.pool_trace.iter().map(|&n| num(n as f64)).collect()),
+                ),
+                ("device_hours", num(dy.device_hours)),
+                ("cost_usd", num(dy.cost_usd)),
+                ("cost_per_goodput", dy.cost_per_goodput.map_or(Json::Null, num)),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 /// Render a snapshot with a trailing newline (fixture file contents).

@@ -10,6 +10,7 @@
 //!   Pallas artifacts, used by the end-to-end examples to prove the whole
 //!   stack composes.
 
+#[cfg(feature = "xla")]
 pub mod real;
 
 use std::fmt;

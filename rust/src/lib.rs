@@ -106,6 +106,7 @@ pub mod linalg;
 pub mod manifest;
 pub mod metrics;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod workload;
 

@@ -27,11 +27,13 @@ use anyhow::{anyhow, bail, Result};
 use dnnscaler::coordinator::cluster::{
     BestFit, Cluster, DeviceSpec, InterferenceAware, Placement, RoundRobin,
 };
+use dnnscaler::coordinator::dynamics::{ChurnSchedule, PeriodicReplace, ThresholdAutoscaler};
 use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
 use dnnscaler::coordinator::session::{
     JobOutcome, PolicySpec, RunConfig, ServingSession, DEFAULT_BATCH_TIMEOUT_MS,
 };
 use dnnscaler::coordinator::{Fleet, Method, Profiler};
+#[cfg(feature = "xla")]
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::gpusim::{Dataset, GpuSim, PartitionMode, PAPER_DNNS};
 use dnnscaler::manifest::Manifest;
@@ -72,6 +74,8 @@ COMMANDS:
   cluster  --devices SPEC1,SPEC2,.. [--placement rr|bestfit|interference]
            [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,..] [--shed] [--timeout-ms MS] [--queue-cap N]
+           [--churn EV1,EV2,..] [--migrate POLICY[:N]] [--autoscale MIN:MAX]
+           [--price P1,P2,..]
            Serve jobs across a HETEROGENEOUS pool of devices — the
            scheduling layer above one GPU. Device specs: p40 | p4 | t4,
            optionally :migN to expose the card as N MIG virtual devices
@@ -81,6 +85,17 @@ COMMANDS:
            With --rates (one Poisson rate per job, or one for all) jobs
            serve open-loop through the shared event engine; without, the
            cluster serves closed-loop.
+           Warehouse dynamics (all need --rates; see docs/dynamics.md):
+           --churn schedules mid-run job arrivals/departures, each event
+           launch:ID@W[:rRATE] (paper job ID at window W, Poisson RATE
+           req/s, default 30) or retire:ID@W; launches pay a model-load
+           stall. --migrate re-places live jobs every N windows (default
+           4) with the named placement policy, charging each move a
+           migration stall. --autoscale grows/shrinks the device pool
+           between MIN and MAX on SM pressure, billing device-hours at
+           catalogue prices (P40 $1.20/h, T4 $0.53/h, P4 $0.60/h;
+           override with --price, one value or one per device) and
+           reporting cost per unit goodput.
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
   serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
@@ -385,6 +400,10 @@ fn main() -> Result<()> {
                     "shed",
                     "timeout-ms",
                     "queue-cap",
+                    "churn",
+                    "migrate",
+                    "autoscale",
+                    "price",
                 ],
             )?;
             cmd_cluster(&flags)
@@ -805,6 +824,54 @@ fn parse_placement(s: &str) -> Result<Box<dyn Placement>> {
     }
 }
 
+/// Parse `--churn launch:ID@W[:rRATE],retire:ID@W` into a schedule.
+/// Launched jobs serve with the subcommand's `--method` policy and
+/// Poisson arrivals (RATE requests/s, default 30).
+fn parse_churn(flags: &Flags, s: &str) -> Result<ChurnSchedule<'static>> {
+    let mut churn = ChurnSchedule::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        let (kind, rest) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--churn: {tok:?} is not launch:ID@W or retire:ID@W"))?;
+        let (idw, rate_tok) = match rest.split_once(':') {
+            Some((idw, r)) => (idw, Some(r)),
+            None => (rest, None),
+        };
+        let (id_s, w_s) = idw
+            .split_once('@')
+            .ok_or_else(|| anyhow!("--churn: {tok:?} is missing @WINDOW"))?;
+        let id: u32 =
+            id_s.parse().map_err(|_| anyhow!("--churn: bad job id {id_s:?} in {tok:?}"))?;
+        let window: usize =
+            w_s.parse().map_err(|_| anyhow!("--churn: bad window {w_s:?} in {tok:?}"))?;
+        match kind {
+            "launch" => {
+                let rate: f64 = match rate_tok {
+                    None => 30.0,
+                    Some(r) => {
+                        let r = r.strip_prefix('r').ok_or_else(|| {
+                            anyhow!("--churn: launch rate must look like r50 (got {r:?})")
+                        })?;
+                        r.parse().map_err(|_| anyhow!("--churn: bad rate {r:?} in {tok:?}"))?
+                    }
+                };
+                let job =
+                    paper_job(id).ok_or_else(|| anyhow!("--churn: job id must be 1..=30, got {id}"))?;
+                churn = churn.launch(window, job, parse_method(flags)?, ArrivalPattern::poisson(rate));
+            }
+            "retire" => {
+                if rate_tok.is_some() {
+                    bail!("--churn: retire takes no rate ({tok:?})");
+                }
+                churn = churn.retire(window, id);
+            }
+            other => bail!("--churn: unknown event {other:?} (launch or retire)"),
+        }
+    }
+    Ok(churn)
+}
+
 fn cmd_cluster(flags: &Flags) -> Result<()> {
     let devices_arg = flags
         .get("devices")
@@ -833,6 +900,10 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     if rates.is_none() && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
         bail!("--shed/--timeout-ms/--queue-cap need --rates (open-loop cluster)");
     }
+    let dynamic = flags.has("churn") || flags.has("migrate") || flags.has("autoscale");
+    if dynamic && rates.is_none() {
+        bail!("--churn/--migrate/--autoscale need --rates (open-loop cluster)");
+    }
 
     let mut b = Cluster::builder()
         .windows(windows)
@@ -856,6 +927,44 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     // other count with a typed ConfigError and turns every job open-loop.
     if let Some(rs) = &rates {
         b = b.poisson_rates(rs);
+    }
+    // Dynamics: any of --churn/--migrate/--autoscale switches the run
+    // onto the window-boundary dynamic path.
+    if let Some(s) = flags.get("churn") {
+        b = b.churn(parse_churn(flags, s)?);
+    }
+    if let Some(s) = flags.get("migrate") {
+        let (name, every) = match s.split_once(':') {
+            None => (s, 4usize),
+            Some((n, e)) => {
+                (n, e.parse().map_err(|_| anyhow!("--migrate: bad period {e:?}"))?)
+            }
+        };
+        b = match name {
+            "rr" | "roundrobin" | "round-robin" => {
+                b.placement_policy(PeriodicReplace::new(RoundRobin::new(), every))
+            }
+            "bestfit" | "best-fit" => {
+                b.placement_policy(PeriodicReplace::new(BestFit::new(), every))
+            }
+            "interference" | "interference-aware" => {
+                b.placement_policy(PeriodicReplace::new(InterferenceAware::new(), every))
+            }
+            other => bail!("--migrate must be rr, bestfit, or interference (got {other:?})"),
+        };
+    }
+    if let Some(s) = flags.get("autoscale") {
+        let (min_s, max_s) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--autoscale wants MIN:MAX (got {s:?})"))?;
+        let min: usize =
+            min_s.parse().map_err(|_| anyhow!("--autoscale: bad MIN {min_s:?}"))?;
+        let max: usize =
+            max_s.parse().map_err(|_| anyhow!("--autoscale: bad MAX {max_s:?}"))?;
+        b = b.autoscaler(ThresholdAutoscaler::new(min, max));
+    }
+    if let Some(s) = flags.get("price") {
+        b = b.prices(&parse_positive_list("price", s)?);
     }
     let cluster = b.build().map_err(|e| anyhow!(e.to_string()))?;
     let out = cluster.run().map_err(|e| anyhow!(e.to_string()))?;
@@ -913,6 +1022,28 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         "cluster total {:.1} inf/s (goodput {:.1}) | assignment {:?}",
         out.total_throughput, out.total_goodput, out.assignment
     );
+    if let Some(dy) = &out.dynamics {
+        println!(
+            "dynamics: {} launch(es) ({} failed), {} retire(s), {} migration(s) \
+             ({:.0} ms stall, {} proposal(s) rejected), {} scale-up(s) / {} scale-down(s)",
+            dy.launches,
+            dy.failed_launches,
+            dy.retires,
+            dy.migrations,
+            dy.migration_stall_ms,
+            dy.rejected_proposals,
+            dy.scale_ups,
+            dy.scale_downs,
+        );
+        println!(
+            "billing: {:.3} device-hours, ${:.4}{} | pool size per window {:?}",
+            dy.device_hours,
+            dy.cost_usd,
+            dy.cost_per_goodput
+                .map_or(String::new(), |c| format!(" (${c:.5} per inf/s of goodput)")),
+            dy.pool_trace,
+        );
+    }
     for dev in &out.devices {
         if !dev.fleet.members.is_empty() {
             println!(
@@ -970,6 +1101,25 @@ fn cmd_sweep(dnn: &str, dataset: &str, knob: &str) -> Result<()> {
     Ok(())
 }
 
+/// Real-mode serving needs the PJRT runtime; without the `xla` feature
+/// there is no device to open, so the subcommand fails with a pointer at
+/// the feature flag instead of silently simulating.
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(
+    _model: &str,
+    _slo: f64,
+    _artifacts: &str,
+    _windows: usize,
+    _spec: PolicySpec<'static>,
+    _open: Option<OpenCfg>,
+) -> Result<()> {
+    bail!(
+        "real-mode serving requires the `xla` feature \
+         (rebuild with `cargo build --features xla`)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_serve(
     model: &str,
     slo: f64,
@@ -1182,5 +1332,19 @@ mod tests {
     fn non_flag_argument_is_rejected() {
         let args: Vec<String> = ["oops"].iter().map(|s| s.to_string()).collect();
         assert!(Flags::parse(&args, &["windows"]).is_err());
+    }
+
+    #[test]
+    fn churn_flag_parses_launch_and_retire_events() {
+        let f = Flags::parse(&[], &[]).unwrap();
+        let churn = super::parse_churn(&f, "launch:3@2:r45, retire:1@5").unwrap();
+        assert_eq!(churn.len(), 2);
+        // Rate token must be rRATE; retire takes none; kinds are fixed;
+        // launched jobs must exist in the paper workload.
+        for bad in
+            ["launch:3@2:x45", "retire:1@5:r3", "boop:1@5", "launch:99@0", "launch:3", "retire:a@b"]
+        {
+            assert!(super::parse_churn(&f, bad).is_err(), "{bad:?} should be rejected");
+        }
     }
 }

@@ -6,7 +6,10 @@
 use crate::rng::Rng;
 
 use std::fmt;
-use std::path::Path;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Arrival pattern of a workload.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,9 +29,17 @@ pub enum ArrivalPattern {
     /// Replay of recorded arrival timestamps (seconds, sorted ascending,
     /// non-negative) — e.g. an Azure Functions or Twitter trace. The
     /// generator emits exactly these timestamps in order and then goes
-    /// silent (`f64::INFINITY`). Build with [`ArrivalPattern::trace`] or
-    /// [`ArrivalPattern::from_trace_file`], which validate the data.
+    /// silent (`f64::INFINITY`). Build with [`ArrivalPattern::trace`],
+    /// which validates the data.
     Trace(Vec<f64>),
+    /// Replay of a recorded trace streamed from disk chunk-by-chunk. The
+    /// file is validated once when the source is opened
+    /// ([`TraceSource::open`]); each generator then re-reads it lazily
+    /// through a buffered reader, so a full-day trace is never
+    /// materialized, and cloning the pattern into every fleet member
+    /// shares one [`TraceSource`] instead of copying the arrival vector.
+    /// Build with [`ArrivalPattern::from_trace_file`].
+    Streamed(Arc<TraceSource>),
 }
 
 /// Why a recorded arrival trace was rejected.
@@ -94,6 +105,160 @@ pub fn validate_trace(ts: &[f64]) -> Result<(), TraceError> {
     Ok(())
 }
 
+/// Parse one trace-file line: the first whitespace-separated column is
+/// the arrival timestamp (seconds), extra columns are ignored; blank
+/// lines and `#` comments yield `None`. `line_no` is 1-based.
+fn parse_trace_line(line_no: usize, raw: &str) -> Result<Option<f64>, TraceError> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let token = line.split_whitespace().next().unwrap_or(line);
+    token
+        .parse()
+        .map(Some)
+        .map_err(|_| TraceError::Parse { line: line_no, token: token.to_string() })
+}
+
+/// A validated on-disk arrival trace. Opening the source makes one
+/// streaming pass over the file to check the data — same rules as
+/// [`validate_trace`]: sorted, non-negative, finite, at least one
+/// arrival — and records the arrival count and span. The timestamps
+/// themselves stay on disk; [`ArrivalGenerator`] re-reads them lazily
+/// chunk-by-chunk, so validation and replay both run in O(1) memory.
+#[derive(Debug)]
+pub struct TraceSource {
+    path: PathBuf,
+    len: usize,
+    last_s: f64,
+}
+
+/// Sources compare by their identity-defining metadata (path, count,
+/// span): two patterns over the same validated file are interchangeable.
+impl PartialEq for TraceSource {
+    fn eq(&self, other: &Self) -> bool {
+        self.path == other.path && self.len == other.len && self.last_s == other.last_s
+    }
+}
+
+impl TraceSource {
+    /// Open and validate `path` (one timestamp per line, first column,
+    /// `#` comments and blanks skipped) without materializing the
+    /// arrivals. A file with zero arrivals is a typed
+    /// [`TraceError::Empty`], not a silent never-firing source.
+    pub fn open(path: impl AsRef<Path>) -> Result<TraceSource, TraceError> {
+        let path = path.as_ref().to_path_buf();
+        let shown = path.display().to_string();
+        let file = File::open(&path)
+            .map_err(|e| TraceError::Io { path: shown.clone(), error: e.to_string() })?;
+        let mut reader = BufReader::new(file);
+        let mut raw = String::new();
+        let (mut line_no, mut len, mut prev) = (0usize, 0usize, 0.0f64);
+        loop {
+            raw.clear();
+            let read = reader
+                .read_line(&mut raw)
+                .map_err(|e| TraceError::Io { path: shown.clone(), error: e.to_string() })?;
+            if read == 0 {
+                break;
+            }
+            line_no += 1;
+            let Some(t) = parse_trace_line(line_no, &raw)? else { continue };
+            if !t.is_finite() {
+                return Err(TraceError::NotFinite { index: len });
+            }
+            if t < 0.0 {
+                return Err(TraceError::Negative { index: len, t });
+            }
+            if t < prev {
+                return Err(TraceError::Unsorted { index: len, prev, t });
+            }
+            prev = t;
+            len += 1;
+        }
+        if len == 0 {
+            return Err(TraceError::Empty);
+        }
+        Ok(TraceSource { path, len, last_s: prev })
+    }
+
+    /// Number of arrivals in the trace (always at least 1).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Timestamp of the last arrival — the trace span's right edge.
+    pub fn last_s(&self) -> f64 {
+        self.last_s
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Lazily-opened reader over a [`TraceSource`], owned by one generator:
+/// a buffered file handle plus a line scratch buffer.
+struct TraceStream {
+    reader: BufReader<File>,
+    line: String,
+    line_no: usize,
+}
+
+impl TraceStream {
+    /// Open the source and skip the first `skip` arrivals (how a cloned
+    /// generator resumes from its `trace_idx`). `None` when the file has
+    /// changed underneath the validated source (treated as exhaustion).
+    fn open_at(src: &TraceSource, skip: usize) -> Option<TraceStream> {
+        let file = File::open(src.path()).ok()?;
+        let mut s = TraceStream { reader: BufReader::new(file), line: String::new(), line_no: 0 };
+        for _ in 0..skip {
+            s.next()?;
+        }
+        Some(s)
+    }
+
+    /// Next arrival timestamp, or `None` at end of file. The file was
+    /// validated by [`TraceSource::open`]; if it mutates mid-run (an IO
+    /// or parse failure on data that validated), the stream ends early —
+    /// debug builds assert, release builds treat it as exhaustion.
+    fn next(&mut self) -> Option<f64> {
+        loop {
+            self.line.clear();
+            let read = match self.reader.read_line(&mut self.line) {
+                Ok(n) => n,
+                Err(e) => {
+                    debug_assert!(false, "validated trace became unreadable: {e}");
+                    return None;
+                }
+            };
+            if read == 0 {
+                return None;
+            }
+            self.line_no += 1;
+            match parse_trace_line(self.line_no, &self.line) {
+                Ok(Some(t)) => return Some(t),
+                Ok(None) => continue,
+                Err(e) => {
+                    debug_assert!(false, "validated trace changed mid-run: {e}");
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Debug for TraceStream {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TraceStream").field("line_no", &self.line_no).finish()
+    }
+}
+
 impl ArrivalPattern {
     /// Closed-loop serving (no arrival process).
     pub fn closed() -> Self {
@@ -123,29 +288,17 @@ impl ArrivalPattern {
         Ok(ArrivalPattern::Trace(timestamps))
     }
 
-    /// Parse a trace file: one arrival timestamp (seconds) per line, in
-    /// the first whitespace-separated column (extra columns are ignored);
-    /// blank lines and `#` comments are skipped. The resulting trace is
-    /// validated like [`ArrivalPattern::trace`].
+    /// Open a trace file for streamed replay: one arrival timestamp
+    /// (seconds) per line, in the first whitespace-separated column
+    /// (extra columns are ignored); blank lines and `#` comments are
+    /// skipped. The file is validated up front with the same rules as
+    /// [`ArrivalPattern::trace`] — including [`TraceError::Empty`] for a
+    /// zero-arrival file — but the timestamps are NOT materialized:
+    /// generators stream them from disk chunk-by-chunk, and cloning the
+    /// pattern across fleet members shares one [`TraceSource`] instead
+    /// of duplicating the full arrival vector per member.
     pub fn from_trace_file(path: impl AsRef<Path>) -> Result<Self, TraceError> {
-        let path = path.as_ref();
-        let text = std::fs::read_to_string(path).map_err(|e| TraceError::Io {
-            path: path.display().to_string(),
-            error: e.to_string(),
-        })?;
-        let mut ts = Vec::new();
-        for (i, raw) in text.lines().enumerate() {
-            let line = raw.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
-            }
-            let token = line.split_whitespace().next().unwrap_or(line);
-            let t: f64 = token
-                .parse()
-                .map_err(|_| TraceError::Parse { line: i + 1, token: token.to_string() })?;
-            ts.push(t);
-        }
-        Self::trace(ts)
+        Ok(ArrivalPattern::Streamed(Arc::new(TraceSource::open(path)?)))
     }
 
     pub fn is_closed(&self) -> bool {
@@ -165,6 +318,13 @@ impl ArrivalPattern {
                 Some(&last) if last > 0.0 => ts.len() as f64 / last,
                 _ => 0.0,
             },
+            ArrivalPattern::Streamed(src) => {
+                if src.last_s() > 0.0 {
+                    src.len() as f64 / src.last_s()
+                } else {
+                    0.0
+                }
+            }
         }
     }
 }
@@ -177,22 +337,49 @@ impl ArrivalPattern {
 pub const ARRIVAL_CHUNK: usize = 64;
 
 /// Generates request arrival timestamps (seconds).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ArrivalGenerator {
     pattern: ArrivalPattern,
     rng: Rng,
     now_s: f64,
-    /// Next unread entry of a `Trace` pattern.
+    /// Next unread entry of a `Trace` or `Streamed` pattern.
     trace_idx: usize,
     /// Arrival generated but not yet handed out: `arrivals_until` stashes
     /// its horizon-overshooting sample here so no arrival is ever lost
     /// (a replayed trace must emit *exactly* its timestamps).
     pending: Option<f64>,
+    /// Lazily-opened reader for a `Streamed` pattern. `trace_idx` is the
+    /// position source of truth: a cloned generator drops the handle and
+    /// reopens at `trace_idx` on its next read.
+    stream: Option<TraceStream>,
+}
+
+/// Hand-rolled because the stream handle is not clonable: the clone
+/// re-opens the file lazily at the same `trace_idx`, so it produces the
+/// identical remaining timestamp sequence.
+impl Clone for ArrivalGenerator {
+    fn clone(&self) -> Self {
+        ArrivalGenerator {
+            pattern: self.pattern.clone(),
+            rng: self.rng.clone(),
+            now_s: self.now_s,
+            trace_idx: self.trace_idx,
+            pending: self.pending,
+            stream: None,
+        }
+    }
 }
 
 impl ArrivalGenerator {
     pub fn new(pattern: ArrivalPattern, seed: u64) -> Self {
-        ArrivalGenerator { pattern, rng: Rng::new(seed), now_s: 0.0, trace_idx: 0, pending: None }
+        ArrivalGenerator {
+            pattern,
+            rng: Rng::new(seed),
+            now_s: 0.0,
+            trace_idx: 0,
+            pending: None,
+            stream: None,
+        }
     }
 
     /// Instantaneous rate at time `t` (requests/s). A trace reports its
@@ -209,7 +396,37 @@ impl ArrivalGenerator {
                     *rate
                 }
             }
-            ArrivalPattern::Trace(_) => self.pattern.mean_rate(),
+            ArrivalPattern::Trace(_) | ArrivalPattern::Streamed(_) => self.pattern.mean_rate(),
+        }
+    }
+
+    /// Pull the next timestamp of a `Streamed` pattern, opening (or
+    /// re-opening, after a clone) the reader on demand. `None` means the
+    /// trace is exhausted for good.
+    fn next_streamed(&mut self) -> Option<f64> {
+        let ArrivalPattern::Streamed(src) = &self.pattern else {
+            unreachable!("next_streamed on a non-streamed pattern")
+        };
+        if self.trace_idx >= src.len() {
+            return None;
+        }
+        if self.stream.is_none() {
+            self.stream = TraceStream::open_at(src, self.trace_idx);
+            if self.stream.is_none() {
+                // The validated file vanished mid-run; end the stream.
+                self.trace_idx = src.len();
+                return None;
+            }
+        }
+        match self.stream.as_mut().and_then(TraceStream::next) {
+            Some(t) => {
+                self.trace_idx += 1;
+                Some(t)
+            }
+            None => {
+                self.trace_idx = src.len();
+                None
+            }
         }
     }
 
@@ -230,6 +447,15 @@ impl ArrivalGenerator {
                 None => f64::INFINITY,
             };
         }
+        if let ArrivalPattern::Streamed(_) = &self.pattern {
+            return match self.next_streamed() {
+                Some(t) => {
+                    self.now_s = t;
+                    t
+                }
+                None => f64::INFINITY,
+            };
+        }
         let gap = match self.pattern {
             ArrivalPattern::Closed => return f64::INFINITY,
             ArrivalPattern::Uniform { rate } => 1.0 / rate,
@@ -239,7 +465,9 @@ impl ArrivalGenerator {
                 // which is exact for bursts much longer than a gap.
                 self.rng.exponential(self.rate_at(self.now_s).max(1e-9))
             }
-            ArrivalPattern::Trace(_) => unreachable!("handled above"),
+            ArrivalPattern::Trace(_) | ArrivalPattern::Streamed(_) => {
+                unreachable!("handled above")
+            }
         };
         self.now_s += gap;
         self.now_s
@@ -480,9 +708,57 @@ mod tests {
             .join(format!("dnnscaler-trace-ok-{}.txt", std::process::id()));
         std::fs::write(&path, "# a recorded trace\n\n0.0\n0.5 extra columns ignored\n\n1.25\n")
             .unwrap();
+        let got = ArrivalPattern::from_trace_file(&path).unwrap();
+        let ArrivalPattern::Streamed(src) = &got else {
+            panic!("expected a streamed trace, got {got:?}")
+        };
+        assert_eq!(src.len(), 3);
+        assert!(!src.is_empty());
+        assert_eq!(src.last_s(), 1.25);
+        // The generator replays exactly the recorded timestamps.
+        let mut g = ArrivalGenerator::new(got.clone(), 7);
+        assert_eq!(g.arrivals_until(10.0), vec![0.0, 0.5, 1.25]);
+        assert_eq!(g.next_arrival(), f64::INFINITY);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trace_file_with_no_arrivals_is_rejected() {
+        let path = std::env::temp_dir()
+            .join(format!("dnnscaler-trace-empty-{}.txt", std::process::id()));
+        std::fs::write(&path, "# comments only\n\n").unwrap();
         let got = ArrivalPattern::from_trace_file(&path);
         std::fs::remove_file(&path).unwrap();
-        assert_eq!(got, Ok(ArrivalPattern::Trace(vec![0.0, 0.5, 1.25])));
+        assert_eq!(got, Err(TraceError::Empty));
+    }
+
+    #[test]
+    fn streamed_trace_matches_materialized_replay() {
+        let path = std::env::temp_dir()
+            .join(format!("dnnscaler-trace-stream-{}.txt", std::process::id()));
+        let ts: Vec<f64> = (0..500).map(|i| i as f64 * 0.01).collect();
+        let body: String = ts.iter().map(|t| format!("{t}\n")).collect();
+        std::fs::write(&path, body).unwrap();
+        let streamed = ArrivalPattern::from_trace_file(&path).unwrap();
+        let mem_pattern = ArrivalPattern::trace(ts).unwrap();
+        assert!((streamed.mean_rate() - mem_pattern.mean_rate()).abs() < 1e-9);
+        // One-at-a-time, chunked, and horizon draining agree with the
+        // in-memory replay, and a mid-stream clone (which drops the file
+        // handle and must reopen at `trace_idx`) resumes correctly.
+        let mut mem = ArrivalGenerator::new(mem_pattern, 1);
+        let mut disk = ArrivalGenerator::new(streamed.clone(), 2);
+        assert_eq!(mem.arrivals_until(1.0), disk.arrivals_until(1.0));
+        let mut cloned = disk.clone();
+        let (mut a, mut b, mut rest) = (Vec::new(), Vec::new(), Vec::new());
+        while disk.fill_next(&mut a, 7) > 0 {}
+        while cloned.fill_next(&mut b, 64) > 0 {}
+        while mem.fill_next(&mut rest, 16) > 0 {}
+        assert_eq!(a, b);
+        assert_eq!(a, rest);
+        // Cloning the *pattern* shares the source, not a copied vector.
+        let ArrivalPattern::Streamed(src) = &streamed else { unreachable!() };
+        assert!(std::sync::Arc::strong_count(src) >= 2);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -17,5 +17,7 @@
 pub mod generator;
 pub mod queue;
 
-pub use generator::{validate_trace, ArrivalGenerator, ArrivalPattern, TraceError, ARRIVAL_CHUNK};
+pub use generator::{
+    validate_trace, ArrivalGenerator, ArrivalPattern, TraceError, TraceSource, ARRIVAL_CHUNK,
+};
 pub use queue::{Request, RequestQueue};

@@ -8,6 +8,7 @@
 use dnnscaler::coordinator::cluster::{
     BestFit, Cluster, DeviceDesc, InterferenceAware, Placement, PlacementJob, RoundRobin,
 };
+use dnnscaler::coordinator::dynamics;
 use dnnscaler::coordinator::job::{paper_job, PAPER_JOBS};
 use dnnscaler::coordinator::session::{PolicySpec, RunConfig};
 use dnnscaler::coordinator::snapshot::{cluster_outcome_to_json, fleet_outcome_to_json, render};
@@ -209,6 +210,7 @@ fn random_device(rng: &mut Rng, physical: usize) -> DeviceDesc {
         name: format!("dev{physical}"),
         perf_fraction: (spec.peak_tflops / TESLA_P40.peak_tflops).min(1.0) * fraction,
         mem_mb: spec.mem_mb * fraction,
+        price_per_hour: dynamics::price_per_hour(&spec) * fraction,
         spec,
         physical,
         slice: None,

@@ -5,12 +5,15 @@
 use dnnscaler::coordinator::job::{paper_job, JobSpec, SteadyKnob, PAPER_JOBS};
 use dnnscaler::coordinator::session::{JobOutcome, PolicySpec, RunConfig, ServingSession};
 use dnnscaler::coordinator::{Fleet, Method, Profiler, ALPHA};
+#[cfg(feature = "xla")]
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::device::Device;
 use dnnscaler::gpusim::{Dataset, GpuSim};
+#[cfg(feature = "xla")]
 use dnnscaler::manifest::Manifest;
 use dnnscaler::workload::ArrivalPattern;
 
+#[cfg(feature = "xla")]
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
@@ -311,9 +314,11 @@ fn fleet_serves_multiple_jobs_on_shared_gpu_without_oom() {
 }
 
 // ---------------------------------------------------------------------------
-// Real PJRT runtime integration (skipped when artifacts are absent)
+// Real PJRT runtime integration (needs the `xla` feature; skipped when
+// artifacts are absent)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 #[test]
 fn real_stack_serves_all_manifest_models() {
     let dir = artifacts_dir();
@@ -332,6 +337,7 @@ fn real_stack_serves_all_manifest_models() {
     }
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn real_stack_full_dnnscaler_loop() {
     let dir = artifacts_dir();
@@ -374,6 +380,7 @@ fn real_stack_full_dnnscaler_loop() {
     assert!(out.steady_bs >= max_bs / 2 || out.steady_mtl > 1);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn real_logits_are_nonzero_and_deterministic() {
     // Regression test for the constant-eliding HLO-text bug: weights must

@@ -95,12 +95,12 @@ fn shipped_azure_trace_parses_and_replays_to_completion() {
     // with timer-spike bursts.
     let pattern = ArrivalPattern::from_trace_file(azure_trace_path())
         .expect("data/azure_functions_sample.txt must parse");
-    let ArrivalPattern::Trace(ts) = &pattern else {
-        panic!("trace file must produce a Trace pattern")
+    let ArrivalPattern::Streamed(src) = &pattern else {
+        panic!("trace file must produce a streamed pattern")
     };
-    let n = ts.len();
+    let n = src.len();
     assert!(n > 400, "trace is suspiciously small: {n} arrivals");
-    assert!(*ts.last().unwrap() <= 60.0, "trace must be normalized to a 60 s span");
+    assert!(src.last_s() <= 60.0, "trace must be normalized to a 60 s span");
     let rate = pattern.mean_rate();
     assert!((5.0..15.0).contains(&rate), "mean rate {rate:.2}/s out of the documented band");
 

@@ -62,6 +62,13 @@ run_step "test" cargo test -q --manifest-path "$manifest"
 run_step "cluster-smoke" cargo run --release --manifest-path "$manifest" -- \
     cluster --devices p40,p40:mig2 --ids 1,5 --rates 40,20 --windows 4 \
     --placement interference
+# Dynamics smoke: churn + migration + autoscaling through the CLI, so
+# the warehouse-dynamics path (launch/retire events, periodic
+# re-placement, threshold pool scaling, billing report) cannot rot
+# unnoticed.
+run_step "dynamics-smoke" cargo run --release --manifest-path "$manifest" -- \
+    cluster --devices p40,p40,t4 --ids 1,5 --rates 40,20 --windows 8 \
+    --churn launch:4@2:r25,retire:4@6 --migrate bestfit:3 --autoscale 1:4
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
 
 # Golden-fixture drift guard: regenerate the outcome snapshots and fail
