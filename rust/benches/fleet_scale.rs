@@ -16,11 +16,15 @@
 //! Also times the request-queue hot pair (`push` + `take_batch_into`)
 //! so a regression in the ring buffer itself is visible in isolation,
 //! and (PR 5) a `cluster_scale` case: end-to-end requests/s of a
-//! multi-device `Cluster` at D in {1, 4, 16} whole devices (2 members
-//! each), which prices the global cross-device event loop. PR 6 adds a
-//! `churn_scale` case: the same cluster run through the dynamic window
-//! loop (job churn + threshold autoscaling), pricing warehouse dynamics
-//! against the static path.
+//! multi-device `Cluster`, which prices the cross-device event loop.
+//! PR 6 adds a `churn_scale` case: the same cluster run through the
+//! dynamic window loop (job churn + threshold autoscaling), pricing
+//! warehouse dynamics against the static path. PR 7 grows
+//! `cluster_scale` to D in {16, 256, 4096} whole devices (2 members
+//! each) swept over worker-thread counts {1, 2, 4, 8}, reporting
+//! requests/s and requests/s-per-core — the data-parallel sharding's
+//! scaling curve (output is byte-identical at every thread count, so
+//! only wall clock moves).
 //!
 //! Run:  cargo bench --bench fleet_scale             (report only)
 //!       cargo bench --bench fleet_scale -- --json   (also write
@@ -135,6 +139,7 @@ fn run_fleet(m: usize, request_target: u64) -> FleetRun {
 struct ClusterRun {
     devices: usize,
     jobs: usize,
+    threads: usize,
     requests_served: f64,
     wall_s: f64,
 }
@@ -142,8 +147,9 @@ struct ClusterRun {
 /// One overloaded open-loop cluster run at `d` whole devices (2 jobs
 /// per device, round-robin placement) sized to serve roughly
 /// `request_target` requests in total — the multi-device analogue of
-/// [`run_fleet`], measuring what the D-device global event loop costs.
-fn run_cluster(d: usize, request_target: u64) -> ClusterRun {
+/// [`run_fleet`], measuring what the D-device event loop costs at
+/// `threads` shard workers (1 = the serial reference engine).
+fn run_cluster(d: usize, request_target: u64, threads: usize) -> ClusterRun {
     let (job, gpu) = bench_workload();
     let jobs = 2 * d;
     let windows = 8usize;
@@ -152,6 +158,7 @@ fn run_cluster(d: usize, request_target: u64) -> ClusterRun {
     let mut b = Cluster::builder()
         .windows(windows)
         .rounds_per_window(rounds_per_window)
+        .threads(threads)
         .placement(RoundRobin::new());
     for _ in 0..d {
         b = b.device(gpu.clone());
@@ -175,7 +182,7 @@ fn run_cluster(d: usize, request_target: u64) -> ClusterRun {
         .flat_map(|dev| dev.fleet.members.iter())
         .map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>())
         .sum();
-    ClusterRun { devices: d, jobs, requests_served, wall_s }
+    ClusterRun { devices: d, jobs, threads, requests_served, wall_s }
 }
 
 /// One overloaded open-loop cluster run at `d` devices UNDER CHURN
@@ -236,7 +243,7 @@ fn run_churn(d: usize, request_target: u64) -> ClusterRun {
         .flat_map(|dev| dev.fleet.members.iter())
         .map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>())
         .sum();
-    ClusterRun { devices: d, jobs, requests_served, wall_s }
+    ClusterRun { devices: d, jobs, threads: 1, requests_served, wall_s }
 }
 
 /// Steady-state queue hot pair: push + take_batch_into over a warmed
@@ -336,42 +343,54 @@ fn main() {
     }
 
     // Cluster scaling: requests/s at D devices (2 members per device,
-    // round-robin placement, same overloaded per-member workload).
-    let device_counts: &[usize] = if smoke { &[2] } else { &[1, 4, 16] };
+    // round-robin placement, same overloaded per-member workload),
+    // swept over worker-thread counts — the data-parallel scaling
+    // curve. requests/s-per-core divides by the thread count, so a
+    // perfectly scaling shard keeps the per-core number flat.
+    let device_counts: &[usize] = if smoke { &[2] } else { &[16, 256, 4096] };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     let cluster_target: u64 = if smoke { 20_000 } else { 1_000_000 };
     println!(
-        "\n{:<10} {:>6} {:>14} {:>14} {:>10}",
-        "devices", "jobs", "wall_s", "requests/s", "requests"
+        "\n{:<10} {:>6} {:>8} {:>14} {:>14} {:>16} {:>10}",
+        "devices", "jobs", "threads", "wall_s", "requests/s", "req/s/core", "requests"
     );
-    println!("{}", "-".repeat(60));
+    println!("{}", "-".repeat(88));
     let mut per_d: Vec<Json> = Vec::new();
     for &d in device_counts {
-        let run = run_cluster(d, cluster_target);
-        let requests_per_s = run.requests_served / run.wall_s;
-        println!(
-            "{:<10} {:>6} {:>14.3} {:>14.0} {:>10.0}",
-            run.devices, run.jobs, run.wall_s, requests_per_s, run.requests_served
-        );
-        assert!(run.requests_served > 0.0, "cluster served nothing at D={d}");
-        let mut o = BTreeMap::new();
-        o.insert("devices".into(), num(run.devices as f64));
-        o.insert("jobs".into(), num(run.jobs as f64));
-        o.insert("wall_s".into(), num(run.wall_s));
-        o.insert("requests_served".into(), num(run.requests_served));
-        o.insert("requests_per_s".into(), num(requests_per_s));
-        per_d.push(Json::Obj(o));
+        for &t in thread_counts {
+            let run = run_cluster(d, cluster_target, t);
+            let requests_per_s = run.requests_served / run.wall_s;
+            let per_core = requests_per_s / run.threads as f64;
+            println!(
+                "{:<10} {:>6} {:>8} {:>14.3} {:>14.0} {:>16.0} {:>10.0}",
+                run.devices, run.jobs, run.threads, run.wall_s, requests_per_s, per_core,
+                run.requests_served
+            );
+            assert!(run.requests_served > 0.0, "cluster served nothing at D={d} T={t}");
+            let mut o = BTreeMap::new();
+            o.insert("devices".into(), num(run.devices as f64));
+            o.insert("jobs".into(), num(run.jobs as f64));
+            o.insert("threads".into(), num(run.threads as f64));
+            o.insert("wall_s".into(), num(run.wall_s));
+            o.insert("requests_served".into(), num(run.requests_served));
+            o.insert("requests_per_s".into(), num(requests_per_s));
+            o.insert("requests_per_s_per_core".into(), num(per_core));
+            per_d.push(Json::Obj(o));
+        }
     }
 
     // Churn scaling: the same cluster workload through the dynamic
     // window loop (launches, a retirement, threshold autoscaling) —
-    // what warehouse dynamics cost on top of the static path.
+    // what warehouse dynamics cost on top of the static path. Kept at
+    // its PR 6 sizes so the tracked trajectory stays comparable.
+    let churn_counts: &[usize] = if smoke { &[2] } else { &[1, 4, 16] };
     println!(
         "\n{:<10} {:>6} {:>14} {:>14} {:>10}   (under churn + autoscale)",
         "devices", "jobs", "wall_s", "requests/s", "requests"
     );
     println!("{}", "-".repeat(90));
     let mut per_c: Vec<Json> = Vec::new();
-    for &d in device_counts {
+    for &d in churn_counts {
         let run = run_churn(d, cluster_target);
         let requests_per_s = run.requests_served / run.wall_s;
         println!(

@@ -24,6 +24,14 @@
 //! Times are compared with [`f64::total_cmp`], so even a NaN clock
 //! degrades to a deterministic order (and a NaN-starved fleet still
 //! serves its healthy members) instead of a comparator panic mid-run.
+//!
+//! Since PR 7 a cluster run owns one calendar PER SHARD rather than one
+//! global instance: each data-parallel worker interleaves only its own
+//! devices' members. The pick rule makes this safe — within a device,
+//! member keys and tie-breaks are identical whichever calendar holds
+//! them, and members of different devices never couple mid-window — so
+//! sharding changes which thread pops an event, never the per-member
+//! serve order (see `docs/perf.md`).
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;

@@ -509,6 +509,7 @@ pub struct ClusterBuilder<'a> {
     placement_policy: Option<Box<dyn PlacementPolicy + 'a>>,
     autoscaler: Option<Box<dyn Autoscaler + 'a>>,
     price_list: Option<Vec<f64>>,
+    threads: usize,
 }
 
 impl<'a> ClusterBuilder<'a> {
@@ -527,6 +528,7 @@ impl<'a> ClusterBuilder<'a> {
             placement_policy: None,
             autoscaler: None,
             price_list: None,
+            threads: 1,
         }
     }
 
@@ -652,6 +654,16 @@ impl<'a> ClusterBuilder<'a> {
     /// [`ConfigError::ListCountMismatch`].
     pub fn prices(mut self, prices: &[f64]) -> Self {
         self.price_list = Some(prices.to_vec());
+        self
+    }
+
+    /// Worker threads for serving (default 1 = the serial reference
+    /// engine). Devices are sharded into contiguous whole-device chunks,
+    /// one scoped worker per chunk; snapshot output is byte-identical at
+    /// every thread count (see `docs/perf.md`). Values are clamped to
+    /// `[1, devices]` at run time; `threads(0)` behaves like `threads(1)`.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -810,6 +822,7 @@ impl<'a> ClusterBuilder<'a> {
             placement: self.placement.name().to_string(),
             assignment,
             dynamics,
+            threads: self.threads,
         })
     }
 }
@@ -892,6 +905,7 @@ pub struct Cluster<'a> {
     placement: String,
     assignment: Assignment,
     dynamics: Option<DynamicsCfg<'a>>,
+    threads: usize,
 }
 
 /// One device's slice of a finished cluster run.
@@ -1023,14 +1037,18 @@ impl<'a> Cluster<'a> {
         &self.devices
     }
 
-    /// Serve every job to completion on its assigned device, all
-    /// devices interleaved in one global virtual-time loop.
+    /// Serve every job to completion on its assigned device. With
+    /// `threads(1)` (the default) all devices interleave in one serial
+    /// virtual-time loop; with more threads the device list is sharded
+    /// across scoped workers, byte-identically (see `docs/perf.md`).
     pub fn run(self) -> Result<ClusterOutcome, DeviceError> {
-        let Cluster { cfg, seed, devices, jobs, placement, assignment, dynamics } = self;
+        let Cluster { cfg, seed, devices, jobs, placement, assignment, dynamics, threads } = self;
         if let Some(dc) = dynamics {
             // Churn / migration / autoscaling requested: the dynamic
             // runner owns the whole window loop.
-            return super::dynamics::run_dynamic(&cfg, seed, devices, jobs, placement, assignment, dc);
+            return super::dynamics::run_dynamic(
+                &cfg, seed, devices, jobs, placement, assignment, dc, threads,
+            );
         }
         let open = !jobs.iter().all(|m| m.arrivals.is_closed());
         // Group global job indices per device, preserving job order.
@@ -1059,7 +1077,7 @@ impl<'a> Cluster<'a> {
                 }
                 devs.push(OpenDevice::new(timeshare_ctx(desc, group.len(), &cfg), members));
             }
-            fleet::run_open_devices(&cfg, &mut devs)?;
+            fleet::run_open_devices_parallel(&cfg, &mut devs, threads)?;
             fold_device_outcomes(&devices, &groups, devs, |dev| {
                 (dev.ctx, dev.members.into_iter().map(fleet::open_member_outcome).collect())
             })
@@ -1076,7 +1094,7 @@ impl<'a> Cluster<'a> {
                     members,
                 });
             }
-            fleet::run_closed_devices(&cfg, &mut devs)?;
+            fleet::run_closed_devices_parallel(&cfg, &mut devs, threads)?;
             fold_device_outcomes(&devices, &groups, devs, |dev| {
                 (dev.ctx, dev.members.into_iter().map(fleet::closed_member_outcome).collect())
             })
@@ -1475,5 +1493,60 @@ mod tests {
             "got {:?}",
             out.audit()
         );
+    }
+
+    #[test]
+    fn audit_runs_on_the_merged_outcome_through_the_parallel_path() {
+        // The conservation audit must see the MERGED ClusterOutcome a
+        // parallel run folds from its shards — per-shard state alone
+        // cannot check cross-device invariants. Run a multi-device
+        // cluster with more shards than workers could hide behind, then
+        // forge violations into the merged outcome exactly as the
+        // serial audit test does.
+        let mut b = Cluster::builder()
+            .windows(4)
+            .rounds_per_window(10)
+            .seed(9)
+            .threads(8)
+            .placement(RoundRobin::new());
+        for _ in 0..4 {
+            b = b.device(TESLA_T4);
+        }
+        for _ in 0..8 {
+            b = b.job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 2 },
+                ArrivalPattern::poisson(40.0),
+            );
+        }
+        let out = b.build().unwrap().run().unwrap();
+        assert_eq!(out.devices.len(), 4);
+        assert_eq!(out.audit(), Ok(()));
+
+        // A violation forged into ANY device of the merged outcome is
+        // caught, including devices served by later shards.
+        for d in 0..4 {
+            let mut forged = out.clone();
+            forged.devices[d].fleet.members[0].latencies.push((5.0, 1e9));
+            assert!(
+                matches!(forged.audit(), Err(AuditError::Conservation { .. })),
+                "device {d}: got {:?}",
+                forged.audit()
+            );
+            let mut forged = out.clone();
+            forged.devices[d].fleet.grant_trace.push(vec![0.7, 0.7]);
+            assert!(
+                matches!(forged.audit(), Err(AuditError::OverSubscribed { device, .. }) if device == d),
+                "device {d}: got {:?}",
+                forged.audit()
+            );
+            let mut forged = out.clone();
+            forged.devices[d].fleet.peak_mem_mb = forged.devices[d].fleet.mem_capacity_mb + 1.0;
+            assert!(
+                matches!(forged.audit(), Err(AuditError::MemoryOverCeiling { device, .. }) if device == d),
+                "device {d}: got {:?}",
+                forged.audit()
+            );
+        }
     }
 }

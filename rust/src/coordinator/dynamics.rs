@@ -55,7 +55,7 @@ use super::cluster::{
 use super::engine::{SmShare, WindowAccum};
 use super::fleet::{
     admit_window, arrival_seed, finish_fleet, new_open_member, open_member_outcome,
-    validate_member_cfg, DeviceCtx, MemberCfg, OpenMember, Partitioner,
+    shard_count, validate_member_cfg, DeviceCtx, MemberCfg, OpenMember, Partitioner,
 };
 use super::job::JobSpec;
 use super::policy::WindowObservation;
@@ -468,6 +468,15 @@ fn most_free_fit(free: &[f64], active: &[bool], need_mb: f64) -> Option<usize> {
 /// planning, and global event calendar — but rebuilds the membership
 /// plan every window, because churn, migration, and scaling may have
 /// changed who runs where.
+///
+/// `threads > 1` parallelizes ONLY step 4 (the event loop): each
+/// device's members serve on a per-device calendar, devices sharded
+/// across scoped workers, and the scope join is the window barrier.
+/// Steps 1-3 (churn, migration, autoscaling), 5 (window close), and 6
+/// (billing) stay serial and ordered — dynamics decisions see exactly
+/// the state the serial engine would, so snapshots stay byte-identical
+/// at every thread count.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_dynamic<'a>(
     cfg: &RunConfig,
     seed: u64,
@@ -476,8 +485,10 @@ pub(crate) fn run_dynamic<'a>(
     placement: String,
     assignment: Assignment,
     dynamics: DynamicsCfg<'a>,
+    threads: usize,
 ) -> Result<ClusterOutcome, DeviceError> {
     let DynamicsCfg { churn, mut policy, mut autoscaler } = dynamics;
+    let parallel = threads > 1;
     let mut dyn_out = DynamicsOutcome::default();
 
     // Group churn events by firing window, preserving insertion order.
@@ -526,6 +537,10 @@ pub(crate) fn run_dynamic<'a>(
     // every window (membership is no longer static).
     let mut flat: Vec<usize> = Vec::new();
     let mut plan: Vec<((u32, u32), SmShare, f64)> = Vec::new();
+    // Per-device `(start, len)` spans over `flat` / `plan` — planning
+    // visits devices in pool order, so each device's slots are
+    // contiguous. The parallel path serves one span per work unit.
+    let mut spans: Vec<(usize, usize)> = Vec::new();
     // Billed virtual time: the furthest-ahead member clock, monotone.
     let mut elapsed_s = 0.0f64;
     // Last window's pool pressure per device (0 while idle).
@@ -680,6 +695,7 @@ pub(crate) fn run_dynamic<'a>(
         calendar.clear();
         flat.clear();
         plan.clear();
+        spans.clear();
         for p in pressures.iter_mut() {
             *p = 0.0;
         }
@@ -735,6 +751,7 @@ pub(crate) fn run_dynamic<'a>(
                 .map(|(&li, &(bs, mtl))| lives[li].m.sim.mem_demand_mb(bs, mtl))
                 .sum();
             ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+            let span_start = flat.len();
             for ((&li, &pt), sh) in members.iter().zip(&pts).zip(shr) {
                 let l = &mut lives[li];
                 let slo = l.m.schedule.at(w);
@@ -746,17 +763,24 @@ pub(crate) fn run_dynamic<'a>(
                     remaining.push(0);
                 }
                 remaining[f] = cfg.rounds_per_window;
-                calendar.push(f, l.m.lp.now_s);
+                if !parallel {
+                    calendar.push(f, l.m.lp.now_s);
+                }
             }
+            spans.push((span_start, flat.len() - span_start));
         }
 
-        while let Some(f) = calendar.pop() {
-            remaining[f] -= 1;
-            let l = &mut lives[flat[f]];
-            let (pt, sh, slo) = plan[f];
-            let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
-            if more && remaining[f] > 0 {
-                calendar.push(f, l.m.lp.now_s);
+        if parallel {
+            serve_spans_parallel(cfg, &mut lives, &flat, &plan, &spans, threads)?;
+        } else {
+            while let Some(f) = calendar.pop() {
+                remaining[f] -= 1;
+                let l = &mut lives[flat[f]];
+                let (pt, sh, slo) = plan[f];
+                let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
+                if more && remaining[f] > 0 {
+                    calendar.push(f, l.m.lp.now_s);
+                }
             }
         }
 
@@ -828,6 +852,84 @@ pub(crate) fn run_dynamic<'a>(
     Ok(out)
 }
 
+/// Serve one window's event loops data-parallel: one work unit per
+/// device span (disjoint `&mut Live` sets gathered through an
+/// option-take over the live list), units sharded contiguously across
+/// scoped workers. Joining the scope is the window barrier — step 5
+/// (window close) and the next boundary's dynamics never observe a
+/// half-served window.
+fn serve_spans_parallel<'a>(
+    cfg: &RunConfig,
+    lives: &mut [Live<'a>],
+    flat: &[usize],
+    plan: &[((u32, u32), SmShare, f64)],
+    spans: &[(usize, usize)],
+    threads: usize,
+) -> Result<(), DeviceError> {
+    // Hand out disjoint mutable borrows: every live index appears in at
+    // most one span, so each take() succeeds exactly once per window.
+    let mut slots: Vec<Option<&mut Live<'a>>> = lives.iter_mut().map(Some).collect();
+    let mut units: Vec<(Vec<&mut Live<'a>>, &[((u32, u32), SmShare, f64)])> = spans
+        .iter()
+        .map(|&(start, len)| {
+            let members: Vec<&mut Live<'a>> = flat[start..start + len]
+                .iter()
+                .map(|&li| slots[li].take().expect("live job served once per window"))
+                .collect();
+            (members, &plan[start..start + len])
+        })
+        .collect();
+    let shards = shard_count(threads, units.len());
+    if shards <= 1 {
+        for (members, plan) in units.iter_mut() {
+            serve_device_span(cfg, members, plan)?;
+        }
+        return Ok(());
+    }
+    let chunk = units.len().div_ceil(shards);
+    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = units
+            .chunks_mut(chunk)
+            .map(|shard| {
+                s.spawn(move || -> Result<(), DeviceError> {
+                    for (members, plan) in shard.iter_mut() {
+                        serve_device_span(cfg, members, plan)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("dynamics shard worker panicked")).collect()
+    });
+    results.into_iter().collect()
+}
+
+/// One device's event loop for one window, on a per-device calendar.
+/// Local member index == within-device flat order, so ties break exactly
+/// as the global serial calendar breaks them — every member serves the
+/// identical round sequence.
+fn serve_device_span(
+    cfg: &RunConfig,
+    members: &mut [&mut Live<'_>],
+    plan: &[((u32, u32), SmShare, f64)],
+) -> Result<(), DeviceError> {
+    let mut calendar = EventCalendar::with_capacity(members.len());
+    let mut remaining = vec![cfg.rounds_per_window; members.len()];
+    for (k, l) in members.iter().enumerate() {
+        calendar.push(k, l.m.lp.now_s);
+    }
+    while let Some(k) = calendar.pop() {
+        remaining[k] -= 1;
+        let l = &mut *members[k];
+        let (pt, sh, slo) = plan[k];
+        let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
+        if more && remaining[k] > 0 {
+            calendar.push(k, l.m.lp.now_s);
+        }
+    }
+    Ok(())
+}
+
 /// A neutral observation for jobs that have not served a window yet
 /// (launched this very boundary).
 fn blank_obs(window: usize) -> WindowObservation {
@@ -888,6 +990,14 @@ mod tests {
     use super::*;
     use crate::coordinator::job::paper_job;
     use crate::gpusim::{TESLA_P4, TESLA_P40, TESLA_T4};
+
+    #[test]
+    fn live_jobs_are_send_for_span_workers() {
+        // serve_spans_parallel moves `&mut Live` sets onto scoped
+        // worker threads; keep that a compile-time guarantee.
+        fn assert_send<T: Send>() {}
+        assert_send::<Live<'static>>();
+    }
 
     #[test]
     fn price_catalogue_covers_the_gpus() {

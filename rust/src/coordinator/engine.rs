@@ -24,6 +24,13 @@
 //! arrival processes, trace replay, and cross-job burst interference
 //! expressible at all.
 //!
+//! `serve_round` mutates ONLY the popped member's state (its `OpenLoop`,
+//! simulator, and window accumulator); every cross-member coupling —
+//! admission, contention shares, slice clamps, rebalancing — happens
+//! per device at window boundaries. That structural fact is what lets
+//! the cluster shard whole-device event loops across worker threads
+//! (PR 7) while staying byte-identical to serial execution.
+//!
 //! ## Allocation discipline (see `docs/perf.md`)
 //!
 //! The steady-state per-request/per-batch path performs **zero** heap

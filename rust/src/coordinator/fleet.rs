@@ -1029,6 +1029,80 @@ pub(crate) fn run_closed_devices(
     Ok(())
 }
 
+/// Number of whole-device shards a `threads` request actually gets:
+/// at least one, never more than the device count (a worker with no
+/// devices would be pure overhead).
+pub(crate) fn shard_count(threads: usize, devices: usize) -> usize {
+    threads.max(1).min(devices.max(1))
+}
+
+/// Data-parallel form of [`run_closed_devices`]: split the device list
+/// into `threads` contiguous shards and run the UNCHANGED serial window
+/// loop on each shard from its own scoped worker thread.
+///
+/// This is byte-identical to the serial engine because devices never
+/// couple: every per-window interaction (admission, SM contention,
+/// slice clamps, rebalancing) is scoped to one device's members, each
+/// member owns its simulator RNG, and closed-loop windows have no
+/// cross-device event interleaving at all. Sharding therefore changes
+/// *which thread* executes a device's windows, never *what* they
+/// compute. `threads <= 1` dispatches straight to the serial reference
+/// engine. On error, the first failing shard in device order wins
+/// (errors abort the run, so no snapshot is produced either way).
+pub(crate) fn run_closed_devices_parallel(
+    cfg: &RunConfig,
+    devs: &mut [ClosedDevice<'_>],
+    threads: usize,
+) -> Result<(), DeviceError> {
+    let threads = shard_count(threads, devs.len());
+    if threads <= 1 {
+        return run_closed_devices(cfg, devs);
+    }
+    let chunk = devs.len().div_ceil(threads);
+    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = devs
+            .chunks_mut(chunk)
+            .map(|shard| s.spawn(move || run_closed_devices(cfg, shard)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("closed shard worker panicked")).collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Data-parallel form of [`run_open_devices`]: contiguous whole-device
+/// shards, one scoped worker thread per shard, each running the
+/// UNCHANGED serial engine (so each shard interleaves its own members
+/// through a per-shard [`EventCalendar`]).
+///
+/// Byte-identity argument: the global calendar's cross-device
+/// interleaving is observationally irrelevant — `serve_round` mutates
+/// only the popped member's state (`lp`, `sim`, its window accumulator),
+/// and all cross-member coupling happens per-device at window
+/// boundaries. Within one device, the per-shard calendar pops members in
+/// exactly the order the global calendar would (same keys, ties toward
+/// the lower index), so every member serves the identical round
+/// sequence whatever the shard layout. The differential suite in
+/// `tests/parallel.rs` enforces this snapshot-byte-for-byte.
+pub(crate) fn run_open_devices_parallel(
+    cfg: &RunConfig,
+    devs: &mut [OpenDevice<'_>],
+    threads: usize,
+) -> Result<(), DeviceError> {
+    let threads = shard_count(threads, devs.len());
+    if threads <= 1 {
+        return run_open_devices(cfg, devs);
+    }
+    let chunk = devs.len().div_ceil(threads);
+    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+        let handles: Vec<_> = devs
+            .chunks_mut(chunk)
+            .map(|shard| s.spawn(move || run_open_devices(cfg, shard)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("open shard worker panicked")).collect()
+    });
+    results.into_iter().collect()
+}
+
 /// One open-loop device: context, engine members, recycled window
 /// accumulators.
 pub(crate) struct OpenDevice<'a> {
@@ -1282,6 +1356,25 @@ pub(crate) fn finish_fleet(
 mod tests {
     use super::*;
     use crate::coordinator::job::paper_job;
+
+    #[test]
+    fn device_state_is_send_for_shard_workers() {
+        // The parallel runners move whole ClosedDevice / OpenDevice values
+        // (boxed policies, partitioners, arrival generators and all) onto
+        // scoped worker threads. Keep that a compile-time guarantee.
+        fn assert_send<T: Send>() {}
+        assert_send::<ClosedDevice<'static>>();
+        assert_send::<OpenDevice<'static>>();
+    }
+
+    #[test]
+    fn shard_count_clamps_to_device_count() {
+        assert_eq!(shard_count(0, 5), 1);
+        assert_eq!(shard_count(1, 5), 1);
+        assert_eq!(shard_count(3, 5), 3);
+        assert_eq!(shard_count(8, 5), 5);
+        assert_eq!(shard_count(4, 0), 1);
+    }
 
     #[test]
     fn builder_rejects_empty_fleet_and_unknown_dnn() {

@@ -41,7 +41,11 @@
 //! O(log M) [`calendar::EventCalendar`] (a binary heap keyed by
 //! next-event time; ties break toward the lower member index, exactly
 //! like the linear scan it replaced — see `docs/perf.md` and the
-//! `fleet_scale` bench). The legacy closed-loop `JobRunner` shim was
+//! `fleet_scale` bench). A cluster additionally serves data-parallel
+//! (`ClusterBuilder::threads`, PR 7): the device list shards into
+//! contiguous chunks, each chunk's event loop running on its own scoped
+//! worker thread, with snapshots byte-identical to the serial engine at
+//! every thread count. The legacy closed-loop `JobRunner` shim was
 //! removed in PR 5; [`session::ServingSession`] is the single-job entry
 //! point.
 //!

@@ -70,7 +70,13 @@ impl Action {
 }
 
 /// A window-driven serving-control algorithm.
-pub trait Policy {
+///
+/// `Send` is a supertrait so boxed policies can ride inside per-device
+/// serving state when the cluster shards its device event loops across
+/// worker threads (`Cluster::threads`). A policy only ever runs on one
+/// thread at a time (each device's window loop owns its members), so no
+/// `Sync` is required — but the state must be allowed to *move*.
+pub trait Policy: Send {
     /// Human-readable name for traces/reports.
     fn name(&self) -> &'static str;
 
@@ -85,7 +91,7 @@ pub trait Policy {
 /// sees only the `p95_ms`/`slo_ms` fields of the observation).
 pub struct AsPolicy<C>(pub C);
 
-impl<C: Controller> Policy for AsPolicy<C> {
+impl<C: Controller + Send> Policy for AsPolicy<C> {
     fn name(&self) -> &'static str {
         self.0.name()
     }
@@ -250,7 +256,11 @@ impl Policy for QueuePolicy {
 /// result passes the same `plan_grants` validation used at build time —
 /// a rebalance that still over-subscribes is rejected (and counted as
 /// an admission clamp), never silently granted.
-pub trait PartitionPolicy {
+///
+/// `Send` for the same reason as [`Policy`]: the partitioner (and its
+/// boxed rebalancer) lives inside per-device state that may move to a
+/// worker thread when the cluster serves data-parallel.
+pub trait PartitionPolicy: Send {
     /// Human-readable name for traces/reports.
     fn name(&self) -> &'static str;
 

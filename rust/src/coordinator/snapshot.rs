@@ -16,6 +16,11 @@
 //!   sum digest (thousands of floats would bloat fixtures without adding
 //!   diagnostic power: any change that perturbs one latency also
 //!   perturbs the digest and the window trace).
+//!
+//! These bytes are also the data-parallel determinism contract (PR 7):
+//! `tests/parallel.rs` renders `ClusterOutcome`s served at different
+//! worker-thread counts through this module and asserts byte equality
+//! against the serial engine.
 
 use crate::json::Json;
 

@@ -75,7 +75,7 @@ COMMANDS:
            [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,..] [--shed] [--timeout-ms MS] [--queue-cap N]
            [--churn EV1,EV2,..] [--migrate POLICY[:N]] [--autoscale MIN:MAX]
-           [--price P1,P2,..]
+           [--price P1,P2,..] [--threads N]
            Serve jobs across a HETEROGENEOUS pool of devices — the
            scheduling layer above one GPU. Device specs: p40 | p4 | t4,
            optionally :migN to expose the card as N MIG virtual devices
@@ -96,6 +96,9 @@ COMMANDS:
            catalogue prices (P40 $1.20/h, T4 $0.53/h, P4 $0.60/h;
            override with --price, one value or one per device) and
            reporting cost per unit goodput.
+           --threads N shards the per-device event loops across N worker
+           threads; output is byte-identical to --threads 1 (the serial
+           engine) at every N.
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
   serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
@@ -404,6 +407,7 @@ fn main() -> Result<()> {
                     "migrate",
                     "autoscale",
                     "price",
+                    "threads",
                 ],
             )?;
             cmd_cluster(&flags)
@@ -909,6 +913,7 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         .windows(windows)
         .rounds_per_window(20)
         .seed(seed)
+        .threads(flags.num_or("threads", 1usize)?)
         .placement(placement);
     for spec in &specs {
         b = b.device_spec(spec);

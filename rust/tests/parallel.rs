@@ -1,0 +1,240 @@
+//! Differential suite for the data-parallel cluster runner (PR 7):
+//! random cluster configurations — heterogeneous device mixes, MIG
+//! partitions, open- and closed-loop serving, churn / migration /
+//! autoscaling schedules — must produce snapshot-BYTE-identical output
+//! at every worker-thread count. Same pattern as the calendar-vs-
+//! `LinearScan` scheduler suite: the serial engine (`threads(1)`) is
+//! the reference, and `threads(2)` / `threads(8)` must reproduce its
+//! bytes exactly.
+//!
+//! The contract this leans on: job `j` derives its simulator and
+//! arrival streams from its GLOBAL index (`seed + j`,
+//! `arrival_seed(seed, j)`), devices only interact at placement time
+//! and window boundaries, and within one device the per-shard calendar
+//! pops members in exactly the order the global calendar would.
+
+use dnnscaler::coordinator::cluster::{
+    BestFit, Cluster, ClusterOutcome, InterferenceAware, RoundRobin,
+};
+use dnnscaler::coordinator::dynamics::{ChurnSchedule, PeriodicReplace, ThresholdAutoscaler};
+use dnnscaler::coordinator::job::paper_job;
+use dnnscaler::coordinator::session::PolicySpec;
+use dnnscaler::coordinator::snapshot::{cluster_outcome_to_json, render};
+use dnnscaler::gpusim::{TESLA_P4, TESLA_P40, TESLA_T4};
+use dnnscaler::rng::Rng;
+use dnnscaler::workload::ArrivalPattern;
+
+fn snapshot(out: &ClusterOutcome) -> String {
+    render(&cluster_outcome_to_json(out))
+}
+
+/// A plain-data description of one random cluster configuration, so the
+/// identical cluster can be rebuilt once per thread count (builders and
+/// policies are consumed by `run`).
+struct Case {
+    seed: u64,
+    windows: usize,
+    rounds: usize,
+    /// (gpu index into GPUS, mig slices; 0 = whole card)
+    devices: Vec<(usize, u32)>,
+    placement: usize,
+    /// (paper job id, poisson rate; 0.0 = closed-loop, queue cap)
+    jobs: Vec<(u32, f64, Option<usize>)>,
+    churn: bool,
+    migrate: bool,
+    autoscale: bool,
+}
+
+const GPUS: [dnnscaler::gpusim::GpuSpec; 3] = [TESLA_P40, TESLA_T4, TESLA_P4];
+
+impl Case {
+    fn random(seed: u64, rng: &mut Rng) -> Case {
+        let open = rng.chance(0.7);
+        let dynamic = open && rng.chance(0.5);
+        let n_dev = 1 + rng.below(4);
+        let devices = (0..n_dev)
+            .map(|_| {
+                let gpu = rng.below(GPUS.len());
+                // MIG only on the big cards: small-card slices undercut
+                // the minimum SM grant and are refused at build time.
+                let slices = if gpu == 0 && rng.chance(0.4) {
+                    [2u32, 4u32][rng.below(2)]
+                } else {
+                    0
+                };
+                (gpu, slices)
+            })
+            .collect();
+        let n_jobs = 1 + rng.below(6);
+        let jobs = (0..n_jobs)
+            .map(|_| {
+                let id = 1 + rng.below(30) as u32;
+                let rate = if open { rng.uniform_range(10.0, 60.0) } else { 0.0 };
+                let cap = rng.chance(0.4).then(|| 16 + rng.below(64));
+                (id, rate, cap)
+            })
+            .collect();
+        Case {
+            seed,
+            windows: 3 + rng.below(3),
+            rounds: 6 + rng.below(6),
+            devices,
+            placement: rng.below(3),
+            jobs,
+            churn: dynamic && rng.chance(0.7),
+            migrate: dynamic && rng.chance(0.5),
+            autoscale: dynamic && rng.chance(0.5),
+        }
+    }
+
+    fn build(&self, threads: usize) -> Result<Cluster<'static>, dnnscaler::ConfigError> {
+        let mut b = Cluster::builder()
+            .windows(self.windows)
+            .rounds_per_window(self.rounds)
+            .seed(self.seed)
+            .threads(threads);
+        b = match self.placement {
+            0 => b.placement(RoundRobin::new()),
+            1 => b.placement(BestFit::new()),
+            _ => b.placement(InterferenceAware::new()),
+        };
+        for &(gpu, slices) in &self.devices {
+            b = if slices == 0 {
+                b.device(GPUS[gpu].clone())
+            } else {
+                b.mig_device(GPUS[gpu].clone(), slices)
+            };
+        }
+        for &(id, rate, cap) in &self.jobs {
+            let job = paper_job(id).expect("paper job id in 1..=30");
+            b = if rate > 0.0 {
+                b.job_with_arrivals(
+                    job,
+                    PolicySpec::Static { bs: 2, mtl: 1 },
+                    ArrivalPattern::poisson(rate),
+                )
+            } else {
+                b.job(job, PolicySpec::Clipper)
+            };
+            if let Some(c) = cap {
+                if rate > 0.0 {
+                    b = b.queue_capacity(c);
+                }
+            }
+        }
+        if self.churn {
+            let launched = *paper_job(7).unwrap();
+            let w_launch = 1 % self.windows;
+            let w_retire = self.windows - 1;
+            let mut schedule = ChurnSchedule::new().launch(
+                w_launch,
+                &launched,
+                PolicySpec::Static { bs: 2, mtl: 1 },
+                ArrivalPattern::poisson(25.0),
+            );
+            if w_retire > w_launch {
+                schedule = schedule.retire(w_retire, launched.id);
+            }
+            b = b.churn(schedule);
+        }
+        if self.migrate {
+            b = b.placement_policy(PeriodicReplace::new(RoundRobin::new(), 2));
+        }
+        if self.autoscale {
+            b = b.autoscaler(ThresholdAutoscaler::new(1, self.devices.len() + 2));
+        }
+        b.build()
+    }
+}
+
+/// Run one case at the reference thread count and at each parallel
+/// count; every snapshot must match the reference byte for byte.
+fn assert_byte_identical(label: &str, case: &Case) {
+    let reference = match case.build(1) {
+        Ok(cluster) => snapshot(&cluster.run().expect("serial run")),
+        // An infeasible random config (placement cannot fit the jobs)
+        // must be equally infeasible at every thread count — the knob
+        // only shards execution, never admission.
+        Err(e) => {
+            for &t in &[2usize, 8] {
+                let parallel = case.build(t).err();
+                assert!(parallel.is_some(), "{label}: threads {t} accepted a config serial refused ({e:?})");
+            }
+            return;
+        }
+    };
+    for &t in &[2usize, 8] {
+        let got = snapshot(
+            &case.build(t).expect("parallel build matches serial").run().expect("parallel run"),
+        );
+        assert_eq!(
+            got, reference,
+            "{label}: threads {t} diverged from the serial engine"
+        );
+    }
+}
+
+#[test]
+fn random_clusters_are_byte_identical_at_every_thread_count() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(0xD1FF ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let case = Case::random(seed, &mut rng);
+        assert_byte_identical(&format!("case {seed}"), &case);
+    }
+}
+
+#[test]
+fn mig_mixed_pool_is_byte_identical_at_every_thread_count() {
+    // Deterministic worst case for shard boundaries: more virtual
+    // devices than workers, MIG slices mixed with whole cards, jobs of
+    // very different rates.
+    let case = Case {
+        seed: 1234,
+        windows: 5,
+        rounds: 10,
+        devices: vec![(0, 4), (1, 0), (0, 0), (2, 0)],
+        placement: 1,
+        jobs: (0..8).map(|i| (1 + i * 3 % 30, 15.0 + 10.0 * i as f64, Some(32))).collect(),
+        churn: false,
+        migrate: false,
+        autoscale: false,
+    };
+    assert_byte_identical("mig mix", &case);
+}
+
+#[test]
+fn dynamic_cluster_is_byte_identical_at_every_thread_count() {
+    // Churn + migration + autoscaling all active: the window barrier
+    // must keep every dynamics decision ordered exactly as the serial
+    // engine orders it.
+    let case = Case {
+        seed: 77,
+        windows: 6,
+        rounds: 8,
+        devices: vec![(0, 0), (1, 0), (1, 0)],
+        placement: 0,
+        jobs: (0..5).map(|i| (1 + i as u32, 20.0 + 5.0 * i as f64, None)).collect(),
+        churn: true,
+        migrate: true,
+        autoscale: true,
+    };
+    assert_byte_identical("dynamics", &case);
+}
+
+#[test]
+fn oversubscribed_thread_counts_collapse_to_available_shards() {
+    // threads > devices must clamp, not wedge: a 2-device pool at 8
+    // threads serves on 2 shards and still reproduces the serial bytes.
+    let case = Case {
+        seed: 5,
+        windows: 4,
+        rounds: 8,
+        devices: vec![(1, 0), (2, 0)],
+        placement: 0,
+        jobs: vec![(3, 30.0, None), (9, 45.0, Some(24))],
+        churn: false,
+        migrate: false,
+        autoscale: false,
+    };
+    assert_byte_identical("clamped threads", &case);
+}

@@ -69,6 +69,27 @@ run_step "cluster-smoke" cargo run --release --manifest-path "$manifest" -- \
 run_step "dynamics-smoke" cargo run --release --manifest-path "$manifest" -- \
     cluster --devices p40,p40,t4 --ids 1,5 --rates 40,20 --windows 8 \
     --churn launch:4@2:r25,retire:4@6 --migrate bestfit:3 --autoscale 1:4
+# Parallel smoke: the same small cluster served serial and sharded
+# across 4 worker threads must print byte-identical reports — the
+# data-parallel determinism contract, checked end to end through the
+# CLI (the differential test suite covers it in-process).
+parallel_smoke() {
+    local serial parallel rc=0
+    serial="$(mktemp)" || return 1
+    parallel="$(mktemp)" || return 1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,t4,t4:mig2 --ids 1,5,9,12 --rates 40,20,35,25 \
+        --windows 4 --threads 1 >"$serial" || rc=1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,t4,t4:mig2 --ids 1,5,9,12 --rates 40,20,35,25 \
+        --windows 4 --threads 4 >"$parallel" || rc=1
+    if [ "$rc" -eq 0 ]; then
+        diff -u "$serial" "$parallel" || rc=1
+    fi
+    rm -f "$serial" "$parallel"
+    return "$rc"
+}
+run_step "parallel-smoke" parallel_smoke
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
 
 # Golden-fixture drift guard: regenerate the outcome snapshots and fail
