@@ -12,8 +12,18 @@
 #                         cluster requests/s at D=1..16) and write
 #                         BENCH_hotpath.json at the repo root — the
 #                         tracked perf trajectory (see docs/perf.md)
+#   make fuzz           — differential fuzz campaign: CASES seeded random
+#                         scenarios (default 200, SEED 42) through the
+#                         production engine vs the naive reference
+#                         executor (see docs/testing.md)
+#   make fuzz-corpus    — re-bless the committed counterexample corpus
+#                         under rust/tests/fuzz_corpus/ and fail on
+#                         drift vs git, like test-fixtures
 
-.PHONY: verify test-fixtures bench-json
+CASES ?= 200
+SEED ?= 42
+
+.PHONY: verify test-fixtures bench-json fuzz fuzz-corpus
 verify:
 	bash scripts/verify.sh
 
@@ -24,6 +34,29 @@ bench-json:
 	done; \
 	if [ -z "$$manifest" ]; then echo "bench-json: no Cargo.toml found" >&2; exit 1; fi; \
 	cargo bench --bench fleet_scale --manifest-path "$$manifest" -- --json "$$(pwd)/BENCH_hotpath.json"
+
+fuzz:
+	@manifest=""; \
+	for c in Cargo.toml rust/Cargo.toml; do \
+		[ -f "$$c" ] && manifest="$$c" && break; \
+	done; \
+	if [ -z "$$manifest" ]; then echo "fuzz: no Cargo.toml found" >&2; exit 1; fi; \
+	cargo run --release --manifest-path "$$manifest" -- fuzz --cases $(CASES) --seed $(SEED)
+
+fuzz-corpus:
+	@manifest=""; \
+	for c in Cargo.toml rust/Cargo.toml; do \
+		[ -f "$$c" ] && manifest="$$c" && break; \
+	done; \
+	if [ -z "$$manifest" ]; then echo "fuzz-corpus: no Cargo.toml found" >&2; exit 1; fi; \
+	REGEN_FUZZ_CORPUS=1 cargo test -q --test fuzz_corpus --manifest-path "$$manifest"
+	@if [ -n "$$(git status --porcelain -- rust/tests/fuzz_corpus)" ]; then \
+		echo "fuzz-corpus: corpus cases drifted (or are new) — review and commit:"; \
+		git status --porcelain -- rust/tests/fuzz_corpus; \
+		git --no-pager diff -- rust/tests/fuzz_corpus; \
+		exit 1; \
+	fi
+	@echo "fuzz-corpus: corpus matches the checked-in baseline"
 
 test-fixtures:
 	@manifest=""; \

@@ -875,7 +875,7 @@ pub(crate) fn timeshare_ctx<'x>(desc: &DeviceDesc, members: usize, cfg: &RunConf
 /// Fold finished per-device serving states into [`DeviceOutcome`]s:
 /// `split` extracts each device's context and member outcomes (the only
 /// part that differs between the open and closed paths).
-fn fold_device_outcomes<'a, T>(
+pub(crate) fn fold_device_outcomes<'a, T>(
     devices: &[DeviceDesc],
     groups: &[Vec<usize>],
     devs: Vec<T>,
@@ -896,16 +896,18 @@ fn fold_device_outcomes<'a, T>(
         .collect()
 }
 
-/// A validated, placed cluster, ready to run.
+/// A validated, placed cluster, ready to run. Fields are crate-visible
+/// so `coordinator::testkit` can re-serve the identical validated,
+/// placed configuration through its naive reference executor.
 pub struct Cluster<'a> {
-    cfg: RunConfig,
-    seed: u64,
-    devices: Vec<DeviceDesc>,
-    jobs: Vec<MemberCfg<'a>>,
-    placement: String,
-    assignment: Assignment,
-    dynamics: Option<DynamicsCfg<'a>>,
-    threads: usize,
+    pub(crate) cfg: RunConfig,
+    pub(crate) seed: u64,
+    pub(crate) devices: Vec<DeviceDesc>,
+    pub(crate) jobs: Vec<MemberCfg<'a>>,
+    pub(crate) placement: String,
+    pub(crate) assignment: Assignment,
+    pub(crate) dynamics: Option<DynamicsCfg<'a>>,
+    pub(crate) threads: usize,
 }
 
 /// One device's slice of a finished cluster run.
@@ -1077,7 +1079,7 @@ impl<'a> Cluster<'a> {
                 }
                 devs.push(OpenDevice::new(timeshare_ctx(desc, group.len(), &cfg), members));
             }
-            fleet::run_open_devices_parallel(&cfg, &mut devs, threads)?;
+            fleet::run_open_devices_parallel(&cfg, &mut devs, threads).map_err(|f| f.error)?;
             fold_device_outcomes(&devices, &groups, devs, |dev| {
                 (dev.ctx, dev.members.into_iter().map(fleet::open_member_outcome).collect())
             })
@@ -1094,7 +1096,7 @@ impl<'a> Cluster<'a> {
                     members,
                 });
             }
-            fleet::run_closed_devices_parallel(&cfg, &mut devs, threads)?;
+            fleet::run_closed_devices_parallel(&cfg, &mut devs, threads).map_err(|f| f.error)?;
             fold_device_outcomes(&devices, &groups, devs, |dev| {
                 (dev.ctx, dev.members.into_iter().map(fleet::closed_member_outcome).collect())
             })

@@ -55,7 +55,8 @@ use super::cluster::{
 use super::engine::{SmShare, WindowAccum};
 use super::fleet::{
     admit_window, arrival_seed, finish_fleet, new_open_member, open_member_outcome,
-    shard_count, validate_member_cfg, DeviceCtx, MemberCfg, OpenMember, Partitioner,
+    shard_count, validate_member_cfg, DeviceCtx, DeviceFailure, MemberCfg, OpenMember,
+    Partitioner,
 };
 use super::job::JobSpec;
 use super::policy::WindowObservation;
@@ -435,19 +436,22 @@ pub(crate) struct DynamicsCfg<'a> {
 
 /// One live job: its engine member plus the placement-facing metadata
 /// that must survive the member's `MemberCfg` being consumed.
-struct Live<'a> {
+/// Crate-visible (with its fields) for the `coordinator::testkit`
+/// reference executor, which drives the same live-job state through a
+/// deliberately naive window loop.
+pub(crate) struct Live<'a> {
     /// Global job index (seed derivation, outcome ordering).
-    job_idx: usize,
+    pub(crate) job_idx: usize,
     /// Pool device index currently hosting the job.
-    device: usize,
-    pjob: PlacementJob,
-    m: OpenMember<'a>,
-    win: WindowAccum,
-    last_obs: Option<WindowObservation>,
+    pub(crate) device: usize,
+    pub(crate) pjob: PlacementJob,
+    pub(crate) m: OpenMember<'a>,
+    pub(crate) win: WindowAccum,
+    pub(crate) last_obs: Option<WindowObservation>,
 }
 
 /// Free footprint memory per pool device given the current residents.
-fn free_mb(descs: &[DeviceDesc], lives: &[Live<'_>]) -> Vec<f64> {
+pub(crate) fn free_mb(descs: &[DeviceDesc], lives: &[Live<'_>]) -> Vec<f64> {
     let mut free: Vec<f64> = descs.iter().map(|d| d.mem_mb).collect();
     for l in lives {
         free[l.device] -= l.pjob.mem_floor_mb;
@@ -457,7 +461,7 @@ fn free_mb(descs: &[DeviceDesc], lives: &[Live<'_>]) -> Vec<f64> {
 
 /// The active device with the most free memory that fits `need_mb`
 /// (ties break toward the lower index); `None` when nothing fits.
-fn most_free_fit(free: &[f64], active: &[bool], need_mb: f64) -> Option<usize> {
+pub(crate) fn most_free_fit(free: &[f64], active: &[bool], need_mb: f64) -> Option<usize> {
     (0..free.len())
         .filter(|&d| active[d] && free[d] >= need_mb)
         .max_by(|&a, &b| free[a].total_cmp(&free[b]).then(b.cmp(&a)))
@@ -537,10 +541,16 @@ pub(crate) fn run_dynamic<'a>(
     // every window (membership is no longer static).
     let mut flat: Vec<usize> = Vec::new();
     let mut plan: Vec<((u32, u32), SmShare, f64)> = Vec::new();
+    // Flat slot -> pool device index (error attribution: a failing
+    // run must surface the lowest failing device, whatever the thread
+    // count).
+    let mut slot_device: Vec<usize> = Vec::new();
     // Per-device `(start, len)` spans over `flat` / `plan` — planning
     // visits devices in pool order, so each device's slots are
     // contiguous. The parallel path serves one span per work unit.
     let mut spans: Vec<(usize, usize)> = Vec::new();
+    // Span index -> pool device index, aligned with `spans`.
+    let mut span_device: Vec<usize> = Vec::new();
     // Billed virtual time: the furthest-ahead member clock, monotone.
     let mut elapsed_s = 0.0f64;
     // Last window's pool pressure per device (0 while idle).
@@ -695,7 +705,9 @@ pub(crate) fn run_dynamic<'a>(
         calendar.clear();
         flat.clear();
         plan.clear();
+        slot_device.clear();
         spans.clear();
+        span_device.clear();
         for p in pressures.iter_mut() {
             *p = 0.0;
         }
@@ -759,6 +771,7 @@ pub(crate) fn run_dynamic<'a>(
                 let f = flat.len();
                 flat.push(li);
                 plan.push((pt, sh, slo));
+                slot_device.push(d);
                 if remaining.len() <= f {
                     remaining.push(0);
                 }
@@ -768,19 +781,38 @@ pub(crate) fn run_dynamic<'a>(
                 }
             }
             spans.push((span_start, flat.len() - span_start));
+            span_device.push(d);
         }
 
         if parallel {
-            serve_spans_parallel(cfg, &mut lives, &flat, &plan, &spans, threads)?;
+            serve_spans_parallel(cfg, &mut lives, &flat, &plan, &spans, &span_device, threads)
+                .map_err(|f| f.error)?;
         } else {
+            // Serving failures go per-device: a failing device's stale
+            // calendar entries drain unserved while the others finish
+            // the window, and the lowest failing device index's error
+            // surfaces — exactly what the sharded path reports, so the
+            // error a run returns is thread-count-independent.
+            let mut failed: Vec<Option<DeviceError>> = vec![None; descs.len()];
             while let Some(f) = calendar.pop() {
+                let d = slot_device[f];
+                if failed[d].is_some() {
+                    continue;
+                }
                 remaining[f] -= 1;
                 let l = &mut lives[flat[f]];
                 let (pt, sh, slo) = plan[f];
-                let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
-                if more && remaining[f] > 0 {
-                    calendar.push(f, l.m.lp.now_s);
+                match l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win) {
+                    Ok(more) => {
+                        if more && remaining[f] > 0 {
+                            calendar.push(f, l.m.lp.now_s);
+                        }
+                    }
+                    Err(e) => failed[d] = Some(e),
                 }
+            }
+            if let Some(e) = failed.into_iter().flatten().next() {
+                return Err(e);
             }
         }
 
@@ -858,14 +890,21 @@ pub(crate) fn run_dynamic<'a>(
 /// scoped workers. Joining the scope is the window barrier — step 5
 /// (window close) and the next boundary's dynamics never observe a
 /// half-served window.
-fn serve_spans_parallel<'a>(
+///
+/// On error runs every shard reports its first failing span; spans are
+/// in pool-device order, so the minimum span index across shards is the
+/// lowest failing device — the same failure the serial calendar path
+/// surfaces, at every thread count (`span_device` maps it back to the
+/// pool device index).
+pub(crate) fn serve_spans_parallel<'a>(
     cfg: &RunConfig,
     lives: &mut [Live<'a>],
     flat: &[usize],
     plan: &[((u32, u32), SmShare, f64)],
     spans: &[(usize, usize)],
+    span_device: &[usize],
     threads: usize,
-) -> Result<(), DeviceError> {
+) -> Result<(), DeviceFailure> {
     // Hand out disjoint mutable borrows: every live index appears in at
     // most one span, so each take() succeeds exactly once per window.
     let mut slots: Vec<Option<&mut Live<'a>>> = lives.iter_mut().map(Some).collect();
@@ -879,21 +918,27 @@ fn serve_spans_parallel<'a>(
             (members, &plan[start..start + len])
         })
         .collect();
+    let fail = |span: usize, error: DeviceError| DeviceFailure {
+        device: span_device[span],
+        error,
+    };
     let shards = shard_count(threads, units.len());
     if shards <= 1 {
-        for (members, plan) in units.iter_mut() {
-            serve_device_span(cfg, members, plan)?;
+        for (u, (members, plan)) in units.iter_mut().enumerate() {
+            serve_device_span(cfg, members, plan).map_err(|e| fail(u, e))?;
         }
         return Ok(());
     }
     let chunk = units.len().div_ceil(shards);
-    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+    // Each shard's first failing span (spans serve in order within a
+    // shard), reported with its shard-local index.
+    let results: Vec<Result<(), (usize, DeviceError)>> = std::thread::scope(|s| {
         let handles: Vec<_> = units
             .chunks_mut(chunk)
             .map(|shard| {
-                s.spawn(move || -> Result<(), DeviceError> {
-                    for (members, plan) in shard.iter_mut() {
-                        serve_device_span(cfg, members, plan)?;
+                s.spawn(move || -> Result<(), (usize, DeviceError)> {
+                    for (u, (members, plan)) in shard.iter_mut().enumerate() {
+                        serve_device_span(cfg, members, plan).map_err(|e| (u, e))?;
                     }
                     Ok(())
                 })
@@ -901,7 +946,12 @@ fn serve_spans_parallel<'a>(
             .collect();
         handles.into_iter().map(|h| h.join().expect("dynamics shard worker panicked")).collect()
     });
-    results.into_iter().collect()
+    results
+        .into_iter()
+        .enumerate()
+        .filter_map(|(sh, r)| r.err().map(|(u, e)| (sh * chunk + u, e)))
+        .min_by_key(|&(span, _)| span)
+        .map_or(Ok(()), |(span, e)| Err(fail(span, e)))
 }
 
 /// One device's event loop for one window, on a per-device calendar.
@@ -932,7 +982,7 @@ fn serve_device_span(
 
 /// A neutral observation for jobs that have not served a window yet
 /// (launched this very boundary).
-fn blank_obs(window: usize) -> WindowObservation {
+pub(crate) fn blank_obs(window: usize) -> WindowObservation {
     WindowObservation {
         window,
         slo_ms: 0.0,
@@ -953,7 +1003,7 @@ fn blank_obs(window: usize) -> WindowObservation {
 /// a migration. All-or-nothing: when any evacuee does not fit, nothing
 /// moves and the shrink is refused (`false`) — the pool can never
 /// shrink below its live jobs' memory demand.
-fn try_evacuate(
+pub(crate) fn try_evacuate(
     victim: usize,
     descs: &[DeviceDesc],
     active: &[bool],

@@ -467,33 +467,36 @@ impl<'a> FleetBuilder<'a> {
     }
 }
 
-/// A validated multi-job fleet, ready to run.
+/// A validated multi-job fleet, ready to run. Fields are crate-visible
+/// so `coordinator::testkit` can re-serve the identical validated
+/// configuration through its naive reference executor.
 pub struct Fleet<'a> {
-    gpu: GpuSpec,
-    cfg: RunConfig,
-    seed: u64,
-    members: Vec<MemberCfg<'a>>,
-    partition: PartitionMode,
-    partition_policy: Option<Box<dyn PartitionPolicy + 'a>>,
+    pub(crate) gpu: GpuSpec,
+    pub(crate) cfg: RunConfig,
+    pub(crate) seed: u64,
+    pub(crate) members: Vec<MemberCfg<'a>>,
+    pub(crate) partition: PartitionMode,
+    pub(crate) partition_policy: Option<Box<dyn PartitionPolicy + 'a>>,
 }
 
-/// Closed-loop member state (lockstep windows).
+/// Closed-loop member state (lockstep windows). Fields are crate-visible
+/// for the `coordinator::testkit` reference executor.
 pub(crate) struct Member<'a> {
-    job: JobSpec,
-    sim: GpuSim,
-    policy: Box<dyn Policy + 'a>,
-    profile: Option<ProfileOutcome>,
-    label: Option<&'static str>,
-    schedule: SloSchedule,
-    window: LatencyWindow,
-    trace: Vec<WindowRecord>,
-    latencies: Vec<(f64, f64)>,
-    acc: AttainAcc,
-    pending_launch_ms: f64,
+    pub(crate) job: JobSpec,
+    pub(crate) sim: GpuSim,
+    pub(crate) policy: Box<dyn Policy + 'a>,
+    pub(crate) profile: Option<ProfileOutcome>,
+    pub(crate) label: Option<&'static str>,
+    pub(crate) schedule: SloSchedule,
+    pub(crate) window: LatencyWindow,
+    pub(crate) trace: Vec<WindowRecord>,
+    pub(crate) latencies: Vec<(f64, f64)>,
+    pub(crate) acc: AttainAcc,
+    pub(crate) pending_launch_ms: f64,
     /// Last operating point the admission check actually let this member
     /// serve at (what `JobOutcome::steady_*` reports — the policy's own
     /// request may be larger than the shared GPU ever granted).
-    admitted: (u32, u32),
+    pub(crate) admitted: (u32, u32),
 }
 
 /// Build one closed-loop member: resolve its policy (DNNScaler members
@@ -727,7 +730,7 @@ pub(crate) struct Partitioner<'a> {
 }
 
 impl<'a> Partitioner<'a> {
-    fn new(
+    pub(crate) fn new(
         mode: PartitionMode,
         members: &[MemberCfg<'_>],
         policy: Option<Box<dyn PartitionPolicy + 'a>>,
@@ -843,7 +846,7 @@ impl<'a> Partitioner<'a> {
     /// a rebalance whose slice memory ceiling would drop below any
     /// member's model footprint is rejected like any other invalid
     /// proposal, instead of OOMing the run at the next window's clamp.
-    fn maybe_rebalance(
+    pub(crate) fn maybe_rebalance(
         &mut self,
         obs: &[WindowObservation],
         grants: &[f64],
@@ -915,118 +918,181 @@ pub(crate) struct ClosedDevice<'a> {
     pub(crate) members: Vec<Member<'a>>,
 }
 
+/// A device-scoped serving failure: the index of the failing device
+/// within the slice the run was handed, plus the device's own first
+/// error. Multi-device runs surface the failure with the LOWEST device
+/// index, whatever the thread count — devices never couple, so each
+/// device's error is deterministic in isolation and "lowest index" is a
+/// thread-layout-independent choice (the old behaviour leaked whichever
+/// shard's error happened to be collected first).
+#[derive(Debug)]
+pub(crate) struct DeviceFailure {
+    pub(crate) device: usize,
+    pub(crate) error: DeviceError,
+}
+
+/// Fold a per-device failure table into the run result: the lowest
+/// failing device index wins.
+fn first_device_failure(failed: Vec<Option<DeviceError>>) -> Result<(), DeviceFailure> {
+    failed
+        .into_iter()
+        .enumerate()
+        .find_map(|(device, e)| e.map(|error| DeviceFailure { device, error }))
+        .map_or(Ok(()), Err)
+}
+
+/// Fold per-shard results into one: shard-local device indices are
+/// rebased onto the full device slice (shard `s` starts at device
+/// `s * chunk`) and the failure with the lowest flat device index wins.
+/// Each shard already reports its own lowest failing device, so the
+/// minimum over shards is exactly what the serial engine reports — the
+/// surfaced error is identical at every thread count.
+fn merge_shard_failures(
+    results: Vec<Result<(), DeviceFailure>>,
+    chunk: usize,
+) -> Result<(), DeviceFailure> {
+    results
+        .into_iter()
+        .enumerate()
+        .filter_map(|(s, r)| {
+            r.err().map(|f| DeviceFailure { device: s * chunk + f.device, error: f.error })
+        })
+        .min_by_key(|f| f.device)
+        .map_or(Ok(()), Err)
+}
+
+/// Serve one closed-loop device's control window: admission, SM shares,
+/// slice clamps, member serving, policy observation, rebalancing.
+fn run_closed_device_window(
+    cfg: &RunConfig,
+    w: usize,
+    dev: &mut ClosedDevice<'_>,
+) -> Result<(), DeviceError> {
+    let ClosedDevice { ctx, members: states } = dev;
+    if states.is_empty() {
+        return Ok(());
+    }
+    // Requested operating points, then shared-memory admission.
+    let requested: Vec<(u32, u32)> = states.iter().map(|m| m.policy.operating_point()).collect();
+    let mut points = admit_window(
+        &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+        states.len(),
+        &requested,
+        ctx.mem_capacity_mb,
+        &mut ctx.admission_clamps,
+    )?;
+
+    // SM regime for the window: the combined-pressure time-sharing
+    // factor, or (spatial modes) per-member capacity grants taken
+    // from the SM pool. On a fractional device each member's
+    // utilization is measured inside the device grant (capped at
+    // it), so a lone member on a slice is slowed only by the
+    // grant itself, never additionally by "contention" with
+    // nobody; the whole-device path is the exact legacy call.
+    let g = ctx.perf_fraction;
+    let shares = ctx.parts.window_shares(
+        || {
+            states
+                .iter()
+                .zip(&points)
+                .map(|(m, &(bs, mtl))| {
+                    if g >= 1.0 {
+                        m.sim.sm_utilization(bs, mtl)
+                    } else {
+                        m.sim.sm_utilization_granted(bs, mtl, g)
+                    }
+                })
+                .sum()
+        },
+        states.len(),
+        ctx.perf_fraction,
+        &mut ctx.peak_contention,
+        &mut ctx.contention_trace,
+        &mut ctx.grant_trace,
+    )?;
+    // MIG also partitions memory: clamp each member to its slice
+    // bundle's memory ceiling (no-op for other modes).
+    if let Some(grants) = ctx.grant_trace.last() {
+        clamp_to_slice_ceilings(
+            ctx.parts.mode(),
+            grants,
+            ctx.mem_capacity_mb,
+            &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+            &mut points,
+            &mut ctx.admission_clamps,
+        )?;
+    }
+    // Peak telemetry from the points that actually serve (the
+    // slice clamp may have shrunk them below the admitted ones).
+    let resident: f64 = states
+        .iter()
+        .zip(&points)
+        .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+        .sum();
+    ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+
+    let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
+    for (i, m) in states.iter_mut().enumerate() {
+        let (bs, mtl) = points[i];
+        let slo = m.schedule.at(w);
+        let pending = m.pending_launch_ms;
+        m.pending_launch_ms = 0.0;
+        m.admitted = (bs, mtl);
+        let (record, obs) = serve_closed_window(
+            cfg,
+            w,
+            slo,
+            (bs, mtl),
+            shares[i],
+            pending,
+            &mut m.sim,
+            &mut m.window,
+            &mut m.latencies,
+            &mut m.acc,
+        )?;
+        m.trace.push(record);
+        // Launch overhead is charged against the policy's own
+        // previous request, not the admitted point — an admission
+        // clamp must not bill launches that never happened.
+        let requested_mtl = requested[i].1;
+        if let Action::SetPoint { mtl: new_mtl, .. } = m.policy.observe(&obs) {
+            if new_mtl > requested_mtl {
+                m.pending_launch_ms +=
+                    m.sim.launch_overhead_ms() * (new_mtl - requested_mtl) as f64;
+            }
+        }
+        window_obs.push(obs);
+    }
+    if let Some(grants) = ctx.grant_trace.last() {
+        ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+    }
+    Ok(())
+}
+
 /// Serve every control window of every closed-loop device. Devices are
 /// independent (each member owns its simulator; coupling is per-device
 /// admission + contention), so iterating them in order preserves the
-/// single-device byte-for-byte behaviour exactly.
+/// single-device byte-for-byte behaviour exactly. A device that errors
+/// goes dead — it is skipped for the rest of the run while the other
+/// devices finish — and the failure surfaced at the end is the one with
+/// the lowest device index, so serial and sharded runs report the
+/// identical error.
 pub(crate) fn run_closed_devices(
     cfg: &RunConfig,
     devs: &mut [ClosedDevice<'_>],
-) -> Result<(), DeviceError> {
+) -> Result<(), DeviceFailure> {
+    let mut failed: Vec<Option<DeviceError>> = (0..devs.len()).map(|_| None).collect();
     for w in 0..cfg.windows {
-        for dev in devs.iter_mut() {
-            let ClosedDevice { ctx, members: states } = dev;
-            if states.is_empty() {
+        for (d, dev) in devs.iter_mut().enumerate() {
+            if failed[d].is_some() {
                 continue;
             }
-            // Requested operating points, then shared-memory admission.
-            let requested: Vec<(u32, u32)> =
-                states.iter().map(|m| m.policy.operating_point()).collect();
-            let mut points = admit_window(
-                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
-                states.len(),
-                &requested,
-                ctx.mem_capacity_mb,
-                &mut ctx.admission_clamps,
-            )?;
-
-            // SM regime for the window: the combined-pressure time-sharing
-            // factor, or (spatial modes) per-member capacity grants taken
-            // from the SM pool. On a fractional device each member's
-            // utilization is measured inside the device grant (capped at
-            // it), so a lone member on a slice is slowed only by the
-            // grant itself, never additionally by "contention" with
-            // nobody; the whole-device path is the exact legacy call.
-            let g = ctx.perf_fraction;
-            let shares = ctx.parts.window_shares(
-                || {
-                    states
-                        .iter()
-                        .zip(&points)
-                        .map(|(m, &(bs, mtl))| {
-                            if g >= 1.0 {
-                                m.sim.sm_utilization(bs, mtl)
-                            } else {
-                                m.sim.sm_utilization_granted(bs, mtl, g)
-                            }
-                        })
-                        .sum()
-                },
-                states.len(),
-                ctx.perf_fraction,
-                &mut ctx.peak_contention,
-                &mut ctx.contention_trace,
-                &mut ctx.grant_trace,
-            )?;
-            // MIG also partitions memory: clamp each member to its slice
-            // bundle's memory ceiling (no-op for other modes).
-            if let Some(grants) = ctx.grant_trace.last() {
-                clamp_to_slice_ceilings(
-                    ctx.parts.mode(),
-                    grants,
-                    ctx.mem_capacity_mb,
-                    &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
-                    &mut points,
-                    &mut ctx.admission_clamps,
-                )?;
-            }
-            // Peak telemetry from the points that actually serve (the
-            // slice clamp may have shrunk them below the admitted ones).
-            let resident: f64 = states
-                .iter()
-                .zip(&points)
-                .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
-                .sum();
-            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
-
-            let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
-            for (i, m) in states.iter_mut().enumerate() {
-                let (bs, mtl) = points[i];
-                let slo = m.schedule.at(w);
-                let pending = m.pending_launch_ms;
-                m.pending_launch_ms = 0.0;
-                m.admitted = (bs, mtl);
-                let (record, obs) = serve_closed_window(
-                    cfg,
-                    w,
-                    slo,
-                    (bs, mtl),
-                    shares[i],
-                    pending,
-                    &mut m.sim,
-                    &mut m.window,
-                    &mut m.latencies,
-                    &mut m.acc,
-                )?;
-                m.trace.push(record);
-                // Launch overhead is charged against the policy's own
-                // previous request, not the admitted point — an admission
-                // clamp must not bill launches that never happened.
-                let requested_mtl = requested[i].1;
-                if let Action::SetPoint { mtl: new_mtl, .. } = m.policy.observe(&obs) {
-                    if new_mtl > requested_mtl {
-                        m.pending_launch_ms +=
-                            m.sim.launch_overhead_ms() * (new_mtl - requested_mtl) as f64;
-                    }
-                }
-                window_obs.push(obs);
-            }
-            if let Some(grants) = ctx.grant_trace.last() {
-                ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+            if let Err(e) = run_closed_device_window(cfg, w, dev) {
+                failed[d] = Some(e);
             }
         }
     }
-    Ok(())
+    first_device_failure(failed)
 }
 
 /// Number of whole-device shards a `threads` request actually gets:
@@ -1047,26 +1113,28 @@ pub(crate) fn shard_count(threads: usize, devices: usize) -> usize {
 /// cross-device event interleaving at all. Sharding therefore changes
 /// *which thread* executes a device's windows, never *what* they
 /// compute. `threads <= 1` dispatches straight to the serial reference
-/// engine. On error, the first failing shard in device order wins
-/// (errors abort the run, so no snapshot is produced either way).
+/// engine. On error runs, every shard finishes, each reporting its own
+/// lowest failing device; the merge rebases those onto flat device
+/// indices and surfaces the lowest — the same error the serial loop
+/// reports, at every thread count.
 pub(crate) fn run_closed_devices_parallel(
     cfg: &RunConfig,
     devs: &mut [ClosedDevice<'_>],
     threads: usize,
-) -> Result<(), DeviceError> {
+) -> Result<(), DeviceFailure> {
     let threads = shard_count(threads, devs.len());
     if threads <= 1 {
         return run_closed_devices(cfg, devs);
     }
     let chunk = devs.len().div_ceil(threads);
-    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+    let results: Vec<Result<(), DeviceFailure>> = std::thread::scope(|s| {
         let handles: Vec<_> = devs
             .chunks_mut(chunk)
             .map(|shard| s.spawn(move || run_closed_devices(cfg, shard)))
             .collect();
         handles.into_iter().map(|h| h.join().expect("closed shard worker panicked")).collect()
     });
-    results.into_iter().collect()
+    merge_shard_failures(results, chunk)
 }
 
 /// Data-parallel form of [`run_open_devices`]: contiguous whole-device
@@ -1083,24 +1151,27 @@ pub(crate) fn run_closed_devices_parallel(
 /// the lower index), so every member serves the identical round
 /// sequence whatever the shard layout. The differential suite in
 /// `tests/parallel.rs` enforces this snapshot-byte-for-byte.
+/// Error runs mirror [`run_closed_devices_parallel`]: every shard
+/// finishes with dead-device semantics, and the lowest flat device
+/// index's failure is surfaced, identical at every thread count.
 pub(crate) fn run_open_devices_parallel(
     cfg: &RunConfig,
     devs: &mut [OpenDevice<'_>],
     threads: usize,
-) -> Result<(), DeviceError> {
+) -> Result<(), DeviceFailure> {
     let threads = shard_count(threads, devs.len());
     if threads <= 1 {
         return run_open_devices(cfg, devs);
     }
     let chunk = devs.len().div_ceil(threads);
-    let results: Vec<Result<(), DeviceError>> = std::thread::scope(|s| {
+    let results: Vec<Result<(), DeviceFailure>> = std::thread::scope(|s| {
         let handles: Vec<_> = devs
             .chunks_mut(chunk)
             .map(|shard| s.spawn(move || run_open_devices(cfg, shard)))
             .collect();
         handles.into_iter().map(|h| h.join().expect("open shard worker panicked")).collect()
     });
-    results.into_iter().collect()
+    merge_shard_failures(results, chunk)
 }
 
 /// One open-loop device: context, engine members, recycled window
@@ -1118,6 +1189,66 @@ impl<'a> OpenDevice<'a> {
     }
 }
 
+/// Plan one open-loop device's control window: admission, SM shares,
+/// slice clamps, and resident-memory telemetry. Split out of
+/// [`run_open_devices`] so a planning failure kills just this device
+/// (dead-device error semantics) instead of aborting the whole loop —
+/// and reused verbatim by the `coordinator::testkit` reference executor
+/// so the two executors cannot drift on planning arithmetic.
+pub(crate) fn plan_open_device_window(
+    dev: &mut OpenDevice<'_>,
+) -> Result<(Vec<(u32, u32)>, Vec<SmShare>), DeviceError> {
+    let OpenDevice { ctx, members: states, .. } = dev;
+    let requested: Vec<(u32, u32)> = states.iter().map(|m| m.policy.operating_point()).collect();
+    let mut pts = admit_window(
+        &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+        states.len(),
+        &requested,
+        ctx.mem_capacity_mb,
+        &mut ctx.admission_clamps,
+    )?;
+    let g = ctx.perf_fraction;
+    let shr = ctx.parts.window_shares(
+        || {
+            states
+                .iter()
+                .zip(&pts)
+                .map(|(m, &(bs, mtl))| {
+                    if g >= 1.0 {
+                        m.sim.sm_utilization(bs, mtl)
+                    } else {
+                        m.sim.sm_utilization_granted(bs, mtl, g)
+                    }
+                })
+                .sum()
+        },
+        states.len(),
+        ctx.perf_fraction,
+        &mut ctx.peak_contention,
+        &mut ctx.contention_trace,
+        &mut ctx.grant_trace,
+    )?;
+    if let Some(grants) = ctx.grant_trace.last() {
+        clamp_to_slice_ceilings(
+            ctx.parts.mode(),
+            grants,
+            ctx.mem_capacity_mb,
+            &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+            &mut pts,
+            &mut ctx.admission_clamps,
+        )?;
+    }
+    // Peak telemetry from the points that actually serve (the
+    // slice clamp may have shrunk them below the admitted ones).
+    let resident: f64 = states
+        .iter()
+        .zip(&pts)
+        .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+        .sum();
+    ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+    Ok((pts, shr))
+}
+
 /// Serve every control window of every open-loop device through ONE
 /// global event loop: each window, every device runs its admission +
 /// SM-share planning, then a single [`EventCalendar`] interleaves ALL
@@ -1127,10 +1258,17 @@ impl<'a> OpenDevice<'a> {
 /// per-device), so the single-device case reproduces the pre-cluster
 /// `Fleet` loop bit for bit while a heterogeneous cluster reuses the
 /// same engine cores, scratch recycling, and O(log M) scheduling.
+///
+/// A device that errors (planning or serving) goes dead: its stale
+/// calendar entries drain unserved, it is skipped for the rest of the
+/// run, and the other devices finish. The failure surfaced at the end
+/// is the one with the lowest device index — identical to what the
+/// sharded runner reports at any thread count.
 pub(crate) fn run_open_devices(
     cfg: &RunConfig,
     devs: &mut [OpenDevice<'_>],
-) -> Result<(), DeviceError> {
+) -> Result<(), DeviceFailure> {
+    let mut failed: Vec<Option<DeviceError>> = (0..devs.len()).map(|_| None).collect();
     let total: usize = devs.iter().map(|d| d.members.len()).sum();
     // Flat index = device offset + member index (the calendar's key),
     // with an O(1) flat -> device table for the hot event loop.
@@ -1153,58 +1291,17 @@ pub(crate) fn run_open_devices(
     for w in 0..cfg.windows {
         calendar.clear();
         for (d, dev) in devs.iter_mut().enumerate() {
-            let OpenDevice { ctx, members: states, wins } = dev;
-            if states.is_empty() {
+            if failed[d].is_some() || dev.members.is_empty() {
                 continue;
             }
-            let requested: Vec<(u32, u32)> =
-                states.iter().map(|m| m.policy.operating_point()).collect();
-            let mut pts = admit_window(
-                &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
-                states.len(),
-                &requested,
-                ctx.mem_capacity_mb,
-                &mut ctx.admission_clamps,
-            )?;
-            let g = ctx.perf_fraction;
-            let shr = ctx.parts.window_shares(
-                || {
-                    states
-                        .iter()
-                        .zip(&pts)
-                        .map(|(m, &(bs, mtl))| {
-                            if g >= 1.0 {
-                                m.sim.sm_utilization(bs, mtl)
-                            } else {
-                                m.sim.sm_utilization_granted(bs, mtl, g)
-                            }
-                        })
-                        .sum()
-                },
-                states.len(),
-                ctx.perf_fraction,
-                &mut ctx.peak_contention,
-                &mut ctx.contention_trace,
-                &mut ctx.grant_trace,
-            )?;
-            if let Some(grants) = ctx.grant_trace.last() {
-                clamp_to_slice_ceilings(
-                    ctx.parts.mode(),
-                    grants,
-                    ctx.mem_capacity_mb,
-                    &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
-                    &mut pts,
-                    &mut ctx.admission_clamps,
-                )?;
-            }
-            // Peak telemetry from the points that actually serve (the
-            // slice clamp may have shrunk them below the admitted ones).
-            let resident: f64 = states
-                .iter()
-                .zip(&pts)
-                .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
-                .sum();
-            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+            let (pts, shr) = match plan_open_device_window(dev) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    failed[d] = Some(e);
+                    continue;
+                }
+            };
+            let OpenDevice { members: states, wins, .. } = dev;
             let sl: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
             for (i, (st, win)) in states.iter().zip(wins.iter_mut()).enumerate() {
                 win.begin(&st.lp);
@@ -1224,26 +1321,38 @@ pub(crate) fn run_open_devices(
         // its current clock.
         while let Some(flat) = calendar.pop() {
             let d = device_of_flat[flat];
+            // A dead device's members may still hold stale calendar
+            // entries from before the failure: drain them unserved.
+            if failed[d].is_some() {
+                continue;
+            }
             let k = flat - offsets[d];
             remaining[flat] -= 1;
             let dev = &mut devs[d];
             let st = &mut dev.members[k];
-            let more = st.lp.serve_round(
+            match st.lp.serve_round(
                 points[d][k],
                 slos[d][k],
                 shares[d][k],
                 &mut st.sim,
                 &mut dev.wins[k],
-            )?;
-            // A member leaves the window's calendar when its round
-            // budget is spent — or for good when its finite trace is
-            // exhausted and drained (`more == false`).
-            if more && remaining[flat] > 0 {
-                calendar.push(flat, st.lp.now_s);
+            ) {
+                // A member leaves the window's calendar when its round
+                // budget is spent — or for good when its finite trace is
+                // exhausted and drained (`more == false`).
+                Ok(more) => {
+                    if more && remaining[flat] > 0 {
+                        calendar.push(flat, st.lp.now_s);
+                    }
+                }
+                Err(e) => failed[d] = Some(e),
             }
         }
 
         for (d, dev) in devs.iter_mut().enumerate() {
+            if failed[d].is_some() {
+                continue;
+            }
             let OpenDevice { ctx, members: states, wins } = dev;
             if states.is_empty() {
                 continue;
@@ -1267,7 +1376,7 @@ pub(crate) fn run_open_devices(
             }
         }
     }
-    Ok(())
+    first_device_failure(failed)
 }
 
 impl<'a> Fleet<'a> {
@@ -1300,7 +1409,7 @@ impl<'a> Fleet<'a> {
             ctx: DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows),
             members: states,
         }];
-        run_closed_devices(&cfg, &mut devs)?;
+        run_closed_devices(&cfg, &mut devs).map_err(|f| f.error)?;
         let [dev] = devs;
         let outcomes = dev.members.into_iter().map(closed_member_outcome).collect();
         Ok(finish_fleet(outcomes, dev.ctx, partition))
@@ -1323,7 +1432,7 @@ impl<'a> Fleet<'a> {
         }
         let mut devs =
             [OpenDevice::new(DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows), states)];
-        run_open_devices(&cfg, &mut devs)?;
+        run_open_devices(&cfg, &mut devs).map_err(|f| f.error)?;
         let [dev] = devs;
         let outcomes = dev.members.into_iter().map(open_member_outcome).collect();
         Ok(finish_fleet(outcomes, dev.ctx, partition))
@@ -1969,5 +2078,139 @@ mod tests {
         };
         assert!(mean_rate(&fast.trace) > 2.0 * mean_rate(&slow.trace));
         assert!(out.total_goodput > 0.0);
+    }
+
+    /// One single-member closed-loop device with the given admission
+    /// capacity. A few MB of capacity cannot hold any model at (1, 1) —
+    /// `admit_window` has nothing left to shrink and OOMs at the
+    /// device's first window; a P40-sized capacity serves normally.
+    /// Distinct jobs and capacities give each failing device a distinct
+    /// error string, so the assertions below can tell WHOSE error
+    /// surfaced, not just that one did.
+    fn oom_probe_closed(
+        paper_id: u32,
+        capacity_mb: f64,
+        cfg: &RunConfig,
+        seed: u64,
+    ) -> ClosedDevice<'static> {
+        let m = MemberCfg::new(
+            paper_job(paper_id).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::closed(),
+        );
+        ClosedDevice {
+            ctx: DeviceCtx::new(capacity_mb, 1.0, Partitioner::timeshare(1), cfg.windows),
+            members: vec![new_closed_member(m, cfg, seed).unwrap()],
+        }
+    }
+
+    /// Open-loop sibling of [`oom_probe_closed`].
+    fn oom_probe_open(
+        paper_id: u32,
+        capacity_mb: f64,
+        cfg: &RunConfig,
+        seed: u64,
+    ) -> OpenDevice<'static> {
+        let m = MemberCfg::new(
+            paper_job(paper_id).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(40.0),
+        );
+        OpenDevice::new(
+            DeviceCtx::new(capacity_mb, 1.0, Partitioner::timeshare(1), cfg.windows),
+            vec![new_open_member(m, cfg, seed, arrival_seed(seed, 0)).unwrap()],
+        )
+    }
+
+    #[test]
+    fn closed_err_runs_surface_the_lowest_device_at_every_thread_count() {
+        // Regression (ISSUE 8 satellite): the sharded runners used to
+        // surface whichever shard's error was collected first, so the
+        // reported failure depended on the thread count. Devices 1 and 2
+        // both OOM (with DISTINCT errors); device 0 is healthy. Serial
+        // and parallel runs at threads 1, 2 and 8 must all report device
+        // 1's own error.
+        let cfg = RunConfig::windows(3, 2);
+        let alone = run_closed_devices(&cfg, &mut [oom_probe_closed(3, 1.0, &cfg, 7)])
+            .expect_err("a few-MB device must OOM");
+        assert_eq!(alone.device, 0);
+
+        let run = |threads: Option<usize>| {
+            let mut devs = vec![
+                oom_probe_closed(1, TESLA_P40.mem_mb, &cfg, 7),
+                oom_probe_closed(3, 1.0, &cfg, 7),
+                oom_probe_closed(5, 2.0, &cfg, 7),
+            ];
+            let f = match threads {
+                None => run_closed_devices(&cfg, &mut devs),
+                Some(t) => run_closed_devices_parallel(&cfg, &mut devs, t),
+            }
+            .expect_err("two of three devices must OOM");
+            (f.device, f.error.to_string())
+        };
+        let serial = run(None);
+        assert_eq!(serial.0, 1, "lowest failing device must surface");
+        assert_eq!(serial.1, alone.error.to_string(), "device 1's OWN error must surface");
+        for t in [1, 2, 8] {
+            assert_eq!(run(Some(t)), serial, "threads={t} drifted from the serial report");
+        }
+    }
+
+    #[test]
+    fn closed_err_runs_rebase_shard_local_indices() {
+        // Devices 0 and 2 fail around a healthy device 1. At threads=2
+        // the shards are {0, 1} and {2}: BOTH report a failure, and the
+        // merge must rebase shard 1's local index 0 to flat index 2,
+        // then still pick flat device 0.
+        let cfg = RunConfig::windows(3, 2);
+        let run = |threads: Option<usize>| {
+            let mut devs = vec![
+                oom_probe_closed(3, 1.0, &cfg, 7),
+                oom_probe_closed(1, TESLA_P40.mem_mb, &cfg, 7),
+                oom_probe_closed(5, 2.0, &cfg, 7),
+            ];
+            let f = match threads {
+                None => run_closed_devices(&cfg, &mut devs),
+                Some(t) => run_closed_devices_parallel(&cfg, &mut devs, t),
+            }
+            .expect_err("two of three devices must OOM");
+            (f.device, f.error.to_string())
+        };
+        let serial = run(None);
+        assert_eq!(serial.0, 0);
+        for t in [1, 2, 8] {
+            assert_eq!(run(Some(t)), serial, "threads={t} drifted from the serial report");
+        }
+    }
+
+    #[test]
+    fn open_err_runs_surface_the_lowest_device_at_every_thread_count() {
+        // Same regression on the open-loop path: the global calendar
+        // (serial) and the per-shard calendars (parallel) must surface
+        // the identical lowest-device failure at threads 1, 2 and 8.
+        let cfg = RunConfig::windows(3, 4);
+        let alone = run_open_devices(&cfg, &mut [oom_probe_open(3, 1.0, &cfg, 7)])
+            .expect_err("a few-MB device must OOM");
+        assert_eq!(alone.device, 0);
+
+        let run = |threads: Option<usize>| {
+            let mut devs = vec![
+                oom_probe_open(1, TESLA_P40.mem_mb, &cfg, 7),
+                oom_probe_open(3, 1.0, &cfg, 7),
+                oom_probe_open(5, 2.0, &cfg, 7),
+            ];
+            let f = match threads {
+                None => run_open_devices(&cfg, &mut devs),
+                Some(t) => run_open_devices_parallel(&cfg, &mut devs, t),
+            }
+            .expect_err("two of three devices must OOM");
+            (f.device, f.error.to_string())
+        };
+        let serial = run(None);
+        assert_eq!(serial.0, 1, "lowest failing device must surface");
+        assert_eq!(serial.1, alone.error.to_string(), "device 1's OWN error must surface");
+        for t in [1, 2, 8] {
+            assert_eq!(run(Some(t)), serial, "threads={t} drifted from the serial report");
+        }
     }
 }

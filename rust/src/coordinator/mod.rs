@@ -88,6 +88,7 @@ pub mod scaler_batching;
 pub mod scaler_mt;
 pub mod session;
 pub mod snapshot;
+pub mod testkit;
 
 pub use cluster::{
     Assignment, AuditError, BestFit, Cluster, ClusterBuilder, ClusterOutcome, DeviceDesc,

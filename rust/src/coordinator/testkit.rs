@@ -1,0 +1,2167 @@
+//! Whole-cluster differential fuzzing: a seeded scenario generator, a
+//! deliberately naive reference executor, and a proptest-style shrinker.
+//!
+//! The fast engine has accumulated seven PRs of optimizations — the
+//! O(log M) [`EventCalendar`], zero-alloc ring queues, recycled window
+//! accumulators, sharded device threads — each differentially tested
+//! *locally* (calendar-vs-LinearScan, ring-vs-VecDeque, parallel
+//! byte-identity) but never cross-checked *end to end*. This module
+//! closes that gap:
+//!
+//! * [`Scenario`] — a small, serializable gene describing one randomized
+//!   cluster run: device mixes (P40/P4/T4, MIG 2/4 slices), partition
+//!   modes and SM reservations, placements, open/closed arrivals
+//!   (Poisson/uniform/bursty/trace), queue caps, shedding deadlines, and
+//!   optional churn + migration + autoscale schedules. Scenarios lower
+//!   through the SAME public builders the fast path uses, so a scenario
+//!   IS what runs — nothing is mocked.
+//! * [`run_reference`] — re-serves the identical validated configuration
+//!   with straightforward logic: no calendar (an O(M) min-scan picks the
+//!   next member), no recycled accumulators (a fresh [`WindowAccum`] per
+//!   member per window), device-outer loops, single-threaded. Planning
+//!   arithmetic (admission, SM shares, slice clamps) is shared with the
+//!   fast path on purpose: the fuzzer hunts for *orchestration* bugs —
+//!   event ordering, state recycling, sharding — not for a second
+//!   opinion on float formulas.
+//! * [`check_scenario`] — runs both executors, requires byte-identical
+//!   snapshots ([`super::snapshot::render`]) and a clean
+//!   [`ClusterOutcome::audit`] on BOTH outcomes (always, not just in
+//!   debug builds), and reports the first differing JSON paths.
+//! * [`shrink`] — on mismatch, greedily simplifies the scenario
+//!   (drop devices, drop jobs, drop dynamics, truncate windows/rounds,
+//!   simplify arrivals and policies, clear knobs) to a minimal still-
+//!   failing counterexample, printable as a ready-to-commit regression
+//!   case via [`to_canon`] and replayable via [`from_canon`]
+//!   (`rust/tests/fuzz_corpus/`).
+//!
+//! Injected-bug detection is exercised through [`Mutation`]: a test-only
+//! hook that corrupts the FAST outcome after the run, standing in for a
+//! real engine bug. `docs/testing.md` maps where this sits in the repo's
+//! correctness stack.
+//!
+//! [`EventCalendar`]: super::calendar::EventCalendar
+
+use crate::device::DeviceError;
+use crate::gpusim::{GpuSpec, PartitionMode, TESLA_P4, TESLA_P40, TESLA_T4};
+use crate::json::{self, Json};
+use crate::rng::Rng;
+use crate::workload::ArrivalPattern;
+
+use super::cluster::{
+    fold_device_outcomes, timeshare_ctx, whole_desc, Assignment, BestFit, Cluster, ClusterOutcome,
+    DeviceOutcome, InterferenceAware, PlacementJob, RoundRobin,
+};
+use super::dynamics::{
+    blank_obs, free_mb, model_load_ms, most_free_fit, try_evacuate, ChurnSchedule, DynamicsCfg,
+    DynamicsOutcome, JobEvent, Live, PeriodicReplace, PoolObservation, ScaleAction,
+    ThresholdAutoscaler,
+};
+use super::engine::{SmShare, WindowAccum};
+use super::fleet::{
+    admit_window, arrival_seed, clamp_to_slice_ceilings, closed_member_outcome, finish_fleet,
+    new_closed_member, new_open_member, open_member_outcome, plan_open_device_window, DeviceCtx,
+    Fleet, FleetBuilder, Member, MemberCfg, OpenDevice, Partitioner,
+};
+use super::job::paper_job;
+use super::policy::{Action, WindowObservation};
+use super::session::{
+    serve_closed_window, ConfigError, JobOutcome, PolicySpec, RunConfig,
+};
+use super::snapshot::{cluster_outcome_to_json, render};
+
+/// Scenario classes the generator cycles through (`case % NUM_CLASSES`):
+/// closed TimeShare fleet, MPS fleet, MIG fleet, closed cluster, open
+/// cluster, open cluster with churn + migration + autoscaling.
+pub const NUM_CLASSES: usize = 6;
+
+/// Human-readable name of a generator class.
+pub fn class_name(class: usize) -> &'static str {
+    match class % NUM_CLASSES {
+        0 => "fleet/closed/timeshare",
+        1 => "fleet/mps",
+        2 => "fleet/mig",
+        3 => "cluster/closed",
+        4 => "cluster/open",
+        _ => "cluster/dynamics",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario genes
+// ---------------------------------------------------------------------------
+
+/// A catalogued GPU by name — the generator's device vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GpuName {
+    P40,
+    P4,
+    T4,
+}
+
+impl GpuName {
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuName::P40 => TESLA_P40,
+            GpuName::P4 => TESLA_P4,
+            GpuName::T4 => TESLA_T4,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            GpuName::P40 => "p40",
+            GpuName::P4 => "p4",
+            GpuName::T4 => "t4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "p40" => Some(GpuName::P40),
+            "p4" => Some(GpuName::P4),
+            "t4" => Some(GpuName::T4),
+            _ => None,
+        }
+    }
+}
+
+/// How a fleet divides its GPU's SMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionGene {
+    TimeShare,
+    Mps,
+    Mig { slices: u32 },
+}
+
+impl PartitionGene {
+    fn mode(self) -> PartitionMode {
+        match self {
+            PartitionGene::TimeShare => PartitionMode::TimeShare,
+            PartitionGene::Mps => PartitionMode::Mps,
+            PartitionGene::Mig { slices } => PartitionMode::MigSlices { slices },
+        }
+    }
+}
+
+/// Which placement heuristic assigns cluster jobs to devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementGene {
+    RoundRobin,
+    BestFit,
+    Interference,
+}
+
+impl PlacementGene {
+    fn tag(self) -> &'static str {
+        match self {
+            PlacementGene::RoundRobin => "rr",
+            PlacementGene::BestFit => "bestfit",
+            PlacementGene::Interference => "interference",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" => Some(PlacementGene::RoundRobin),
+            "bestfit" => Some(PlacementGene::BestFit),
+            "interference" => Some(PlacementGene::Interference),
+            _ => None,
+        }
+    }
+}
+
+/// A job's serving policy (the deterministic subset — DNNScaler's
+/// self-profiling works too but adds profiling windows to every case,
+/// so the generator sticks to the cheap controllers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyGene {
+    Static { bs: u32, mtl: u32 },
+    Clipper,
+    QueueAware,
+}
+
+impl PolicyGene {
+    fn spec(self) -> PolicySpec<'static> {
+        match self {
+            PolicyGene::Static { bs, mtl } => PolicySpec::Static { bs, mtl },
+            PolicyGene::Clipper => PolicySpec::Clipper,
+            PolicyGene::QueueAware => PolicySpec::QueueAware,
+        }
+    }
+}
+
+/// A job's arrival process. `Trace` lowers to `count` synthetic
+/// timestamps at fixed spacing `1/rate` — enough to exercise the
+/// finite-trace drain paths without serializing raw timestamp lists.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalGene {
+    Closed,
+    Poisson { rate: f64 },
+    Uniform { rate: f64 },
+    Bursty { rate: f64, factor: f64, period_s: f64, burst_s: f64 },
+    Trace { count: usize, rate: f64 },
+}
+
+impl ArrivalGene {
+    pub fn is_closed(self) -> bool {
+        matches!(self, ArrivalGene::Closed)
+    }
+
+    fn pattern(self) -> ArrivalPattern {
+        match self {
+            ArrivalGene::Closed => ArrivalPattern::closed(),
+            ArrivalGene::Poisson { rate } => ArrivalPattern::poisson(rate),
+            ArrivalGene::Uniform { rate } => ArrivalPattern::uniform(rate),
+            ArrivalGene::Bursty { rate, factor, period_s, burst_s } => {
+                ArrivalPattern::bursty(rate, factor, period_s, burst_s)
+            }
+            ArrivalGene::Trace { count, rate } => {
+                let step = 1.0 / rate.max(1e-6);
+                let ts: Vec<f64> = (0..count.max(1)).map(|i| (i + 1) as f64 * step).collect();
+                ArrivalPattern::trace(ts).expect("synthetic trace is monotone and positive")
+            }
+        }
+    }
+}
+
+/// One member job: which paper model, how it is controlled, how load
+/// arrives, and its per-member queueing knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobGene {
+    pub paper_id: u32,
+    pub policy: PolicyGene,
+    pub arrivals: ArrivalGene,
+    pub queue_capacity: Option<usize>,
+    pub batch_timeout_ms: Option<f64>,
+    pub shed_deadline: bool,
+    /// Spatial-mode SM reservation (fleet scenarios only; the cluster
+    /// builder has no such knob, and `build()` rejects it there).
+    pub sm_reservation: Option<f64>,
+}
+
+impl JobGene {
+    fn simple(paper_id: u32, policy: PolicyGene, arrivals: ArrivalGene) -> Self {
+        JobGene {
+            paper_id,
+            policy,
+            arrivals,
+            queue_capacity: None,
+            batch_timeout_ms: None,
+            shed_deadline: false,
+            sm_reservation: None,
+        }
+    }
+}
+
+/// One cluster device: a catalogued card, optionally pre-split into MIG
+/// slices (each slice becomes its own virtual device).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceGene {
+    pub gpu: GpuName,
+    pub mig: Option<u32>,
+}
+
+/// One churn event. Retires reference paper job ids (first live match),
+/// exactly like [`ChurnSchedule::retire`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnGene {
+    Launch { window: usize, paper_id: u32, rate: f64 },
+    Retire { window: usize, paper_id: u32 },
+}
+
+/// Optional warehouse dynamics riding on a cluster scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsGene {
+    pub churn: Vec<ChurnGene>,
+    /// Periodic re-placement: heuristic + period in windows.
+    pub migrate: Option<(PlacementGene, usize)>,
+    /// Threshold autoscaler bounds: (min_devices, max_devices).
+    pub autoscale: Option<(usize, usize)>,
+}
+
+impl DynamicsGene {
+    fn is_empty(&self) -> bool {
+        self.churn.is_empty() && self.migrate.is_none() && self.autoscale.is_none()
+    }
+}
+
+/// Whether the scenario is a single shared-GPU fleet or a multi-device
+/// cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioKind {
+    Fleet { gpu: GpuName, partition: PartitionGene },
+    Cluster { devices: Vec<DeviceGene>, placement: PlacementGene },
+}
+
+/// A complete, serializable description of one randomized run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub seed: u64,
+    pub windows: usize,
+    pub rounds: usize,
+    pub threads: usize,
+    pub kind: ScenarioKind,
+    pub jobs: Vec<JobGene>,
+    pub dynamics: Option<DynamicsGene>,
+}
+
+/// Either validated builder output, ready to serve.
+pub enum Built<'a> {
+    Fleet(Fleet<'a>),
+    Cluster(Cluster<'a>),
+}
+
+impl Scenario {
+    /// Number of devices the scenario declares (a fleet is one device).
+    pub fn device_count(&self) -> usize {
+        match &self.kind {
+            ScenarioKind::Fleet { .. } => 1,
+            ScenarioKind::Cluster { devices, .. } => devices.len(),
+        }
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Lower the genes through the SAME public builders the fast path
+    /// uses — validation, placement, and churn checking included.
+    pub fn build(&self) -> Result<Built<'static>, ConfigError> {
+        match &self.kind {
+            ScenarioKind::Fleet { gpu, partition } => {
+                if self.dynamics.as_ref().is_some_and(|d| !d.is_empty()) {
+                    return Err(ConfigError::BadChurn {
+                        reason: "dynamics require a cluster scenario".into(),
+                    });
+                }
+                let mut b = Fleet::builder()
+                    .gpu(gpu.spec())
+                    .windows(self.windows)
+                    .rounds_per_window(self.rounds)
+                    .seed(self.seed)
+                    .partition_mode(partition.mode());
+                for j in &self.jobs {
+                    b = add_fleet_job(b, j)?;
+                }
+                b.build().map(Built::Fleet)
+            }
+            ScenarioKind::Cluster { devices, placement } => {
+                let mut b = Cluster::builder()
+                    .windows(self.windows)
+                    .rounds_per_window(self.rounds)
+                    .seed(self.seed)
+                    .threads(self.threads);
+                for d in devices {
+                    b = match d.mig {
+                        Some(slices) => b.mig_device(d.gpu.spec(), slices),
+                        None => b.device(d.gpu.spec()),
+                    };
+                }
+                b = match placement {
+                    PlacementGene::RoundRobin => b.placement(RoundRobin::new()),
+                    PlacementGene::BestFit => b.placement(BestFit::new()),
+                    PlacementGene::Interference => b.placement(InterferenceAware::new()),
+                };
+                for j in &self.jobs {
+                    if j.sm_reservation.is_some() {
+                        // The cluster builder has no reservation knob;
+                        // refusing keeps "scenario == what runs" honest.
+                        return Err(ConfigError::KnobRequiresPartition {
+                            knob: "sm_reservation",
+                        });
+                    }
+                    let spec = paper_job(j.paper_id).ok_or_else(|| {
+                        ConfigError::UnknownDnn { dnn: format!("paper job {}", j.paper_id) }
+                    })?;
+                    b = b.job_with_arrivals(spec, j.policy.spec(), j.arrivals.pattern());
+                    if let Some(cap) = j.queue_capacity {
+                        b = b.queue_capacity(cap);
+                    }
+                    if let Some(t) = j.batch_timeout_ms {
+                        b = b.batch_timeout_ms(t);
+                    }
+                    if j.shed_deadline {
+                        b = b.shed_deadline(true);
+                    }
+                }
+                if let Some(dy) = &self.dynamics {
+                    if !dy.churn.is_empty() {
+                        let mut sched = ChurnSchedule::new();
+                        for e in &dy.churn {
+                            sched = match *e {
+                                ChurnGene::Launch { window, paper_id, rate } => {
+                                    let spec = paper_job(paper_id).ok_or_else(|| {
+                                        ConfigError::UnknownDnn {
+                                            dnn: format!("paper job {paper_id}"),
+                                        }
+                                    })?;
+                                    sched.launch(
+                                        window,
+                                        spec,
+                                        PolicySpec::Static { bs: 2, mtl: 1 },
+                                        ArrivalPattern::poisson(rate),
+                                    )
+                                }
+                                ChurnGene::Retire { window, paper_id } => {
+                                    sched.retire(window, paper_id)
+                                }
+                            };
+                        }
+                        b = b.churn(sched);
+                    }
+                    if let Some((heur, every)) = dy.migrate {
+                        b = match heur {
+                            PlacementGene::RoundRobin => {
+                                b.placement_policy(PeriodicReplace::new(RoundRobin::new(), every))
+                            }
+                            PlacementGene::BestFit => {
+                                b.placement_policy(PeriodicReplace::new(BestFit::new(), every))
+                            }
+                            PlacementGene::Interference => b.placement_policy(
+                                PeriodicReplace::new(InterferenceAware::new(), every),
+                            ),
+                        };
+                    }
+                    if let Some((min, max)) = dy.autoscale {
+                        b = b.autoscaler(ThresholdAutoscaler::new(min, max));
+                    }
+                }
+                b.build().map(Built::Cluster)
+            }
+        }
+    }
+
+    /// Does the scenario pass builder validation?
+    pub fn builds(&self) -> bool {
+        self.build().is_ok()
+    }
+}
+
+fn add_fleet_job(
+    mut b: FleetBuilder<'static>,
+    j: &JobGene,
+) -> Result<FleetBuilder<'static>, ConfigError> {
+    let spec = paper_job(j.paper_id)
+        .ok_or_else(|| ConfigError::UnknownDnn { dnn: format!("paper job {}", j.paper_id) })?;
+    b = b.job_with_arrivals(spec, j.policy.spec(), j.arrivals.pattern());
+    if let Some(cap) = j.queue_capacity {
+        b = b.queue_capacity(cap);
+    }
+    if let Some(t) = j.batch_timeout_ms {
+        b = b.batch_timeout_ms(t);
+    }
+    if j.shed_deadline {
+        b = b.shed_deadline(true);
+    }
+    if let Some(f) = j.sm_reservation {
+        b = b.sm_reservation(f);
+    }
+    Ok(b)
+}
+
+// ---------------------------------------------------------------------------
+// Fast executor
+// ---------------------------------------------------------------------------
+
+/// Run the scenario through the production engine. The outer `Result`
+/// is builder validation; the inner is the run itself.
+pub fn run_fast(sc: &Scenario) -> Result<Result<ClusterOutcome, DeviceError>, ConfigError> {
+    match sc.build()? {
+        Built::Fleet(f) => {
+            let gpu = fleet_gpu(sc);
+            let n = sc.jobs.len();
+            Ok(f.run().map(|out| wrap_fleet_outcome(out, gpu, n)))
+        }
+        Built::Cluster(c) => Ok(c.run()),
+    }
+}
+
+fn fleet_gpu(sc: &Scenario) -> GpuSpec {
+    match &sc.kind {
+        ScenarioKind::Fleet { gpu, .. } => gpu.spec(),
+        ScenarioKind::Cluster { .. } => unreachable!("fleet_gpu on a cluster scenario"),
+    }
+}
+
+/// Lift a single-GPU fleet outcome into the `ClusterOutcome` shape so
+/// every scenario class diffs and audits through one code path.
+fn wrap_fleet_outcome(fleet: super::fleet::FleetOutcome, gpu: GpuSpec, jobs: usize) -> ClusterOutcome {
+    let total_throughput = fleet.total_throughput;
+    let total_goodput = fleet.total_goodput;
+    ClusterOutcome {
+        devices: vec![DeviceOutcome {
+            device: whole_desc(gpu, 0),
+            jobs: (0..jobs).collect(),
+            fleet,
+        }],
+        placement: "fleet".to_string(),
+        assignment: vec![0; jobs],
+        total_throughput,
+        total_goodput,
+        dynamics: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference executor
+// ---------------------------------------------------------------------------
+
+/// Run the scenario through the naive reference executor: same validated
+/// configuration, same planning arithmetic, but device-outer loops, an
+/// O(M) min-scan scheduler instead of the calendar, fresh accumulators
+/// every window, and no threads. The outer `Result` is builder
+/// validation; the inner is the run.
+pub fn run_reference(sc: &Scenario) -> Result<Result<ClusterOutcome, DeviceError>, ConfigError> {
+    match sc.build()? {
+        Built::Fleet(f) => {
+            let gpu = fleet_gpu(sc);
+            let n = sc.jobs.len();
+            Ok(reference_fleet(f).map(|out| wrap_fleet_outcome(out, gpu, n)))
+        }
+        Built::Cluster(c) => Ok(reference_cluster(c)),
+    }
+}
+
+fn reference_fleet(f: Fleet<'_>) -> Result<super::fleet::FleetOutcome, DeviceError> {
+    let closed = f.members.iter().all(|m| m.arrivals.is_closed());
+    let Fleet { gpu, cfg, seed, members, partition, partition_policy } = f;
+    let parts = Partitioner::new(partition, &members, partition_policy, gpu.mem_mb);
+    if closed {
+        let mut states: Vec<Member<'_>> = Vec::with_capacity(members.len());
+        for (i, m) in members.into_iter().enumerate() {
+            states.push(new_closed_member(m, &cfg, seed + i as u64)?);
+        }
+        let mut ctx = DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows);
+        for w in 0..cfg.windows {
+            reference_closed_window(&cfg, w, &mut ctx, &mut states)?;
+        }
+        let outcomes = states.into_iter().map(closed_member_outcome).collect();
+        Ok(finish_fleet(outcomes, ctx, partition))
+    } else {
+        let mut states = Vec::with_capacity(members.len());
+        for (i, m) in members.into_iter().enumerate() {
+            states.push(new_open_member(m, &cfg, seed + i as u64, arrival_seed(seed, i))?);
+        }
+        let mut dev = OpenDevice::new(DeviceCtx::new(gpu.mem_mb, 1.0, parts, cfg.windows), states);
+        for w in 0..cfg.windows {
+            reference_open_window(&cfg, w, &mut dev)?;
+        }
+        let outcomes = dev.members.into_iter().map(open_member_outcome).collect();
+        Ok(finish_fleet(outcomes, dev.ctx, partition))
+    }
+}
+
+/// One closed-loop control window, written out longhand (the fast
+/// engine's window body is private on purpose — the reference must not
+/// share orchestration code, only planning arithmetic).
+fn reference_closed_window(
+    cfg: &RunConfig,
+    w: usize,
+    ctx: &mut DeviceCtx<'_>,
+    states: &mut [Member<'_>],
+) -> Result<(), DeviceError> {
+    if states.is_empty() {
+        return Ok(());
+    }
+    let requested: Vec<(u32, u32)> = states.iter().map(|m| m.policy.operating_point()).collect();
+    let mut points = admit_window(
+        &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+        states.len(),
+        &requested,
+        ctx.mem_capacity_mb,
+        &mut ctx.admission_clamps,
+    )?;
+    let g = ctx.perf_fraction;
+    let shares = ctx.parts.window_shares(
+        || {
+            states
+                .iter()
+                .zip(&points)
+                .map(|(m, &(bs, mtl))| {
+                    if g >= 1.0 {
+                        m.sim.sm_utilization(bs, mtl)
+                    } else {
+                        m.sim.sm_utilization_granted(bs, mtl, g)
+                    }
+                })
+                .sum()
+        },
+        states.len(),
+        ctx.perf_fraction,
+        &mut ctx.peak_contention,
+        &mut ctx.contention_trace,
+        &mut ctx.grant_trace,
+    )?;
+    if let Some(grants) = ctx.grant_trace.last() {
+        clamp_to_slice_ceilings(
+            ctx.parts.mode(),
+            grants,
+            ctx.mem_capacity_mb,
+            &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
+            &mut points,
+            &mut ctx.admission_clamps,
+        )?;
+    }
+    let resident: f64 = states
+        .iter()
+        .zip(&points)
+        .map(|(m, &(bs, mtl))| m.sim.mem_demand_mb(bs, mtl))
+        .sum();
+    ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+
+    let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
+    for (i, m) in states.iter_mut().enumerate() {
+        let (bs, mtl) = points[i];
+        let slo = m.schedule.at(w);
+        let pending = m.pending_launch_ms;
+        m.pending_launch_ms = 0.0;
+        m.admitted = (bs, mtl);
+        let (record, obs) = serve_closed_window(
+            cfg,
+            w,
+            slo,
+            (bs, mtl),
+            shares[i],
+            pending,
+            &mut m.sim,
+            &mut m.window,
+            &mut m.latencies,
+            &mut m.acc,
+        )?;
+        m.trace.push(record);
+        let requested_mtl = requested[i].1;
+        if let Action::SetPoint { mtl: new_mtl, .. } = m.policy.observe(&obs) {
+            if new_mtl > requested_mtl {
+                m.pending_launch_ms +=
+                    m.sim.launch_overhead_ms() * (new_mtl - requested_mtl) as f64;
+            }
+        }
+        window_obs.push(obs);
+    }
+    if let Some(grants) = ctx.grant_trace.last() {
+        ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+    }
+    Ok(())
+}
+
+/// One open-loop control window: shared planning, then a naive member
+/// scheduler — scan every member for the smallest virtual clock (ties
+/// to the lowest index, the calendar's tie rule) and serve one round.
+/// Fresh `WindowAccum`s each window instead of the engine's recycled
+/// per-member accumulators.
+fn reference_open_window(
+    cfg: &RunConfig,
+    w: usize,
+    dev: &mut OpenDevice<'_>,
+) -> Result<(), DeviceError> {
+    if dev.members.is_empty() {
+        return Ok(());
+    }
+    let (points, shares) = plan_open_device_window(dev)?;
+    let states = &mut dev.members;
+    let slos: Vec<f64> = states.iter_mut().map(|m| m.schedule.at(w)).collect();
+    let mut wins: Vec<WindowAccum> = states
+        .iter()
+        .map(|st| {
+            let mut a = WindowAccum::new();
+            a.begin(&st.lp);
+            a
+        })
+        .collect();
+    let mut remaining = vec![cfg.rounds_per_window; states.len()];
+    let mut live = vec![true; states.len()];
+    loop {
+        let mut pick: Option<usize> = None;
+        for k in 0..states.len() {
+            if !live[k] {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => states[k].lp.now_s < states[p].lp.now_s,
+            };
+            if better {
+                pick = Some(k);
+            }
+        }
+        let Some(k) = pick else { break };
+        remaining[k] -= 1;
+        let st = &mut states[k];
+        let more = st.lp.serve_round(points[k], slos[k], shares[k], &mut st.sim, &mut wins[k])?;
+        if !more || remaining[k] == 0 {
+            live[k] = false;
+        }
+    }
+    let mut window_obs: Vec<WindowObservation> = Vec::with_capacity(states.len());
+    for (k, st) in states.iter_mut().enumerate() {
+        st.admitted = points[k];
+        let (record, obs) = wins[k].finish(w, slos[k], points[k], &st.lp);
+        st.acc.absorb(w, slos[k], wins[k].latencies());
+        st.latencies.extend(wins[k].latencies().iter().map(|&l| (l, 1.0)));
+        st.trace.push(record);
+        st.policy.observe(&obs);
+        window_obs.push(obs);
+    }
+    let ctx = &mut dev.ctx;
+    if let Some(grants) = ctx.grant_trace.last() {
+        ctx.parts.maybe_rebalance(&window_obs, grants, &mut ctx.admission_clamps);
+    }
+    Ok(())
+}
+
+fn reference_cluster(c: Cluster<'_>) -> Result<ClusterOutcome, DeviceError> {
+    let Cluster { cfg, seed, devices, jobs, placement, assignment, dynamics, threads: _ } = c;
+    if let Some(dc) = dynamics {
+        return reference_dynamic(&cfg, seed, devices, jobs, placement, assignment, dc);
+    }
+    let open = !jobs.iter().all(|m| m.arrivals.is_closed());
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); devices.len()];
+    for (j, &d) in assignment.device_of.iter().enumerate() {
+        groups[d].push(j);
+    }
+    let mut cfgs: Vec<Option<MemberCfg<'_>>> = jobs.into_iter().map(Some).collect();
+
+    // Device-outer serving: devices never couple, so running device d to
+    // completion before touching d+1 must reproduce the interleaved fast
+    // engine byte for byte — and surfaces the lowest failing device's
+    // first error, the same one the fast path reports.
+    let outcomes: Vec<DeviceOutcome> = if open {
+        let mut devs: Vec<OpenDevice<'_>> = Vec::with_capacity(devices.len());
+        for (desc, group) in devices.iter().zip(&groups) {
+            let mut members = Vec::with_capacity(group.len());
+            for &j in group {
+                let m = cfgs[j].take().expect("job placed once");
+                members.push(new_open_member(m, &cfg, seed + j as u64, arrival_seed(seed, j))?);
+            }
+            devs.push(OpenDevice::new(timeshare_ctx(desc, group.len(), &cfg), members));
+        }
+        for dev in devs.iter_mut() {
+            for w in 0..cfg.windows {
+                reference_open_window(&cfg, w, dev)?;
+            }
+        }
+        fold_device_outcomes(&devices, &groups, devs, |dev| {
+            (dev.ctx, dev.members.into_iter().map(open_member_outcome).collect())
+        })
+    } else {
+        let mut devs: Vec<(DeviceCtx<'_>, Vec<Member<'_>>)> = Vec::with_capacity(devices.len());
+        for (desc, group) in devices.iter().zip(&groups) {
+            let mut members = Vec::with_capacity(group.len());
+            for &j in group {
+                let m = cfgs[j].take().expect("job placed once");
+                members.push(new_closed_member(m, &cfg, seed + j as u64)?);
+            }
+            devs.push((timeshare_ctx(desc, group.len(), &cfg), members));
+        }
+        for (ctx, states) in devs.iter_mut() {
+            for w in 0..cfg.windows {
+                reference_closed_window(&cfg, w, ctx, states)?;
+            }
+        }
+        fold_device_outcomes(&devices, &groups, devs, |(ctx, members)| {
+            (ctx, members.into_iter().map(closed_member_outcome).collect())
+        })
+    };
+    let total_throughput = outcomes.iter().map(|d| d.fleet.total_throughput).sum();
+    let total_goodput = outcomes.iter().map(|d| d.fleet.total_goodput).sum();
+    Ok(ClusterOutcome {
+        devices: outcomes,
+        placement,
+        assignment: assignment.device_of,
+        total_throughput,
+        total_goodput,
+        dynamics: None,
+    })
+}
+
+/// Naive mirror of `dynamics::run_dynamic`: identical churn, migration,
+/// autoscaling, close, and billing steps (those ARE the semantics under
+/// test, not an optimization), but the serving step walks devices in
+/// pool order with the O(M) min-scan scheduler and fresh accumulators —
+/// no global calendar, no recycled state, no spans, no threads.
+fn reference_dynamic<'a>(
+    cfg: &RunConfig,
+    seed: u64,
+    mut descs: Vec<super::cluster::DeviceDesc>,
+    jobs: Vec<MemberCfg<'a>>,
+    placement: String,
+    assignment: Assignment,
+    dynamics: DynamicsCfg<'a>,
+) -> Result<ClusterOutcome, DeviceError> {
+    let DynamicsCfg { churn, mut policy, mut autoscaler } = dynamics;
+    let mut dyn_out = DynamicsOutcome::default();
+
+    let mut events_at: Vec<Vec<JobEvent<'a>>> = (0..cfg.windows).map(|_| Vec::new()).collect();
+    for e in churn.events {
+        let w = e.window();
+        events_at[w].push(e);
+    }
+
+    let template = descs[0].spec.clone();
+    let mut next_physical = descs.iter().map(|d| d.physical + 1).max().unwrap_or(0);
+    let mut ctxs: Vec<DeviceCtx<'a>> = descs
+        .iter()
+        .map(|d| DeviceCtx::new(d.mem_mb, d.perf_fraction, Partitioner::timeshare(0), cfg.windows))
+        .collect();
+    let mut active = vec![true; descs.len()];
+
+    let mut lives: Vec<Live<'a>> = Vec::new();
+    let mut ended: Vec<(usize, usize, JobOutcome)> = Vec::new();
+    let mut next_job_idx = 0usize;
+    for (m, &d) in jobs.into_iter().zip(&assignment.device_of) {
+        let j = next_job_idx;
+        next_job_idx += 1;
+        let pjob = PlacementJob::from_cfg(&m);
+        lives.push(Live {
+            job_idx: j,
+            device: d,
+            pjob,
+            m: new_open_member(m, cfg, seed + j as u64, arrival_seed(seed, j))?,
+            win: WindowAccum::new(),
+            last_obs: None,
+        });
+    }
+
+    let mut elapsed_s = 0.0f64;
+    let mut pressures: Vec<f64> = vec![0.0; descs.len()];
+
+    for w in 0..cfg.windows {
+        // -- 1. Churn (verbatim semantics). --
+        for e in std::mem::take(&mut events_at[w]) {
+            match e {
+                JobEvent::Retire { job_id, .. } => {
+                    if let Some(pos) = lives.iter().position(|l| l.m.job.id == job_id) {
+                        let l = lives.remove(pos);
+                        ended.push((l.job_idx, l.device, open_member_outcome(l.m)));
+                        dyn_out.retires += 1;
+                    }
+                }
+                JobEvent::Launch { job, policy: pol, arrivals, .. } => {
+                    let j = next_job_idx;
+                    next_job_idx += 1;
+                    let cfg_m = MemberCfg::new(&job, pol, arrivals);
+                    let pjob = PlacementJob::from_cfg(&cfg_m);
+                    let free = free_mb(&descs, &lives);
+                    let Some(d) = most_free_fit(&free, &active, pjob.mem_floor_mb) else {
+                        dyn_out.failed_launches += 1;
+                        continue;
+                    };
+                    let mut m = new_open_member(cfg_m, cfg, seed + j as u64, arrival_seed(seed, j))?;
+                    m.lp.stall_ms(model_load_ms(pjob.mem_floor_mb));
+                    lives.push(Live {
+                        job_idx: j,
+                        device: d,
+                        pjob,
+                        m,
+                        win: WindowAccum::new(),
+                        last_obs: None,
+                    });
+                    dyn_out.launches += 1;
+                }
+            }
+        }
+
+        // -- 2. Live migration (verbatim semantics). --
+        if let Some(pol) = policy.as_mut() {
+            let active_idx: Vec<usize> = (0..descs.len()).filter(|&d| active[d]).collect();
+            let active_descs: Vec<super::cluster::DeviceDesc> =
+                active_idx.iter().map(|&d| descs[d].clone()).collect();
+            let pjobs: Vec<PlacementJob> = lives.iter().map(|l| l.pjob.clone()).collect();
+            let current: Vec<usize> = lives
+                .iter()
+                .map(|l| active_idx.iter().position(|&d| d == l.device).unwrap_or(0))
+                .collect();
+            let obs: Vec<WindowObservation> =
+                lives.iter().map(|l| l.last_obs.unwrap_or_else(|| blank_obs(w))).collect();
+            if let Some(proposal) = pol.replace(&pjobs, &active_descs, &current, &obs) {
+                let a = Assignment { device_of: proposal };
+                if a.validate(&pjobs, &active_descs).is_ok() {
+                    for (l, &to_active) in lives.iter_mut().zip(&a.device_of) {
+                        let to = active_idx[to_active];
+                        if to != l.device {
+                            let stall = model_load_ms(l.pjob.mem_floor_mb);
+                            l.m.lp.stall_ms(stall);
+                            l.device = to;
+                            dyn_out.migrations += 1;
+                            dyn_out.migration_stall_ms += stall;
+                        }
+                    }
+                } else {
+                    dyn_out.rejected_proposals += 1;
+                }
+            }
+        }
+
+        // -- 3. Autoscaling (verbatim semantics). --
+        if let Some(scaler) = autoscaler.as_mut() {
+            let n_active = active.iter().filter(|&&a| a).count();
+            let (sum_p, max_p) = (0..descs.len())
+                .filter(|&d| active[d])
+                .fold((0.0f64, 0.0f64), |(s, mx), d| (s + pressures[d], mx.max(pressures[d])));
+            let action = {
+                let obs = PoolObservation {
+                    window: w,
+                    active_devices: n_active,
+                    live_jobs: lives.len(),
+                    mean_pressure: if n_active > 0 { sum_p / n_active as f64 } else { 0.0 },
+                    max_pressure: max_p,
+                    queue_depth: lives.iter().map(|l| l.m.lp.queue_len()).sum(),
+                    drops: lives
+                        .iter()
+                        .filter_map(|l| l.last_obs.as_ref())
+                        .map(|o| o.drops + o.drops_deadline)
+                        .sum(),
+                    devices: &descs,
+                    active: &active,
+                };
+                scaler.scale(&obs)
+            };
+            match action {
+                ScaleAction::Hold => {}
+                ScaleAction::Grow => {
+                    if let Some(d) = (0..descs.len()).find(|&d| !active[d]) {
+                        active[d] = true;
+                    } else {
+                        let desc = whole_desc(template.clone(), next_physical);
+                        next_physical += 1;
+                        ctxs.push(DeviceCtx::new(
+                            desc.mem_mb,
+                            desc.perf_fraction,
+                            Partitioner::timeshare(0),
+                            cfg.windows,
+                        ));
+                        descs.push(desc);
+                        active.push(true);
+                        pressures.push(0.0);
+                    }
+                    dyn_out.scale_ups += 1;
+                }
+                ScaleAction::Shrink => {
+                    let victim = (0..descs.len()).filter(|&d| active[d]).min_by_key(|&d| {
+                        (lives.iter().filter(|l| l.device == d).count(), usize::MAX - d)
+                    });
+                    if let Some(v) = victim {
+                        if try_evacuate(v, &descs, &active, &mut lives, &mut dyn_out) {
+                            active[v] = false;
+                            dyn_out.scale_downs += 1;
+                        }
+                    }
+                }
+            }
+        }
+        dyn_out.pool_trace.push(active.iter().filter(|&&a| a).count());
+
+        // -- 4. Serve naively: plan each device in pool order (same
+        //       coupling as the fast path), then run each device's
+        //       members through the O(M) min-scan loop. --
+        for p in pressures.iter_mut() {
+            *p = 0.0;
+        }
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); descs.len()];
+        for (li, l) in lives.iter().enumerate() {
+            groups[l.device].push(li);
+        }
+        let mut flat: Vec<usize> = Vec::new();
+        let mut plan: Vec<((u32, u32), SmShare, f64)> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        for d in 0..descs.len() {
+            if groups[d].is_empty() {
+                continue;
+            }
+            let ctx = &mut ctxs[d];
+            let members = &groups[d];
+            let requested: Vec<(u32, u32)> =
+                members.iter().map(|&li| lives[li].m.policy.operating_point()).collect();
+            let pts = admit_window(
+                &|i, (bs, mtl)| lives[members[i]].m.sim.mem_demand_mb(bs, mtl),
+                members.len(),
+                &requested,
+                ctx.mem_capacity_mb,
+                &mut ctx.admission_clamps,
+            )?;
+            let g = ctx.perf_fraction;
+            let shr = ctx.parts.window_shares(
+                || {
+                    members
+                        .iter()
+                        .zip(&pts)
+                        .map(|(&li, &(bs, mtl))| {
+                            let sim = &lives[li].m.sim;
+                            if g >= 1.0 {
+                                sim.sm_utilization(bs, mtl)
+                            } else {
+                                sim.sm_utilization_granted(bs, mtl, g)
+                            }
+                        })
+                        .sum()
+                },
+                members.len(),
+                ctx.perf_fraction,
+                &mut ctx.peak_contention,
+                &mut ctx.contention_trace,
+                &mut ctx.grant_trace,
+            )?;
+            pressures[d] = ctx.contention_trace.last().copied().unwrap_or(0.0);
+            let resident: f64 = members
+                .iter()
+                .zip(&pts)
+                .map(|(&li, &(bs, mtl))| lives[li].m.sim.mem_demand_mb(bs, mtl))
+                .sum();
+            ctx.peak_mem_mb = ctx.peak_mem_mb.max(resident);
+            let span_start = flat.len();
+            for ((&li, &pt), sh) in members.iter().zip(&pts).zip(shr) {
+                let l = &mut lives[li];
+                let slo = l.m.schedule.at(w);
+                // Fresh accumulator every window — the naive analogue of
+                // the engine's recycled per-member scratch.
+                l.win = WindowAccum::new();
+                l.win.begin(&l.m.lp);
+                flat.push(li);
+                plan.push((pt, sh, slo));
+            }
+            spans.push((span_start, flat.len() - span_start));
+        }
+
+        for &(start, len) in &spans {
+            reference_serve_span(cfg, &mut lives, &flat, &plan, start, len)?;
+        }
+
+        // -- 5. Close the window (verbatim semantics). --
+        for (f, &li) in flat.iter().enumerate() {
+            let l = &mut lives[li];
+            let (pt, _, slo) = plan[f];
+            l.m.admitted = pt;
+            let (record, obs) = l.win.finish(w, slo, pt, &l.m.lp);
+            l.m.acc.absorb(w, slo, l.win.latencies());
+            l.m.latencies.extend(l.win.latencies().iter().map(|&lat| (lat, 1.0)));
+            l.m.trace.push(record);
+            l.m.policy.observe(&obs);
+            l.last_obs = Some(obs);
+        }
+
+        // -- 6. Billing (verbatim semantics). --
+        let now_max = lives.iter().map(|l| l.m.lp.now_s).fold(elapsed_s, f64::max);
+        let span_h = (now_max - elapsed_s) / 3600.0;
+        elapsed_s = now_max;
+        for d in 0..descs.len() {
+            if active[d] {
+                dyn_out.device_hours += span_h;
+                dyn_out.cost_usd += descs[d].price_per_hour * span_h;
+            }
+        }
+    }
+
+    for l in lives {
+        ended.push((l.job_idx, l.device, open_member_outcome(l.m)));
+    }
+    ended.sort_by_key(|&(j, _, _)| j);
+
+    let device_of: Vec<usize> = ended.iter().map(|&(_, d, _)| d).collect();
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); descs.len()];
+    let mut outs: Vec<Vec<JobOutcome>> = (0..descs.len()).map(|_| Vec::new()).collect();
+    for (j, d, out) in ended {
+        groups[d].push(j);
+        outs[d].push(out);
+    }
+    let devices: Vec<DeviceOutcome> = descs
+        .iter()
+        .zip(groups)
+        .zip(ctxs.into_iter().zip(outs))
+        .map(|((desc, group), (ctx, members))| DeviceOutcome {
+            device: desc.clone(),
+            jobs: group,
+            fleet: finish_fleet(members, ctx, PartitionMode::TimeShare),
+        })
+        .collect();
+    let total_throughput = devices.iter().map(|d| d.fleet.total_throughput).sum();
+    let total_goodput: f64 = devices.iter().map(|d| d.fleet.total_goodput).sum();
+    dyn_out.cost_per_goodput = (total_goodput > 0.0).then(|| dyn_out.cost_usd / total_goodput);
+    Ok(ClusterOutcome {
+        devices,
+        placement,
+        assignment: device_of,
+        total_throughput,
+        total_goodput,
+        dynamics: Some(dyn_out),
+    })
+}
+
+/// Serve one device's window slots by repeatedly scanning for the
+/// member with the smallest virtual clock (ties to the lowest index).
+fn reference_serve_span(
+    cfg: &RunConfig,
+    lives: &mut [Live<'_>],
+    flat: &[usize],
+    plan: &[((u32, u32), SmShare, f64)],
+    start: usize,
+    len: usize,
+) -> Result<(), DeviceError> {
+    let mut remaining = vec![cfg.rounds_per_window; len];
+    let mut live = vec![true; len];
+    loop {
+        let mut pick: Option<usize> = None;
+        for k in 0..len {
+            if !live[k] {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => lives[flat[start + k]].m.lp.now_s < lives[flat[start + p]].m.lp.now_s,
+            };
+            if better {
+                pick = Some(k);
+            }
+        }
+        let Some(k) = pick else { break };
+        remaining[k] -= 1;
+        let l = &mut lives[flat[start + k]];
+        let (pt, sh, slo) = plan[start + k];
+        let more = l.m.lp.serve_round(pt, slo, sh, &mut l.m.sim, &mut l.win)?;
+        if !more || remaining[k] == 0 {
+            live[k] = false;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Differential driver
+// ---------------------------------------------------------------------------
+
+/// Test-only corruption applied to the FAST outcome after a successful
+/// run — a stand-in for a real engine bug, proving the oracle catches
+/// what it is supposed to catch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// Snapshot-visible drift: the headline throughput is off by one.
+    InflateTotalThroughput,
+    /// Conservation violation: a member reports more terminal requests
+    /// than ever arrived — `audit()` must refuse it even in release.
+    ForgePhantomDrops,
+}
+
+pub fn apply_mutation(out: &mut ClusterOutcome, m: Mutation) {
+    match m {
+        Mutation::InflateTotalThroughput => out.total_throughput += 1.0,
+        Mutation::ForgePhantomDrops => {
+            if let Some(mem) =
+                out.devices.iter_mut().flat_map(|d| d.fleet.members.iter_mut()).next()
+            {
+                mem.arrived = mem.arrived.max(1);
+                mem.drops = mem.arrived + 1;
+            }
+        }
+    }
+}
+
+/// Run one scenario through both executors and every oracle. `Ok(())`
+/// means: the scenario either fails builder validation (vacuously fine —
+/// the generator retries those) or both executors agree byte-for-byte
+/// and both outcomes audit clean. `Err` carries a human-readable
+/// mismatch description.
+pub fn check_scenario(sc: &Scenario, mutation: Option<Mutation>) -> Result<(), String> {
+    let fast = match run_fast(sc) {
+        Ok(r) => r,
+        Err(_) => return Ok(()),
+    };
+    let reference = match run_reference(sc) {
+        Ok(r) => r,
+        Err(e) => return Err(format!("built for the fast executor but not the reference: {e}")),
+    };
+    match (fast, reference) {
+        (Err(a), Err(b)) => {
+            let (a, b) = (a.to_string(), b.to_string());
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("error mismatch: fast [{a}] vs reference [{b}]"))
+            }
+        }
+        (Ok(_), Err(b)) => Err(format!("fast succeeded, reference failed: {b}")),
+        (Err(a), Ok(_)) => Err(format!("reference succeeded, fast failed: {a}")),
+        (Ok(mut f), Ok(r)) => {
+            if let Some(m) = mutation {
+                apply_mutation(&mut f, m);
+            }
+            // Satellite: audit() always runs here — debug_assert! in
+            // run() is compiled out of release builds, the fuzzer's
+            // oracle is not.
+            f.audit().map_err(|e| format!("fast outcome failed audit: {e}"))?;
+            r.audit().map_err(|e| format!("reference outcome failed audit: {e}"))?;
+            let fj = cluster_outcome_to_json(&f);
+            let rj = cluster_outcome_to_json(&r);
+            if render(&fj) == render(&rj) {
+                return Ok(());
+            }
+            let mut paths = Vec::new();
+            diff_json("$", &fj, &rj, &mut paths);
+            paths.truncate(8);
+            Err(format!("snapshot mismatch (fast vs reference): {}", paths.join("; ")))
+        }
+    }
+}
+
+/// Recursive field-by-field JSON diff: every differing path is reported
+/// as `$.a.b[3]: fast != reference`.
+fn diff_json(path: &str, a: &Json, b: &Json, out: &mut Vec<String>) {
+    match (a, b) {
+        (Json::Obj(x), Json::Obj(y)) => {
+            let keys: std::collections::BTreeSet<&String> = x.keys().chain(y.keys()).collect();
+            for k in keys {
+                let p = format!("{path}.{k}");
+                match (x.get(k), y.get(k)) {
+                    (Some(va), Some(vb)) => diff_json(&p, va, vb, out),
+                    (Some(_), None) => out.push(format!("{p}: present only in fast")),
+                    (None, Some(_)) => out.push(format!("{p}: present only in reference")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(x), Json::Arr(y)) => {
+            if x.len() != y.len() {
+                out.push(format!("{path}: length {} != {}", x.len(), y.len()));
+            }
+            for (i, (va, vb)) in x.iter().zip(y).enumerate() {
+                diff_json(&format!("{path}[{i}]"), va, vb, out);
+            }
+        }
+        _ => {
+            let (wa, wb) = (json::write(a), json::write(b));
+            if wa != wb {
+                out.push(format!("{path}: {wa} != {wb}"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shrinking
+// ---------------------------------------------------------------------------
+
+/// Greedily minimize a failing scenario: each pass tries the candidate
+/// edits in order (drop devices, drop jobs, drop dynamics, truncate
+/// windows/rounds, simplify arrivals and policies, clear knobs, drop
+/// threads, flatten partition/placement) and restarts from the first
+/// edit that still fails. Deterministic, bounded, proptest-style.
+pub fn shrink(start: &Scenario, failing: &mut dyn FnMut(&Scenario) -> bool) -> Scenario {
+    let mut cur = start.clone();
+    for _ in 0..64 {
+        let mut advanced = false;
+        for cand in shrink_candidates(&cur) {
+            if failing(&cand) {
+                cur = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    cur
+}
+
+fn shrink_candidates(cur: &Scenario) -> Vec<Scenario> {
+    let mut cands = Vec::new();
+    // 1. Drop devices.
+    if let ScenarioKind::Cluster { devices, placement } = &cur.kind {
+        if devices.len() > 1 {
+            for d in 0..devices.len() {
+                let mut c = cur.clone();
+                let mut devs = devices.clone();
+                devs.remove(d);
+                c.kind = ScenarioKind::Cluster { devices: devs, placement: *placement };
+                cands.push(c);
+            }
+        }
+    }
+    // 2. Drop jobs.
+    if cur.jobs.len() > 1 {
+        for j in 0..cur.jobs.len() {
+            let mut c = cur.clone();
+            c.jobs.remove(j);
+            cands.push(c);
+        }
+    }
+    // 3. Drop dynamics wholesale, then piecewise.
+    if let Some(dy) = &cur.dynamics {
+        let mut c = cur.clone();
+        c.dynamics = None;
+        cands.push(c);
+        for e in 0..dy.churn.len() {
+            let mut c = cur.clone();
+            if let Some(d) = c.dynamics.as_mut() {
+                d.churn.remove(e);
+            }
+            cands.push(c);
+        }
+        if dy.migrate.is_some() {
+            let mut c = cur.clone();
+            if let Some(d) = c.dynamics.as_mut() {
+                d.migrate = None;
+            }
+            cands.push(c);
+        }
+        if dy.autoscale.is_some() {
+            let mut c = cur.clone();
+            if let Some(d) = c.dynamics.as_mut() {
+                d.autoscale = None;
+            }
+            cands.push(c);
+        }
+    }
+    // 4. Truncate windows / rounds.
+    if cur.windows > 1 {
+        let mut c = cur.clone();
+        c.windows = (cur.windows / 2).max(1);
+        cands.push(c);
+        let mut c = cur.clone();
+        c.windows = cur.windows - 1;
+        cands.push(c);
+    }
+    if cur.rounds > 1 {
+        let mut c = cur.clone();
+        c.rounds = (cur.rounds / 2).max(1);
+        cands.push(c);
+        let mut c = cur.clone();
+        c.rounds = cur.rounds - 1;
+        cands.push(c);
+    }
+    // 5. Simplify arrivals (toward plain Poisson, then closed).
+    for j in 0..cur.jobs.len() {
+        match cur.jobs[j].arrivals {
+            ArrivalGene::Closed | ArrivalGene::Poisson { .. } => {}
+            ArrivalGene::Uniform { rate }
+            | ArrivalGene::Bursty { rate, .. }
+            | ArrivalGene::Trace { rate, .. } => {
+                let mut c = cur.clone();
+                c.jobs[j].arrivals = ArrivalGene::Poisson { rate };
+                cands.push(c);
+            }
+        }
+        if !cur.jobs[j].arrivals.is_closed() {
+            let mut c = cur.clone();
+            c.jobs[j].arrivals = ArrivalGene::Closed;
+            cands.push(c);
+        }
+    }
+    // 6. Simplify policies and clear per-job knobs.
+    for j in 0..cur.jobs.len() {
+        if cur.jobs[j].policy != (PolicyGene::Static { bs: 1, mtl: 1 }) {
+            let mut c = cur.clone();
+            c.jobs[j].policy = PolicyGene::Static { bs: 1, mtl: 1 };
+            cands.push(c);
+        }
+        let g = &cur.jobs[j];
+        if g.queue_capacity.is_some()
+            || g.batch_timeout_ms.is_some()
+            || g.shed_deadline
+            || g.sm_reservation.is_some()
+        {
+            let mut c = cur.clone();
+            c.jobs[j].queue_capacity = None;
+            c.jobs[j].batch_timeout_ms = None;
+            c.jobs[j].shed_deadline = false;
+            c.jobs[j].sm_reservation = None;
+            cands.push(c);
+        }
+    }
+    // 7. Serial threads, flat partition, plain placement, plain MIG.
+    if cur.threads != 1 {
+        let mut c = cur.clone();
+        c.threads = 1;
+        cands.push(c);
+    }
+    match &cur.kind {
+        ScenarioKind::Fleet { gpu, partition } => {
+            if *partition != PartitionGene::TimeShare {
+                let mut c = cur.clone();
+                c.kind = ScenarioKind::Fleet { gpu: *gpu, partition: PartitionGene::TimeShare };
+                cands.push(c);
+            }
+        }
+        ScenarioKind::Cluster { devices, placement } => {
+            for d in 0..devices.len() {
+                if devices[d].mig.is_some() {
+                    let mut devs = devices.clone();
+                    devs[d].mig = None;
+                    let mut c = cur.clone();
+                    c.kind = ScenarioKind::Cluster { devices: devs, placement: *placement };
+                    cands.push(c);
+                }
+            }
+            if *placement != PlacementGene::RoundRobin {
+                let mut c = cur.clone();
+                c.kind = ScenarioKind::Cluster {
+                    devices: devices.clone(),
+                    placement: PlacementGene::RoundRobin,
+                };
+                cands.push(c);
+            }
+        }
+    }
+    cands
+}
+
+// ---------------------------------------------------------------------------
+// Scenario generator
+// ---------------------------------------------------------------------------
+
+/// Generate a buildable scenario of the given class. Random draws that
+/// fail builder validation (an over-large model on a MIG slice, an
+/// unsatisfiable placement, an invalid churn schedule) are retried with
+/// a perturbed seed; a hand-written per-class fallback guarantees the
+/// call always returns something runnable.
+pub fn generate_class(class: usize, seed: u64) -> Scenario {
+    for attempt in 0..200u64 {
+        let sc = gen_attempt(class, seed.wrapping_add(attempt.wrapping_mul(0x9E37_79B9)));
+        if sc.builds() {
+            return sc;
+        }
+    }
+    fallback_scenario(class, seed)
+}
+
+fn gen_gpu(r: &mut Rng) -> GpuName {
+    [GpuName::P40, GpuName::P4, GpuName::T4][r.below(3)]
+}
+
+fn gen_policy(r: &mut Rng, open: bool) -> PolicyGene {
+    let n = if open { 4 } else { 3 };
+    match r.below(n) {
+        0 | 1 => {
+            PolicyGene::Static { bs: 1 + r.below(8) as u32, mtl: 1 + r.below(3) as u32 }
+        }
+        2 => PolicyGene::Clipper,
+        _ => PolicyGene::QueueAware,
+    }
+}
+
+fn gen_open_arrivals(r: &mut Rng) -> ArrivalGene {
+    let rate = r.uniform_range(5.0, 120.0);
+    match r.below(4) {
+        0 => ArrivalGene::Poisson { rate },
+        1 => ArrivalGene::Uniform { rate },
+        2 => {
+            let period_s = r.uniform_range(0.5, 3.5);
+            ArrivalGene::Bursty {
+                rate,
+                factor: r.uniform_range(1.5, 4.5),
+                period_s,
+                burst_s: period_s * r.uniform_range(0.2, 0.6),
+            }
+        }
+        _ => ArrivalGene::Trace { count: 10 + r.below(40), rate },
+    }
+}
+
+fn gen_job(r: &mut Rng, open: bool) -> JobGene {
+    let mut g = JobGene::simple(
+        1 + r.below(30) as u32,
+        gen_policy(r, open),
+        if open { gen_open_arrivals(r) } else { ArrivalGene::Closed },
+    );
+    if open {
+        if r.chance(0.5) {
+            g.queue_capacity = Some(4 + r.below(60));
+        }
+        if r.chance(0.5) {
+            g.batch_timeout_ms = Some(r.uniform_range(1.0, 10.0));
+        }
+        g.shed_deadline = r.chance(0.3);
+    }
+    g
+}
+
+fn gen_attempt(class: usize, seed: u64) -> Scenario {
+    let mut r = Rng::new(seed ^ (class as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+    let windows = 2 + r.below(4);
+    let rounds = 2 + r.below(6);
+    let threads = [1, 2, 3, 8][r.below(4)];
+    let sc_seed = r.next_u64();
+    match class % NUM_CLASSES {
+        0 => {
+            let jobs = (0..1 + r.below(3)).map(|_| gen_job(&mut r, false)).collect();
+            Scenario {
+                seed: sc_seed,
+                windows,
+                rounds,
+                threads: 1,
+                kind: ScenarioKind::Fleet {
+                    gpu: gen_gpu(&mut r),
+                    partition: PartitionGene::TimeShare,
+                },
+                jobs,
+                dynamics: None,
+            }
+        }
+        1 => {
+            let open = r.chance(0.5);
+            let n = 2 + r.below(2);
+            let mut jobs: Vec<JobGene> = (0..n).map(|_| gen_job(&mut r, open)).collect();
+            // Reservations on the first members sometimes; the rest
+            // split the unreserved remainder.
+            if r.chance(0.5) {
+                for j in jobs.iter_mut().take(2) {
+                    let reserve = r.chance(0.7);
+                    if reserve {
+                        j.sm_reservation = Some(r.uniform_range(0.05, 0.30));
+                    }
+                }
+            }
+            Scenario {
+                seed: sc_seed,
+                windows,
+                rounds,
+                threads: 1,
+                kind: ScenarioKind::Fleet { gpu: GpuName::P40, partition: PartitionGene::Mps },
+                jobs,
+                dynamics: None,
+            }
+        }
+        2 => {
+            let slices = [2u32, 4][r.below(2)];
+            let open = r.chance(0.5);
+            let n = 1 + r.below((slices as usize).min(3));
+            let jobs = (0..n).map(|_| gen_job(&mut r, open)).collect();
+            Scenario {
+                seed: sc_seed,
+                windows,
+                rounds,
+                threads: 1,
+                kind: ScenarioKind::Fleet {
+                    gpu: GpuName::P40,
+                    partition: PartitionGene::Mig { slices },
+                },
+                jobs,
+                dynamics: None,
+            }
+        }
+        3 | 4 => {
+            let open = class % NUM_CLASSES == 4;
+            let n_dev = 1 + r.below(3);
+            let devices = (0..n_dev)
+                .map(|_| {
+                    let gpu = gen_gpu(&mut r);
+                    let mig = if r.chance(0.2) { Some([2u32, 4][r.below(2)]) } else { None };
+                    DeviceGene { gpu, mig }
+                })
+                .collect();
+            let placement = [
+                PlacementGene::RoundRobin,
+                PlacementGene::BestFit,
+                PlacementGene::Interference,
+            ][r.below(3)];
+            let jobs = (0..1 + r.below(4)).map(|_| gen_job(&mut r, open)).collect();
+            Scenario {
+                seed: sc_seed,
+                windows,
+                rounds,
+                threads,
+                kind: ScenarioKind::Cluster { devices, placement },
+                jobs,
+                dynamics: None,
+            }
+        }
+        _ => gen_dynamics_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
+    }
+}
+
+fn gen_dynamics_attempt(
+    r: &mut Rng,
+    sc_seed: u64,
+    windows: usize,
+    rounds: usize,
+    threads: usize,
+) -> Scenario {
+    let n_dev = 2 + r.below(2);
+    let devices: Vec<DeviceGene> =
+        (0..n_dev).map(|_| DeviceGene { gpu: gen_gpu(r), mig: None }).collect();
+    let jobs: Vec<JobGene> = (0..1 + r.below(3)).map(|_| gen_job(r, true)).collect();
+
+    // Track (paper id, first window the job is live from) so retires
+    // always target a job that exists at their window — ChurnSchedule
+    // validation replays events in window order.
+    let mut live: Vec<(u32, usize)> = jobs.iter().map(|j| (j.paper_id, 0)).collect();
+    let mut churn = Vec::new();
+    for _ in 0..1 + r.below(3) {
+        let retirable: Vec<usize> =
+            (0..live.len()).filter(|&i| live[i].1 + 1 < windows).collect();
+        let retire = !retirable.is_empty() && r.chance(0.4);
+        if retire {
+            let pick = retirable[r.below(retirable.len())];
+            let (id, from) = live.remove(pick);
+            let w = from + 1 + r.below(windows - from - 1);
+            churn.push(ChurnGene::Retire { window: w, paper_id: id });
+        } else {
+            let w = 1 + r.below(windows - 1);
+            let id = 1 + r.below(30) as u32;
+            churn.push(ChurnGene::Launch {
+                window: w,
+                paper_id: id,
+                rate: r.uniform_range(5.0, 60.0),
+            });
+            live.push((id, w));
+        }
+    }
+    let migrate = if r.chance(0.5) {
+        Some((
+            [PlacementGene::RoundRobin, PlacementGene::BestFit][r.below(2)],
+            1 + r.below(3),
+        ))
+    } else {
+        None
+    };
+    let autoscale =
+        if r.chance(0.5) { Some((1, n_dev + 1 + r.below(2))) } else { None };
+    let mut dy = DynamicsGene { churn, migrate, autoscale };
+    if dy.is_empty() {
+        dy.autoscale = Some((1, n_dev + 1));
+    }
+    Scenario {
+        seed: sc_seed,
+        windows,
+        rounds,
+        threads,
+        kind: ScenarioKind::Cluster { devices, placement: PlacementGene::RoundRobin },
+        jobs,
+        dynamics: Some(dy),
+    }
+}
+
+/// Hand-written per-class scenarios, each guaranteed to build — the
+/// generator's last resort and the seed corpus for unit tests.
+pub fn fallback_scenario(class: usize, seed: u64) -> Scenario {
+    let base = |kind, jobs, dynamics| Scenario {
+        seed,
+        windows: 4,
+        rounds: 2,
+        threads: 1,
+        kind,
+        jobs,
+        dynamics,
+    };
+    match class % NUM_CLASSES {
+        0 => base(
+            ScenarioKind::Fleet { gpu: GpuName::P40, partition: PartitionGene::TimeShare },
+            vec![JobGene::simple(1, PolicyGene::Static { bs: 1, mtl: 1 }, ArrivalGene::Closed)],
+            None,
+        ),
+        1 => base(
+            ScenarioKind::Fleet { gpu: GpuName::P40, partition: PartitionGene::Mps },
+            vec![
+                JobGene::simple(1, PolicyGene::Static { bs: 2, mtl: 1 }, ArrivalGene::Closed),
+                JobGene::simple(5, PolicyGene::Static { bs: 1, mtl: 1 }, ArrivalGene::Closed),
+            ],
+            None,
+        ),
+        2 => base(
+            ScenarioKind::Fleet { gpu: GpuName::P40, partition: PartitionGene::Mig { slices: 2 } },
+            vec![JobGene::simple(5, PolicyGene::Static { bs: 1, mtl: 1 }, ArrivalGene::Closed)],
+            None,
+        ),
+        3 => base(
+            ScenarioKind::Cluster {
+                devices: vec![
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                ],
+                placement: PlacementGene::RoundRobin,
+            },
+            vec![
+                JobGene::simple(1, PolicyGene::Static { bs: 2, mtl: 1 }, ArrivalGene::Closed),
+                JobGene::simple(5, PolicyGene::Clipper, ArrivalGene::Closed),
+            ],
+            None,
+        ),
+        4 => base(
+            ScenarioKind::Cluster {
+                devices: vec![
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                    DeviceGene { gpu: GpuName::T4, mig: None },
+                ],
+                placement: PlacementGene::RoundRobin,
+            },
+            vec![
+                JobGene::simple(
+                    1,
+                    PolicyGene::Static { bs: 2, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 20.0 },
+                ),
+                JobGene::simple(
+                    5,
+                    PolicyGene::QueueAware,
+                    ArrivalGene::Poisson { rate: 30.0 },
+                ),
+            ],
+            None,
+        ),
+        _ => base(
+            ScenarioKind::Cluster {
+                devices: vec![
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                ],
+                placement: PlacementGene::RoundRobin,
+            },
+            vec![
+                JobGene::simple(
+                    1,
+                    PolicyGene::Static { bs: 2, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 20.0 },
+                ),
+                JobGene::simple(
+                    5,
+                    PolicyGene::Static { bs: 1, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 15.0 },
+                ),
+            ],
+            Some(DynamicsGene {
+                churn: vec![
+                    ChurnGene::Launch { window: 1, paper_id: 7, rate: 15.0 },
+                    ChurnGene::Retire { window: 3, paper_id: 1 },
+                ],
+                migrate: Some((PlacementGene::RoundRobin, 2)),
+                autoscale: Some((1, 3)),
+            }),
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical text format (regression corpus files)
+// ---------------------------------------------------------------------------
+
+/// Serialize a scenario to the line-based canonical format committed
+/// under `rust/tests/fuzz_corpus/`. Floats print with Rust's shortest
+/// round-trip `Display`, so `from_canon(to_canon(sc)) == sc` exactly.
+pub fn to_canon(sc: &Scenario) -> String {
+    let mut s = String::from("# dnnscaler fuzz scenario v1\n");
+    s.push_str(&format!("seed={}\n", sc.seed));
+    s.push_str(&format!("windows={}\n", sc.windows));
+    s.push_str(&format!("rounds={}\n", sc.rounds));
+    s.push_str(&format!("threads={}\n", sc.threads));
+    match &sc.kind {
+        ScenarioKind::Fleet { gpu, partition } => {
+            s.push_str("kind=fleet\n");
+            s.push_str(&format!("gpu={}\n", gpu.tag()));
+            let p = match partition {
+                PartitionGene::TimeShare => "timeshare".to_string(),
+                PartitionGene::Mps => "mps".to_string(),
+                PartitionGene::Mig { slices } => format!("mig:{slices}"),
+            };
+            s.push_str(&format!("partition={p}\n"));
+        }
+        ScenarioKind::Cluster { devices, placement } => {
+            s.push_str("kind=cluster\n");
+            for d in devices {
+                match d.mig {
+                    Some(slices) => s.push_str(&format!("device={}:mig{slices}\n", d.gpu.tag())),
+                    None => s.push_str(&format!("device={}\n", d.gpu.tag())),
+                }
+            }
+            s.push_str(&format!("placement={}\n", placement.tag()));
+        }
+    }
+    for j in &sc.jobs {
+        let policy = match j.policy {
+            PolicyGene::Static { bs, mtl } => format!("static:{bs}:{mtl}"),
+            PolicyGene::Clipper => "clipper".to_string(),
+            PolicyGene::QueueAware => "queue".to_string(),
+        };
+        let arrivals = match j.arrivals {
+            ArrivalGene::Closed => "closed".to_string(),
+            ArrivalGene::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalGene::Uniform { rate } => format!("uniform:{rate}"),
+            ArrivalGene::Bursty { rate, factor, period_s, burst_s } => {
+                format!("bursty:{rate}:{factor}:{period_s}:{burst_s}")
+            }
+            ArrivalGene::Trace { count, rate } => format!("trace:{count}:{rate}"),
+        };
+        s.push_str(&format!("job id={} policy={policy} arrivals={arrivals}", j.paper_id));
+        if let Some(cap) = j.queue_capacity {
+            s.push_str(&format!(" queue={cap}"));
+        }
+        if let Some(t) = j.batch_timeout_ms {
+            s.push_str(&format!(" timeout={t}"));
+        }
+        if j.shed_deadline {
+            s.push_str(" shed=1");
+        }
+        if let Some(f) = j.sm_reservation {
+            s.push_str(&format!(" resv={f}"));
+        }
+        s.push('\n');
+    }
+    if let Some(dy) = &sc.dynamics {
+        for e in &dy.churn {
+            match *e {
+                ChurnGene::Launch { window, paper_id, rate } => {
+                    s.push_str(&format!("churn=launch:{window}:{paper_id}:{rate}\n"));
+                }
+                ChurnGene::Retire { window, paper_id } => {
+                    s.push_str(&format!("churn=retire:{window}:{paper_id}\n"));
+                }
+            }
+        }
+        if let Some((heur, every)) = dy.migrate {
+            s.push_str(&format!("migrate={}:{every}\n", heur.tag()));
+        }
+        if let Some((min, max)) = dy.autoscale {
+            s.push_str(&format!("autoscale={min}:{max}\n"));
+        }
+    }
+    s
+}
+
+fn parse_num<T: std::str::FromStr>(what: &str, s: &str) -> Result<T, String> {
+    s.parse().map_err(|_| format!("bad {what}: {s:?}"))
+}
+
+fn parse_job_line(line: &str) -> Result<JobGene, String> {
+    let mut id = None;
+    let mut policy = None;
+    let mut arrivals = None;
+    let mut g = JobGene::simple(0, PolicyGene::Clipper, ArrivalGene::Closed);
+    for tok in line.split_whitespace().skip(1) {
+        let (k, v) = tok.split_once('=').ok_or_else(|| format!("bad job token: {tok:?}"))?;
+        match k {
+            "id" => id = Some(parse_num::<u32>("job id", v)?),
+            "policy" => {
+                let parts: Vec<&str> = v.split(':').collect();
+                policy = Some(match parts[0] {
+                    "static" if parts.len() == 3 => PolicyGene::Static {
+                        bs: parse_num("bs", parts[1])?,
+                        mtl: parse_num("mtl", parts[2])?,
+                    },
+                    "clipper" => PolicyGene::Clipper,
+                    "queue" => PolicyGene::QueueAware,
+                    _ => return Err(format!("bad policy: {v:?}")),
+                });
+            }
+            "arrivals" => {
+                let parts: Vec<&str> = v.split(':').collect();
+                arrivals = Some(match parts[0] {
+                    "closed" => ArrivalGene::Closed,
+                    "poisson" if parts.len() == 2 => {
+                        ArrivalGene::Poisson { rate: parse_num("rate", parts[1])? }
+                    }
+                    "uniform" if parts.len() == 2 => {
+                        ArrivalGene::Uniform { rate: parse_num("rate", parts[1])? }
+                    }
+                    "bursty" if parts.len() == 5 => ArrivalGene::Bursty {
+                        rate: parse_num("rate", parts[1])?,
+                        factor: parse_num("factor", parts[2])?,
+                        period_s: parse_num("period", parts[3])?,
+                        burst_s: parse_num("burst", parts[4])?,
+                    },
+                    "trace" if parts.len() == 3 => ArrivalGene::Trace {
+                        count: parse_num("count", parts[1])?,
+                        rate: parse_num("rate", parts[2])?,
+                    },
+                    _ => return Err(format!("bad arrivals: {v:?}")),
+                });
+            }
+            "queue" => g.queue_capacity = Some(parse_num("queue capacity", v)?),
+            "timeout" => g.batch_timeout_ms = Some(parse_num("batch timeout", v)?),
+            "shed" => g.shed_deadline = v == "1",
+            "resv" => g.sm_reservation = Some(parse_num("reservation", v)?),
+            _ => return Err(format!("unknown job key: {k:?}")),
+        }
+    }
+    g.paper_id = id.ok_or("job line missing id=")?;
+    g.policy = policy.ok_or("job line missing policy=")?;
+    g.arrivals = arrivals.ok_or("job line missing arrivals=")?;
+    Ok(g)
+}
+
+/// Parse the canonical format back into a [`Scenario`]. Errors are
+/// human-readable strings (the corpus replayer surfaces them verbatim).
+pub fn from_canon(text: &str) -> Result<Scenario, String> {
+    let mut seed = None;
+    let mut windows = None;
+    let mut rounds = None;
+    let mut threads = 1usize;
+    let mut kind_tag: Option<&str> = None;
+    let mut gpu = None;
+    let mut partition = None;
+    let mut devices: Vec<DeviceGene> = Vec::new();
+    let mut placement = None;
+    let mut jobs: Vec<JobGene> = Vec::new();
+    let mut churn: Vec<ChurnGene> = Vec::new();
+    let mut migrate = None;
+    let mut autoscale = None;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line.starts_with("job ") {
+            jobs.push(parse_job_line(line)?);
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or_else(|| format!("bad line: {line:?}"))?;
+        match k {
+            "seed" => seed = Some(parse_num::<u64>("seed", v)?),
+            "windows" => windows = Some(parse_num::<usize>("windows", v)?),
+            "rounds" => rounds = Some(parse_num::<usize>("rounds", v)?),
+            "threads" => threads = parse_num::<usize>("threads", v)?,
+            "kind" => {
+                kind_tag = Some(match v {
+                    "fleet" => "fleet",
+                    "cluster" => "cluster",
+                    _ => return Err(format!("bad kind: {v:?}")),
+                });
+            }
+            "gpu" => gpu = Some(GpuName::parse(v).ok_or_else(|| format!("bad gpu: {v:?}"))?),
+            "partition" => {
+                partition = Some(if v == "timeshare" {
+                    PartitionGene::TimeShare
+                } else if v == "mps" {
+                    PartitionGene::Mps
+                } else if let Some(n) = v.strip_prefix("mig:") {
+                    PartitionGene::Mig { slices: parse_num("mig slices", n)? }
+                } else {
+                    return Err(format!("bad partition: {v:?}"));
+                });
+            }
+            "device" => {
+                let (tag, mig) = match v.split_once(':') {
+                    Some((tag, m)) => {
+                        let n = m
+                            .strip_prefix("mig")
+                            .ok_or_else(|| format!("bad device: {v:?}"))?;
+                        (tag, Some(parse_num::<u32>("mig slices", n)?))
+                    }
+                    None => (v, None),
+                };
+                let gpu = GpuName::parse(tag).ok_or_else(|| format!("bad device gpu: {tag:?}"))?;
+                devices.push(DeviceGene { gpu, mig });
+            }
+            "placement" => {
+                placement =
+                    Some(PlacementGene::parse(v).ok_or_else(|| format!("bad placement: {v:?}"))?)
+            }
+            "churn" => {
+                let parts: Vec<&str> = v.split(':').collect();
+                churn.push(match parts[0] {
+                    "launch" if parts.len() == 4 => ChurnGene::Launch {
+                        window: parse_num("churn window", parts[1])?,
+                        paper_id: parse_num("churn job id", parts[2])?,
+                        rate: parse_num("churn rate", parts[3])?,
+                    },
+                    "retire" if parts.len() == 3 => ChurnGene::Retire {
+                        window: parse_num("churn window", parts[1])?,
+                        paper_id: parse_num("churn job id", parts[2])?,
+                    },
+                    _ => return Err(format!("bad churn: {v:?}")),
+                });
+            }
+            "migrate" => {
+                let (tag, every) =
+                    v.split_once(':').ok_or_else(|| format!("bad migrate: {v:?}"))?;
+                migrate = Some((
+                    PlacementGene::parse(tag)
+                        .ok_or_else(|| format!("bad migrate heuristic: {tag:?}"))?,
+                    parse_num::<usize>("migrate period", every)?,
+                ));
+            }
+            "autoscale" => {
+                let (min, max) =
+                    v.split_once(':').ok_or_else(|| format!("bad autoscale: {v:?}"))?;
+                autoscale = Some((
+                    parse_num::<usize>("autoscale min", min)?,
+                    parse_num::<usize>("autoscale max", max)?,
+                ));
+            }
+            _ => return Err(format!("unknown key: {k:?}")),
+        }
+    }
+
+    let kind = match kind_tag.ok_or("missing kind=")? {
+        "fleet" => ScenarioKind::Fleet {
+            gpu: gpu.ok_or("fleet scenario missing gpu=")?,
+            partition: partition.ok_or("fleet scenario missing partition=")?,
+        },
+        _ => {
+            if devices.is_empty() {
+                return Err("cluster scenario has no device= lines".into());
+            }
+            ScenarioKind::Cluster {
+                devices,
+                placement: placement.ok_or("cluster scenario missing placement=")?,
+            }
+        }
+    };
+    let dynamics = if churn.is_empty() && migrate.is_none() && autoscale.is_none() {
+        None
+    } else {
+        Some(DynamicsGene { churn, migrate, autoscale })
+    };
+    Ok(Scenario {
+        seed: seed.ok_or("missing seed=")?,
+        windows: windows.ok_or("missing windows=")?,
+        rounds: rounds.ok_or("missing rounds=")?,
+        threads,
+        kind,
+        jobs,
+        dynamics,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fuzz campaign driver
+// ---------------------------------------------------------------------------
+
+/// One caught-and-shrunk mismatch.
+#[derive(Debug)]
+pub struct FuzzFailure {
+    pub case: usize,
+    pub class: usize,
+    /// The scenario as generated.
+    pub scenario: Scenario,
+    /// The minimal still-failing scenario after shrinking.
+    pub shrunk: Scenario,
+    /// Mismatch description re-derived from the shrunk scenario.
+    pub mismatch: String,
+}
+
+/// Result of a fuzz campaign.
+#[derive(Debug)]
+pub struct FuzzReport {
+    pub cases: usize,
+    /// Buildable scenarios generated per class.
+    pub built: [usize; NUM_CLASSES],
+    pub failures: Vec<FuzzFailure>,
+}
+
+/// Run `cases` seeded scenarios round-robin across the generator
+/// classes, checking each differentially; mismatches are shrunk to
+/// minimal counterexamples. `mutation` injects a deliberate fast-side
+/// bug into every successful run (test-only — proves the oracle bites).
+pub fn run_fuzz(cases: usize, seed: u64, mutation: Option<Mutation>) -> FuzzReport {
+    let mut report = FuzzReport { cases, built: [0; NUM_CLASSES], failures: Vec::new() };
+    for i in 0..cases {
+        let class = i % NUM_CLASSES;
+        let case_seed =
+            seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x1234_5678);
+        let sc = generate_class(class, case_seed);
+        if sc.builds() {
+            report.built[class] += 1;
+        }
+        if let Err(first) = check_scenario(&sc, mutation) {
+            let shrunk = shrink(&sc, &mut |c| check_scenario(c, mutation).is_err());
+            let mismatch = check_scenario(&shrunk, mutation).err().unwrap_or(first);
+            report.failures.push(FuzzFailure { case: i, class, scenario: sc, shrunk, mismatch });
+        }
+    }
+    report
+}
+
+/// Render a failure as the ready-to-commit regression case: the
+/// mismatch, then the shrunk scenario in canonical format (drop it into
+/// `rust/tests/fuzz_corpus/<name>.case` to pin it forever).
+pub fn describe_failure(f: &FuzzFailure) -> String {
+    format!(
+        "case {} [{}]: {}\n--- shrunk counterexample ({} device(s), {} job(s)) ---\n{}",
+        f.case,
+        class_name(f.class),
+        f.mismatch,
+        f.shrunk.device_count(),
+        f.shrunk.job_count(),
+        to_canon(&f.shrunk),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_scenarios_build_for_every_class() {
+        for class in 0..NUM_CLASSES {
+            let sc = fallback_scenario(class, 7);
+            assert!(sc.builds(), "fallback for class {} must build", class_name(class));
+        }
+    }
+
+    #[test]
+    fn generated_scenarios_build_and_are_deterministic() {
+        for class in 0..NUM_CLASSES {
+            let a = generate_class(class, 99);
+            let b = generate_class(class, 99);
+            assert_eq!(a, b, "generation must be a pure function of (class, seed)");
+            assert!(a.builds(), "generate_class must return a buildable scenario");
+        }
+    }
+
+    #[test]
+    fn canon_round_trips_every_fallback_and_a_knobbed_scenario() {
+        for class in 0..NUM_CLASSES {
+            let sc = fallback_scenario(class, 13);
+            let text = to_canon(&sc);
+            assert_eq!(from_canon(&text), Ok(sc), "round-trip for class {class}");
+        }
+        let mut sc = fallback_scenario(4, 21);
+        sc.threads = 8;
+        sc.jobs[0].queue_capacity = Some(12);
+        sc.jobs[0].batch_timeout_ms = Some(2.625);
+        sc.jobs[0].shed_deadline = true;
+        sc.jobs[1].arrivals =
+            ArrivalGene::Bursty { rate: 33.5, factor: 2.25, period_s: 1.5, burst_s: 0.375 };
+        assert_eq!(from_canon(&to_canon(&sc)), Ok(sc));
+    }
+
+    #[test]
+    fn fallback_scenarios_pass_the_differential_check() {
+        for class in 0..NUM_CLASSES {
+            let sc = fallback_scenario(class, 5);
+            assert_eq!(
+                check_scenario(&sc, None),
+                Ok(()),
+                "class {} fallback must match fast-vs-reference",
+                class_name(class)
+            );
+        }
+    }
+
+    #[test]
+    fn injected_bug_is_caught_and_shrinks_small() {
+        let sc = fallback_scenario(3, 11);
+        let mutation = Some(Mutation::InflateTotalThroughput);
+        assert!(check_scenario(&sc, mutation).is_err(), "mutation must trip the oracle");
+        let shrunk = shrink(&sc, &mut |c| check_scenario(c, mutation).is_err());
+        assert!(shrunk.device_count() <= 2, "shrunk to {} devices", shrunk.device_count());
+        assert!(shrunk.job_count() <= 2, "shrunk to {} jobs", shrunk.job_count());
+        assert!(shrunk.windows <= sc.windows && shrunk.rounds <= sc.rounds);
+    }
+
+    #[test]
+    fn audit_mutation_is_refused_in_any_build_profile() {
+        let sc = fallback_scenario(4, 3);
+        let err = check_scenario(&sc, Some(Mutation::ForgePhantomDrops))
+            .expect_err("forged drops must fail the always-on audit");
+        assert!(err.contains("audit"), "expected an audit failure, got: {err}");
+    }
+
+    #[test]
+    fn cluster_scenarios_reject_fleet_only_knobs() {
+        let mut sc = fallback_scenario(3, 1);
+        sc.jobs[0].sm_reservation = Some(0.25);
+        assert!(
+            matches!(
+                sc.build().err(),
+                Some(ConfigError::KnobRequiresPartition { knob: "sm_reservation" })
+            ),
+            "cluster scenarios must refuse sm_reservation rather than ignore it"
+        );
+        let mut sc = fallback_scenario(0, 1);
+        sc.dynamics = Some(DynamicsGene {
+            churn: Vec::new(),
+            migrate: None,
+            autoscale: Some((1, 2)),
+        });
+        assert!(sc.build().is_err(), "fleet scenarios must refuse dynamics");
+    }
+}

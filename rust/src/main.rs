@@ -99,6 +99,16 @@ COMMANDS:
            --threads N shards the per-device event loops across N worker
            threads; output is byte-identical to --threads 1 (the serial
            engine) at every N.
+  fuzz     [--cases N] [--seed N]
+           Differential fuzzing: N seeded random scenarios (default 200,
+           seed 42) spanning fleets and clusters, open and closed
+           arrivals, every partition mode, and churn/migration/
+           autoscaling dynamics. Each scenario is served by the
+           production engine AND by a deliberately naive reference
+           executor; snapshots must match byte for byte and pass the
+           conservation audit. A mismatch is shrunk to a minimal
+           counterexample printed in the canonical corpus format
+           (commit it under rust/tests/fuzz_corpus/); exits non-zero.
   sweep    --dnn NAME [--dataset DS] [--knob bs|mtl]
            Throughput/latency sweep over one knob (Fig. 1 curves).
   serve    [--model M] [--slo MS] [--artifacts DIR] [--windows N]
@@ -411,6 +421,10 @@ fn main() -> Result<()> {
                 ],
             )?;
             cmd_cluster(&flags)
+        }
+        "fuzz" => {
+            let flags = Flags::parse(rest, &["cases", "seed"])?;
+            cmd_fuzz(flags.num_or("cases", 200usize)?, flags.num_or("seed", 42u64)?)
         }
         "sweep" => {
             let flags = Flags::parse(rest, &["dnn", "dataset", "knob"])?;
@@ -1063,6 +1077,33 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_fuzz(cases: usize, seed: u64) -> Result<()> {
+    use dnnscaler::coordinator::testkit::{class_name, describe_failure, run_fuzz, NUM_CLASSES};
+
+    println!("differential fuzz: {cases} case(s), seed {seed}");
+    let report = run_fuzz(cases, seed, None);
+    let mut t = Table::new("Scenario classes", &["class", "buildable"]);
+    for (class, &built) in report.built.iter().enumerate() {
+        t.row(&[class_name(class).to_string(), built.to_string()]);
+    }
+    print!("{}", t.render());
+    let total: usize = report.built.iter().sum();
+    println!(
+        "{} buildable scenario(s) across {} class(es), {} mismatch(es)",
+        total,
+        NUM_CLASSES,
+        report.failures.len()
+    );
+    if report.failures.is_empty() {
+        println!("fast and reference executors agree on every case; audits clean");
+        return Ok(());
+    }
+    for f in &report.failures {
+        println!("\n{}", describe_failure(f));
+    }
+    bail!("{} of {cases} scenario(s) mismatched", report.failures.len());
 }
 
 fn cmd_sweep(dnn: &str, dataset: &str, knob: &str) -> Result<()> {

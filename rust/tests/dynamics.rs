@@ -8,7 +8,7 @@ use dnnscaler::coordinator::dynamics::{
     Autoscaler, ChurnSchedule, PlacementPolicy, PoolObservation, ScaleAction, ThresholdAutoscaler,
 };
 use dnnscaler::coordinator::job::paper_job;
-use dnnscaler::coordinator::session::PolicySpec;
+use dnnscaler::coordinator::session::{ConfigError, PolicySpec};
 use dnnscaler::coordinator::snapshot::{cluster_outcome_to_json, render};
 use dnnscaler::coordinator::{Cluster, WindowObservation};
 use dnnscaler::gpusim::TESLA_P40;
@@ -336,4 +336,212 @@ fn diurnal_autoscaling_beats_fixed_pool_on_cost_per_goodput() {
     );
     assert_eq!(fixed.audit(), Ok(()));
     assert_eq!(elastic.audit(), Ok(()));
+}
+
+// ---- Dynamics edge cases (ISSUE 8 satellites) ------------------------
+
+/// Retiring a job that is never live — or retiring the same job twice —
+/// is a typed `ConfigError::BadChurn` from `ClusterBuilder::build()`,
+/// not a runtime surprise.
+#[test]
+fn retires_of_unknown_or_already_retired_jobs_fail_at_build() {
+    let job = paper_job(1).unwrap();
+    let base = || {
+        Cluster::builder().device(TESLA_P40).job_with_arrivals(
+            job,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(20.0),
+        )
+    };
+
+    // Job 999 never exists in this run.
+    let err = base()
+        .churn(ChurnSchedule::new().retire(1, 999))
+        .windows(4)
+        .build()
+        .err()
+        .expect("retiring an unknown job must fail at build");
+    assert!(matches!(err, ConfigError::BadChurn { .. }), "got {err:?}");
+
+    // The second retire acts on a job the first already removed.
+    let err = base()
+        .churn(ChurnSchedule::new().retire(1, job.id).retire(2, job.id))
+        .windows(4)
+        .build()
+        .err()
+        .expect("double retire must fail at build");
+    assert!(matches!(err, ConfigError::BadChurn { .. }), "got {err:?}");
+}
+
+/// Scales down exactly once, on its first consultation, then holds.
+struct ShrinkOnce {
+    done: bool,
+}
+
+impl Autoscaler for ShrinkOnce {
+    fn name(&self) -> &'static str {
+        "shrink-once"
+    }
+
+    fn scale(&mut self, _obs: &PoolObservation<'_>) -> ScaleAction {
+        if self.done {
+            ScaleAction::Hold
+        } else {
+            self.done = true;
+            ScaleAction::Shrink
+        }
+    }
+}
+
+/// Demands a scale-down at every window boundary, unconditionally.
+struct ShrinkAlways;
+
+impl Autoscaler for ShrinkAlways {
+    fn name(&self) -> &'static str {
+        "shrink-always"
+    }
+
+    fn scale(&mut self, _obs: &PoolObservation<'_>) -> ScaleAction {
+        ScaleAction::Shrink
+    }
+}
+
+/// A churned launch arriving after the pool has shrunk must land on a
+/// still-active device — never on the parked card — and serve to the
+/// end of the run with clean accounting.
+#[test]
+fn launch_lands_on_an_active_device_while_the_pool_shrinks() {
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 2, mtl: 1 },
+            ArrivalPattern::poisson(30.0),
+        )
+        .churn(ChurnSchedule::new().launch(
+            2,
+            paper_job(4).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(20.0),
+        ))
+        .autoscaler(ShrinkOnce { done: false })
+        .windows(6)
+        .rounds_per_window(10)
+        .seed(17)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    assert_eq!(dy.scale_downs, 1, "the empty card must be parked at window 0");
+    assert!(dy.pool_trace.iter().all(|&n| n == 2), "pool {:?}", dy.pool_trace);
+    assert_eq!(dy.launches, 1, "the launch must be placed on a survivor");
+    assert_eq!(dy.failed_launches, 0);
+    // Both the initial job and the churned one finish with outcomes.
+    let served: usize = out.devices.iter().map(|d| d.fleet.members.len()).sum();
+    assert_eq!(served, 2);
+    assert!(out.total_throughput > 0.0);
+    assert_eq!(out.audit(), Ok(()));
+}
+
+/// When every device is occupied and no survivor could hold an
+/// evacuated model, the shrink is refused every single window: the pool
+/// never changes size and nothing migrates.
+#[test]
+fn shrink_is_refused_when_every_survivor_is_full() {
+    use dnnscaler::gpusim::{GpuSim, GpuSpec};
+
+    // Size each card so ONE inc-v4 footprint fits with < one footprint
+    // of headroom: evacuating either device's job can never fit in the
+    // other's free memory.
+    let job = paper_job(3).unwrap();
+    let footprint = GpuSim::for_paper_dnn(job.dnn, job.dataset, 0).unwrap().mem_demand_mb(1, 1);
+    let gpu = GpuSpec { mem_mb: footprint * 1.8, ..TESLA_P40 };
+
+    let out = Cluster::builder()
+        .device(gpu.clone())
+        .device(gpu)
+        .job_with_arrivals(
+            job,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .job_with_arrivals(
+            job,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .autoscaler(ShrinkAlways)
+        .windows(6)
+        .rounds_per_window(10)
+        .seed(19)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    assert_eq!(dy.scale_downs, 0, "no survivor can hold the evacuated footprint");
+    assert!(dy.pool_trace.iter().all(|&n| n == 2), "pool {:?}", dy.pool_trace);
+    assert_eq!(dy.migrations, 0, "a refused shrink must not half-move jobs");
+    assert_eq!(dy.migration_stall_ms, 0.0);
+    assert_eq!(out.assignment, vec![0, 1]);
+    assert_eq!(out.audit(), Ok(()));
+}
+
+/// Once the pool has shrunk from three cards to two, proposes moving
+/// every job onto active-slice index 2 — exactly the retired card's old
+/// slot, now out of range.
+struct ChaseRetired;
+
+impl PlacementPolicy for ChaseRetired {
+    fn name(&self) -> &'static str {
+        "chase-retired"
+    }
+
+    fn replace(
+        &mut self,
+        jobs: &[PlacementJob],
+        devices: &[DeviceDesc],
+        _current: &[usize],
+        _obs: &[WindowObservation],
+    ) -> Option<Vec<usize>> {
+        if devices.len() >= 3 {
+            return None;
+        }
+        Some(vec![2; jobs.len()])
+    }
+}
+
+/// A migration proposal targeting a retired (powered-off) device is
+/// validated against the ACTIVE slice of the pool: rejected wholesale,
+/// counted, and nothing moves.
+#[test]
+fn proposals_targeting_a_retired_device_are_rejected() {
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 2, mtl: 1 },
+            ArrivalPattern::poisson(30.0),
+        )
+        .placement_policy(ChaseRetired)
+        .autoscaler(ShrinkOnce { done: false })
+        .windows(6)
+        .rounds_per_window(10)
+        .seed(23)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    assert_eq!(dy.scale_downs, 1, "the pool must actually shrink first");
+    assert!(dy.rejected_proposals >= 1, "the stale-index proposal must be rejected");
+    assert_eq!(dy.migrations, 0);
+    assert_eq!(dy.migration_stall_ms, 0.0);
+    assert_eq!(out.assignment, vec![0], "the job must stay where it was placed");
+    assert_eq!(out.audit(), Ok(()));
 }

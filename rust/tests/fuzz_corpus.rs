@@ -1,0 +1,52 @@
+//! Replays the committed regression corpus under `tests/fuzz_corpus/`:
+//! every `.case` file is a canonical-format scenario (shrunk fuzzer
+//! counterexamples and hand-picked coverage cases) that must build,
+//! serve identically through the fast and reference executors, and
+//! audit clean — as ordinary tier-1 tests, no fuzzing involved.
+//!
+//! `REGEN_FUZZ_CORPUS=1` (driven by `make fuzz-corpus`) rewrites each
+//! file to its canonical serialization instead of asserting it; the
+//! Makefile target then fails on git drift, exactly like the golden
+//! fixtures' regenerator.
+
+use dnnscaler::coordinator::testkit::{check_scenario, from_canon, to_canon};
+use std::fs;
+use std::path::PathBuf;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fuzz_corpus")
+}
+
+#[test]
+fn corpus_cases_replay_clean_and_stay_canonical() {
+    let dir = corpus_dir();
+    let mut paths: Vec<PathBuf> = fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "case"))
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 6, "corpus shrank to {} cases", paths.len());
+
+    let regen = std::env::var_os("REGEN_FUZZ_CORPUS").is_some_and(|v| v == "1");
+    for p in &paths {
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        let text = fs::read_to_string(p).unwrap();
+        let sc = from_canon(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let canon = to_canon(&sc);
+        if regen {
+            fs::write(p, &canon).unwrap();
+        } else {
+            assert_eq!(
+                canon, text,
+                "{name} is not in canonical form; run `make fuzz-corpus` to re-bless"
+            );
+        }
+        // A corpus case that stops building would silently stop testing
+        // anything — refuse vacuous entries.
+        assert!(sc.builds(), "{name} no longer passes builder validation");
+        if let Err(e) = check_scenario(&sc, None) {
+            panic!("{name}: fast and reference executors disagree:\n{e}");
+        }
+    }
+}

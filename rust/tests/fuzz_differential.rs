@@ -1,0 +1,132 @@
+//! Whole-cluster differential fuzzing (ISSUE 8 tentpole): ≥ 200 seeded
+//! random scenarios spanning open/closed arrivals × {TimeShare, MPS,
+//! MIG} × {static, churn + migration + autoscaling}, each served by the
+//! production engine AND by `testkit`'s deliberately naive reference
+//! executor (O(M) min-scan instead of the calendar, fresh accumulators
+//! instead of recycled ones, device-outer loops, no threads). Both
+//! outcomes must render byte-identical snapshots and pass
+//! `ClusterOutcome::audit()` — always, not just under `debug_assert!`.
+//!
+//! The oracle's teeth are proven by `Mutation`: an injected fast-side
+//! bug must be caught and shrunk to a counterexample with at most two
+//! devices and two jobs.
+
+use dnnscaler::coordinator::testkit::{
+    check_scenario, describe_failure, fallback_scenario, from_canon, generate_class, run_fuzz,
+    shrink, to_canon, Mutation, NUM_CLASSES,
+};
+
+/// The acceptance-criteria soak: 204 scenarios, 34 per class, zero
+/// mismatches, every class represented.
+#[test]
+fn fuzz_differential_200_scenarios_match_and_audit_clean() {
+    let cases = 204;
+    let report = run_fuzz(cases, 0xD1FF_5EED, None);
+    assert_eq!(report.cases, cases);
+    if let Some(f) = report.failures.first() {
+        panic!(
+            "{} of {} scenarios mismatched; first:\n{}",
+            report.failures.len(),
+            cases,
+            describe_failure(f)
+        );
+    }
+    for (class, &built) in report.built.iter().enumerate() {
+        assert!(
+            built >= cases / NUM_CLASSES,
+            "class {class} produced {built} buildable scenarios (want {})",
+            cases / NUM_CLASSES
+        );
+    }
+}
+
+/// An injected engine bug (inflated headline throughput) is caught on
+/// every affected case and shrinks to ≤ 2 devices and ≤ 2 jobs.
+#[test]
+fn injected_bug_is_caught_and_shrunk_to_a_tiny_counterexample() {
+    let report = run_fuzz(NUM_CLASSES * 2, 77, Some(Mutation::InflateTotalThroughput));
+    assert!(
+        !report.failures.is_empty(),
+        "the mutation hook must trip the differential oracle"
+    );
+    for f in &report.failures {
+        assert!(
+            f.shrunk.device_count() <= 2,
+            "case {} shrunk to {} devices:\n{}",
+            f.case,
+            f.shrunk.device_count(),
+            describe_failure(f)
+        );
+        assert!(
+            f.shrunk.job_count() <= 2,
+            "case {} shrunk to {} jobs:\n{}",
+            f.case,
+            f.shrunk.job_count(),
+            describe_failure(f)
+        );
+        assert!(!f.mismatch.is_empty());
+    }
+}
+
+/// A conservation violation (more drops than arrivals) is refused by the
+/// always-run `audit()`, which `debug_assert!` alone would skip in
+/// release builds.
+#[test]
+fn forged_drops_are_refused_by_the_always_run_audit() {
+    for class in 0..NUM_CLASSES {
+        let sc = fallback_scenario(class, 9);
+        let err = check_scenario(&sc, Some(Mutation::ForgePhantomDrops))
+            .expect_err("forged drops must fail");
+        assert!(
+            err.contains("audit"),
+            "class {class}: expected an audit failure, got: {err}"
+        );
+    }
+}
+
+/// Generated scenarios round-trip exactly through the canonical corpus
+/// format, for every class.
+#[test]
+fn generated_scenarios_round_trip_through_canonical_format() {
+    for class in 0..NUM_CLASSES {
+        for seed in [1u64, 42, 0xABCD] {
+            let sc = generate_class(class, seed);
+            let text = to_canon(&sc);
+            let back = from_canon(&text)
+                .unwrap_or_else(|e| panic!("class {class} seed {seed}: {e}\n{text}"));
+            assert_eq!(back, sc, "class {class} seed {seed} round-trip drift:\n{text}");
+        }
+    }
+}
+
+/// The campaign is a pure function of (cases, seed): same failures, same
+/// class coverage, byte-identical shrunk counterexamples.
+#[test]
+fn fuzz_campaign_is_deterministic() {
+    let a = run_fuzz(36, 0xFEED, Some(Mutation::InflateTotalThroughput));
+    let b = run_fuzz(36, 0xFEED, Some(Mutation::InflateTotalThroughput));
+    assert_eq!(a.built, b.built);
+    assert_eq!(a.failures.len(), b.failures.len());
+    for (fa, fb) in a.failures.iter().zip(&b.failures) {
+        assert_eq!(fa.case, fb.case);
+        assert_eq!(to_canon(&fa.shrunk), to_canon(&fb.shrunk));
+    }
+}
+
+/// `shrink` never returns a passing scenario: the minimized output still
+/// fails the same predicate it was shrunk against.
+#[test]
+fn shrink_preserves_failure() {
+    let sc = generate_class(5, 0x5EED);
+    let mutation = Some(Mutation::InflateTotalThroughput);
+    let mut failing = |c: &dnnscaler::coordinator::testkit::Scenario| {
+        check_scenario(c, mutation).is_err()
+    };
+    if !failing(&sc) {
+        // A scenario whose run errs out never reaches the mutation; the
+        // campaign-level test covers those. Nothing to shrink here.
+        return;
+    }
+    let small = shrink(&sc, &mut failing);
+    assert!(failing(&small), "shrunk scenario must still fail:\n{}", to_canon(&small));
+}

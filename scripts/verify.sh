@@ -90,6 +90,12 @@ parallel_smoke() {
     return "$rc"
 }
 run_step "parallel-smoke" parallel_smoke
+# Differential-fuzz smoke: a bounded, fixed-seed campaign through the
+# CLI (production engine vs the naive reference executor, snapshots
+# byte-identical, audits clean). The full 200-case campaign runs in the
+# test suite; this keeps the `fuzz` subcommand itself from rotting.
+run_step "fuzz-smoke" cargo run --release --manifest-path "$manifest" -- \
+    fuzz --cases 24 --seed 42
 run_step "fmt" cargo fmt --check --manifest-path "$manifest"
 
 # Golden-fixture drift guard: regenerate the outcome snapshots and fail
