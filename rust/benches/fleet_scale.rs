@@ -24,7 +24,9 @@
 //! each) swept over worker-thread counts {1, 2, 4, 8}, reporting
 //! requests/s and requests/s-per-core — the data-parallel sharding's
 //! scaling curve (output is byte-identical at every thread count, so
-//! only wall clock moves).
+//! only wall clock moves). PR 9 adds a `fault_churn` case: the churned
+//! cluster with a crash/repair cycle and a transient degradation
+//! injected, pricing the fault barrier and failover machinery.
 //!
 //! Run:  cargo bench --bench fleet_scale             (report only)
 //!       cargo bench --bench fleet_scale -- --json   (also write
@@ -43,6 +45,7 @@ use std::time::Instant;
 use dnnscaler::coordinator::calendar::{EventCalendar, LinearScan, NextEventQueue};
 use dnnscaler::coordinator::cluster::{Cluster, RoundRobin};
 use dnnscaler::coordinator::dynamics::{ChurnSchedule, ThresholdAutoscaler};
+use dnnscaler::coordinator::FaultSchedule;
 use dnnscaler::coordinator::job::paper_job;
 use dnnscaler::coordinator::session::PolicySpec;
 use dnnscaler::gpusim::{GpuSpec, TESLA_P40};
@@ -246,6 +249,64 @@ fn run_churn(d: usize, request_target: u64) -> ClusterRun {
     ClusterRun { devices: d, jobs, threads: 1, requests_served, wall_s }
 }
 
+/// One overloaded open-loop cluster run at `d` devices under FAULTS
+/// (PR 9): the `run_churn` membership pressure (one mid-run launch)
+/// plus a crash/repair cycle on the last device and a transient
+/// degradation of the first — pricing the fault barrier, the evacuation
+/// placement, and the pending-retry queue on top of the dynamic loop.
+fn run_faults(d: usize, request_target: u64) -> ClusterRun {
+    let (job, gpu) = bench_workload();
+    let jobs = 2 * d;
+    let windows = 8usize;
+    let rounds_per_window = rounds_for_target(jobs as u64, windows as u64, request_target);
+
+    let mut launched = job;
+    launched.id = 1000;
+    let churn = ChurnSchedule::new().launch(
+        2,
+        &launched,
+        PolicySpec::Static { bs: 8, mtl: 1 },
+        ArrivalPattern::uniform(2_000.0),
+    );
+    let faults = FaultSchedule::new()
+        .degrade(0, 1, 0.5, 2)
+        .crash(d - 1, 3)
+        .repair(d - 1, 6);
+
+    let mut b = Cluster::builder()
+        .windows(windows)
+        .rounds_per_window(rounds_per_window)
+        .placement(RoundRobin::new())
+        .churn(churn)
+        .faults(faults);
+    for _ in 0..d {
+        b = b.device(gpu.clone());
+    }
+    for _ in 0..jobs {
+        b = b
+            .job_with_arrivals(
+                &job,
+                PolicySpec::Static { bs: 8, mtl: 1 },
+                ArrivalPattern::uniform(2_000.0),
+            )
+            .queue_capacity(1024);
+    }
+    let cluster = b.build().expect("fault cluster config");
+    let t0 = Instant::now();
+    let out = cluster.run().expect("fault cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let dy = out.dynamics.as_ref().expect("dynamic run reports telemetry");
+    let fo = dy.faults.as_ref().expect("faulty run reports fault telemetry");
+    assert!(fo.crashes == 1 && fo.repairs == 1 && fo.degrades == 1);
+    let requests_served: f64 = out
+        .devices
+        .iter()
+        .flat_map(|dev| dev.fleet.members.iter())
+        .map(|j| j.latencies.iter().map(|(_, w)| *w).sum::<f64>())
+        .sum();
+    ClusterRun { devices: d, jobs, threads: 1, requests_served, wall_s }
+}
+
 /// Steady-state queue hot pair: push + take_batch_into over a warmed
 /// ring (zero allocations). Returns ops/s (one op = 8 pushes + 1 drain).
 fn queue_ops_per_s(iters: u64) -> f64 {
@@ -407,6 +468,33 @@ fn main() {
         per_c.push(Json::Obj(o));
     }
 
+    // Fault scaling: the churned cluster with a crash/repair cycle and
+    // a transient degradation injected — what detection, evacuation,
+    // and pending retries cost on top of plain warehouse dynamics.
+    let fault_counts: &[usize] = if smoke { &[2] } else { &[1, 4, 16] };
+    println!(
+        "\n{:<10} {:>6} {:>14} {:>14} {:>10}   (under churn + faults)",
+        "devices", "jobs", "wall_s", "requests/s", "requests"
+    );
+    println!("{}", "-".repeat(90));
+    let mut per_f: Vec<Json> = Vec::new();
+    for &d in fault_counts {
+        let run = run_faults(d, cluster_target);
+        let requests_per_s = run.requests_served / run.wall_s;
+        println!(
+            "{:<10} {:>6} {:>14.3} {:>14.0} {:>10.0}",
+            run.devices, run.jobs, run.wall_s, requests_per_s, run.requests_served
+        );
+        assert!(run.requests_served > 0.0, "fault cluster served nothing at D={d}");
+        let mut o = BTreeMap::new();
+        o.insert("devices".into(), num(run.devices as f64));
+        o.insert("jobs".into(), num(run.jobs as f64));
+        o.insert("wall_s".into(), num(run.wall_s));
+        o.insert("requests_served".into(), num(run.requests_served));
+        o.insert("requests_per_s".into(), num(requests_per_s));
+        per_f.push(Json::Obj(o));
+    }
+
     let queue_ops = queue_ops_per_s(if smoke { 50_000 } else { 2_000_000 });
     println!("\nqueue: push x8 + take_batch_into(8)  {queue_ops:>14.0} ops/s");
 
@@ -424,6 +512,7 @@ fn main() {
         root.insert("per_member_count".into(), Json::Arr(per_m));
         root.insert("cluster_scale".into(), Json::Arr(per_d));
         root.insert("churn_scale".into(), Json::Arr(per_c));
+        root.insert("fault_churn".into(), Json::Arr(per_f));
         let text = dnnscaler::json::write(&Json::Obj(root));
         std::fs::write(&path, text + "\n").expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");

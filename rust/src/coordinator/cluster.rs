@@ -67,6 +67,7 @@ use crate::gpusim::{
 use crate::workload::ArrivalPattern;
 
 use super::dynamics::{Autoscaler, ChurnSchedule, DynamicsCfg, DynamicsOutcome, PlacementPolicy};
+use super::faults::FaultSchedule;
 use super::fleet::{
     self, arrival_seed, finish_fleet, new_closed_member, new_open_member, validate_arrival_modes,
     validate_member_cfg, ClosedDevice, DeviceCtx, FleetOutcome, MemberCfg, OpenDevice,
@@ -508,6 +509,9 @@ pub struct ClusterBuilder<'a> {
     churn: ChurnSchedule<'a>,
     placement_policy: Option<Box<dyn PlacementPolicy + 'a>>,
     autoscaler: Option<Box<dyn Autoscaler + 'a>>,
+    faults: FaultSchedule,
+    mtbf_windows: Option<f64>,
+    mttr_windows: Option<f64>,
     price_list: Option<Vec<f64>>,
     threads: usize,
 }
@@ -527,6 +531,9 @@ impl<'a> ClusterBuilder<'a> {
             churn: ChurnSchedule::new(),
             placement_policy: None,
             autoscaler: None,
+            faults: FaultSchedule::new(),
+            mtbf_windows: None,
+            mttr_windows: None,
             price_list: None,
             threads: 1,
         }
@@ -645,6 +652,28 @@ impl<'a> ClusterBuilder<'a> {
     /// window boundary. Switches the run onto the dynamics path.
     pub fn autoscaler(mut self, scaler: impl Autoscaler + 'a) -> Self {
         self.autoscaler = Some(Box::new(scaler));
+        self
+    }
+
+    /// Fault injection: crash / degrade / repair events fired at window
+    /// boundaries (validated at build; see
+    /// [`FaultSchedule`](super::faults::FaultSchedule) and
+    /// `docs/faults.md`). Any non-empty schedule switches the run onto
+    /// the dynamics path.
+    pub fn faults(mut self, schedule: FaultSchedule) -> Self {
+        self.faults = schedule;
+        self
+    }
+
+    /// Stochastic fault injection: per-device crash/repair events drawn
+    /// from exponential MTBF / MTTR distributions (both in control
+    /// windows), materialized deterministically from the run seed at
+    /// build time and merged with any explicit
+    /// [`ClusterBuilder::faults`] schedule. Switches the run onto the
+    /// dynamics path.
+    pub fn stochastic_faults(mut self, mtbf_windows: f64, mttr_windows: f64) -> Self {
+        self.mtbf_windows = Some(mtbf_windows);
+        self.mttr_windows = Some(mttr_windows);
         self
     }
 
@@ -786,22 +815,50 @@ impl<'a> ClusterBuilder<'a> {
                 d.price_per_hour = price;
             }
         }
-        // Dynamics: any churn / migration / autoscaling request switches
-        // the run onto the dynamic path; nothing requested leaves the
-        // static path (and its snapshot bytes) untouched.
+        // Dynamics: any churn / migration / autoscaling / fault request
+        // switches the run onto the dynamic path; nothing requested
+        // leaves the static path (and its snapshot bytes) untouched.
         let dynamics = if !self.churn.is_empty()
             || self.placement_policy.is_some()
             || self.autoscaler.is_some()
+            || !self.faults.is_empty()
+            || self.mtbf_windows.is_some()
         {
             if self.jobs.iter().any(|m| m.arrivals.is_closed()) {
                 return Err(ConfigError::DynamicsRequireOpenLoop);
             }
             let ids: Vec<u32> = self.jobs.iter().map(|m| m.job.id).collect();
             self.churn.validate(self.cfg.windows, &ids)?;
+            // Stochastic faults materialize from the run seed, merge
+            // with the explicit schedule, and the merged whole is
+            // validated — a stochastic crash landing on an explicitly
+            // crashed device is caught here, not at run time.
+            let mut faults = self.faults;
+            if let Some(mtbf) = self.mtbf_windows {
+                let mttr = self.mttr_windows.unwrap_or(1.0);
+                if !mtbf.is_finite() || mtbf <= 0.0 || !mttr.is_finite() || mttr <= 0.0 {
+                    return Err(ConfigError::BadFaults {
+                        reason: format!(
+                            "stochastic faults need finite positive MTBF and MTTR \
+                             (got mtbf {mtbf}, mttr {mttr} windows)"
+                        ),
+                    });
+                }
+                faults.extend(super::faults::materialize_stochastic(
+                    self.seed,
+                    self.devices.len(),
+                    self.cfg.windows,
+                    mtbf,
+                    mttr,
+                ));
+            }
+            faults.validate(self.cfg.windows, self.devices.len())?;
+            let faults = (!faults.is_empty() || self.mtbf_windows.is_some()).then_some(faults);
             Some(DynamicsCfg {
                 churn: self.churn,
                 policy: self.placement_policy,
                 autoscaler: self.autoscaler,
+                faults,
             })
         } else {
             None
@@ -949,8 +1006,8 @@ pub struct ClusterOutcome {
 #[derive(Debug, Clone, PartialEq)]
 pub enum AuditError {
     /// A job finished more requests than ever arrived:
-    /// `served + dropped + shed > arrived`.
-    Conservation { job: usize, arrived: u64, served: u64, dropped: u64, shed: u64 },
+    /// `served + dropped + shed + failed > arrived`.
+    Conservation { job: usize, arrived: u64, served: u64, dropped: u64, shed: u64, failed: u64 },
     /// A window granted more than the whole device's SMs.
     OverSubscribed { device: usize, window: usize, granted: f64 },
     /// Peak combined memory demand exceeded the device's capacity.
@@ -960,10 +1017,10 @@ pub enum AuditError {
 impl fmt::Display for AuditError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            AuditError::Conservation { job, arrived, served, dropped, shed } => write!(
+            AuditError::Conservation { job, arrived, served, dropped, shed, failed } => write!(
                 f,
                 "job {job}: served {served} + dropped {dropped} + shed {shed} \
-                 exceeds arrived {arrived}"
+                 + failed {failed} exceeds arrived {arrived}"
             ),
             AuditError::OverSubscribed { device, window, granted } => write!(
                 f,
@@ -996,13 +1053,14 @@ impl ClusterOutcome {
                 }
                 let served: u64 =
                     m.latencies.iter().map(|&(_, w)| w).sum::<f64>().round() as u64;
-                if served + m.drops + m.dropped_deadline > m.arrived {
+                if served + m.drops + m.dropped_deadline + m.dropped_failure > m.arrived {
                     return Err(AuditError::Conservation {
                         job: dev.jobs.get(j).copied().unwrap_or(j),
                         arrived: m.arrived,
                         served,
                         dropped: m.drops,
                         shed: m.dropped_deadline,
+                        failed: m.dropped_failure,
                     });
                 }
             }

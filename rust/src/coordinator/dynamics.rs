@@ -37,6 +37,14 @@
 //!   reports accumulated device-hours, dollars, and
 //!   [`DynamicsOutcome::cost_per_goodput`].
 //!
+//! A fourth control loop shares the same barrier: fault injection
+//! ([`faults`](super::faults)) — device crashes (queued work lost to
+//! `dropped_failure`, residents failed over through the same placement
+//! machinery or parked in a pending queue with capped exponential
+//! backoff), temporary performance degradation, and repair. Fault
+//! decisions are serial at the barrier, so faulty runs stay
+//! byte-identical at every thread count (see `docs/faults.md`).
+//!
 //! Dynamics run only when requested: a churn-free, migration-free,
 //! autoscale-free cluster takes the static [`fleet::run_open_devices`]
 //! path untouched and its `ClusterOutcome` snapshot stays byte-identical
@@ -53,6 +61,7 @@ use super::cluster::{
     whole_desc, Assignment, ClusterOutcome, DeviceDesc, DeviceOutcome, Placement, PlacementJob,
 };
 use super::engine::{SmShare, WindowAccum};
+use super::faults::{FaultEvent, FaultSchedule, FaultsOutcome, MAX_BACKOFF_WINDOWS};
 use super::fleet::{
     admit_window, arrival_seed, finish_fleet, new_open_member, open_member_outcome,
     shard_count, validate_member_cfg, DeviceCtx, DeviceFailure, MemberCfg, OpenMember,
@@ -423,6 +432,15 @@ pub struct DynamicsOutcome {
     /// inference/s) — the metric the autoscaler optimizes. `None` when
     /// the run produced no goodput at all.
     pub cost_per_goodput: Option<f64>,
+    /// Launches deferred into the pending queue because no active
+    /// device had room *at their window* (they retry with capped
+    /// backoff — distinct from `failed_launches`, whose footprint no
+    /// pool device could ever hold).
+    pub deferred_launches: u64,
+    /// Fault-injection telemetry: `Some` exactly when the run was
+    /// built with a fault schedule (fault-free snapshots never carry
+    /// the key and stay byte-identical).
+    pub faults: Option<FaultsOutcome>,
 }
 
 /// The dynamic knobs a cluster was built with (all optional; the
@@ -432,6 +450,7 @@ pub(crate) struct DynamicsCfg<'a> {
     pub(crate) churn: ChurnSchedule<'a>,
     pub(crate) policy: Option<Box<dyn PlacementPolicy + 'a>>,
     pub(crate) autoscaler: Option<Box<dyn Autoscaler + 'a>>,
+    pub(crate) faults: Option<FaultSchedule>,
 }
 
 /// One live job: its engine member plus the placement-facing metadata
@@ -448,6 +467,32 @@ pub(crate) struct Live<'a> {
     pub(crate) m: OpenMember<'a>,
     pub(crate) win: WindowAccum,
     pub(crate) last_obs: Option<WindowObservation>,
+}
+
+/// Why a job sits in the pending queue instead of serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PendingKind {
+    /// A churned launch that found no active device with room at its
+    /// window: it waits with backoff instead of failing outright.
+    Launch,
+    /// A crash victim with no feasible failover destination (or
+    /// failover disabled: it never retries and finalizes at run end
+    /// with whatever it served before the crash).
+    Failover,
+}
+
+/// A job waiting for capacity, re-attempted at window barriers with
+/// capped exponential backoff (cap: [`MAX_BACKOFF_WINDOWS`]). Its
+/// member exists — virtual clock parked — so a deferred launch keeps
+/// the fleet-identical seed derivation of its global job index.
+pub(crate) struct Pending<'a> {
+    pub(crate) live: Live<'a>,
+    pub(crate) kind: PendingKind,
+    /// First window at which to re-attempt placement (`usize::MAX`:
+    /// never — failover disabled).
+    pub(crate) next_retry: usize,
+    /// Current backoff in windows; doubles per failed retry, capped.
+    pub(crate) backoff: usize,
 }
 
 /// Free footprint memory per pool device given the current residents.
@@ -473,13 +518,14 @@ pub(crate) fn most_free_fit(free: &[f64], active: &[bool], need_mb: f64) -> Opti
 /// plan every window, because churn, migration, and scaling may have
 /// changed who runs where.
 ///
-/// `threads > 1` parallelizes ONLY step 4 (the event loop): each
+/// `threads > 1` parallelizes ONLY step 5 (the event loop): each
 /// device's members serve on a per-device calendar, devices sharded
 /// across scoped workers, and the scope join is the window barrier.
-/// Steps 1-3 (churn, migration, autoscaling), 5 (window close), and 6
-/// (billing) stay serial and ordered — dynamics decisions see exactly
-/// the state the serial engine would, so snapshots stay byte-identical
-/// at every thread count.
+/// Steps 0-4 (faults, churn, pending retry, migration, autoscaling),
+/// 6 (window close), and 7 (billing) stay serial and ordered —
+/// dynamics and fault decisions see exactly the state the serial
+/// engine would, so snapshots stay byte-identical at every thread
+/// count.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_dynamic<'a>(
     cfg: &RunConfig,
@@ -491,7 +537,7 @@ pub(crate) fn run_dynamic<'a>(
     dynamics: DynamicsCfg<'a>,
     threads: usize,
 ) -> Result<ClusterOutcome, DeviceError> {
-    let DynamicsCfg { churn, mut policy, mut autoscaler } = dynamics;
+    let DynamicsCfg { churn, mut policy, mut autoscaler, faults } = dynamics;
     let parallel = threads > 1;
     let mut dyn_out = DynamicsOutcome::default();
 
@@ -501,6 +547,20 @@ pub(crate) fn run_dynamic<'a>(
         let w = e.window();
         events_at[w].push(e);
     }
+
+    // Fault schedule, likewise grouped by firing window. `fo` fills
+    // unconditionally (the branches cost nothing on fault-free runs)
+    // but is attached to the outcome only when faults were configured.
+    let have_faults = faults.is_some();
+    let failover_enabled = faults.as_ref().map_or(true, |f| f.failover);
+    let mut fault_at: Vec<Vec<FaultEvent>> = (0..cfg.windows).map(|_| Vec::new()).collect();
+    if let Some(f) = faults {
+        for e in f.events {
+            let w = e.window();
+            fault_at[w].push(e);
+        }
+    }
+    let mut fo = FaultsOutcome::default();
 
     // Device pool: per-device serving contexts (telemetry lives here)
     // plus the active flags the autoscaler flips. Grown devices clone
@@ -514,6 +574,14 @@ pub(crate) fn run_dynamic<'a>(
         })
         .collect();
     let mut active = vec![true; descs.len()];
+    // `active` means powered on AND healthy; `crashed` separates fault
+    // outage from autoscaler parking so Grow never revives a dead card.
+    let mut crashed = vec![false; descs.len()];
+    // Per-device degrade state: (perf scale factor, windows remaining).
+    let mut degrade: Vec<(f64, usize)> = vec![(1.0, 0); descs.len()];
+    // Jobs waiting for capacity (deferred launches, stranded crash
+    // victims), re-attempted at barriers with capped backoff.
+    let mut pending: Vec<Pending<'a>> = Vec::new();
 
     // Live members. Global job index j keeps the fleet-identical seed
     // derivation (`seed + j`, `arrival_seed(seed, j)`) whatever device
@@ -557,6 +625,70 @@ pub(crate) fn run_dynamic<'a>(
     let mut pressures: Vec<f64> = vec![0.0; descs.len()];
 
     for w in 0..cfg.windows {
+        // -- 0. Faults: crash / degrade / repair at the barrier, before
+        //       churn so launches never land on a dead card. --
+        for e in std::mem::take(&mut fault_at[w]) {
+            match e {
+                FaultEvent::Crash { device, .. } => {
+                    crashed[device] = true;
+                    active[device] = false;
+                    fo.crashes += 1;
+                    // Evacuate residents: queued requests die with the
+                    // card; the member itself fails over (weights
+                    // reload on the destination) or parks pending.
+                    let mut li = 0;
+                    while li < lives.len() {
+                        if lives[li].device != device {
+                            li += 1;
+                            continue;
+                        }
+                        fo.dropped_failure += lives[li].m.lp.fail_queue();
+                        let need = lives[li].pjob.mem_floor_mb;
+                        let dest = if failover_enabled {
+                            let free = free_mb(&descs, &lives);
+                            most_free_fit(&free, &active, need)
+                        } else {
+                            None
+                        };
+                        match dest {
+                            Some(d) => {
+                                let stall = model_load_ms(need);
+                                let l = &mut lives[li];
+                                l.m.lp.stall_ms(stall);
+                                l.device = d;
+                                fo.failovers += 1;
+                                fo.failover_stall_ms += stall;
+                                li += 1;
+                            }
+                            None => {
+                                let live = lives.remove(li);
+                                pending.push(Pending {
+                                    live,
+                                    kind: PendingKind::Failover,
+                                    next_retry: if failover_enabled {
+                                        w + 1
+                                    } else {
+                                        usize::MAX
+                                    },
+                                    backoff: 1,
+                                });
+                                fo.deferred_jobs += 1;
+                            }
+                        }
+                    }
+                }
+                FaultEvent::Degrade { device, factor, for_windows, .. } => {
+                    degrade[device] = (factor, for_windows);
+                    fo.degrades += 1;
+                }
+                FaultEvent::Repair { device, .. } => {
+                    crashed[device] = false;
+                    active[device] = true;
+                    fo.repairs += 1;
+                }
+            }
+        }
+
         // -- 1. Churn: retire first-match live jobs, launch new ones. --
         for e in std::mem::take(&mut events_at[w]) {
             match e {
@@ -575,7 +707,37 @@ pub(crate) fn run_dynamic<'a>(
                     let pjob = PlacementJob::from_cfg(&cfg_m);
                     let free = free_mb(&descs, &lives);
                     let Some(d) = most_free_fit(&free, &active, pjob.mem_floor_mb) else {
-                        dyn_out.failed_launches += 1;
+                        if descs.iter().all(|dd| dd.mem_mb < pjob.mem_floor_mb) {
+                            // No pool device could EVER hold the
+                            // footprint: permanently infeasible.
+                            dyn_out.failed_launches += 1;
+                            continue;
+                        }
+                        // Merely no room right now: park the member
+                        // (virtual clock at zero) and retry with
+                        // backoff. The model-load stall is charged at
+                        // actual placement.
+                        let m = new_open_member(
+                            cfg_m,
+                            cfg,
+                            seed + j as u64,
+                            arrival_seed(seed, j),
+                        )?;
+                        pending.push(Pending {
+                            live: Live {
+                                job_idx: j,
+                                device: usize::MAX,
+                                pjob,
+                                m,
+                                win: WindowAccum::new(),
+                                last_obs: None,
+                            },
+                            kind: PendingKind::Launch,
+                            next_retry: w + 1,
+                            backoff: 1,
+                        });
+                        dyn_out.deferred_launches += 1;
+                        fo.deferred_jobs += 1;
                         continue;
                     };
                     let mut m =
@@ -596,7 +758,43 @@ pub(crate) fn run_dynamic<'a>(
             }
         }
 
-        // -- 2. Live migration: the policy may re-place the survivors. --
+        // -- 2. Pending retry: deferred launches and stranded crash
+        //       victims due this window re-attempt placement; misses
+        //       double their backoff (capped). --
+        let mut pi = 0;
+        while pi < pending.len() {
+            if pending[pi].next_retry > w {
+                pi += 1;
+                continue;
+            }
+            let need = pending[pi].live.pjob.mem_floor_mb;
+            let free = free_mb(&descs, &lives);
+            match most_free_fit(&free, &active, need) {
+                Some(d) => {
+                    let p = pending.remove(pi);
+                    let mut live = p.live;
+                    let stall = model_load_ms(need);
+                    live.m.lp.stall_ms(stall);
+                    live.device = d;
+                    match p.kind {
+                        PendingKind::Launch => dyn_out.launches += 1,
+                        PendingKind::Failover => {
+                            fo.failovers += 1;
+                            fo.failover_stall_ms += stall;
+                        }
+                    }
+                    lives.push(live);
+                }
+                None => {
+                    let p = &mut pending[pi];
+                    p.backoff = (p.backoff * 2).min(MAX_BACKOFF_WINDOWS);
+                    p.next_retry = w + p.backoff;
+                    pi += 1;
+                }
+            }
+        }
+
+        // -- 3. Live migration: the policy may re-place the survivors. --
         if let Some(pol) = policy.as_mut() {
             // The policy sees only the active slice of the pool.
             let active_idx: Vec<usize> = (0..descs.len()).filter(|&d| active[d]).collect();
@@ -632,7 +830,7 @@ pub(crate) fn run_dynamic<'a>(
             }
         }
 
-        // -- 3. Autoscaling on last window's pressure. --
+        // -- 4. Autoscaling on last window's pressure. --
         if let Some(scaler) = autoscaler.as_mut() {
             let n_active = active.iter().filter(|&&a| a).count();
             let (sum_p, max_p) = (0..descs.len()).filter(|&d| active[d]).fold(
@@ -662,9 +860,10 @@ pub(crate) fn run_dynamic<'a>(
             match action {
                 ScaleAction::Hold => {}
                 ScaleAction::Grow => {
-                    // Re-activate the lowest-index parked device, else
-                    // rent a fresh template card.
-                    if let Some(d) = (0..descs.len()).find(|&d| !active[d]) {
+                    // Re-activate the lowest-index parked device —
+                    // never a crashed one — else rent a fresh template
+                    // card.
+                    if let Some(d) = (0..descs.len()).find(|&d| !active[d] && !crashed[d]) {
                         active[d] = true;
                     } else {
                         let desc = whole_desc(template.clone(), next_physical);
@@ -677,6 +876,8 @@ pub(crate) fn run_dynamic<'a>(
                         ));
                         descs.push(desc);
                         active.push(true);
+                        crashed.push(false);
+                        degrade.push((1.0, 0));
                         pressures.push(0.0);
                     }
                     dyn_out.scale_ups += 1;
@@ -698,8 +899,9 @@ pub(crate) fn run_dynamic<'a>(
             }
         }
         dyn_out.pool_trace.push(active.iter().filter(|&&a| a).count());
+        fo.pool_health.push((0..descs.len()).filter(|&d| !crashed[d]).count());
 
-        // -- 4. Serve the window: per-device admission + shares, then
+        // -- 5. Serve the window: per-device admission + shares, then
         //       one global event loop (run_open_devices, membership
         //       edition). --
         calendar.clear();
@@ -734,7 +936,11 @@ pub(crate) fn run_dynamic<'a>(
                 ctx.mem_capacity_mb,
                 &mut ctx.admission_clamps,
             )?;
-            let g = ctx.perf_fraction;
+            // Degradation scales the granted perf model: the members
+            // temporarily see a smaller SM grant, exactly like a MIG
+            // slice. Healthy devices keep g == perf_fraction bit-exact
+            // (x * 1.0 == x), so fault-free runs stay byte-identical.
+            let g = ctx.perf_fraction * degrade[d].0;
             let shr = ctx.parts.window_shares(
                 || {
                     members
@@ -751,7 +957,7 @@ pub(crate) fn run_dynamic<'a>(
                         .sum()
                 },
                 members.len(),
-                ctx.perf_fraction,
+                g,
                 &mut ctx.peak_contention,
                 &mut ctx.contention_trace,
                 &mut ctx.grant_trace,
@@ -816,7 +1022,7 @@ pub(crate) fn run_dynamic<'a>(
             }
         }
 
-        // -- 5. Close the window per member (same sequence as the
+        // -- 6. Close the window per member (same sequence as the
         //       static loop) and record the boundary observations. --
         for (f, &li) in flat.iter().enumerate() {
             let l = &mut lives[li];
@@ -830,7 +1036,7 @@ pub(crate) fn run_dynamic<'a>(
             l.last_obs = Some(obs);
         }
 
-        // -- 6. Bill the window: active devices * advanced virtual time.
+        // -- 7. Bill the window: active devices * advanced virtual time.
         let now_max = lives.iter().map(|l| l.m.lp.now_s).fold(elapsed_s, f64::max);
         let span_h = (now_max - elapsed_s) / 3600.0;
         elapsed_s = now_max;
@@ -838,6 +1044,31 @@ pub(crate) fn run_dynamic<'a>(
             if active[d] {
                 dyn_out.device_hours += span_h;
                 dyn_out.cost_usd += descs[d].price_per_hour * span_h;
+            }
+        }
+
+        // Degrade timers tick per served window; an expired timer
+        // restores full speed (an event at window w covers windows
+        // w .. w + for_windows - 1).
+        for dg in degrade.iter_mut() {
+            if dg.1 > 0 {
+                dg.1 -= 1;
+                if dg.1 == 0 {
+                    dg.0 = 1.0;
+                }
+            }
+        }
+    }
+
+    // Jobs still pending at run end: deferred launches never served
+    // (dropped from the outcomes like permanently infeasible ones);
+    // stranded crash victims finalize with whatever they served before
+    // their device died.
+    for p in pending {
+        match p.kind {
+            PendingKind::Launch => dyn_out.failed_launches += 1,
+            PendingKind::Failover => {
+                ended.push((p.live.job_idx, p.live.device, open_member_outcome(p.live.m)));
             }
         }
     }
@@ -872,6 +1103,9 @@ pub(crate) fn run_dynamic<'a>(
     let total_goodput: f64 = devices.iter().map(|d| d.fleet.total_goodput).sum();
     dyn_out.cost_per_goodput =
         (total_goodput > 0.0).then(|| dyn_out.cost_usd / total_goodput);
+    if have_faults {
+        dyn_out.faults = Some(fo);
+    }
     let out = ClusterOutcome {
         devices,
         placement,

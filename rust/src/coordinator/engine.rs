@@ -194,6 +194,21 @@ impl OpenLoop {
         self.queue.dropped_deadline
     }
 
+    /// Requests lost to device crashes (see [`OpenLoop::fail_queue`]).
+    pub(crate) fn dropped_failure(&self) -> u64 {
+        self.queue.dropped_failure
+    }
+
+    /// The member's device crashed at a window barrier: its queued
+    /// (in-flight) work is lost. Drains the queue, accounts the losses
+    /// (conservation stays closed — the requests already counted as
+    /// arrived), and returns how many were lost. The arrival feed and
+    /// virtual clock are untouched: a failed-over member resumes
+    /// serving fresh arrivals on its new device.
+    pub(crate) fn fail_queue(&mut self) -> u64 {
+        self.queue.fail_all()
+    }
+
     /// Current queue depth (the window-boundary backpressure signal).
     pub(crate) fn queue_len(&self) -> usize {
         self.queue.len()

@@ -1,0 +1,419 @@
+//! Fault injection and recovery for the cluster engine: device crashes,
+//! temporary performance degradation, and repair.
+//!
+//! Warehouse-scale inference serves through infrastructure events — GPU
+//! ECC stalls, thermal throttling, outright card deaths — yet a
+//! simulator whose devices are immortal never exercises the recovery
+//! paths a production controller depends on. This module supplies the
+//! fault model the dynamics runner executes:
+//!
+//! * **[`FaultEvent::Crash`]** — the device goes dark at the start of
+//!   its window. Queued (in-flight) requests on its members are lost and
+//!   accounted to `dropped_failure`; the members themselves are failed
+//!   over onto the surviving active devices (most-free-fit, charged
+//!   [`model_load_ms`](super::dynamics::model_load_ms) like any
+//!   migration), and members that fit nowhere wait in a pending queue
+//!   with capped exponential backoff, re-attempted at later window
+//!   barriers.
+//! * **[`FaultEvent::Degrade`]** — thermal throttle / ECC slowdown: the
+//!   device's effective `perf_fraction` is scaled by `factor` for
+//!   `for_windows` windows, executing members inside a reduced SM grant
+//!   on the granted perf model.
+//! * **[`FaultEvent::Repair`]** — a crashed device returns to service
+//!   and is eligible for placement again from its window on.
+//!
+//! Schedules are validated at `build()` (typed
+//! [`ConfigError::BadFaults`]) by replaying them window by window,
+//! exactly as churn schedules are. A stochastic mode
+//! ([`ClusterBuilder::stochastic_faults`](super::cluster::ClusterBuilder::stochastic_faults))
+//! draws per-device MTBF/MTTR exponential crash/repair sequences from
+//! the run seed at build time, so fault campaigns stay byte-reproducible
+//! across runs, thread counts, and the differential reference executor.
+//!
+//! All fault decisions are taken serially at the window barrier (like
+//! churn, migration, and autoscaling), so the sharded parallel serving
+//! path stays snapshot-byte-identical at every thread count. Fault-free
+//! runs never touch this module and keep their exact pre-fault snapshot
+//! bytes. See `docs/faults.md`.
+
+use crate::rng::Rng;
+
+use super::session::ConfigError;
+
+/// Backoff cap (in windows) for jobs waiting in the pending queue: the
+/// retry interval doubles on every failed placement attempt up to this
+/// many windows.
+pub const MAX_BACKOFF_WINDOWS: usize = 8;
+
+/// One fault, keyed by control-window index and pool device index
+/// (build-time pool order — MIG slices count as devices; devices rented
+/// later by an autoscaler cannot be targeted by a schedule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// `device` dies at the start of `window`: queued work is lost
+    /// (`dropped_failure`), residents fail over or wait with backoff.
+    Crash { device: usize, window: usize },
+    /// `device` runs at `factor` of its normal SM capacity for
+    /// `for_windows` windows starting at `window` (thermal throttle /
+    /// ECC slowdown). `factor` must lie strictly inside (0, 1).
+    Degrade { device: usize, window: usize, factor: f64, for_windows: usize },
+    /// A crashed `device` returns to service at the start of `window`.
+    Repair { device: usize, window: usize },
+}
+
+impl FaultEvent {
+    pub(crate) fn window(&self) -> usize {
+        match self {
+            FaultEvent::Crash { window, .. }
+            | FaultEvent::Degrade { window, .. }
+            | FaultEvent::Repair { window, .. } => *window,
+        }
+    }
+
+    pub(crate) fn device(&self) -> usize {
+        match self {
+            FaultEvent::Crash { device, .. }
+            | FaultEvent::Degrade { device, .. }
+            | FaultEvent::Repair { device, .. } => *device,
+        }
+    }
+}
+
+/// An ordered schedule of [`FaultEvent`]s. Events fire at the start of
+/// their window, grouped by window in insertion order — before churn,
+/// so a launch at a crash's window never lands on the dead card.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    pub(crate) events: Vec<FaultEvent>,
+    /// When false, a crash strands ALL of the victim's members (no
+    /// re-placement, no retries) — the "no recovery" baseline the e2e
+    /// acceptance test compares failover against.
+    pub(crate) failover: bool,
+}
+
+impl Default for FaultSchedule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultSchedule {
+    pub fn new() -> Self {
+        FaultSchedule { events: Vec::new(), failover: true }
+    }
+
+    /// Crash `device` at the start of `window`.
+    pub fn crash(mut self, device: usize, window: usize) -> Self {
+        self.events.push(FaultEvent::Crash { device, window });
+        self
+    }
+
+    /// Run `device` at `factor` of its SM capacity for `for_windows`
+    /// windows starting at `window`.
+    pub fn degrade(
+        mut self,
+        device: usize,
+        window: usize,
+        factor: f64,
+        for_windows: usize,
+    ) -> Self {
+        self.events.push(FaultEvent::Degrade { device, window, factor, for_windows });
+        self
+    }
+
+    /// Return a crashed `device` to service at the start of `window`.
+    pub fn repair(mut self, device: usize, window: usize) -> Self {
+        self.events.push(FaultEvent::Repair { device, window });
+        self
+    }
+
+    /// Disable (or re-enable) failover: with `false`, crashed devices'
+    /// members are stranded for the rest of the run instead of being
+    /// re-placed. Injection and `dropped_failure` accounting still run.
+    pub fn failover(mut self, enabled: bool) -> Self {
+        self.failover = enabled;
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Append another schedule's events (build-time merge of an explicit
+    /// schedule with materialized stochastic faults).
+    pub(crate) fn extend(&mut self, events: Vec<FaultEvent>) {
+        self.events.extend(events);
+    }
+
+    /// Build-time validation: every event inside the run and the device
+    /// pool, degrade parameters sane, and the crash/repair state machine
+    /// consistent — replayed window by window against a per-device
+    /// up/down flag exactly as the runtime will apply it. Typed
+    /// [`ConfigError::BadFaults`] otherwise.
+    pub(crate) fn validate(&self, windows: usize, devices: usize) -> Result<(), ConfigError> {
+        let bad = |reason: String| Err(ConfigError::BadFaults { reason });
+        let mut down = vec![false; devices];
+        for w in 0..self.events.iter().map(|e| e.window() + 1).max().unwrap_or(0) {
+            for e in self.events.iter().filter(|e| e.window() == w) {
+                if e.window() >= windows {
+                    return bad(format!(
+                        "event at window {} but the run has only {windows} window(s)",
+                        e.window()
+                    ));
+                }
+                if e.device() >= devices {
+                    return bad(format!(
+                        "event targets device {} but the pool has only {devices} device(s)",
+                        e.device()
+                    ));
+                }
+                match *e {
+                    FaultEvent::Crash { device, window } => {
+                        if down[device] {
+                            return bad(format!(
+                                "crash of device {device} at window {window}: it is \
+                                 already down (double crash)"
+                            ));
+                        }
+                        down[device] = true;
+                    }
+                    FaultEvent::Degrade { device, window, factor, for_windows } => {
+                        if !(factor.is_finite() && factor > 0.0 && factor < 1.0) {
+                            return bad(format!(
+                                "degrade of device {device} at window {window}: factor \
+                                 {factor} must lie strictly inside (0, 1)"
+                            ));
+                        }
+                        if for_windows == 0 {
+                            return bad(format!(
+                                "degrade of device {device} at window {window}: \
+                                 for_windows must be >= 1"
+                            ));
+                        }
+                        if down[device] {
+                            return bad(format!(
+                                "degrade of device {device} at window {window}: the \
+                                 device is down (repair it first)"
+                            ));
+                        }
+                    }
+                    FaultEvent::Repair { device, window } => {
+                        if !down[device] {
+                            return bad(format!(
+                                "repair of device {device} at window {window}: it is \
+                                 not down (never crashed, or already repaired)"
+                            ));
+                        }
+                        down[device] = false;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Materialize a stochastic fault campaign: per device, alternate
+/// exponential time-to-failure (mean `mtbf_windows`) and time-to-repair
+/// (mean `mttr_windows`) draws from an RNG derived from the run seed,
+/// rounded down to window indices (consecutive events forced onto
+/// distinct windows so the replayed state machine stays consistent). A
+/// repair landing past the run's end is dropped — the device stays down.
+/// Purely a function of `(seed, devices, windows, mtbf, mttr)`, so the
+/// campaign is byte-reproducible everywhere the schedule is replayed.
+pub(crate) fn materialize_stochastic(
+    seed: u64,
+    devices: usize,
+    windows: usize,
+    mtbf_windows: f64,
+    mttr_windows: f64,
+) -> Vec<FaultEvent> {
+    let mut events = Vec::new();
+    for device in 0..devices {
+        let mut rng =
+            Rng::new(seed.wrapping_mul(0x2545_F491_4F6C_DD1D).wrapping_add(device as u64));
+        let mut t = 0.0f64;
+        let mut last_w: Option<usize> = None;
+        loop {
+            t += rng.exponential(1.0 / mtbf_windows);
+            let mut cw = t.floor() as usize;
+            if let Some(lw) = last_w {
+                cw = cw.max(lw + 1);
+            }
+            if cw >= windows {
+                break;
+            }
+            events.push(FaultEvent::Crash { device, window: cw });
+            last_w = Some(cw);
+            t = t.max(cw as f64);
+            t += rng.exponential(1.0 / mttr_windows);
+            let rw = (t.floor() as usize).max(cw + 1);
+            if rw >= windows {
+                break; // down for the rest of the run
+            }
+            events.push(FaultEvent::Repair { device, window: rw });
+            last_w = Some(rw);
+            t = t.max(rw as f64);
+        }
+    }
+    events
+}
+
+/// Telemetry of a faulty run, reported as `DynamicsOutcome::faults`
+/// (absent — and absent from snapshots — unless fault injection was
+/// configured, so fault-free runs keep their exact pre-fault bytes).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultsOutcome {
+    /// Crash events applied.
+    pub crashes: u64,
+    /// Degrade events applied.
+    pub degrades: u64,
+    /// Repair events applied.
+    pub repairs: u64,
+    /// Jobs successfully re-placed off a crashed device (immediately or
+    /// after waiting in the pending queue).
+    pub failovers: u64,
+    /// Total virtual-clock stall charged for failover re-placements (ms).
+    pub failover_stall_ms: f64,
+    /// In-flight (queued) requests lost to crashes; included in the
+    /// conservation audit alongside drops and deadline sheds.
+    pub dropped_failure: u64,
+    /// Placement deferrals: every time a job entered (or stayed in) the
+    /// pending queue because nothing could hold it.
+    pub deferred_jobs: u64,
+    /// Healthy (non-crashed) pool devices at each window, after that
+    /// window's fault events.
+    pub pool_health: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_events_in_order() {
+        let s = FaultSchedule::new().crash(1, 2).degrade(0, 1, 0.5, 3).repair(1, 4);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        assert_eq!(s.events[0], FaultEvent::Crash { device: 1, window: 2 });
+        assert_eq!(s.events[2], FaultEvent::Repair { device: 1, window: 4 });
+        assert!(s.failover);
+        assert!(!s.failover(false).failover);
+    }
+
+    #[test]
+    fn validate_accepts_a_sane_schedule() {
+        let s = FaultSchedule::new()
+            .crash(0, 0) // crash at window 0 is legal
+            .repair(0, 2)
+            .degrade(1, 1, 0.5, 4)
+            .crash(0, 5);
+        assert!(s.validate(6, 2).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_window_and_device() {
+        let s = FaultSchedule::new().crash(0, 9);
+        assert!(matches!(s.validate(4, 2), Err(ConfigError::BadFaults { .. })));
+        let s = FaultSchedule::new().crash(5, 1);
+        assert!(matches!(s.validate(4, 2), Err(ConfigError::BadFaults { .. })));
+    }
+
+    #[test]
+    fn validate_rejects_double_crash() {
+        let s = FaultSchedule::new().crash(0, 1).crash(0, 3);
+        assert!(matches!(s.validate(6, 2), Err(ConfigError::BadFaults { .. })));
+        // ... but crash -> repair -> crash is fine.
+        let s = FaultSchedule::new().crash(0, 1).repair(0, 2).crash(0, 3);
+        assert!(s.validate(6, 2).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_repair_of_healthy_device() {
+        let s = FaultSchedule::new().repair(0, 2);
+        assert!(matches!(s.validate(4, 1), Err(ConfigError::BadFaults { .. })));
+        let s = FaultSchedule::new().crash(0, 1).repair(0, 2).repair(0, 3);
+        assert!(matches!(s.validate(6, 1), Err(ConfigError::BadFaults { .. })));
+    }
+
+    #[test]
+    fn validate_rejects_bad_degrades() {
+        for factor in [0.0, 1.0, -0.5, 1.5, f64::NAN, f64::INFINITY] {
+            let s = FaultSchedule::new().degrade(0, 1, factor, 2);
+            assert!(
+                matches!(s.validate(4, 1), Err(ConfigError::BadFaults { .. })),
+                "factor {factor} must be rejected"
+            );
+        }
+        let s = FaultSchedule::new().degrade(0, 1, 0.5, 0);
+        assert!(matches!(s.validate(4, 1), Err(ConfigError::BadFaults { .. })));
+        // Degrading a dead device is meaningless.
+        let s = FaultSchedule::new().crash(0, 1).degrade(0, 2, 0.5, 2);
+        assert!(matches!(s.validate(4, 1), Err(ConfigError::BadFaults { .. })));
+    }
+
+    #[test]
+    fn validate_replays_by_window_not_insertion_order() {
+        // Inserted "repair then crash" but the windows order them
+        // crash-first, so the replay accepts the schedule.
+        let s = FaultSchedule::new().repair(0, 3).crash(0, 1);
+        assert!(s.validate(4, 1).is_ok());
+    }
+
+    #[test]
+    fn stochastic_campaign_is_deterministic_and_valid() {
+        for seed in 0..50u64 {
+            let a = materialize_stochastic(seed, 3, 16, 4.0, 2.0);
+            let b = materialize_stochastic(seed, 3, 16, 4.0, 2.0);
+            assert_eq!(a, b, "seed {seed}: materialization must be reproducible");
+            let mut s = FaultSchedule::new();
+            s.extend(a);
+            assert!(
+                s.validate(16, 3).is_ok(),
+                "seed {seed}: materialized schedule must validate: {:?}",
+                s.validate(16, 3)
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_campaign_alternates_per_device() {
+        let events = materialize_stochastic(7, 2, 64, 3.0, 1.5);
+        assert!(!events.is_empty(), "64 windows at MTBF 3 should see failures");
+        for d in 0..2 {
+            let mut down = false;
+            let mut last = None;
+            for e in events.iter().filter(|e| e.device() == d) {
+                if let Some(lw) = last {
+                    assert!(e.window() > lw, "strictly increasing windows per device");
+                }
+                last = Some(e.window());
+                match e {
+                    FaultEvent::Crash { .. } => {
+                        assert!(!down, "crash of a down device");
+                        down = true;
+                    }
+                    FaultEvent::Repair { .. } => {
+                        assert!(down, "repair of an up device");
+                        down = false;
+                    }
+                    FaultEvent::Degrade { .. } => panic!("stochastic mode emits no degrades"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rates_scale_with_mtbf() {
+        let frequent = materialize_stochastic(11, 4, 128, 2.0, 1.0).len();
+        let rare = materialize_stochastic(11, 4, 128, 50.0, 1.0).len();
+        assert!(
+            frequent > rare,
+            "MTBF 2 ({frequent} events) must out-fail MTBF 50 ({rare} events)"
+        );
+    }
+}

@@ -622,6 +622,7 @@ pub(crate) fn open_member_outcome(m: OpenMember<'_>) -> JobOutcome {
         m.lp.dropped_deadline(),
         m.lp.max_depth(),
     );
+    out.dropped_failure = m.lp.dropped_failure();
     if let Some(name) = m.label {
         out.controller = name.to_string();
     }

@@ -35,7 +35,12 @@
 //!   migration ([`dynamics::PlacementPolicy`]), and price-aware
 //!   autoscaling ([`dynamics::Autoscaler`] billing $/device-hour into
 //!   cost-per-goodput). Inactive dynamics leave the static path
-//!   byte-identical (see `docs/dynamics.md`).
+//!   byte-identical (see `docs/dynamics.md`);
+//! * [`faults`] — seeded fault injection over the same window-boundary
+//!   loop: device crashes (queued work accounted to `dropped_failure`,
+//!   residents failed over or retried with capped backoff), temporary
+//!   performance degradation, repair, and a byte-reproducible
+//!   MTBF/MTTR stochastic mode (see `docs/faults.md`).
 //!
 //! Open-loop fleets and clusters schedule their members through the
 //! O(log M) [`calendar::EventCalendar`] (a binary heap keyed by
@@ -78,6 +83,7 @@ pub mod cluster;
 pub mod controller;
 pub mod dynamics;
 pub(crate) mod engine;
+pub mod faults;
 pub mod fleet;
 pub mod job;
 pub mod latency;
@@ -100,6 +106,7 @@ pub use dynamics::{
     Autoscaler, ChurnSchedule, DynamicsOutcome, JobEvent, PeriodicReplace, PlacementPolicy,
     PoolObservation, ScaleAction, ThresholdAutoscaler,
 };
+pub use faults::{FaultEvent, FaultSchedule, FaultsOutcome};
 pub use fleet::{Fleet, FleetBuilder, FleetOutcome};
 pub use policy::{
     Action, AsPolicy, DemandPartition, PartitionPolicy, Policy, QueuePolicy, StaticPolicy,

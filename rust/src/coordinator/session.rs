@@ -156,6 +156,10 @@ pub struct JobOutcome {
     /// Requests shed over the whole run because their queueing delay
     /// alone exceeded the SLO (deadline shedding only).
     pub dropped_deadline: u64,
+    /// Requests lost to device crashes: queued work torn out of the
+    /// member's queue at a fault barrier (cluster fault injection only;
+    /// always 0 elsewhere).
+    pub dropped_failure: u64,
     /// SLO-met throughput over the steady half (inferences/s): the
     /// goodput the paper's attainment claims are really about.
     pub goodput: f64,
@@ -256,6 +260,11 @@ pub enum ConfigError {
     /// event loop, which only exists for open-loop (arrival-driven)
     /// clusters.
     DynamicsRequireOpenLoop,
+    /// A fault schedule references a window or device the run cannot
+    /// honor, carries invalid degrade parameters, breaks the
+    /// crash/repair state machine (double crash, repair of a healthy
+    /// device), or has non-positive MTBF/MTTR.
+    BadFaults { reason: String },
 }
 
 impl fmt::Display for ConfigError {
@@ -339,6 +348,7 @@ impl fmt::Display for ConfigError {
                 f,
                 "churn/migration/autoscaling require open-loop arrivals on every job"
             ),
+            ConfigError::BadFaults { reason } => write!(f, "bad fault schedule: {reason}"),
         }
     }
 }
@@ -783,16 +793,23 @@ pub(crate) fn assemble_outcome(
     dropped_deadline: u64,
     queue_peak: usize,
 ) -> JobOutcome {
-    // Steady-state = last half of the run.
+    // Steady-state = last half of the run. An empty trace is legal under
+    // fault injection (a job stranded by a crash before it ever served a
+    // window) and folds to all-zero statistics, not NaN.
     let steady = &trace[trace.len() / 2..];
-    let throughput = steady.iter().map(|r| r.throughput).sum::<f64>() / steady.len() as f64;
-    let power_w = steady.iter().map(|r| r.power_w).sum::<f64>() / steady.len() as f64;
-    let mut steady_lat: Vec<f64> = steady.iter().map(|r| r.p95_ms).collect();
-    // total_cmp: a NaN window percentile (possible only if a device
-    // returned NaN latencies) must not panic the final fold.
-    steady_lat.sort_by(|a, b| a.total_cmp(b));
-    let p95_ms = steady_lat
-        [((steady_lat.len() as f64 * 0.95).ceil() as usize - 1).min(steady_lat.len() - 1)];
+    let (throughput, power_w, p95_ms) = if steady.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        let throughput = steady.iter().map(|r| r.throughput).sum::<f64>() / steady.len() as f64;
+        let power_w = steady.iter().map(|r| r.power_w).sum::<f64>() / steady.len() as f64;
+        let mut steady_lat: Vec<f64> = steady.iter().map(|r| r.p95_ms).collect();
+        // total_cmp: a NaN window percentile (possible only if a device
+        // returned NaN latencies) must not panic the final fold.
+        steady_lat.sort_by(|a, b| a.total_cmp(b));
+        let p95 = steady_lat
+            [((steady_lat.len() as f64 * 0.95).ceil() as usize - 1).min(steady_lat.len() - 1)];
+        (throughput, power_w, p95)
+    };
     let steady_attainment = acc.steady_attainment();
 
     JobOutcome {
@@ -813,6 +830,7 @@ pub(crate) fn assemble_outcome(
         arrived,
         drops,
         dropped_deadline,
+        dropped_failure: 0,
         goodput: throughput * steady_attainment,
         queue_peak,
     }

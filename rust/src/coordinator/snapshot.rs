@@ -61,7 +61,7 @@ fn window_to_json(r: &WindowRecord) -> Json {
 pub fn job_outcome_to_json(o: &JobOutcome) -> Json {
     let lat_count: f64 = o.latencies.iter().map(|(_, w)| *w).sum();
     let lat_weighted_ms: f64 = o.latencies.iter().map(|(l, w)| l * w).sum();
-    obj(vec![
+    let mut fields = vec![
         ("job_id", num(o.job_id as f64)),
         ("dnn", Json::Str(o.dnn.clone())),
         ("controller", Json::Str(o.controller.clone())),
@@ -84,7 +84,13 @@ pub fn job_outcome_to_json(o: &JobOutcome) -> Json {
         ("latency_count", num(lat_count)),
         ("latency_weighted_sum_ms", num(lat_weighted_ms)),
         ("trace", Json::Arr(o.trace.iter().map(window_to_json).collect())),
-    ])
+    ];
+    // Crash losses only exist under cluster fault injection; omitting
+    // the key otherwise keeps every pre-faults snapshot byte-identical.
+    if o.dropped_failure > 0 {
+        fields.push(("dropped_failure", num(o.dropped_failure as f64)));
+    }
+    obj(fields)
 }
 
 /// Snapshot a fleet outcome (per-member snapshots + shared-GPU telemetry)
@@ -157,26 +163,48 @@ pub fn cluster_outcome_to_json(o: &ClusterOutcome) -> Json {
     // key entirely keeps static-run snapshots byte-identical to the
     // fixtures blessed before dynamics existed.
     if let Some(dy) = &o.dynamics {
-        fields.push((
-            "dynamics",
-            obj(vec![
-                ("launches", num(dy.launches as f64)),
-                ("failed_launches", num(dy.failed_launches as f64)),
-                ("retires", num(dy.retires as f64)),
-                ("migrations", num(dy.migrations as f64)),
-                ("migration_stall_ms", num(dy.migration_stall_ms)),
-                ("rejected_proposals", num(dy.rejected_proposals as f64)),
-                ("scale_ups", num(dy.scale_ups as f64)),
-                ("scale_downs", num(dy.scale_downs as f64)),
-                (
-                    "pool_trace",
-                    Json::Arr(dy.pool_trace.iter().map(|&n| num(n as f64)).collect()),
-                ),
-                ("device_hours", num(dy.device_hours)),
-                ("cost_usd", num(dy.cost_usd)),
-                ("cost_per_goodput", dy.cost_per_goodput.map_or(Json::Null, num)),
-            ]),
-        ));
+        let mut dyn_fields = vec![
+            ("launches", num(dy.launches as f64)),
+            ("failed_launches", num(dy.failed_launches as f64)),
+            ("retires", num(dy.retires as f64)),
+            ("migrations", num(dy.migrations as f64)),
+            ("migration_stall_ms", num(dy.migration_stall_ms)),
+            ("rejected_proposals", num(dy.rejected_proposals as f64)),
+            ("scale_ups", num(dy.scale_ups as f64)),
+            ("scale_downs", num(dy.scale_downs as f64)),
+            (
+                "pool_trace",
+                Json::Arr(dy.pool_trace.iter().map(|&n| num(n as f64)).collect()),
+            ),
+            ("device_hours", num(dy.device_hours)),
+            ("cost_usd", num(dy.cost_usd)),
+            ("cost_per_goodput", dy.cost_per_goodput.map_or(Json::Null, num)),
+        ];
+        // Both fault-era keys are conditional for the same reason the
+        // dynamics key itself is: snapshots blessed before fault
+        // injection existed must not drift.
+        if dy.deferred_launches > 0 {
+            dyn_fields.push(("deferred_launches", num(dy.deferred_launches as f64)));
+        }
+        if let Some(fo) = &dy.faults {
+            dyn_fields.push((
+                "faults",
+                obj(vec![
+                    ("crashes", num(fo.crashes as f64)),
+                    ("degrades", num(fo.degrades as f64)),
+                    ("repairs", num(fo.repairs as f64)),
+                    ("failovers", num(fo.failovers as f64)),
+                    ("failover_stall_ms", num(fo.failover_stall_ms)),
+                    ("dropped_failure", num(fo.dropped_failure as f64)),
+                    ("deferred_jobs", num(fo.deferred_jobs as f64)),
+                    (
+                        "pool_health",
+                        Json::Arr(fo.pool_health.iter().map(|&n| num(n as f64)).collect()),
+                    ),
+                ]),
+            ));
+        }
+        fields.push(("dynamics", obj(dyn_fields)));
     }
     obj(fields)
 }

@@ -53,10 +53,11 @@ use super::cluster::{
 };
 use super::dynamics::{
     blank_obs, free_mb, model_load_ms, most_free_fit, try_evacuate, ChurnSchedule, DynamicsCfg,
-    DynamicsOutcome, JobEvent, Live, PeriodicReplace, PoolObservation, ScaleAction,
-    ThresholdAutoscaler,
+    DynamicsOutcome, JobEvent, Live, Pending, PendingKind, PeriodicReplace, PoolObservation,
+    ScaleAction, ThresholdAutoscaler,
 };
 use super::engine::{SmShare, WindowAccum};
+use super::faults::{FaultEvent, FaultSchedule, FaultsOutcome, MAX_BACKOFF_WINDOWS};
 use super::fleet::{
     admit_window, arrival_seed, clamp_to_slice_ceilings, closed_member_outcome, finish_fleet,
     new_closed_member, new_open_member, open_member_outcome, plan_open_device_window, DeviceCtx,
@@ -71,8 +72,10 @@ use super::snapshot::{cluster_outcome_to_json, render};
 
 /// Scenario classes the generator cycles through (`case % NUM_CLASSES`):
 /// closed TimeShare fleet, MPS fleet, MIG fleet, closed cluster, open
-/// cluster, open cluster with churn + migration + autoscaling.
-pub const NUM_CLASSES: usize = 6;
+/// cluster, open cluster with churn + migration + autoscaling, and open
+/// cluster with fault injection (crashes, degrades, repairs, MTBF mode)
+/// interleaved with churn and autoscaling.
+pub const NUM_CLASSES: usize = 7;
 
 /// Human-readable name of a generator class.
 pub fn class_name(class: usize) -> &'static str {
@@ -82,7 +85,8 @@ pub fn class_name(class: usize) -> &'static str {
         2 => "fleet/mig",
         3 => "cluster/closed",
         4 => "cluster/open",
-        _ => "cluster/dynamics",
+        5 => "cluster/dynamics",
+        _ => "cluster/faults",
     }
 }
 
@@ -269,6 +273,15 @@ pub enum ChurnGene {
     Retire { window: usize, paper_id: u32 },
 }
 
+/// One fault-injection event, mirroring [`FaultEvent`] (device indices
+/// are pool positions, windows are control-window indices).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultGene {
+    Crash { window: usize, device: usize },
+    Degrade { window: usize, device: usize, factor: f64, for_windows: usize },
+    Repair { window: usize, device: usize },
+}
+
 /// Optional warehouse dynamics riding on a cluster scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DynamicsGene {
@@ -277,11 +290,19 @@ pub struct DynamicsGene {
     pub migrate: Option<(PlacementGene, usize)>,
     /// Threshold autoscaler bounds: (min_devices, max_devices).
     pub autoscale: Option<(usize, usize)>,
+    /// Explicit fault schedule (validated by the cluster builder).
+    pub faults: Vec<FaultGene>,
+    /// Stochastic fault mode: (mtbf_windows, mttr_windows).
+    pub mtbf: Option<(f64, f64)>,
 }
 
 impl DynamicsGene {
     fn is_empty(&self) -> bool {
-        self.churn.is_empty() && self.migrate.is_none() && self.autoscale.is_none()
+        self.churn.is_empty()
+            && self.migrate.is_none()
+            && self.autoscale.is_none()
+            && self.faults.is_empty()
+            && self.mtbf.is_none()
     }
 }
 
@@ -424,6 +445,26 @@ impl Scenario {
                     }
                     if let Some((min, max)) = dy.autoscale {
                         b = b.autoscaler(ThresholdAutoscaler::new(min, max));
+                    }
+                    if !dy.faults.is_empty() {
+                        let mut sched = FaultSchedule::new();
+                        for f in &dy.faults {
+                            sched = match *f {
+                                FaultGene::Crash { window, device } => {
+                                    sched.crash(device, window)
+                                }
+                                FaultGene::Degrade { window, device, factor, for_windows } => {
+                                    sched.degrade(device, window, factor, for_windows)
+                                }
+                                FaultGene::Repair { window, device } => {
+                                    sched.repair(device, window)
+                                }
+                            };
+                        }
+                        b = b.faults(sched);
+                    }
+                    if let Some((mtbf, mttr)) = dy.mtbf {
+                        b = b.stochastic_faults(mtbf, mttr);
                     }
                 }
                 b.build().map(Built::Cluster)
@@ -788,7 +829,7 @@ fn reference_dynamic<'a>(
     assignment: Assignment,
     dynamics: DynamicsCfg<'a>,
 ) -> Result<ClusterOutcome, DeviceError> {
-    let DynamicsCfg { churn, mut policy, mut autoscaler } = dynamics;
+    let DynamicsCfg { churn, mut policy, mut autoscaler, faults } = dynamics;
     let mut dyn_out = DynamicsOutcome::default();
 
     let mut events_at: Vec<Vec<JobEvent<'a>>> = (0..cfg.windows).map(|_| Vec::new()).collect();
@@ -797,6 +838,20 @@ fn reference_dynamic<'a>(
         events_at[w].push(e);
     }
 
+    // Fault schedule grouped by window (verbatim semantics: the fault
+    // and recovery arithmetic IS what is under test, so the reference
+    // mirrors it step for step — only the serving loop stays naive).
+    let have_faults = faults.is_some();
+    let failover_enabled = faults.as_ref().map_or(true, |f| f.failover);
+    let mut fault_at: Vec<Vec<FaultEvent>> = (0..cfg.windows).map(|_| Vec::new()).collect();
+    if let Some(f) = faults {
+        for e in f.events {
+            let w = e.window();
+            fault_at[w].push(e);
+        }
+    }
+    let mut fo = FaultsOutcome::default();
+
     let template = descs[0].spec.clone();
     let mut next_physical = descs.iter().map(|d| d.physical + 1).max().unwrap_or(0);
     let mut ctxs: Vec<DeviceCtx<'a>> = descs
@@ -804,6 +859,9 @@ fn reference_dynamic<'a>(
         .map(|d| DeviceCtx::new(d.mem_mb, d.perf_fraction, Partitioner::timeshare(0), cfg.windows))
         .collect();
     let mut active = vec![true; descs.len()];
+    let mut crashed = vec![false; descs.len()];
+    let mut degrade: Vec<(f64, usize)> = vec![(1.0, 0); descs.len()];
+    let mut pending: Vec<Pending<'a>> = Vec::new();
 
     let mut lives: Vec<Live<'a>> = Vec::new();
     let mut ended: Vec<(usize, usize, JobOutcome)> = Vec::new();
@@ -826,6 +884,66 @@ fn reference_dynamic<'a>(
     let mut pressures: Vec<f64> = vec![0.0; descs.len()];
 
     for w in 0..cfg.windows {
+        // -- 0. Faults (verbatim semantics). --
+        for e in std::mem::take(&mut fault_at[w]) {
+            match e {
+                FaultEvent::Crash { device, .. } => {
+                    crashed[device] = true;
+                    active[device] = false;
+                    fo.crashes += 1;
+                    let mut li = 0;
+                    while li < lives.len() {
+                        if lives[li].device != device {
+                            li += 1;
+                            continue;
+                        }
+                        fo.dropped_failure += lives[li].m.lp.fail_queue();
+                        let need = lives[li].pjob.mem_floor_mb;
+                        let dest = if failover_enabled {
+                            let free = free_mb(&descs, &lives);
+                            most_free_fit(&free, &active, need)
+                        } else {
+                            None
+                        };
+                        match dest {
+                            Some(d) => {
+                                let stall = model_load_ms(need);
+                                let l = &mut lives[li];
+                                l.m.lp.stall_ms(stall);
+                                l.device = d;
+                                fo.failovers += 1;
+                                fo.failover_stall_ms += stall;
+                                li += 1;
+                            }
+                            None => {
+                                let live = lives.remove(li);
+                                pending.push(Pending {
+                                    live,
+                                    kind: PendingKind::Failover,
+                                    next_retry: if failover_enabled {
+                                        w + 1
+                                    } else {
+                                        usize::MAX
+                                    },
+                                    backoff: 1,
+                                });
+                                fo.deferred_jobs += 1;
+                            }
+                        }
+                    }
+                }
+                FaultEvent::Degrade { device, factor, for_windows, .. } => {
+                    degrade[device] = (factor, for_windows);
+                    fo.degrades += 1;
+                }
+                FaultEvent::Repair { device, .. } => {
+                    crashed[device] = false;
+                    active[device] = true;
+                    fo.repairs += 1;
+                }
+            }
+        }
+
         // -- 1. Churn (verbatim semantics). --
         for e in std::mem::take(&mut events_at[w]) {
             match e {
@@ -843,7 +961,31 @@ fn reference_dynamic<'a>(
                     let pjob = PlacementJob::from_cfg(&cfg_m);
                     let free = free_mb(&descs, &lives);
                     let Some(d) = most_free_fit(&free, &active, pjob.mem_floor_mb) else {
-                        dyn_out.failed_launches += 1;
+                        if descs.iter().all(|dd| dd.mem_mb < pjob.mem_floor_mb) {
+                            dyn_out.failed_launches += 1;
+                            continue;
+                        }
+                        let m = new_open_member(
+                            cfg_m,
+                            cfg,
+                            seed + j as u64,
+                            arrival_seed(seed, j),
+                        )?;
+                        pending.push(Pending {
+                            live: Live {
+                                job_idx: j,
+                                device: usize::MAX,
+                                pjob,
+                                m,
+                                win: WindowAccum::new(),
+                                last_obs: None,
+                            },
+                            kind: PendingKind::Launch,
+                            next_retry: w + 1,
+                            backoff: 1,
+                        });
+                        dyn_out.deferred_launches += 1;
+                        fo.deferred_jobs += 1;
                         continue;
                     };
                     let mut m = new_open_member(cfg_m, cfg, seed + j as u64, arrival_seed(seed, j))?;
@@ -861,7 +1003,41 @@ fn reference_dynamic<'a>(
             }
         }
 
-        // -- 2. Live migration (verbatim semantics). --
+        // -- 2. Pending retry (verbatim semantics). --
+        let mut pi = 0;
+        while pi < pending.len() {
+            if pending[pi].next_retry > w {
+                pi += 1;
+                continue;
+            }
+            let need = pending[pi].live.pjob.mem_floor_mb;
+            let free = free_mb(&descs, &lives);
+            match most_free_fit(&free, &active, need) {
+                Some(d) => {
+                    let p = pending.remove(pi);
+                    let mut live = p.live;
+                    let stall = model_load_ms(need);
+                    live.m.lp.stall_ms(stall);
+                    live.device = d;
+                    match p.kind {
+                        PendingKind::Launch => dyn_out.launches += 1,
+                        PendingKind::Failover => {
+                            fo.failovers += 1;
+                            fo.failover_stall_ms += stall;
+                        }
+                    }
+                    lives.push(live);
+                }
+                None => {
+                    let p = &mut pending[pi];
+                    p.backoff = (p.backoff * 2).min(MAX_BACKOFF_WINDOWS);
+                    p.next_retry = w + p.backoff;
+                    pi += 1;
+                }
+            }
+        }
+
+        // -- 3. Live migration (verbatim semantics). --
         if let Some(pol) = policy.as_mut() {
             let active_idx: Vec<usize> = (0..descs.len()).filter(|&d| active[d]).collect();
             let active_descs: Vec<super::cluster::DeviceDesc> =
@@ -892,7 +1068,7 @@ fn reference_dynamic<'a>(
             }
         }
 
-        // -- 3. Autoscaling (verbatim semantics). --
+        // -- 4. Autoscaling (verbatim semantics). --
         if let Some(scaler) = autoscaler.as_mut() {
             let n_active = active.iter().filter(|&&a| a).count();
             let (sum_p, max_p) = (0..descs.len())
@@ -919,7 +1095,7 @@ fn reference_dynamic<'a>(
             match action {
                 ScaleAction::Hold => {}
                 ScaleAction::Grow => {
-                    if let Some(d) = (0..descs.len()).find(|&d| !active[d]) {
+                    if let Some(d) = (0..descs.len()).find(|&d| !active[d] && !crashed[d]) {
                         active[d] = true;
                     } else {
                         let desc = whole_desc(template.clone(), next_physical);
@@ -932,6 +1108,8 @@ fn reference_dynamic<'a>(
                         ));
                         descs.push(desc);
                         active.push(true);
+                        crashed.push(false);
+                        degrade.push((1.0, 0));
                         pressures.push(0.0);
                     }
                     dyn_out.scale_ups += 1;
@@ -950,8 +1128,9 @@ fn reference_dynamic<'a>(
             }
         }
         dyn_out.pool_trace.push(active.iter().filter(|&&a| a).count());
+        fo.pool_health.push((0..descs.len()).filter(|&d| !crashed[d]).count());
 
-        // -- 4. Serve naively: plan each device in pool order (same
+        // -- 5. Serve naively: plan each device in pool order (same
         //       coupling as the fast path), then run each device's
         //       members through the O(M) min-scan loop. --
         for p in pressures.iter_mut() {
@@ -979,7 +1158,7 @@ fn reference_dynamic<'a>(
                 ctx.mem_capacity_mb,
                 &mut ctx.admission_clamps,
             )?;
-            let g = ctx.perf_fraction;
+            let g = ctx.perf_fraction * degrade[d].0;
             let shr = ctx.parts.window_shares(
                 || {
                     members
@@ -996,7 +1175,7 @@ fn reference_dynamic<'a>(
                         .sum()
                 },
                 members.len(),
-                ctx.perf_fraction,
+                g,
                 &mut ctx.peak_contention,
                 &mut ctx.contention_trace,
                 &mut ctx.grant_trace,
@@ -1026,7 +1205,7 @@ fn reference_dynamic<'a>(
             reference_serve_span(cfg, &mut lives, &flat, &plan, start, len)?;
         }
 
-        // -- 5. Close the window (verbatim semantics). --
+        // -- 6. Close the window (verbatim semantics). --
         for (f, &li) in flat.iter().enumerate() {
             let l = &mut lives[li];
             let (pt, _, slo) = plan[f];
@@ -1039,7 +1218,7 @@ fn reference_dynamic<'a>(
             l.last_obs = Some(obs);
         }
 
-        // -- 6. Billing (verbatim semantics). --
+        // -- 7. Billing (verbatim semantics). --
         let now_max = lives.iter().map(|l| l.m.lp.now_s).fold(elapsed_s, f64::max);
         let span_h = (now_max - elapsed_s) / 3600.0;
         elapsed_s = now_max;
@@ -1047,6 +1226,27 @@ fn reference_dynamic<'a>(
             if active[d] {
                 dyn_out.device_hours += span_h;
                 dyn_out.cost_usd += descs[d].price_per_hour * span_h;
+            }
+        }
+
+        // Degrade timers tick per served window (verbatim semantics).
+        for dg in degrade.iter_mut() {
+            if dg.1 > 0 {
+                dg.1 -= 1;
+                if dg.1 == 0 {
+                    dg.0 = 1.0;
+                }
+            }
+        }
+    }
+
+    // End-of-run pendings (verbatim semantics): deferred launches never
+    // served, stranded crash victims finalize as-is.
+    for p in pending {
+        match p.kind {
+            PendingKind::Launch => dyn_out.failed_launches += 1,
+            PendingKind::Failover => {
+                ended.push((p.live.job_idx, p.live.device, open_member_outcome(p.live.m)));
             }
         }
     }
@@ -1076,6 +1276,9 @@ fn reference_dynamic<'a>(
     let total_throughput = devices.iter().map(|d| d.fleet.total_throughput).sum();
     let total_goodput: f64 = devices.iter().map(|d| d.fleet.total_goodput).sum();
     dyn_out.cost_per_goodput = (total_goodput > 0.0).then(|| dyn_out.cost_usd / total_goodput);
+    if have_faults {
+        dyn_out.faults = Some(fo);
+    }
     Ok(ClusterOutcome {
         devices,
         placement,
@@ -1306,6 +1509,20 @@ fn shrink_candidates(cur: &Scenario) -> Vec<Scenario> {
             let mut c = cur.clone();
             if let Some(d) = c.dynamics.as_mut() {
                 d.autoscale = None;
+            }
+            cands.push(c);
+        }
+        for e in 0..dy.faults.len() {
+            let mut c = cur.clone();
+            if let Some(d) = c.dynamics.as_mut() {
+                d.faults.remove(e);
+            }
+            cands.push(c);
+        }
+        if dy.mtbf.is_some() {
+            let mut c = cur.clone();
+            if let Some(d) = c.dynamics.as_mut() {
+                d.mtbf = None;
             }
             cands.push(c);
         }
@@ -1563,7 +1780,8 @@ fn gen_attempt(class: usize, seed: u64) -> Scenario {
                 dynamics: None,
             }
         }
-        _ => gen_dynamics_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
+        5 => gen_dynamics_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
+        _ => gen_faults_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
     }
 }
 
@@ -1614,7 +1832,7 @@ fn gen_dynamics_attempt(
     };
     let autoscale =
         if r.chance(0.5) { Some((1, n_dev + 1 + r.below(2))) } else { None };
-    let mut dy = DynamicsGene { churn, migrate, autoscale };
+    let mut dy = DynamicsGene { churn, migrate, autoscale, faults: Vec::new(), mtbf: None };
     if dy.is_empty() {
         dy.autoscale = Some((1, n_dev + 1));
     }
@@ -1626,6 +1844,86 @@ fn gen_dynamics_attempt(
         kind: ScenarioKind::Cluster { devices, placement: PlacementGene::RoundRobin },
         jobs,
         dynamics: Some(dy),
+    }
+}
+
+/// Class 6: fault injection interleaved with churn and autoscaling.
+/// Fault sequences are valid by construction — at most one per-device
+/// sequence (crash-only, crash then repair, or a degrade window), or a
+/// stochastic MTBF/MTTR draw with no explicit events — so rejection
+/// sampling rarely has to retry.
+fn gen_faults_attempt(
+    r: &mut Rng,
+    sc_seed: u64,
+    windows: usize,
+    rounds: usize,
+    threads: usize,
+) -> Scenario {
+    let n_dev = 2 + r.below(2);
+    let devices: Vec<DeviceGene> =
+        (0..n_dev).map(|_| DeviceGene { gpu: gen_gpu(r), mig: None }).collect();
+    let jobs: Vec<JobGene> = (0..1 + r.below(3)).map(|_| gen_job(r, true)).collect();
+
+    let mut churn = Vec::new();
+    if r.chance(0.5) {
+        churn.push(ChurnGene::Launch {
+            window: 1 + r.below(windows - 1),
+            paper_id: 1 + r.below(30) as u32,
+            rate: r.uniform_range(5.0, 60.0),
+        });
+    }
+    let autoscale =
+        if r.chance(0.4) { Some((1, n_dev + 1 + r.below(2))) } else { None };
+
+    let mut faults = Vec::new();
+    let mut mtbf = None;
+    if r.chance(0.3) {
+        // Stochastic mode: the schedule is materialized from the run
+        // seed inside the builder.
+        mtbf = Some((r.uniform_range(2.0, 6.0), r.uniform_range(1.0, 3.0)));
+    } else {
+        for device in 0..n_dev {
+            if !r.chance(0.6) {
+                continue;
+            }
+            match r.below(3) {
+                0 => {
+                    faults.push(FaultGene::Crash {
+                        window: 1 + r.below(windows - 1),
+                        device,
+                    });
+                }
+                1 if windows >= 3 => {
+                    let cw = 1 + r.below(windows - 2);
+                    faults.push(FaultGene::Crash { window: cw, device });
+                    faults.push(FaultGene::Repair {
+                        window: cw + 1 + r.below(windows - cw - 1),
+                        device,
+                    });
+                }
+                _ => {
+                    faults.push(FaultGene::Degrade {
+                        window: 1 + r.below(windows - 1),
+                        device,
+                        factor: r.uniform_range(0.3, 0.9),
+                        for_windows: 1 + r.below(3),
+                    });
+                }
+            }
+        }
+        if faults.is_empty() {
+            faults.push(FaultGene::Crash { window: 1 + r.below(windows - 1), device: 0 });
+        }
+    }
+
+    Scenario {
+        seed: sc_seed,
+        windows,
+        rounds,
+        threads,
+        kind: ScenarioKind::Cluster { devices, placement: PlacementGene::RoundRobin },
+        jobs,
+        dynamics: Some(DynamicsGene { churn, migrate: None, autoscale, faults, mtbf }),
     }
 }
 
@@ -1696,7 +1994,7 @@ pub fn fallback_scenario(class: usize, seed: u64) -> Scenario {
             ],
             None,
         ),
-        _ => base(
+        5 => base(
             ScenarioKind::Cluster {
                 devices: vec![
                     DeviceGene { gpu: GpuName::P40, mig: None },
@@ -1723,6 +2021,40 @@ pub fn fallback_scenario(class: usize, seed: u64) -> Scenario {
                 ],
                 migrate: Some((PlacementGene::RoundRobin, 2)),
                 autoscale: Some((1, 3)),
+                faults: Vec::new(),
+                mtbf: None,
+            }),
+        ),
+        _ => base(
+            ScenarioKind::Cluster {
+                devices: vec![
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                    DeviceGene { gpu: GpuName::P40, mig: None },
+                    DeviceGene { gpu: GpuName::T4, mig: None },
+                ],
+                placement: PlacementGene::RoundRobin,
+            },
+            vec![
+                JobGene::simple(
+                    1,
+                    PolicyGene::Static { bs: 2, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 20.0 },
+                ),
+                JobGene::simple(
+                    5,
+                    PolicyGene::Static { bs: 1, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 15.0 },
+                ),
+            ],
+            Some(DynamicsGene {
+                churn: vec![ChurnGene::Launch { window: 1, paper_id: 7, rate: 15.0 }],
+                migrate: None,
+                autoscale: None,
+                faults: vec![
+                    FaultGene::Crash { window: 2, device: 1 },
+                    FaultGene::Repair { window: 3, device: 1 },
+                ],
+                mtbf: None,
             }),
         ),
     }
@@ -1810,6 +2142,22 @@ pub fn to_canon(sc: &Scenario) -> String {
         if let Some((min, max)) = dy.autoscale {
             s.push_str(&format!("autoscale={min}:{max}\n"));
         }
+        for f in &dy.faults {
+            match *f {
+                FaultGene::Crash { window, device } => {
+                    s.push_str(&format!("fault=crash:{window}:{device}\n"));
+                }
+                FaultGene::Degrade { window, device, factor, for_windows } => {
+                    s.push_str(&format!("fault=degrade:{window}:{device}:{factor}:{for_windows}\n"));
+                }
+                FaultGene::Repair { window, device } => {
+                    s.push_str(&format!("fault=repair:{window}:{device}\n"));
+                }
+            }
+        }
+        if let Some((mtbf, mttr)) = dy.mtbf {
+            s.push_str(&format!("mtbf={mtbf}:{mttr}\n"));
+        }
     }
     s
 }
@@ -1891,6 +2239,8 @@ pub fn from_canon(text: &str) -> Result<Scenario, String> {
     let mut churn: Vec<ChurnGene> = Vec::new();
     let mut migrate = None;
     let mut autoscale = None;
+    let mut faults: Vec<FaultGene> = Vec::new();
+    let mut mtbf = None;
 
     for raw in text.lines() {
         let line = raw.trim();
@@ -1975,6 +2325,33 @@ pub fn from_canon(text: &str) -> Result<Scenario, String> {
                     parse_num::<usize>("autoscale max", max)?,
                 ));
             }
+            "fault" => {
+                let parts: Vec<&str> = v.split(':').collect();
+                faults.push(match parts[0] {
+                    "crash" if parts.len() == 3 => FaultGene::Crash {
+                        window: parse_num("fault window", parts[1])?,
+                        device: parse_num("fault device", parts[2])?,
+                    },
+                    "degrade" if parts.len() == 5 => FaultGene::Degrade {
+                        window: parse_num("fault window", parts[1])?,
+                        device: parse_num("fault device", parts[2])?,
+                        factor: parse_num("degrade factor", parts[3])?,
+                        for_windows: parse_num("degrade duration", parts[4])?,
+                    },
+                    "repair" if parts.len() == 3 => FaultGene::Repair {
+                        window: parse_num("fault window", parts[1])?,
+                        device: parse_num("fault device", parts[2])?,
+                    },
+                    _ => return Err(format!("bad fault: {v:?}")),
+                });
+            }
+            "mtbf" => {
+                let (m, t) = v.split_once(':').ok_or_else(|| format!("bad mtbf: {v:?}"))?;
+                mtbf = Some((
+                    parse_num::<f64>("mtbf windows", m)?,
+                    parse_num::<f64>("mttr windows", t)?,
+                ));
+            }
             _ => return Err(format!("unknown key: {k:?}")),
         }
     }
@@ -1994,10 +2371,15 @@ pub fn from_canon(text: &str) -> Result<Scenario, String> {
             }
         }
     };
-    let dynamics = if churn.is_empty() && migrate.is_none() && autoscale.is_none() {
+    let dynamics = if churn.is_empty()
+        && migrate.is_none()
+        && autoscale.is_none()
+        && faults.is_empty()
+        && mtbf.is_none()
+    {
         None
     } else {
-        Some(DynamicsGene { churn, migrate, autoscale })
+        Some(DynamicsGene { churn, migrate, autoscale, faults, mtbf })
     };
     Ok(Scenario {
         seed: seed.ok_or("missing seed=")?,
@@ -2161,7 +2543,47 @@ mod tests {
             churn: Vec::new(),
             migrate: None,
             autoscale: Some((1, 2)),
+            faults: Vec::new(),
+            mtbf: None,
         });
         assert!(sc.build().is_err(), "fleet scenarios must refuse dynamics");
+    }
+
+    #[test]
+    fn fault_fallback_reports_fault_telemetry() {
+        let sc = fallback_scenario(6, 5);
+        let out = match sc.build().expect("fault fallback must build") {
+            Built::Cluster(c) => c.run().expect("fault fallback must run"),
+            Built::Fleet(_) => panic!("fault fallback must be a cluster scenario"),
+        };
+        let dy = out.dynamics.as_ref().expect("dynamic run must report dynamics");
+        let fo = dy.faults.as_ref().expect("faulty run must report fault telemetry");
+        assert_eq!(fo.crashes, 1);
+        assert_eq!(fo.repairs, 1);
+        assert_eq!(fo.pool_health.len(), sc.windows);
+        assert!(fo.pool_health.iter().any(|&h| h < 3), "a crash window must show up");
+        assert!(out.audit().is_ok(), "fault run must conserve requests: {:?}", out.audit());
+    }
+
+    #[test]
+    fn canon_round_trips_fault_and_mtbf_lines() {
+        let sc = fallback_scenario(6, 17);
+        assert_eq!(from_canon(&to_canon(&sc)), Ok(sc));
+        let mut sc = fallback_scenario(6, 18);
+        if let Some(dy) = sc.dynamics.as_mut() {
+            dy.faults = vec![FaultGene::Degrade {
+                window: 1,
+                device: 0,
+                factor: 0.625,
+                for_windows: 2,
+            }];
+            dy.mtbf = None;
+        }
+        assert_eq!(from_canon(&to_canon(&sc)), Ok(sc.clone()));
+        if let Some(dy) = sc.dynamics.as_mut() {
+            dy.faults = Vec::new();
+            dy.mtbf = Some((3.5, 1.25));
+        }
+        assert_eq!(from_canon(&to_canon(&sc)), Ok(sc));
     }
 }

@@ -35,7 +35,7 @@ pub mod perf;
 pub mod power;
 pub mod profiles;
 
-pub use noise::NoiseModel;
+pub use noise::{NoiseError, NoiseModel};
 pub use partition::{
     check_mem_ceilings, plan_grants, plan_mem_ceilings, quantize_to_slices, PartitionError,
     PartitionMode, SmPool, DEFAULT_MIG_SLICES, MIN_GRANT,

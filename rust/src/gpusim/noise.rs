@@ -7,6 +7,41 @@
 
 use crate::rng::Rng;
 
+use std::fmt;
+
+/// A rejected [`NoiseModel::with_params`] configuration. Silent
+/// acceptance of a negative sigma or an inverted spike range would
+/// produce NaN latencies (or spikes that *shrink* latency) deep inside
+/// a run; reject at construction instead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NoiseError {
+    /// `sigma` must be finite and non-negative.
+    NegativeSigma { sigma: f64 },
+    /// `spike_prob` must be a finite probability in `[0, 1]`.
+    BadSpikeProb { spike_prob: f64 },
+    /// `spike_range` must satisfy `0 < lo <= hi`, both finite (spikes
+    /// are latency *inflations*).
+    BadSpikeRange { lo: f64, hi: f64 },
+}
+
+impl fmt::Display for NoiseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NoiseError::NegativeSigma { sigma } => {
+                write!(f, "noise sigma must be finite and >= 0, got {sigma}")
+            }
+            NoiseError::BadSpikeProb { spike_prob } => {
+                write!(f, "spike probability must be a finite value in [0, 1], got {spike_prob}")
+            }
+            NoiseError::BadSpikeRange { lo, hi } => {
+                write!(f, "spike range must satisfy 0 < lo <= hi, got ({lo}, {hi})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NoiseError {}
+
 /// Multiplicative latency noise process.
 #[derive(Debug, Clone)]
 pub struct NoiseModel {
@@ -24,23 +59,42 @@ impl NoiseModel {
     /// probability with 1.5-3x multipliers.
     pub fn new(seed: u64) -> Self {
         Self::with_params(seed, 0.055, 0.008, (1.5, 3.0))
+            .expect("default noise parameters are valid")
     }
 
     /// Fully parameterized constructor (used by tests and ablations).
-    pub fn with_params(seed: u64, sigma: f64, spike_prob: f64, spike_range: (f64, f64)) -> Self {
+    /// Rejects parameters that would corrupt sampling — see
+    /// [`NoiseError`].
+    pub fn with_params(
+        seed: u64,
+        sigma: f64,
+        spike_prob: f64,
+        spike_range: (f64, f64),
+    ) -> Result<Self, NoiseError> {
+        if !sigma.is_finite() || sigma < 0.0 {
+            return Err(NoiseError::NegativeSigma { sigma });
+        }
+        if !spike_prob.is_finite() || !(0.0..=1.0).contains(&spike_prob) {
+            return Err(NoiseError::BadSpikeProb { spike_prob });
+        }
+        let (lo, hi) = spike_range;
+        if !lo.is_finite() || !hi.is_finite() || lo <= 0.0 || hi < lo {
+            return Err(NoiseError::BadSpikeRange { lo, hi });
+        }
         // mu = -sigma^2/2 keeps the mean multiplier at 1.0.
-        NoiseModel {
+        Ok(NoiseModel {
             rng: Rng::new(seed),
             mu: -sigma * sigma / 2.0,
             sigma,
             spike_prob,
             spike_range,
-        }
+        })
     }
 
     /// Disable all noise (deterministic latencies).
     pub fn none(seed: u64) -> Self {
         Self::with_params(seed, 1e-9, 0.0, (1.0, 1.0))
+            .expect("noise-free parameters are valid")
     }
 
     /// Sample one observed latency around `mean_ms`.
@@ -65,7 +119,7 @@ mod tests {
 
     #[test]
     fn mean_preserving() {
-        let mut n = NoiseModel::with_params(1, 0.055, 0.0, (1.0, 1.0));
+        let mut n = NoiseModel::with_params(1, 0.055, 0.0, (1.0, 1.0)).unwrap();
         let samples: Vec<f64> = (0..20000).map(|_| n.sample_latency(100.0)).collect();
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         assert!((mean - 100.0).abs() < 1.0, "mean {mean}");
@@ -73,7 +127,7 @@ mod tests {
 
     #[test]
     fn p95_close_to_analytic() {
-        let mut n = NoiseModel::with_params(2, 0.055, 0.0, (1.0, 1.0));
+        let mut n = NoiseModel::with_params(2, 0.055, 0.0, (1.0, 1.0)).unwrap();
         let mut samples: Vec<f64> = (0..20000).map(|_| n.sample_latency(1.0)).collect();
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p95 = samples[(samples.len() as f64 * 0.95) as usize];
@@ -83,7 +137,7 @@ mod tests {
 
     #[test]
     fn spikes_appear_at_configured_rate() {
-        let mut n = NoiseModel::with_params(3, 1e-9, 0.05, (2.0, 2.0));
+        let mut n = NoiseModel::with_params(3, 1e-9, 0.05, (2.0, 2.0)).unwrap();
         let spikes = (0..10000).filter(|_| n.sample_latency(1.0) > 1.5).count();
         assert!((300..=700).contains(&spikes), "spikes {spikes}");
     }
@@ -104,5 +158,58 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.sample_latency(5.0), b.sample_latency(5.0));
         }
+    }
+
+    #[test]
+    fn negative_or_non_finite_sigma_is_rejected() {
+        for sigma in [-0.1, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(
+                matches!(
+                    NoiseModel::with_params(1, sigma, 0.0, (1.0, 1.0)),
+                    Err(NoiseError::NegativeSigma { .. })
+                ),
+                "sigma {sigma} must be rejected"
+            );
+        }
+        // Zero sigma is legitimate (degenerate lognormal).
+        assert!(NoiseModel::with_params(1, 0.0, 0.0, (1.0, 1.0)).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_spike_prob_is_rejected() {
+        for p in [-0.01, 1.01, f64::NAN, f64::INFINITY] {
+            assert!(
+                matches!(
+                    NoiseModel::with_params(1, 0.05, p, (1.5, 3.0)),
+                    Err(NoiseError::BadSpikeProb { .. })
+                ),
+                "spike_prob {p} must be rejected"
+            );
+        }
+        // The closed endpoints are legitimate.
+        assert!(NoiseModel::with_params(1, 0.05, 0.0, (1.5, 3.0)).is_ok());
+        assert!(NoiseModel::with_params(1, 0.05, 1.0, (1.5, 3.0)).is_ok());
+    }
+
+    #[test]
+    fn inverted_or_non_positive_spike_range_is_rejected() {
+        for (lo, hi) in [
+            (3.0, 1.5),
+            (0.0, 2.0),
+            (-1.0, 2.0),
+            (f64::NAN, 2.0),
+            (1.5, f64::NAN),
+            (1.5, f64::INFINITY),
+        ] {
+            assert!(
+                matches!(
+                    NoiseModel::with_params(1, 0.05, 0.01, (lo, hi)),
+                    Err(NoiseError::BadSpikeRange { .. })
+                ),
+                "spike range ({lo}, {hi}) must be rejected"
+            );
+        }
+        // A degenerate point range is legitimate.
+        assert!(NoiseModel::with_params(1, 0.05, 0.01, (2.0, 2.0)).is_ok());
     }
 }

@@ -32,7 +32,7 @@ use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
 use dnnscaler::coordinator::session::{
     JobOutcome, PolicySpec, RunConfig, ServingSession, DEFAULT_BATCH_TIMEOUT_MS,
 };
-use dnnscaler::coordinator::{Fleet, Method, Profiler};
+use dnnscaler::coordinator::{FaultSchedule, Fleet, Method, Profiler};
 #[cfg(feature = "xla")]
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::gpusim::{Dataset, GpuSim, PartitionMode, PAPER_DNNS};
@@ -75,6 +75,7 @@ COMMANDS:
            [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,..] [--shed] [--timeout-ms MS] [--queue-cap N]
            [--churn EV1,EV2,..] [--migrate POLICY[:N]] [--autoscale MIN:MAX]
+           [--faults EV1,EV2,..] [--mtbf W [--mttr W]]
            [--price P1,P2,..] [--threads N]
            Serve jobs across a HETEROGENEOUS pool of devices — the
            scheduling layer above one GPU. Device specs: p40 | p4 | t4,
@@ -96,6 +97,15 @@ COMMANDS:
            catalogue prices (P40 $1.20/h, T4 $0.53/h, P4 $0.60/h;
            override with --price, one value or one per device) and
            reporting cost per unit goodput.
+           Fault injection (needs --rates; see docs/faults.md): --faults
+           schedules window-boundary events, each crash:DEV@W (device
+           DEV dies at window W: queued work is lost, survivors fail
+           over to other devices or wait with exponential backoff),
+           degrade:DEV@W:FACTOR:N (DEV runs at FACTOR of its SM capacity
+           for N windows), or repair:DEV@W. --mtbf draws per-device
+           crash/repair events from exponential MTBF/MTTR distributions
+           (both in windows, --mttr default 1) deterministically from
+           --seed.
            --threads N shards the per-device event loops across N worker
            threads; output is byte-identical to --threads 1 (the serial
            engine) at every N.
@@ -416,6 +426,9 @@ fn main() -> Result<()> {
                     "churn",
                     "migrate",
                     "autoscale",
+                    "faults",
+                    "mtbf",
+                    "mttr",
                     "price",
                     "threads",
                 ],
@@ -890,6 +903,52 @@ fn parse_churn(flags: &Flags, s: &str) -> Result<ChurnSchedule<'static>> {
     Ok(churn)
 }
 
+/// Parse `--faults crash:DEV@W,degrade:DEV@W:FACTOR:N,repair:DEV@W` into
+/// a schedule; device indices and window bounds are validated against
+/// the pool by the cluster builder.
+fn parse_faults(s: &str) -> Result<FaultSchedule> {
+    let mut sched = FaultSchedule::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        let (kind, rest) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--faults: {tok:?} is not crash:DEV@W, degrade:DEV@W:FACTOR:N, or repair:DEV@W"))?;
+        let mut parts = rest.split(':');
+        let at = parts.next().unwrap_or("");
+        let (d_s, w_s) = at
+            .split_once('@')
+            .ok_or_else(|| anyhow!("--faults: {tok:?} is missing DEV@WINDOW"))?;
+        let device: usize =
+            d_s.parse().map_err(|_| anyhow!("--faults: bad device {d_s:?} in {tok:?}"))?;
+        let window: usize =
+            w_s.parse().map_err(|_| anyhow!("--faults: bad window {w_s:?} in {tok:?}"))?;
+        let extras: Vec<&str> = parts.collect();
+        sched = match (kind, extras.as_slice()) {
+            ("crash", []) => sched.crash(device, window),
+            ("repair", []) => sched.repair(device, window),
+            ("degrade", [f_s, n_s]) => {
+                let factor: f64 = f_s
+                    .parse()
+                    .map_err(|_| anyhow!("--faults: bad factor {f_s:?} in {tok:?}"))?;
+                let for_windows: usize = n_s
+                    .parse()
+                    .map_err(|_| anyhow!("--faults: bad duration {n_s:?} in {tok:?}"))?;
+                sched.degrade(device, window, factor, for_windows)
+            }
+            ("degrade", _) => {
+                bail!("--faults: degrade wants degrade:DEV@W:FACTOR:WINDOWS ({tok:?})")
+            }
+            ("crash" | "repair", _) => {
+                bail!("--faults: {kind} takes no extra fields ({tok:?})")
+            }
+            (other, _) => {
+                bail!("--faults: unknown fault {other:?} (crash, degrade, or repair)")
+            }
+        };
+    }
+    Ok(sched)
+}
+
 fn cmd_cluster(flags: &Flags) -> Result<()> {
     let devices_arg = flags
         .get("devices")
@@ -918,9 +977,17 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     if rates.is_none() && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
         bail!("--shed/--timeout-ms/--queue-cap need --rates (open-loop cluster)");
     }
-    let dynamic = flags.has("churn") || flags.has("migrate") || flags.has("autoscale");
+    let dynamic = flags.has("churn")
+        || flags.has("migrate")
+        || flags.has("autoscale")
+        || flags.has("faults")
+        || flags.has("mtbf")
+        || flags.has("mttr");
     if dynamic && rates.is_none() {
-        bail!("--churn/--migrate/--autoscale need --rates (open-loop cluster)");
+        bail!("--churn/--migrate/--autoscale/--faults/--mtbf need --rates (open-loop cluster)");
+    }
+    if flags.has("mttr") && !flags.has("mtbf") {
+        bail!("--mttr needs --mtbf (stochastic fault injection)");
     }
 
     let mut b = Cluster::builder()
@@ -981,6 +1048,17 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         let max: usize =
             max_s.parse().map_err(|_| anyhow!("--autoscale: bad MAX {max_s:?}"))?;
         b = b.autoscaler(ThresholdAutoscaler::new(min, max));
+    }
+    if let Some(s) = flags.get("faults") {
+        b = b.faults(parse_faults(s)?);
+    }
+    if let Some(m) = flags.get("mtbf") {
+        let mtbf: f64 = m.parse().map_err(|_| anyhow!("--mtbf: cannot parse {m:?}"))?;
+        let mttr: f64 = match flags.get("mttr") {
+            None => 1.0,
+            Some(t) => t.parse().map_err(|_| anyhow!("--mttr: cannot parse {t:?}"))?,
+        };
+        b = b.stochastic_faults(mtbf, mttr);
     }
     if let Some(s) = flags.get("price") {
         b = b.prices(&parse_positive_list("price", s)?);
@@ -1062,6 +1140,21 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
                 .map_or(String::new(), |c| format!(" (${c:.5} per inf/s of goodput)")),
             dy.pool_trace,
         );
+        if let Some(fo) = &dy.faults {
+            println!(
+                "faults: {} crash(es), {} degrade(s), {} repair(s) | {} failover(s) \
+                 ({:.0} ms stall), {} request(s) lost, {} job(s) deferred | \
+                 healthy devices per window {:?}",
+                fo.crashes,
+                fo.degrades,
+                fo.repairs,
+                fo.failovers,
+                fo.failover_stall_ms,
+                fo.dropped_failure,
+                fo.deferred_jobs,
+                fo.pool_health,
+            );
+        }
     }
     for dev in &out.devices {
         if !dev.fleet.members.is_empty() {
@@ -1391,6 +1484,26 @@ mod tests {
             ["launch:3@2:x45", "retire:1@5:r3", "boop:1@5", "launch:99@0", "launch:3", "retire:a@b"]
         {
             assert!(super::parse_churn(&f, bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn faults_flag_parses_crash_degrade_and_repair_events() {
+        let sched = super::parse_faults("crash:1@2, degrade:0@1:0.5:3, repair:1@4").unwrap();
+        assert_eq!(sched.len(), 3);
+        // Kinds are fixed; crash/repair take no extras; degrade wants
+        // exactly FACTOR and WINDOWS; DEV@W is mandatory everywhere.
+        for bad in [
+            "crash:1",
+            "crash:1@2:9",
+            "repair:1@2:0.5",
+            "degrade:0@1",
+            "degrade:0@1:0.5",
+            "degrade:0@1:x:3",
+            "melt:1@2",
+            "crash:a@b",
+        ] {
+            assert!(super::parse_faults(bad).is_err(), "{bad:?} should be rejected");
         }
     }
 }

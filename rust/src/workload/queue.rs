@@ -56,6 +56,10 @@ pub struct RequestQueue {
     /// Accepted requests later shed because their queueing delay alone
     /// exceeded the deadline (see [`RequestQueue::shed_expired`]).
     pub dropped_deadline: u64,
+    /// Accepted requests lost wholesale to a device failure (see
+    /// [`RequestQueue::fail_all`]), separate from capacity and deadline
+    /// drops.
+    pub dropped_failure: u64,
 }
 
 impl RequestQueue {
@@ -185,6 +189,18 @@ impl RequestQueue {
         shed
     }
 
+    /// Device failure: every waiting request is lost at once. Drains the
+    /// queue and counts the losses in [`RequestQueue::dropped_failure`].
+    /// Returns how many were lost. The ring storage is kept — a repaired
+    /// or failed-over member keeps its zero-steady-state-allocation
+    /// behavior.
+    pub fn fail_all(&mut self) -> u64 {
+        let lost = self.len as u64;
+        self.len = 0;
+        self.dropped_failure += lost;
+        lost
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -272,6 +288,24 @@ mod tests {
         assert_eq!(q.dropped_deadline, 2);
         // Capacity drops stay a separate counter.
         assert_eq!(q.dropped, 0);
+    }
+
+    #[test]
+    fn fail_all_drains_and_counts_separately() {
+        let mut q = RequestQueue::bounded(3);
+        q.extend([0.1, 0.2, 0.3, 0.4]); // fourth overflows
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.fail_all(), 3);
+        assert!(q.is_empty());
+        assert_eq!(q.dropped_failure, 3);
+        assert_eq!(q.dropped, 1, "capacity drops stay a separate counter");
+        assert_eq!(q.dropped_deadline, 0);
+        // The queue keeps working (and counting) after the failure.
+        assert!(q.push(0.5).is_some());
+        assert_eq!(q.oldest_arrival(), Some(0.5));
+        assert_eq!(q.fail_all(), 1);
+        assert_eq!(q.dropped_failure, 4);
+        assert_eq!(q.fail_all(), 0, "empty-queue failure is a no-op");
     }
 
     #[test]

@@ -545,3 +545,104 @@ fn proposals_targeting_a_retired_device_are_rejected() {
     assert_eq!(out.assignment, vec![0], "the job must stay where it was placed");
     assert_eq!(out.audit(), Ok(()));
 }
+
+// ---- Deferred launches (ISSUE 9 satellite) ---------------------------
+
+/// Regression: a churned launch that fails placement because the pool is
+/// momentarily full used to be dropped forever. It must instead wait in
+/// the pending queue and place once a retire frees the memory.
+#[test]
+fn launch_that_finds_no_room_waits_and_places_after_a_retire() {
+    use dnnscaler::gpusim::{GpuSim, GpuSpec};
+
+    // One card sized for a single inc-v4 footprint: the window-1 launch
+    // of a second copy cannot fit until the first retires at window 2.
+    let job = paper_job(3).unwrap();
+    let footprint = GpuSim::for_paper_dnn(job.dnn, job.dataset, 0).unwrap().mem_demand_mb(1, 1);
+    let gpu = GpuSpec { mem_mb: footprint * 1.8, ..TESLA_P40 };
+
+    let out = Cluster::builder()
+        .device(gpu)
+        .job_with_arrivals(
+            job,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .churn(
+            ChurnSchedule::new()
+                .launch(
+                    1,
+                    job,
+                    PolicySpec::Static { bs: 1, mtl: 1 },
+                    ArrivalPattern::poisson(15.0),
+                )
+                .retire(2, job.id),
+        )
+        .windows(6)
+        .rounds_per_window(10)
+        .seed(31)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    assert_eq!(dy.deferred_launches, 1, "the full pool must defer, not drop");
+    assert_eq!(dy.failed_launches, 0, "a deferred launch is not a failed one");
+    assert_eq!(dy.launches, 1, "the retry must place it once memory frees");
+    assert_eq!(dy.retires, 1);
+    let served: usize = out.devices.iter().map(|d| d.fleet.members.len()).sum();
+    assert_eq!(served, 2, "both the retiree and the deferred job finish with outcomes");
+    assert_eq!(out.audit(), Ok(()));
+    // Deferral is a dynamics fact, not a fault: the snapshot gains the
+    // deferred_launches key but no faults section.
+    let snap = snapshot(&out);
+    assert!(snap.contains("\"deferred_launches\""));
+    assert!(!snap.contains("\"faults\""));
+}
+
+/// A launch whose footprint exceeds EVERY device the pool could ever
+/// hold is permanently infeasible: counted as failed immediately, never
+/// parked, never retried.
+#[test]
+fn launch_too_big_for_any_device_fails_immediately() {
+    use dnnscaler::gpusim::{GpuSim, GpuSpec};
+
+    let small = paper_job(1).unwrap();
+    let big = paper_job(3).unwrap();
+    let small_fp =
+        GpuSim::for_paper_dnn(small.dnn, small.dataset, 0).unwrap().mem_demand_mb(1, 1);
+    let big_fp = GpuSim::for_paper_dnn(big.dnn, big.dataset, 0).unwrap().mem_demand_mb(1, 1);
+    // A card that serves the small job fine but can never hold the big
+    // one, no matter what retires.
+    let gpu = GpuSpec { mem_mb: (small_fp * 1.5).min(big_fp * 0.9), ..TESLA_P40 };
+    assert!(gpu.mem_mb >= small_fp, "precondition: the small job must fit");
+    assert!(gpu.mem_mb < big_fp, "precondition: the big job must never fit");
+
+    let out = Cluster::builder()
+        .device(gpu)
+        .job_with_arrivals(
+            small,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(15.0),
+        )
+        .churn(ChurnSchedule::new().launch(
+            1,
+            big,
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(15.0),
+        ))
+        .windows(5)
+        .rounds_per_window(8)
+        .seed(37)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    assert_eq!(dy.failed_launches, 1, "an impossible footprint is a hard failure");
+    assert_eq!(dy.deferred_launches, 0, "it must not sit in the pending queue");
+    assert_eq!(dy.launches, 0);
+    let served: usize = out.devices.iter().map(|d| d.fleet.members.len()).sum();
+    assert_eq!(served, 1, "only the initial job ever serves");
+    assert_eq!(out.audit(), Ok(()));
+}

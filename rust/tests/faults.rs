@@ -1,0 +1,426 @@
+//! Fault-injection integration tests: crashes, degradation, repair, and
+//! retry-with-backoff failover through the public `Cluster` API —
+//! including the failover-vs-stranded goodput A/B, the audit with
+//! crash-lost work, thread-count byte-identity on faulty runs, and the
+//! fault-free byte-identity guarantee.
+
+use dnnscaler::coordinator::cluster::ClusterOutcome;
+use dnnscaler::coordinator::dynamics::ChurnSchedule;
+use dnnscaler::coordinator::job::paper_job;
+use dnnscaler::coordinator::session::{ConfigError, PolicySpec};
+use dnnscaler::coordinator::snapshot::{cluster_outcome_to_json, render};
+use dnnscaler::coordinator::{Cluster, FaultSchedule};
+use dnnscaler::gpusim::TESLA_P40;
+use dnnscaler::workload::ArrivalPattern;
+
+fn snapshot(out: &ClusterOutcome) -> String {
+    render(&cluster_outcome_to_json(out))
+}
+
+/// Out-of-range targets, double crashes, repairs of healthy devices,
+/// and nonsense degrade factors are all typed `ConfigError::BadFaults`
+/// from `build()` — never runtime surprises.
+#[test]
+fn invalid_fault_schedules_fail_at_build() {
+    let base = || {
+        Cluster::builder()
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(20.0),
+            )
+            .windows(6)
+            .rounds_per_window(8)
+            .seed(3)
+    };
+    let cases: Vec<(&str, FaultSchedule)> = vec![
+        ("device out of range", FaultSchedule::new().crash(7, 1)),
+        ("window out of range", FaultSchedule::new().crash(0, 6)),
+        ("double crash", FaultSchedule::new().crash(0, 1).crash(0, 3)),
+        ("repair of never-crashed device", FaultSchedule::new().repair(0, 2)),
+        (
+            "repair of already-repaired device",
+            FaultSchedule::new().crash(0, 1).repair(0, 2).repair(0, 3),
+        ),
+        ("degrade of a down device", FaultSchedule::new().crash(0, 1).degrade(0, 2, 0.5, 2)),
+        ("degrade factor zero", FaultSchedule::new().degrade(0, 1, 0.0, 2)),
+        ("degrade factor above one", FaultSchedule::new().degrade(0, 1, 1.5, 2)),
+        ("degrade for zero windows", FaultSchedule::new().degrade(0, 1, 0.5, 0)),
+    ];
+    for (what, sched) in cases {
+        let err = base().faults(sched).build().err().unwrap_or_else(|| {
+            panic!("{what} must be rejected at build");
+        });
+        assert!(matches!(err, ConfigError::BadFaults { .. }), "{what}: got {err:?}");
+    }
+    // Bad stochastic parameters are equally typed.
+    for (mtbf, mttr) in [(0.0, 1.0), (-3.0, 1.0), (3.0, 0.0), (f64::NAN, 1.0), (3.0, f64::NAN)] {
+        let err = base()
+            .stochastic_faults(mtbf, mttr)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("mtbf {mtbf} / mttr {mttr} must be rejected"));
+        assert!(matches!(err, ConfigError::BadFaults { .. }), "got {err:?}");
+    }
+}
+
+/// Crashing the only device at window 0 strands the job for the whole
+/// run: nothing serves, nothing fails over, and the accounting still
+/// balances (no phantom arrivals, no phantom drops).
+#[test]
+fn crash_at_window_zero_of_the_only_device_strands_the_job() {
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(25.0),
+        )
+        .faults(FaultSchedule::new().crash(0, 0))
+        .windows(4)
+        .rounds_per_window(8)
+        .seed(5)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().expect("faulty run must report dynamics");
+    let fo = dy.faults.as_ref().expect("faulty run must report fault telemetry");
+    assert_eq!(fo.crashes, 1);
+    assert_eq!(fo.failovers, 0, "there is nowhere to fail over to");
+    assert_eq!(fo.deferred_jobs, 1);
+    assert_eq!(fo.pool_health, vec![0; 4], "the only device is down all run");
+    assert_eq!(out.total_throughput, 0.0);
+    assert_eq!(out.audit(), Ok(()));
+}
+
+/// Crash the only device, then repair it: the stranded job's backoff
+/// retry re-places it on the repaired card and it finishes the run.
+#[test]
+fn stranded_job_returns_after_repair() {
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(25.0),
+        )
+        .faults(FaultSchedule::new().crash(0, 1).repair(0, 2))
+        .windows(8)
+        .rounds_per_window(8)
+        .seed(7)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    let fo = dy.faults.as_ref().unwrap();
+    assert_eq!(fo.crashes, 1);
+    assert_eq!(fo.repairs, 1);
+    assert_eq!(fo.deferred_jobs, 1, "the crash must park the job");
+    assert_eq!(fo.failovers, 1, "the retry must re-place it after the repair");
+    assert!(fo.failover_stall_ms > 0.0, "re-placement pays the model load");
+    assert_eq!(fo.pool_health, vec![1, 0, 1, 1, 1, 1, 1, 1]);
+    let served: usize = out.devices.iter().map(|d| d.fleet.members.len()).sum();
+    assert_eq!(served, 1, "the job must finish with a real outcome");
+    assert!(out.total_throughput > 0.0);
+    assert_eq!(out.audit(), Ok(()));
+}
+
+/// A crash while a heavily-loaded job holds a backlog drops that queue
+/// into `dropped_failure`; the conservation audit must account for it
+/// and the snapshot must expose it.
+#[test]
+fn crash_drops_queued_work_and_the_audit_accounts_for_it() {
+    // Job 3 (inc-v4) at 150 req/s oversubscribes a P40: a backlog is
+    // guaranteed to be standing in the queue at every window boundary.
+    let out = Cluster::builder()
+        .device(TESLA_P40)
+        .device(TESLA_P40)
+        .job_with_arrivals(
+            paper_job(3).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(150.0),
+        )
+        .job_with_arrivals(
+            paper_job(1).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(20.0),
+        )
+        .faults(FaultSchedule::new().crash(0, 2))
+        .windows(6)
+        .rounds_per_window(10)
+        .seed(11)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let dy = out.dynamics.as_ref().unwrap();
+    let fo = dy.faults.as_ref().unwrap();
+    assert_eq!(fo.crashes, 1);
+    assert_eq!(fo.failovers, 1, "the survivor has room for the evacuee");
+    assert!(fo.dropped_failure > 0, "the standing backlog must be lost to the crash");
+    let member_losses: u64 = out
+        .devices
+        .iter()
+        .flat_map(|d| d.fleet.members.iter())
+        .map(|m| m.dropped_failure)
+        .sum();
+    assert_eq!(member_losses, fo.dropped_failure, "per-job and pool telemetry must agree");
+    assert_eq!(out.audit(), Ok(()), "conservation must hold with crash losses counted");
+    let snap = snapshot(&out);
+    assert!(snap.contains("\"dropped_failure\""));
+    assert!(snap.contains("\"faults\""));
+}
+
+/// The e2e acceptance pin: a 4-device pool serving 4 jobs loses one
+/// device mid-run. With failover the evacuated job keeps serving
+/// elsewhere; with failover disabled it is stranded. Failover must
+/// strictly win on total goodput, and both runs must audit clean.
+#[test]
+fn failover_strictly_beats_stranding_on_goodput() {
+    let run = |failover: bool| {
+        let sched = FaultSchedule::new().crash(1, 3).failover(failover);
+        Cluster::builder()
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 2, mtl: 1 },
+                ArrivalPattern::poisson(30.0),
+            )
+            .job_with_arrivals(
+                paper_job(4).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(30.0),
+            )
+            .job_with_arrivals(
+                paper_job(5).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(25.0),
+            )
+            .job_with_arrivals(
+                paper_job(10).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(25.0),
+            )
+            .faults(sched)
+            .windows(10)
+            .rounds_per_window(12)
+            .seed(13)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let with_failover = run(true);
+    let stranded = run(false);
+
+    let fo = with_failover.dynamics.as_ref().unwrap().faults.as_ref().unwrap();
+    assert_eq!(fo.crashes, 1);
+    assert_eq!(fo.failovers, 1, "the dead device's job must be re-placed");
+    let fo_off = stranded.dynamics.as_ref().unwrap().faults.as_ref().unwrap();
+    assert_eq!(fo_off.crashes, 1);
+    assert_eq!(fo_off.failovers, 0, "failover disabled must strand the job");
+    assert_eq!(fo_off.deferred_jobs, 1);
+
+    assert!(
+        with_failover.total_goodput > stranded.total_goodput,
+        "failover must strictly beat stranding: {} vs {} inf/s",
+        with_failover.total_goodput,
+        stranded.total_goodput
+    );
+    assert_eq!(with_failover.audit(), Ok(()));
+    assert_eq!(stranded.audit(), Ok(()));
+}
+
+/// Degradation throttles a device's SM grant for exactly its configured
+/// duration; the job keeps serving throughout (no drops to failure) and
+/// the run stays deterministic.
+#[test]
+fn degrade_is_temporary_and_deterministic() {
+    let run = || {
+        Cluster::builder()
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 2, mtl: 1 },
+                ArrivalPattern::poisson(40.0),
+            )
+            .job_with_arrivals(
+                paper_job(5).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(30.0),
+            )
+            .faults(FaultSchedule::new().degrade(0, 2, 0.4, 3))
+            .windows(8)
+            .rounds_per_window(10)
+            .seed(17)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(snapshot(&a), snapshot(&b), "degraded runs must be deterministic");
+    let fo = a.dynamics.as_ref().unwrap().faults.as_ref().unwrap();
+    assert_eq!(fo.degrades, 1);
+    assert_eq!(fo.crashes, 0);
+    assert_eq!(fo.dropped_failure, 0, "degradation slows serving, it loses nothing");
+    assert_eq!(fo.pool_health, vec![2; 8], "a degraded device is still healthy");
+    assert_eq!(a.audit(), Ok(()));
+}
+
+/// Fault decisions happen serially at the window barrier, so a faulty
+/// run is byte-identical at every worker-thread count.
+#[test]
+fn faulty_runs_are_byte_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        Cluster::builder()
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 2, mtl: 1 },
+                ArrivalPattern::poisson(35.0),
+            )
+            .job_with_arrivals(
+                paper_job(4).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(25.0),
+            )
+            .job_with_arrivals(
+                paper_job(5).unwrap(),
+                PolicySpec::Static { bs: 1, mtl: 1 },
+                ArrivalPattern::poisson(25.0),
+            )
+            .faults(
+                FaultSchedule::new().crash(2, 1).degrade(0, 2, 0.5, 2).repair(2, 4),
+            )
+            .windows(8)
+            .rounds_per_window(10)
+            .seed(19)
+            .threads(threads)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let serial = snapshot(&run(1));
+    for threads in [2usize, 8] {
+        assert_eq!(
+            serial,
+            snapshot(&run(threads)),
+            "faulty run must be byte-identical at {threads} threads"
+        );
+    }
+}
+
+/// Property over 100 seeds: stochastic MTBF/MTTR fault processes always
+/// produce valid schedules, clean audits, and full-length health traces
+/// — and the same seed always materializes the same fault history.
+#[test]
+fn stochastic_fault_runs_audit_clean_across_seeds() {
+    for seed in 0..100u64 {
+        let run = || {
+            Cluster::builder()
+                .device(TESLA_P40)
+                .device(TESLA_P40)
+                .device(TESLA_P40)
+                .job_with_arrivals(
+                    paper_job(1).unwrap(),
+                    PolicySpec::Static { bs: 1, mtl: 1 },
+                    ArrivalPattern::poisson(25.0),
+                )
+                .job_with_arrivals(
+                    paper_job(5).unwrap(),
+                    PolicySpec::Static { bs: 1, mtl: 1 },
+                    ArrivalPattern::poisson(20.0),
+                )
+                .stochastic_faults(3.0, 2.0)
+                .windows(8)
+                .rounds_per_window(6)
+                .seed(seed)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let out = run();
+        let dy = out.dynamics.as_ref().expect("stochastic mode is a dynamic run");
+        let fo = dy.faults.as_ref().expect("stochastic mode must report fault telemetry");
+        assert_eq!(fo.pool_health.len(), 8, "seed {seed}");
+        assert!(fo.pool_health.iter().all(|&h| h <= 3), "seed {seed}");
+        assert!(fo.repairs <= fo.crashes, "seed {seed}: repairs cannot outnumber crashes");
+        assert_eq!(out.audit(), Ok(()), "seed {seed}");
+        if seed % 25 == 0 {
+            assert_eq!(snapshot(&out), snapshot(&run()), "seed {seed}: must be reproducible");
+        }
+    }
+}
+
+/// The byte-identity contract: a run with no fault events — even with
+/// an explicitly attached empty schedule — must not flip onto the fault
+/// path, and its snapshot must contain none of the fault-era keys.
+#[test]
+fn fault_free_runs_carry_no_fault_keys_and_empty_schedules_are_inert() {
+    let run = |decorate: bool| {
+        let churn = ChurnSchedule::new().launch(
+            2,
+            paper_job(4).unwrap(),
+            PolicySpec::Static { bs: 1, mtl: 1 },
+            ArrivalPattern::poisson(20.0),
+        );
+        let mut b = Cluster::builder()
+            .device(TESLA_P40)
+            .device(TESLA_P40)
+            .job_with_arrivals(
+                paper_job(1).unwrap(),
+                PolicySpec::Static { bs: 2, mtl: 1 },
+                ArrivalPattern::poisson(30.0),
+            )
+            .churn(churn)
+            .windows(6)
+            .rounds_per_window(10)
+            .seed(23);
+        if decorate {
+            b = b.faults(FaultSchedule::new());
+        }
+        b.build().unwrap().run().unwrap()
+    };
+    let plain = run(false);
+    let decorated = run(true);
+    assert!(plain.dynamics.as_ref().unwrap().faults.is_none());
+    assert!(
+        decorated.dynamics.as_ref().unwrap().faults.is_none(),
+        "an empty schedule must not enable the fault path"
+    );
+    let snap = snapshot(&plain);
+    assert_eq!(snap, snapshot(&decorated), "empty schedules must be byte-inert");
+    assert!(!snap.contains("\"faults\""));
+    assert!(!snap.contains("\"dropped_failure\""));
+    assert!(!snap.contains("\"deferred_launches\""));
+
+    // A fully static run (no dynamics at all) is equally clean.
+    let static_out = Cluster::builder()
+        .device(TESLA_P40)
+        .job(paper_job(1).unwrap(), PolicySpec::Static { bs: 2, mtl: 1 })
+        .windows(4)
+        .rounds_per_window(8)
+        .seed(29)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(static_out.dynamics.is_none());
+    let snap = snapshot(&static_out);
+    assert!(!snap.contains("\"faults\""));
+    assert!(!snap.contains("\"dropped_failure\""));
+}

@@ -90,6 +90,30 @@ parallel_smoke() {
     return "$rc"
 }
 run_step "parallel-smoke" parallel_smoke
+# Faults smoke: a crash/repair cycle (plus a transient degradation)
+# injected through the CLI, served serial and sharded across 4 worker
+# threads — the fault report must render and the barrier-serial fault
+# decisions must keep the parallel path byte-identical.
+faults_smoke() {
+    local serial parallel rc=0
+    serial="$(mktemp)" || return 1
+    parallel="$(mktemp)" || return 1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,p40,t4 --ids 1,5,9 --rates 40,20,25 \
+        --windows 8 --faults crash:1@2,degrade:0@1:0.5:3,repair:1@5 \
+        --threads 1 >"$serial" || rc=1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,p40,t4 --ids 1,5,9 --rates 40,20,25 \
+        --windows 8 --faults crash:1@2,degrade:0@1:0.5:3,repair:1@5 \
+        --threads 4 >"$parallel" || rc=1
+    if [ "$rc" -eq 0 ]; then
+        grep -q "faults:" "$serial" || { echo "faults-smoke: no fault report line" >&2; rc=1; }
+        diff -u "$serial" "$parallel" || rc=1
+    fi
+    rm -f "$serial" "$parallel"
+    return "$rc"
+}
+run_step "faults-smoke" faults_smoke
 # Differential-fuzz smoke: a bounded, fixed-seed campaign through the
 # CLI (production engine vs the naive reference executor, snapshots
 # byte-identical, audits clean). The full 200-case campaign runs in the
