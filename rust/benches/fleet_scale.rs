@@ -26,7 +26,10 @@
 //! scaling curve (output is byte-identical at every thread count, so
 //! only wall clock moves). PR 9 adds a `fault_churn` case: the churned
 //! cluster with a crash/repair cycle and a transient degradation
-//! injected, pricing the fault barrier and failover machinery.
+//! injected, pricing the fault barrier and failover machinery. PR 10
+//! adds an `slo_overload` case: mixed-class fleets (gold/silver/
+//! best-effort) under the combined batching+multi-tenancy search,
+//! emitting the per-class goodput split.
 //!
 //! Run:  cargo bench --bench fleet_scale             (report only)
 //!       cargo bench --bench fleet_scale -- --json   (also write
@@ -48,6 +51,7 @@ use dnnscaler::coordinator::dynamics::{ChurnSchedule, ThresholdAutoscaler};
 use dnnscaler::coordinator::FaultSchedule;
 use dnnscaler::coordinator::job::paper_job;
 use dnnscaler::coordinator::session::PolicySpec;
+use dnnscaler::coordinator::slo::{SloClass, SloReport};
 use dnnscaler::gpusim::{GpuSpec, TESLA_P40};
 use dnnscaler::json::Json;
 use dnnscaler::workload::{ArrivalPattern, RequestQueue};
@@ -307,6 +311,38 @@ fn run_faults(d: usize, request_target: u64) -> ClusterRun {
     ClusterRun { devices: d, jobs, threads: 1, requests_served, wall_s }
 }
 
+struct SloRun {
+    members: usize,
+    wall_s: f64,
+    report: SloReport,
+}
+
+/// One overloaded mixed-class fleet run (PR 10): `m` members cycling
+/// gold/silver/best-effort with deadline shedding on and the combined
+/// batching + multi-tenancy search driving the knobs — pricing the
+/// class-weighted shed/admission arithmetic and producing the per-class
+/// goodput split that BENCH_hotpath.json tracks.
+fn run_slo(m: usize, request_target: u64) -> SloRun {
+    let (job, gpu) = bench_workload();
+    let windows = 8usize;
+    let rounds_per_window = rounds_for_target(m as u64, windows as u64, request_target);
+    let classes: Vec<SloClass> = (0..m).map(|i| SloClass::ALL[i % 3]).collect();
+
+    let mut b = Fleet::builder().gpu(gpu).windows(windows).rounds_per_window(rounds_per_window);
+    for _ in 0..m {
+        b = b
+            .job_with_arrivals(&job, PolicySpec::Combined, ArrivalPattern::uniform(2_000.0))
+            .queue_capacity(1024)
+            .shed_deadline(true);
+    }
+    let fleet = b.slo_classes(&classes).build().expect("slo fleet config");
+    let t0 = Instant::now();
+    let out = fleet.run().expect("slo fleet run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = out.slo.expect("classed run reports per-class stats");
+    SloRun { members: m, wall_s, report }
+}
+
 /// Steady-state queue hot pair: push + take_batch_into over a warmed
 /// ring (zero allocations). Returns ops/s (one op = 8 pushes + 1 drain).
 fn queue_ops_per_s(iters: u64) -> f64 {
@@ -495,6 +531,41 @@ fn main() {
         per_f.push(Json::Obj(o));
     }
 
+    // SLO overload: mixed-class fleets under the combined search — the
+    // per-class goodput split under class-weighted shedding, tracked so
+    // a regression in the SLO arithmetic (or its cost) is visible.
+    let slo_counts: &[usize] = if smoke { &[3] } else { &[3, 12, 48] };
+    println!(
+        "\n{:<10} {:>14} {:>14} {:>14} {:>14}   (mixed classes, combined)",
+        "members", "wall_s", "gold inf/s", "silver inf/s", "b-eff inf/s"
+    );
+    println!("{}", "-".repeat(92));
+    let mut per_s: Vec<Json> = Vec::new();
+    for &m in slo_counts {
+        let run = run_slo(m, cluster_target);
+        let g = run.report.class(SloClass::Gold);
+        let s = run.report.class(SloClass::Silver);
+        let be = run.report.class(SloClass::BestEffort);
+        println!(
+            "{:<10} {:>14.3} {:>14.1} {:>14.1} {:>14.1}",
+            run.members, run.wall_s, g.goodput, s.goodput, be.goodput
+        );
+        assert!(
+            g.goodput + s.goodput + be.goodput > 0.0,
+            "slo fleet served nothing at M={m}"
+        );
+        let mut o = BTreeMap::new();
+        o.insert("members".into(), num(run.members as f64));
+        o.insert("wall_s".into(), num(run.wall_s));
+        o.insert("gold_goodput".into(), num(g.goodput));
+        o.insert("silver_goodput".into(), num(s.goodput));
+        o.insert("best_effort_goodput".into(), num(be.goodput));
+        o.insert("gold_shed".into(), num(g.shed as f64));
+        o.insert("silver_shed".into(), num(s.shed as f64));
+        o.insert("best_effort_shed".into(), num(be.shed as f64));
+        per_s.push(Json::Obj(o));
+    }
+
     let queue_ops = queue_ops_per_s(if smoke { 50_000 } else { 2_000_000 });
     println!("\nqueue: push x8 + take_batch_into(8)  {queue_ops:>14.0} ops/s");
 
@@ -513,6 +584,7 @@ fn main() {
         root.insert("cluster_scale".into(), Json::Arr(per_d));
         root.insert("churn_scale".into(), Json::Arr(per_c));
         root.insert("fault_churn".into(), Json::Arr(per_f));
+        root.insert("slo_overload".into(), Json::Arr(per_s));
         let text = dnnscaler::json::write(&Json::Obj(root));
         std::fs::write(&path, text + "\n").expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");

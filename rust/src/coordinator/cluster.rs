@@ -75,6 +75,7 @@ use super::fleet::{
 };
 use super::job::JobSpec;
 use super::session::{ConfigError, PolicySpec, RunConfig};
+use super::slo::{SloClass, SloReport};
 
 use std::fmt;
 
@@ -504,6 +505,7 @@ pub struct ClusterBuilder<'a> {
     jobs: Vec<MemberCfg<'a>>,
     placement: Box<dyn Placement + 'a>,
     rate_list: Option<Vec<f64>>,
+    class_list: Option<Vec<SloClass>>,
     knob_before_job: Option<&'static str>,
     device_error: Option<ConfigError>,
     churn: ChurnSchedule<'a>,
@@ -526,6 +528,7 @@ impl<'a> ClusterBuilder<'a> {
             jobs: Vec::new(),
             placement: Box::new(RoundRobin::new()),
             rate_list: None,
+            class_list: None,
             knob_before_job: None,
             device_error: None,
             churn: ChurnSchedule::new(),
@@ -759,6 +762,37 @@ impl<'a> ClusterBuilder<'a> {
         self
     }
 
+    /// Explicit shed deadline (ms) for the most recently added job,
+    /// replacing the job's model SLO as the shedding cutoff. Requires
+    /// open-loop arrivals and [`ClusterBuilder::shed_deadline`]; the
+    /// job's [`SloClass`] (if any) still scales it.
+    pub fn deadline_ms(mut self, deadline_ms: f64) -> Self {
+        if let Some(m) = self.last_job("deadline_ms") {
+            m.deadline_ms = Some(deadline_ms);
+        }
+        self
+    }
+
+    /// Service class for the most recently added job: scales the shed
+    /// deadline, weights overload admission, and adds the job to the
+    /// outcome's per-class [`SloReport`]. Open-loop only.
+    pub fn slo_class(mut self, class: SloClass) -> Self {
+        if let Some(m) = self.last_job("slo_class") {
+            m.slo_class = Some(class);
+        }
+        self
+    }
+
+    /// Give every job a service class: one class (broadcast) or exactly
+    /// one per job, in job order — any other count is a typed
+    /// [`ConfigError::ListCountMismatch`], and combining the list with
+    /// per-job [`ClusterBuilder::slo_class`] calls is a typed
+    /// [`ConfigError::ListOverridesMemberKnob`].
+    pub fn slo_classes(mut self, classes: &[SloClass]) -> Self {
+        self.class_list = Some(classes.to_vec());
+        self
+    }
+
     /// Validate the configuration, run the placement, and assemble the
     /// cluster. All placement failures surface here as
     /// [`ConfigError::Placement`].
@@ -801,6 +835,18 @@ impl<'a> ClusterBuilder<'a> {
             )?;
             for (m, rate) in self.jobs.iter_mut().zip(expanded) {
                 m.arrivals = ArrivalPattern::Poisson { rate };
+            }
+        }
+        if let Some(list) = self.class_list.take() {
+            let expanded = fleet::expand_member_list(
+                "slo_classes",
+                "slo_class",
+                list,
+                self.jobs.len(),
+                self.jobs.iter().any(|m| m.slo_class.is_some()),
+            )?;
+            for (m, class) in self.jobs.iter_mut().zip(expanded) {
+                m.slo_class = Some(class);
             }
         }
         for m in &self.jobs {
@@ -996,6 +1042,26 @@ pub struct ClusterOutcome {
     /// `None` on the static path — the snapshot for a dynamics-free run
     /// stays byte-identical to what it was before dynamics existed.
     pub dynamics: Option<DynamicsOutcome>,
+    /// Per-class goodput/shed accounting, merged across every device's
+    /// [`FleetOutcome::slo`] report. `None` unless some job carries an
+    /// [`SloClass`] — unclassed runs keep their snapshot bytes.
+    pub slo: Option<SloReport>,
+}
+
+/// Merge the per-device SLO class reports into one cluster-wide report
+/// (`None` when no device hosts a classed member). Shared by the static
+/// and dynamic runners so both outcomes satisfy the same audit.
+pub(crate) fn merge_slo_reports(devices: &[DeviceOutcome]) -> Option<SloReport> {
+    let mut merged: Option<SloReport> = None;
+    for dev in devices {
+        if let Some(r) = &dev.fleet.slo {
+            match merged.as_mut() {
+                Some(acc) => acc.merge(r),
+                None => merged = Some(r.clone()),
+            }
+        }
+    }
+    merged
 }
 
 /// A conservation invariant the finished outcome violates. These are
@@ -1012,6 +1078,10 @@ pub enum AuditError {
     OverSubscribed { device: usize, window: usize, granted: f64 },
     /// Peak combined memory demand exceeded the device's capacity.
     MemoryOverCeiling { device: usize, peak_mem_mb: f64, capacity_mb: f64 },
+    /// The outcome's per-class SLO report disagrees with the accounting
+    /// re-derived from the per-member outcomes: every classed member's
+    /// goodput and shed count must land in exactly its own class bucket.
+    ClassAccounting { class: &'static str, field: &'static str, reported: f64, recomputed: f64 },
 }
 
 impl fmt::Display for AuditError {
@@ -1030,6 +1100,11 @@ impl fmt::Display for AuditError {
                 f,
                 "device {device}: peak memory {peak_mem_mb:.1} MB over \
                  capacity {capacity_mb:.1} MB"
+            ),
+            AuditError::ClassAccounting { class, field, reported, recomputed } => write!(
+                f,
+                "class {class}: reported {field} {reported} disagrees with \
+                 per-member recount {recomputed}"
             ),
         }
     }
@@ -1075,6 +1150,39 @@ impl ClusterOutcome {
                     device: d,
                     peak_mem_mb: dev.fleet.peak_mem_mb,
                     capacity_mb: dev.fleet.mem_capacity_mb,
+                });
+            }
+        }
+        // Per-class conservation: the merged SLO report must equal the
+        // accounting re-derived member by member — a class can neither
+        // gain nor lose goodput/shed relative to the jobs inside it. An
+        // all-zero report and an absent one are equivalent here.
+        let reported = self.slo.clone().unwrap_or_default();
+        let recomputed = SloReport::from_members(
+            self.devices
+                .iter()
+                .flat_map(|d| d.fleet.members.iter())
+                .map(|m| (m.slo_class, m.goodput, m.dropped_deadline)),
+        )
+        .unwrap_or_default();
+        for c in SloClass::ALL {
+            let a = reported.class(c);
+            let b = recomputed.class(c);
+            let mismatch = if a.members != b.members {
+                Some(("members", a.members as f64, b.members as f64))
+            } else if a.shed != b.shed {
+                Some(("shed", a.shed as f64, b.shed as f64))
+            } else if (a.goodput - b.goodput).abs() > 1e-6 {
+                Some(("goodput", a.goodput, b.goodput))
+            } else {
+                None
+            };
+            if let Some((field, reported, recomputed)) = mismatch {
+                return Err(AuditError::ClassAccounting {
+                    class: c.name(),
+                    field,
+                    reported,
+                    recomputed,
                 });
             }
         }
@@ -1161,6 +1269,7 @@ impl<'a> Cluster<'a> {
         };
         let total_throughput = outcomes.iter().map(|d| d.fleet.total_throughput).sum();
         let total_goodput = outcomes.iter().map(|d| d.fleet.total_goodput).sum();
+        let slo = merge_slo_reports(&outcomes);
         let out = ClusterOutcome {
             devices: outcomes,
             placement,
@@ -1168,6 +1277,7 @@ impl<'a> Cluster<'a> {
             total_throughput,
             total_goodput,
             dynamics: None,
+            slo,
         };
         debug_assert!(out.audit().is_ok(), "conservation audit failed: {:?}", out.audit());
         Ok(out)
@@ -1319,6 +1429,137 @@ mod tests {
                 list: "poisson_rates",
                 knob: "job_with_arrivals"
             })
+        );
+    }
+
+    #[test]
+    fn builder_rejects_misplaced_class_knobs() {
+        let job = paper_job(1).unwrap();
+        // A class knob before any job is the same typed error every
+        // other per-job knob gets.
+        assert_eq!(
+            Cluster::builder().slo_class(SloClass::Gold).device(TESLA_P40).build().err(),
+            Some(ConfigError::MemberKnobBeforeJob { knob: "slo_class" })
+        );
+        // Classes act at shed/admission time: closed-loop jobs have
+        // neither, so the knob is refused rather than silently inert.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job(job, PolicySpec::Clipper)
+                .slo_class(SloClass::Silver)
+                .build()
+                .err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "slo_class" })
+        );
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job(job, PolicySpec::Clipper)
+                .deadline_ms(40.0)
+                .build()
+                .err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "deadline_ms" })
+        );
+        // The class list expands exactly like every other list knob.
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job_with_arrivals(job, PolicySpec::Clipper, ArrivalPattern::poisson(20.0))
+                .slo_classes(&[SloClass::Gold, SloClass::BestEffort])
+                .build()
+                .err(),
+            Some(ConfigError::ListCountMismatch { knob: "slo_classes", got: 2, members: 1 })
+        );
+        assert_eq!(
+            Cluster::builder()
+                .device(TESLA_P40)
+                .job_with_arrivals(job, PolicySpec::Clipper, ArrivalPattern::poisson(20.0))
+                .slo_class(SloClass::Gold)
+                .slo_classes(&[SloClass::Silver])
+                .build()
+                .err(),
+            Some(ConfigError::ListOverridesMemberKnob {
+                list: "slo_classes",
+                knob: "slo_class"
+            })
+        );
+    }
+
+    #[test]
+    fn classed_cluster_merges_per_class_reports_and_audits() {
+        let run = |classed: bool| {
+            let mut b = Cluster::builder()
+                .device(TESLA_P40)
+                .device(TESLA_T4)
+                .windows(6)
+                .rounds_per_window(10)
+                .seed(11);
+            for id in [1, 5, 4] {
+                b = b
+                    .job_with_arrivals(
+                        paper_job(id).unwrap(),
+                        PolicySpec::Static { bs: 1, mtl: 1 },
+                        ArrivalPattern::poisson(30.0),
+                    )
+                    .shed_deadline(true);
+            }
+            if classed {
+                b = b.slo_classes(&[SloClass::Gold, SloClass::Silver, SloClass::BestEffort]);
+            }
+            b.build().unwrap().run().unwrap()
+        };
+        // Unclassed: no report, and the audit's class leg is vacuous.
+        let plain = run(false);
+        assert!(plain.slo.is_none());
+        assert_eq!(plain.audit(), Ok(()));
+        // Classed: the report merges across devices — one member per
+        // class regardless of which device each job landed on — and the
+        // per-class totals re-derive from the member outcomes.
+        let mut out = run(true);
+        let report = out.slo.clone().expect("classed run must carry a report");
+        for c in SloClass::ALL {
+            assert_eq!(report.class(c).members, 1, "{}", c.name());
+        }
+        let gold_goodput: f64 = out
+            .devices
+            .iter()
+            .flat_map(|d| d.fleet.members.iter())
+            .filter(|m| m.slo_class == Some(SloClass::Gold))
+            .map(|m| m.goodput)
+            .sum();
+        assert!((report.class(SloClass::Gold).goodput - gold_goodput).abs() < 1e-9);
+        assert_eq!(out.audit(), Ok(()));
+        // Forge class accounting three ways: inflated goodput, a shed
+        // count from nowhere, and a dropped report — each is caught.
+        let mut forged = out.clone();
+        forged.slo.as_mut().unwrap().per_class[0].goodput += 1.0;
+        assert!(
+            matches!(
+                forged.audit(),
+                Err(AuditError::ClassAccounting { class: "gold", field: "goodput", .. })
+            ),
+            "got {:?}",
+            forged.audit()
+        );
+        let mut forged = out.clone();
+        forged.slo.as_mut().unwrap().per_class[2].shed += 1;
+        assert!(
+            matches!(
+                forged.audit(),
+                Err(AuditError::ClassAccounting { class: "best-effort", field: "shed", .. })
+            ),
+            "got {:?}",
+            forged.audit()
+        );
+        out.slo = None;
+        assert!(
+            matches!(
+                out.audit(),
+                Err(AuditError::ClassAccounting { field: "members", .. })
+            ),
+            "got {:?}",
+            out.audit()
         );
     }
 

@@ -58,7 +58,8 @@ use crate::workload::ArrivalPattern;
 
 use super::calendar::{EventCalendar, NextEventQueue};
 use super::cluster::{
-    whole_desc, Assignment, ClusterOutcome, DeviceDesc, DeviceOutcome, Placement, PlacementJob,
+    merge_slo_reports, whole_desc, Assignment, ClusterOutcome, DeviceDesc, DeviceOutcome,
+    Placement, PlacementJob,
 };
 use super::engine::{SmShare, WindowAccum};
 use super::faults::{FaultEvent, FaultSchedule, FaultsOutcome, MAX_BACKOFF_WINDOWS};
@@ -70,6 +71,7 @@ use super::fleet::{
 use super::job::JobSpec;
 use super::policy::WindowObservation;
 use super::session::{ConfigError, JobOutcome, PolicySpec, RunConfig};
+use super::slo::SloClass;
 
 use std::fmt;
 
@@ -330,6 +332,11 @@ pub struct PoolObservation<'x> {
     pub queue_depth: usize,
     /// Requests dropped or shed across all live jobs last window.
     pub drops: u64,
+    /// Queued requests per SLO class at the boundary, in
+    /// [`SloClass::index`] order (gold, silver, best-effort). All zero
+    /// when no live job carries a class — a class-aware autoscaler can
+    /// then fall back to the aggregate `queue_depth`.
+    pub class_queue: [usize; 3],
     /// The full device pool, `active[i]` flagging the powered-on ones.
     pub devices: &'x [DeviceDesc],
     pub active: &'x [bool],
@@ -852,6 +859,15 @@ pub(crate) fn run_dynamic<'a>(
                         .filter_map(|l| l.last_obs.as_ref())
                         .map(|o| o.drops + o.drops_deadline)
                         .sum(),
+                    class_queue: {
+                        let mut q = [0usize; 3];
+                        for l in &lives {
+                            if let Some(c) = l.m.slo_class {
+                                q[c.index()] += l.m.lp.queue_len();
+                            }
+                        }
+                        q
+                    },
                     devices: &descs,
                     active: &active,
                 };
@@ -929,10 +945,24 @@ pub(crate) fn run_dynamic<'a>(
                 .iter()
                 .map(|&li| lives[li].m.policy.operating_point())
                 .collect();
+            // Admission weights rebuild every window: churn, migration,
+            // and failover change who shares the device, so a cached
+            // per-device weight vector would go stale. None when no
+            // resident is classed keeps the unclassed path literal.
+            let weights: Option<Vec<f64>> = members
+                .iter()
+                .any(|&li| lives[li].m.slo_class.is_some())
+                .then(|| {
+                    members
+                        .iter()
+                        .map(|&li| lives[li].m.slo_class.map_or(1.0, SloClass::shed_weight))
+                        .collect()
+                });
             let pts = admit_window(
                 &|i, (bs, mtl)| lives[members[i]].m.sim.mem_demand_mb(bs, mtl),
                 members.len(),
                 &requested,
+                weights.as_deref(),
                 ctx.mem_capacity_mb,
                 &mut ctx.admission_clamps,
             )?;
@@ -1106,6 +1136,7 @@ pub(crate) fn run_dynamic<'a>(
     if have_faults {
         dyn_out.faults = Some(fo);
     }
+    let slo = merge_slo_reports(&devices);
     let out = ClusterOutcome {
         devices,
         placement,
@@ -1113,6 +1144,7 @@ pub(crate) fn run_dynamic<'a>(
         total_throughput,
         total_goodput,
         dynamics: Some(dyn_out),
+        slo,
     };
     debug_assert!(out.audit().is_ok(), "dynamic run broke conservation: {:?}", out.audit());
     Ok(out)
@@ -1355,6 +1387,7 @@ mod tests {
             max_pressure: pressure,
             queue_depth: 0,
             drops: 0,
+            class_queue: [0; 3],
             devices: &descs,
             active: &active,
         };

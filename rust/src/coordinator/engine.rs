@@ -148,6 +148,15 @@ pub(crate) struct OpenLoop {
     queue: RequestQueue,
     timeout_s: f64,
     shed_deadline: bool,
+    /// Explicit shedding deadline (ms) overriding the window's SLO target
+    /// when set (`FleetBuilder::deadline_ms`). The SLO schedule still
+    /// drives `WindowRecord.slo_ms` and attainment; only `shed_expired`
+    /// sees this.
+    deadline_ms: Option<f64>,
+    /// SLO-class deadline multiplier applied to the effective shedding
+    /// deadline (gold 1.0 / silver 0.75 / best-effort 0.5). Exactly 1.0
+    /// when unclassed, which is bit-identical to no multiplier at all.
+    shed_scale: f64,
     /// Reused batch scratch: `serve_round` drains each batch here, so the
     /// steady-state path never allocates a per-batch `Vec`.
     batch: Vec<Request>,
@@ -174,9 +183,19 @@ impl OpenLoop {
             },
             timeout_s: batch_timeout_ms / 1000.0,
             shed_deadline,
+            deadline_ms: None,
+            shed_scale: 1.0,
             batch: Vec::new(),
             now_s: start_s,
         }
+    }
+
+    /// Set the explicit shedding deadline and/or the SLO-class deadline
+    /// multiplier (see the field docs). `(None, 1.0)` — the construction
+    /// default — sheds at the raw SLO target exactly as before.
+    pub(crate) fn set_shed_deadline(&mut self, deadline_ms: Option<f64>, shed_scale: f64) {
+        self.deadline_ms = deadline_ms;
+        self.shed_scale = shed_scale;
     }
 
     /// Requests pulled off the arrival stream so far.
@@ -275,7 +294,14 @@ impl OpenLoop {
         }
 
         if self.shed_deadline {
-            self.queue.shed_expired(self.now_s, slo_ms);
+            // Effective deadline: the explicit per-member override (or
+            // the window's SLO target) scaled by the member's SLO class.
+            // Unclassed members multiply by exactly 1.0 — a bit-identical
+            // no-op for every finite f64 — so runs without classes or
+            // deadline overrides stay byte-identical to the pre-class
+            // engine.
+            let deadline = self.deadline_ms.unwrap_or(slo_ms) * self.shed_scale;
+            self.queue.shed_expired(self.now_s, deadline);
         }
         self.queue.take_batch_into(target, &mut self.batch);
         if self.batch.is_empty() {
@@ -582,6 +608,38 @@ mod tests {
         let allocs = crate::alloc_probe::thread_allocs() - before;
         assert!(record.throughput > 0.0);
         assert_eq!(allocs, 0, "steady-state serving path allocated {allocs} times");
+    }
+
+    #[test]
+    fn explicit_deadline_and_class_scale_tighten_shedding() {
+        // 32 simultaneous arrivals against a 2-wide batch: everything
+        // past the first batch ages while earlier batches execute. The
+        // effective shed deadline is `deadline_ms.unwrap_or(slo) *
+        // shed_scale`; tightening either knob can only shed more, and
+        // the construction default (None, 1.0) is the raw SLO behavior.
+        let trace: Vec<f64> = vec![0.0; 32];
+        let serve = |deadline: Option<f64>, scale: f64| {
+            let mut lp =
+                OpenLoop::new(ArrivalPattern::Trace(trace.clone()), 1, None, 5.0, true, 0.0);
+            lp.set_shed_deadline(deadline, scale);
+            let mut sim = GpuSim::for_paper_dnn("inc-v1", Dataset::ImageNet, 7).unwrap();
+            let mut win = WindowAccum::new();
+            win.begin(&lp);
+            for _ in 0..64 {
+                if !lp
+                    .serve_round((2, 1), 1000.0, SmShare::Inflate(1.0), &mut sim, &mut win)
+                    .unwrap()
+                {
+                    break;
+                }
+            }
+            lp.dropped_deadline()
+        };
+        let baseline = serve(None, 1.0);
+        let tight = serve(Some(0.01), 1.0); // 10 µs: only the first batch survives
+        assert!(tight > baseline, "tight {tight} must shed more than baseline {baseline}");
+        assert!(serve(Some(40.0), 0.5) >= serve(Some(40.0), 1.0), "scale must tighten");
+        assert_eq!(serve(None, 1.0), baseline, "shed accounting must be deterministic");
     }
 
     #[test]

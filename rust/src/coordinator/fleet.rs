@@ -94,6 +94,7 @@ use super::session::{
     ConfigError, JobOutcome, PolicySpec, RunConfig, SloSchedule, WindowRecord,
     DEFAULT_BATCH_TIMEOUT_MS,
 };
+use super::slo::{SloClass, SloReport};
 
 /// Result of one fleet run.
 #[derive(Debug, Clone)]
@@ -125,6 +126,9 @@ pub struct FleetOutcome {
     /// Per-window SM grants, one inner vec per window in member order.
     /// Empty for `TimeShare` (there are no grants to record).
     pub grant_trace: Vec<Vec<f64>>,
+    /// Per-class goodput / shed accounting. `None` — and absent from the
+    /// snapshot — unless at least one member carries an [`SloClass`].
+    pub slo: Option<SloReport>,
 }
 
 /// One member's configuration: job, policy, and (open loop only) its
@@ -140,6 +144,13 @@ pub(crate) struct MemberCfg<'a> {
     /// "never set" apart from "set on a closed-loop member" (an error).
     pub(crate) batch_timeout_ms: Option<f64>,
     pub(crate) shed_deadline: bool,
+    /// Explicit shedding deadline (ms). None = shed against the window
+    /// SLO, the legacy behaviour. Only meaningful with `shed_deadline`.
+    pub(crate) deadline_ms: Option<f64>,
+    /// Service class (gold / silver / best-effort). None = unclassed:
+    /// full deadline, gold-equivalent admission weight, and no per-class
+    /// accounting — byte-identical to the pre-class engine.
+    pub(crate) slo_class: Option<SloClass>,
     /// SM fraction reserved for this member under a spatial
     /// [`PartitionMode`]; None = an equal share of the unreserved rest.
     pub(crate) sm_reservation: Option<f64>,
@@ -154,6 +165,8 @@ impl<'a> MemberCfg<'a> {
             queue_capacity: None,
             batch_timeout_ms: None,
             shed_deadline: false,
+            deadline_ms: None,
+            slo_class: None,
             sm_reservation: None,
         }
     }
@@ -175,6 +188,11 @@ pub(crate) fn validate_member_cfg(m: &MemberCfg<'_>) -> Result<(), ConfigError> 
             return Err(ConfigError::BadBatchTimeout { timeout_ms: t });
         }
     }
+    if let Some(d) = m.deadline_ms {
+        if !d.is_finite() || d <= 0.0 {
+            return Err(ConfigError::BadDeadline { deadline_ms: d });
+        }
+    }
     // Every queueing knob is meaningless on a closed-loop member
     // (there is no queue); refuse to silently discard any of them.
     if m.arrivals.is_closed() {
@@ -187,6 +205,20 @@ pub(crate) fn validate_member_cfg(m: &MemberCfg<'_>) -> Result<(), ConfigError> 
         if m.batch_timeout_ms.is_some() {
             return Err(ConfigError::KnobRequiresOpenLoop { knob: "batch_timeout_ms" });
         }
+        if m.deadline_ms.is_some() {
+            return Err(ConfigError::KnobRequiresOpenLoop { knob: "deadline_ms" });
+        }
+        // A class drives shedding, admission weighting, and reporting —
+        // all open-loop machinery.
+        if m.slo_class.is_some() {
+            return Err(ConfigError::KnobRequiresOpenLoop { knob: "slo_class" });
+        }
+    }
+    // An explicit deadline acts only at shed time; without shedding it
+    // would be a silent no-op. (A class alone is fine: it also weights
+    // admission and reporting.)
+    if m.deadline_ms.is_some() && !m.shed_deadline {
+        return Err(ConfigError::DeadlineRequiresShed);
     }
     Ok(())
 }
@@ -207,15 +239,16 @@ pub(crate) fn model_footprint_mb(dnn: &str) -> f64 {
 /// form of the knob was already used, the list is refused
 /// ([`ConfigError::ListOverridesMemberKnob`]) instead of silently
 /// overwriting those values. One implementation for
-/// `FleetBuilder::sm_reservations` and `ClusterBuilder::poisson_rates`,
-/// so the two count/conflict policies cannot drift.
-pub(crate) fn expand_member_list(
+/// `FleetBuilder::sm_reservations`, `ClusterBuilder::poisson_rates`,
+/// and the `slo_classes` lists, so the count/conflict policies cannot
+/// drift between knobs.
+pub(crate) fn expand_member_list<T: Copy>(
     list_knob: &'static str,
     member_knob: &'static str,
-    values: Vec<f64>,
+    values: Vec<T>,
     members: usize,
     member_form_used: bool,
-) -> Result<Vec<f64>, ConfigError> {
+) -> Result<Vec<T>, ConfigError> {
     if member_form_used {
         return Err(ConfigError::ListOverridesMemberKnob { list: list_knob, knob: member_knob });
     }
@@ -249,6 +282,9 @@ pub struct FleetBuilder<'a> {
     /// [`FleetBuilder::sm_reservations`] (applied, and count-checked, at
     /// `build()`).
     reservation_list: Option<Vec<f64>>,
+    /// Whole class list supplied through [`FleetBuilder::slo_classes`]
+    /// (applied, and count-checked, at `build()`).
+    class_list: Option<Vec<SloClass>>,
     /// First per-member knob that was set before any member existed
     /// (reported as a typed error at `build()`).
     knob_before_job: Option<&'static str>,
@@ -264,6 +300,7 @@ impl<'a> FleetBuilder<'a> {
             partition: PartitionMode::TimeShare,
             partition_policy: None,
             reservation_list: None,
+            class_list: None,
             knob_before_job: None,
         }
     }
@@ -392,6 +429,38 @@ impl<'a> FleetBuilder<'a> {
         self
     }
 
+    /// Explicit shedding deadline (ms) for the most recently added
+    /// member, replacing the window SLO at shed time (the member's SLO
+    /// target itself is untouched — attainment and goodput still judge
+    /// against it). Requires `shed_deadline`; must be finite and > 0.
+    pub fn deadline_ms(mut self, deadline_ms: f64) -> Self {
+        if let Some(m) = self.last_member("deadline_ms") {
+            m.deadline_ms = Some(deadline_ms);
+        }
+        self
+    }
+
+    /// Service class for the most recently added member: scales its
+    /// effective shedding deadline ([`SloClass::shed_scale`]), weights it
+    /// in memory-overload admission ([`SloClass::shed_weight`] — under
+    /// pressure best-effort shrinks before silver before gold), and adds
+    /// it to the per-class `slo` accounting of the outcome. Open-loop
+    /// members only.
+    pub fn slo_class(mut self, class: SloClass) -> Self {
+        if let Some(m) = self.last_member("slo_class") {
+            m.slo_class = Some(class);
+        }
+        self
+    }
+
+    /// Service classes for ALL members at once: one class (broadcast) or
+    /// exactly one per member, in member order — same count/conflict
+    /// rules as [`FleetBuilder::sm_reservations`].
+    pub fn slo_classes(mut self, classes: &[SloClass]) -> Self {
+        self.class_list = Some(classes.to_vec());
+        self
+    }
+
     /// Validate and assemble the fleet.
     pub fn build(mut self) -> Result<Fleet<'a>, ConfigError> {
         if let Some(knob) = self.knob_before_job {
@@ -425,6 +494,21 @@ impl<'a> FleetBuilder<'a> {
             )?;
             for (m, f) in self.members.iter_mut().zip(expanded) {
                 m.sm_reservation = Some(f);
+            }
+        }
+        // A whole class list maps the same way (broadcast / one per
+        // member / typed mismatch; mixing with per-member slo_class is
+        // refused, not overwritten).
+        if let Some(list) = self.class_list.take() {
+            let expanded = expand_member_list(
+                "slo_classes",
+                "slo_class",
+                list,
+                self.members.len(),
+                self.members.iter().any(|m| m.slo_class.is_some()),
+            )?;
+            for (m, c) in self.members.iter_mut().zip(expanded) {
+                m.slo_class = Some(c);
             }
         }
         for m in &self.members {
@@ -541,6 +625,9 @@ pub(crate) struct OpenMember<'a> {
     pub(crate) latencies: Vec<(f64, f64)>,
     pub(crate) acc: AttainAcc,
     pub(crate) admitted: (u32, u32),
+    /// Service class, carried through to the outcome and the device's
+    /// admission weights (None = unclassed).
+    pub(crate) slo_class: Option<SloClass>,
 }
 
 /// Build one open-loop member (engine core seeded independently of the
@@ -558,20 +645,26 @@ pub(crate) fn new_open_member<'a>(
     // member's starting backlog, as in single-job serving.
     let overhead_ms = profile.as_ref().map_or(0.0, |p| p.overhead_ms);
     let admitted = policy.operating_point();
+    let mut lp = OpenLoop::new(
+        m.arrivals,
+        arrival_seed,
+        m.queue_capacity,
+        m.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
+        m.shed_deadline,
+        overhead_ms / 1000.0,
+    );
+    // An explicit deadline (if set) replaces the window SLO at shed
+    // time, and the class multiplier tightens it. Defaults (None, 1.0)
+    // leave shedding bit-identical to the pre-class engine.
+    lp.set_shed_deadline(m.deadline_ms, m.slo_class.map_or(1.0, SloClass::shed_scale));
     Ok(OpenMember {
         schedule: SloSchedule::new(m.job.slo_ms, cfg.slo_schedule.clone()),
-        lp: OpenLoop::new(
-            m.arrivals,
-            arrival_seed,
-            m.queue_capacity,
-            m.batch_timeout_ms.unwrap_or(DEFAULT_BATCH_TIMEOUT_MS),
-            m.shed_deadline,
-            overhead_ms / 1000.0,
-        ),
+        lp,
         trace: Vec::with_capacity(cfg.windows),
         latencies: Vec::new(),
         acc: AttainAcc::new(cfg.windows / 2),
         admitted,
+        slo_class: m.slo_class,
         job: m.job,
         sim,
         policy,
@@ -623,6 +716,7 @@ pub(crate) fn open_member_outcome(m: OpenMember<'_>) -> JobOutcome {
         m.lp.max_depth(),
     );
     out.dropped_failure = m.lp.dropped_failure();
+    out.slo_class = m.slo_class;
     if let Some(name) = m.label {
         out.controller = name.to_string();
     }
@@ -640,13 +734,23 @@ pub(crate) fn open_member_outcome(m: OpenMember<'_>) -> JobOutcome {
 /// final served points (the MIG slice clamp can shrink them further
 /// after this admission — the peak must reflect demand that was
 /// actually resident, not a point that never served).
+///
+/// `weights` (per-member [`SloClass::shed_weight`] values; None for
+/// runs with no classes) class-weights the victim choice: only the
+/// *lowest-weight* shrinkable members are candidates, so under pressure
+/// best-effort gives memory back before silver before gold. Equal
+/// weights — in particular the all-unclassed / all-gold case — restrict
+/// nothing, reducing bit-for-bit to the unweighted greediest-member
+/// rule.
 pub(crate) fn admit_window(
     demand: &dyn Fn(usize, (u32, u32)) -> f64,
     n_members: usize,
     requested: &[(u32, u32)],
+    weights: Option<&[f64]>,
     mem_capacity_mb: f64,
     admission_clamps: &mut u64,
 ) -> Result<Vec<(u32, u32)>, DeviceError> {
+    let weight = |i: usize| weights.map_or(1.0, |ws| ws[i]);
     let mut points = requested.to_vec();
     loop {
         let demands: Vec<f64> = (0..n_members).map(|i| demand(i, points[i])).collect();
@@ -654,10 +758,14 @@ pub(crate) fn admit_window(
         if total <= mem_capacity_mb {
             break;
         }
+        let w_min = (0..n_members)
+            .filter(|&i| points[i] != (1, 1))
+            .map(weight)
+            .fold(f64::INFINITY, f64::min);
         let Some((k, _)) = demands
             .iter()
             .enumerate()
-            .filter(|&(i, _)| points[i] != (1, 1))
+            .filter(|&(i, _)| points[i] != (1, 1) && weight(i) <= w_min)
             .max_by(|a, b| a.1.total_cmp(b.1))
         else {
             return Err(DeviceError::OutOfMemory {
@@ -973,12 +1081,14 @@ fn run_closed_device_window(
     if states.is_empty() {
         return Ok(());
     }
-    // Requested operating points, then shared-memory admission.
+    // Requested operating points, then shared-memory admission (classes
+    // are open-loop-only, so the closed path is always unweighted).
     let requested: Vec<(u32, u32)> = states.iter().map(|m| m.policy.operating_point()).collect();
     let mut points = admit_window(
         &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
         states.len(),
         &requested,
+        None,
         ctx.mem_capacity_mb,
         &mut ctx.admission_clamps,
     )?;
@@ -1181,12 +1291,19 @@ pub(crate) struct OpenDevice<'a> {
     pub(crate) ctx: DeviceCtx<'a>,
     pub(crate) members: Vec<OpenMember<'a>>,
     wins: Vec<WindowAccum>,
+    /// Per-member admission weights, built once from the members'
+    /// classes. `None` when no member is classed, so unclassed devices
+    /// take the exact pre-class admission path.
+    weights: Option<Vec<f64>>,
 }
 
 impl<'a> OpenDevice<'a> {
     pub(crate) fn new(ctx: DeviceCtx<'a>, members: Vec<OpenMember<'a>>) -> Self {
         let wins = (0..members.len()).map(|_| WindowAccum::new()).collect();
-        OpenDevice { ctx, members, wins }
+        let weights = members.iter().any(|m| m.slo_class.is_some()).then(|| {
+            members.iter().map(|m| m.slo_class.map_or(1.0, SloClass::shed_weight)).collect()
+        });
+        OpenDevice { ctx, members, wins, weights }
     }
 }
 
@@ -1199,12 +1316,13 @@ impl<'a> OpenDevice<'a> {
 pub(crate) fn plan_open_device_window(
     dev: &mut OpenDevice<'_>,
 ) -> Result<(Vec<(u32, u32)>, Vec<SmShare>), DeviceError> {
-    let OpenDevice { ctx, members: states, .. } = dev;
+    let OpenDevice { ctx, members: states, weights, .. } = dev;
     let requested: Vec<(u32, u32)> = states.iter().map(|m| m.policy.operating_point()).collect();
     let mut pts = admit_window(
         &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
         states.len(),
         &requested,
+        weights.as_deref(),
         ctx.mem_capacity_mb,
         &mut ctx.admission_clamps,
     )?;
@@ -1354,7 +1472,7 @@ pub(crate) fn run_open_devices(
             if failed[d].is_some() {
                 continue;
             }
-            let OpenDevice { ctx, members: states, wins } = dev;
+            let OpenDevice { ctx, members: states, wins, .. } = dev;
             if states.is_empty() {
                 continue;
             }
@@ -1448,10 +1566,14 @@ pub(crate) fn finish_fleet(
 ) -> FleetOutcome {
     let total_throughput = members.iter().map(|o| o.throughput).sum();
     let total_goodput = members.iter().map(|o| o.goodput).sum();
+    let slo = SloReport::from_members(
+        members.iter().map(|o| (o.slo_class, o.goodput, o.dropped_deadline)),
+    );
     FleetOutcome {
         members,
         total_throughput,
         total_goodput,
+        slo,
         peak_mem_mb: ctx.peak_mem_mb,
         mem_capacity_mb: ctx.mem_capacity_mb,
         peak_contention: ctx.peak_contention,
@@ -1549,6 +1671,150 @@ mod tests {
                 .err(),
             Some(ConfigError::ZeroQueueCapacity)
         );
+    }
+
+    #[test]
+    fn builder_rejects_misplaced_slo_knobs() {
+        let job = paper_job(1).unwrap();
+        let open = || ArrivalPattern::poisson(20.0);
+        // SLO-class knobs are open-loop machinery: refused on closed
+        // members, not silently ignored.
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).slo_class(SloClass::Gold).build().err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "slo_class" })
+        );
+        assert_eq!(
+            Fleet::builder().job(job, PolicySpec::Clipper).deadline_ms(40.0).build().err(),
+            Some(ConfigError::KnobRequiresOpenLoop { knob: "deadline_ms" })
+        );
+        // An explicit deadline without shedding would be a silent no-op.
+        assert_eq!(
+            Fleet::builder()
+                .job_with_arrivals(job, PolicySpec::Clipper, open())
+                .deadline_ms(40.0)
+                .build()
+                .err(),
+            Some(ConfigError::DeadlineRequiresShed)
+        );
+        // Deadline shape is validated before anything else about it.
+        for bad in [f64::NAN, 0.0, -5.0] {
+            assert_eq!(
+                Fleet::builder()
+                    .job_with_arrivals(job, PolicySpec::Clipper, open())
+                    .shed_deadline(true)
+                    .deadline_ms(bad)
+                    .build()
+                    .err()
+                    .map(|e| matches!(e, ConfigError::BadDeadline { .. })),
+                Some(true),
+                "deadline_ms {bad} must be rejected"
+            );
+        }
+        // The usual member-knob placement rule applies.
+        assert_eq!(
+            Fleet::builder().slo_class(SloClass::Silver).job(job, PolicySpec::Clipper).build().err(),
+            Some(ConfigError::MemberKnobBeforeJob { knob: "slo_class" })
+        );
+        // The whole-list form shares expand_member_list's count/conflict
+        // rules with sm_reservations.
+        assert_eq!(
+            Fleet::builder()
+                .job_with_arrivals(job, PolicySpec::Clipper, open())
+                .slo_classes(&[SloClass::Gold, SloClass::BestEffort])
+                .build()
+                .err(),
+            Some(ConfigError::ListCountMismatch { knob: "slo_classes", got: 2, members: 1 })
+        );
+        assert_eq!(
+            Fleet::builder()
+                .job_with_arrivals(job, PolicySpec::Clipper, open())
+                .slo_class(SloClass::Gold)
+                .slo_classes(&[SloClass::Silver])
+                .build()
+                .err(),
+            Some(ConfigError::ListOverridesMemberKnob {
+                list: "slo_classes",
+                knob: "slo_class"
+            })
+        );
+        // A classed, shedding, explicitly-deadlined open member builds.
+        assert!(Fleet::builder()
+            .job_with_arrivals(job, PolicySpec::Clipper, open())
+            .shed_deadline(true)
+            .deadline_ms(40.0)
+            .slo_class(SloClass::BestEffort)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn weighted_admission_shrinks_the_lowest_class_first() {
+        // Synthetic demand: each (bs, mtl) unit costs 100 MB, so the
+        // victim choice is fully visible. Capacity 500 forces exactly
+        // one shrink of the 600 MB request.
+        let demand = |_i: usize, (bs, mtl): (u32, u32)| (bs * mtl) as f64 * 100.0;
+        let requested = [(4, 1), (2, 1)];
+        // Unweighted: the greediest member (0) gives back memory.
+        let mut clamps = 0u64;
+        let pts = admit_window(&demand, 2, &requested, None, 500.0, &mut clamps).unwrap();
+        assert_eq!(pts, vec![(2, 1), (2, 1)]);
+        assert_eq!(clamps, 1);
+        // Gold vs best-effort: the best-effort member shrinks first even
+        // though the gold member is greedier.
+        let w = [SloClass::Gold.shed_weight(), SloClass::BestEffort.shed_weight()];
+        let mut clamps = 0u64;
+        let pts = admit_window(&demand, 2, &requested, Some(&w), 500.0, &mut clamps).unwrap();
+        assert_eq!(pts, vec![(4, 1), (1, 1)]);
+        assert_eq!(clamps, 1);
+        // Once best-effort is exhausted at (1, 1), gold does shrink —
+        // classes prioritize, they never deadlock admission.
+        let mut clamps = 0u64;
+        let pts = admit_window(&demand, 2, &requested, Some(&w), 300.0, &mut clamps).unwrap();
+        assert_eq!(pts, vec![(2, 1), (1, 1)]);
+        assert_eq!(clamps, 2);
+        // Equal weights restrict nothing: identical to the unweighted rule.
+        let eq = [8.0, 8.0];
+        let mut clamps = 0u64;
+        let pts = admit_window(&demand, 2, &requested, Some(&eq), 500.0, &mut clamps).unwrap();
+        assert_eq!(pts, vec![(2, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn classed_fleet_reports_per_class_accounting() {
+        let job = paper_job(1).unwrap();
+        let build = |classed: bool| {
+            let mut b = Fleet::builder().windows(6).rounds_per_window(6).seed(9);
+            for _ in 0..2 {
+                b = b
+                    .job_with_arrivals(
+                        job,
+                        PolicySpec::Static { bs: 1, mtl: 2 },
+                        ArrivalPattern::poisson(60.0),
+                    )
+                    .shed_deadline(true);
+            }
+            if classed {
+                b = b.slo_classes(&[SloClass::Gold, SloClass::BestEffort]);
+            }
+            b.build().unwrap().run().unwrap()
+        };
+        let plain = build(false);
+        assert!(plain.slo.is_none(), "unclassed outcome must carry no slo report");
+        assert!(plain.members.iter().all(|m| m.slo_class.is_none()));
+        let classed = build(true);
+        let report = classed.slo.as_ref().expect("classed outcome must carry the report");
+        assert_eq!(report.class(SloClass::Gold).members, 1);
+        assert_eq!(report.class(SloClass::BestEffort).members, 1);
+        assert_eq!(report.class(SloClass::Silver).members, 0);
+        assert_eq!(classed.members[0].slo_class, Some(SloClass::Gold));
+        assert_eq!(classed.members[1].slo_class, Some(SloClass::BestEffort));
+        let gold_goodput: f64 = classed
+            .members
+            .iter()
+            .filter(|m| m.slo_class == Some(SloClass::Gold))
+            .map(|m| m.goodput)
+            .sum();
+        assert_eq!(report.class(SloClass::Gold).goodput, gold_goodput);
     }
 
     #[test]

@@ -67,7 +67,12 @@
 //! * [`policy`] — the `Policy`/`WindowObservation`/`Action` interface,
 //!   the static-knob baseline, the queue-aware proactive scaler
 //!   (`QueuePolicy`, D-STACK-style demand estimation), and the
-//!   legacy-`Controller` adapter.
+//!   legacy-`Controller` adapter;
+//! * [`slo`] — per-member service classes (gold / silver / best-effort)
+//!   with class-weighted deadline shedding and overload admission, and
+//!   the paper's combined Batching + Multi-Tenancy search
+//!   (`CombinedPolicy`, §4.6) extended with a class-weighted partition
+//!   share knob (`ClassPartition`). See `docs/slo.md`.
 //!
 //! ## Substrate
 //!
@@ -93,6 +98,7 @@ pub mod profiler;
 pub mod scaler_batching;
 pub mod scaler_mt;
 pub mod session;
+pub mod slo;
 pub mod snapshot;
 pub mod testkit;
 
@@ -116,6 +122,7 @@ pub use profiler::{ProfileOutcome, Profiler};
 pub use session::{
     ConfigError, JobOutcome, PolicySpec, RunConfig, ServingSession, SessionBuilder, WindowRecord,
 };
+pub use slo::{ClassPartition, ClassStat, CombinedPolicy, ParseSloClassError, SloClass, SloReport};
 
 /// Hysteresis coefficient from the paper (§3.3.1): the Scaler holds the
 /// knob while `alpha * SLO <= p95 <= SLO`.

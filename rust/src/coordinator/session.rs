@@ -40,6 +40,7 @@ use super::policy::{Action, Policy, QueuePolicy, StaticPolicy, WindowObservation
 use super::profiler::{ProfileOutcome, Profiler};
 use super::scaler_batching::BatchScaler;
 use super::scaler_mt::MtScaler;
+use super::slo::{CombinedPolicy, SloClass};
 use super::{MAX_BS, MAX_MTL};
 
 use std::fmt;
@@ -165,6 +166,10 @@ pub struct JobOutcome {
     pub goodput: f64,
     /// Queue high-water mark over the whole run (0 closed-loop).
     pub queue_peak: usize,
+    /// Service class this member served under (fleet/cluster
+    /// `slo_class` knob only; None everywhere else — and the snapshot
+    /// stays byte-identical when None).
+    pub slo_class: Option<SloClass>,
 }
 
 impl JobOutcome {
@@ -218,6 +223,11 @@ pub enum ConfigError {
     /// Deadline shedding needs an arrival process (a closed loop has no
     /// queueing delay to shed on).
     ShedRequiresOpenLoop,
+    /// An explicit shed deadline must be finite and positive.
+    BadDeadline { deadline_ms: f64 },
+    /// An explicit `deadline_ms` only acts at shed time: setting it with
+    /// shedding disabled would be a silent no-op, so it is refused.
+    DeadlineRequiresShed,
     /// A per-member fleet knob (`queue_capacity`, `batch_timeout_ms`,
     /// `shed_deadline`) was set before any member job was added.
     MemberKnobBeforeJob { knob: &'static str },
@@ -299,6 +309,14 @@ impl fmt::Display for ConfigError {
             ConfigError::ShedRequiresOpenLoop => {
                 write!(f, "deadline shedding requires open-loop arrivals (closed loops do not queue)")
             }
+            ConfigError::BadDeadline { deadline_ms } => {
+                write!(f, "deadline_ms must be finite and > 0 (got {deadline_ms})")
+            }
+            ConfigError::DeadlineRequiresShed => write!(
+                f,
+                "deadline_ms only acts when deadline shedding is on; \
+                 enable shed_deadline on the member or drop the knob"
+            ),
             ConfigError::MemberKnobBeforeJob { knob } => {
                 write!(f, "{knob} applies to the most recently added fleet member; add a job first")
             }
@@ -367,6 +385,11 @@ pub enum PolicySpec<'a> {
     /// estimation): acts on queue depth / arrival rate / drops *before*
     /// p95 crosses the SLO. Intended for open-loop serving.
     QueueAware,
+    /// The paper's joint Batching + Multi-Tenancy search
+    /// ([`super::slo::CombinedPolicy`]): scores candidate (bs, mtl)
+    /// moves against p95-vs-deadline headroom every window and picks
+    /// the feasible move maximizing projected goodput.
+    Combined,
     /// Static-knob baseline: serve at a fixed point forever.
     Static { bs: u32, mtl: u32 },
     /// Any user-supplied policy.
@@ -386,6 +409,7 @@ impl fmt::Debug for PolicySpec<'_> {
             PolicySpec::DnnScaler => write!(f, "DnnScaler"),
             PolicySpec::Clipper => write!(f, "Clipper"),
             PolicySpec::QueueAware => write!(f, "QueueAware"),
+            PolicySpec::Combined => write!(f, "Combined"),
             PolicySpec::Static { bs, mtl } => write!(f, "Static {{ bs: {bs}, mtl: {mtl} }}"),
             PolicySpec::Custom(_) => write!(f, "Custom(..)"),
         }
@@ -685,6 +709,9 @@ pub(crate) fn resolve_policy<'a>(
         }
         PolicySpec::Clipper => (Box::new(Clipper::with_params(4, 0.10, cfg.max_bs)), None, None),
         PolicySpec::QueueAware => (Box::new(QueuePolicy::new(cfg.max_mtl)), None, None),
+        PolicySpec::Combined => {
+            (Box::new(CombinedPolicy::new(cfg.max_bs, cfg.max_mtl)), None, None)
+        }
         PolicySpec::Static { bs, mtl } => (
             Box::new(StaticPolicy::new(bs.clamp(1, cfg.max_bs), mtl.clamp(1, cfg.max_mtl))),
             None,
@@ -833,6 +860,7 @@ pub(crate) fn assemble_outcome(
         dropped_failure: 0,
         goodput: throughput * steady_attainment,
         queue_peak,
+        slo_class: None,
     }
 }
 
@@ -1329,6 +1357,8 @@ mod tests {
         assert!(ConfigError::UnknownDnn { dnn: "vgg16".into() }.to_string().contains("vgg16"));
         assert!(ConfigError::ShedRequiresOpenLoop.to_string().contains("open-loop"));
         assert!(ConfigError::MixedArrivalModes.to_string().contains("mix"));
+        assert!(ConfigError::BadDeadline { deadline_ms: -3.0 }.to_string().contains("-3"));
+        assert!(ConfigError::DeadlineRequiresShed.to_string().contains("shed_deadline"));
     }
 
     #[test]

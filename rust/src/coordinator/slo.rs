@@ -1,0 +1,753 @@
+//! SLO-class serving and the paper's combined-knob search (§4.6).
+//!
+//! Two halves, one subsystem:
+//!
+//! * **Service classes.** [`SloClass`] (Gold / Silver / BestEffort)
+//!   attaches to a fleet or cluster member. Each class carries a
+//!   *deadline multiplier* (`shed_scale`) applied to the member's
+//!   effective shedding deadline — best-effort work is shed at half the
+//!   deadline, silver at three quarters, gold at the full deadline — and
+//!   a *shedding weight* (`shed_weight`) used by memory-overload
+//!   admission: when the device must shrink someone, the lowest-weight
+//!   classes shrink first (best-effort before silver before gold).
+//!   Gold's multiplier is exactly 1.0 and its weight ties with the
+//!   unclassed default, so an all-gold (or unclassed) run is
+//!   byte-identical to a run with no classes at all. Per-class goodput
+//!   and shed totals aggregate into an [`SloReport`] that appears in
+//!   snapshots only when at least one member is classed.
+//!
+//! * **Combined knob search.** [`CombinedPolicy`] implements the paper's
+//!   joint Batching + Multi-Tenancy search as one policy: per window it
+//!   scores candidate `(batch_size, instances)` moves against observed
+//!   p95-vs-deadline headroom and picks the feasible move maximizing
+//!   projected (class-weighted) goodput, learning each knob's marginal
+//!   throughput gain from realized moves. [`ClassPartition`] adds the
+//!   third knob the paper didn't have — per-member SM partition share —
+//!   as a [`PartitionPolicy`] whose demand waterfill is class-weighted.
+//!   With partitioning off the pair degrades to the paper's two-knob
+//!   search, and with one knob ceiling at 1 to the single-knob scalers.
+//!
+//! Determinism contract: every decision here is a pure function of the
+//! observation stream (fixed candidate order, `total_cmp` argmax, no
+//! RNG), so classed runs stay byte-identical across thread counts just
+//! like unclassed ones. See `docs/slo.md`.
+
+use std::fmt;
+
+use crate::gpusim::MIN_GRANT;
+
+use super::policy::{Action, PartitionPolicy, Policy, WindowObservation};
+
+/// Per-member service class: how important this member's requests are
+/// when the device is overloaded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Full deadline, sheds last, heaviest admission weight.
+    Gold,
+    /// 0.75x deadline, sheds after best-effort.
+    Silver,
+    /// 0.5x deadline, first to shed and first to shrink under pressure.
+    BestEffort,
+}
+
+impl SloClass {
+    /// Every class, in shedding-priority order (last to shed first).
+    pub const ALL: [SloClass; 3] = [SloClass::Gold, SloClass::Silver, SloClass::BestEffort];
+
+    /// Multiplier applied to the member's effective shedding deadline.
+    /// Gold is exactly 1.0 so an all-gold pool is bit-identical to an
+    /// unclassed one (`x * 1.0 == x` for every finite f64).
+    pub fn shed_scale(self) -> f64 {
+        match self {
+            SloClass::Gold => 1.0,
+            SloClass::Silver => 0.75,
+            SloClass::BestEffort => 0.5,
+        }
+    }
+
+    /// Admission weight: under memory pressure, members of the lowest
+    /// weight present shrink first. Unclassed members weigh the same as
+    /// gold, so mixing unclassed and gold members changes nothing.
+    pub fn shed_weight(self) -> f64 {
+        match self {
+            SloClass::Gold => 8.0,
+            SloClass::Silver => 4.0,
+            SloClass::BestEffort => 1.0,
+        }
+    }
+
+    /// Stable index (Gold 0, Silver 1, BestEffort 2) for per-class
+    /// accumulator arrays.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Gold => 0,
+            SloClass::Silver => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Short letter used by the CLI (`--slo-class g,s,b`) and the fuzz
+    /// corpus canon (`slo=g`).
+    pub fn letter(self) -> &'static str {
+        match self {
+            SloClass::Gold => "g",
+            SloClass::Silver => "s",
+            SloClass::BestEffort => "b",
+        }
+    }
+
+    /// Human-readable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Gold => "gold",
+            SloClass::Silver => "silver",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a CLI/corpus token. Accepts the letter or the full name
+    /// (`g`/`gold`, `s`/`silver`, `b`/`be`/`besteffort`/`best-effort`).
+    pub fn parse(s: &str) -> Result<SloClass, ParseSloClassError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "g" | "gold" => Ok(SloClass::Gold),
+            "s" | "silver" => Ok(SloClass::Silver),
+            "b" | "be" | "besteffort" | "best-effort" => Ok(SloClass::BestEffort),
+            _ => Err(ParseSloClassError { token: s.to_string() }),
+        }
+    }
+}
+
+impl fmt::Display for SloClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why an SLO-class token was rejected: names the offending token so a
+/// typo like `--slo-class g,x` fails loudly at the CLI boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseSloClassError {
+    pub token: String,
+}
+
+impl fmt::Display for ParseSloClassError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown SLO class {:?} (expected g/gold, s/silver, or b/best-effort)",
+            self.token
+        )
+    }
+}
+
+impl std::error::Error for ParseSloClassError {}
+
+/// Per-class outcome totals for one class.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassStat {
+    /// Members carrying this class.
+    pub members: usize,
+    /// Summed goodput (inf/s meeting the SLO) across those members.
+    pub goodput: f64,
+    /// Summed deadline-shed request count across those members.
+    pub shed: u64,
+}
+
+/// Per-class aggregation over a fleet or cluster outcome. Built only
+/// when at least one member carries a class, so unclassed snapshots do
+/// not change by a single byte.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloReport {
+    /// Indexed by [`SloClass::index`]; classes with no members stay zero.
+    pub per_class: [ClassStat; 3],
+}
+
+impl SloReport {
+    /// Aggregate `(class, goodput, shed)` member rows; `None` when no
+    /// member is classed (the snapshot key must then be absent).
+    pub fn from_members<I>(members: I) -> Option<SloReport>
+    where
+        I: IntoIterator<Item = (Option<SloClass>, f64, u64)>,
+    {
+        let mut any = false;
+        let mut report = SloReport::default();
+        for (class, goodput, shed) in members {
+            let Some(c) = class else { continue };
+            any = true;
+            let stat = &mut report.per_class[c.index()];
+            stat.members += 1;
+            stat.goodput += goodput;
+            stat.shed += shed;
+        }
+        any.then_some(report)
+    }
+
+    /// Totals for one class.
+    pub fn class(&self, c: SloClass) -> ClassStat {
+        self.per_class[c.index()]
+    }
+
+    /// Fold another report into this one (cluster = sum of fleets).
+    pub fn merge(&mut self, other: &SloReport) {
+        for (a, b) in self.per_class.iter_mut().zip(&other.per_class) {
+            a.members += b.members;
+            a.goodput += b.goodput;
+            a.shed += b.shed;
+        }
+    }
+
+    /// True when no class has any member (merge target convenience).
+    pub fn is_empty(&self) -> bool {
+        self.per_class.iter().all(|s| s.members == 0)
+    }
+}
+
+/// The paper's combined Batching + Multi-Tenancy search (§4.6) as one
+/// first-class [`Policy`].
+///
+/// Where `BatchScaler` and `MtScaler` each turn one knob and `Clipper`
+/// turns batch size alone, `CombinedPolicy` searches the joint
+/// `(batch_size, instances)` space. Each window it:
+///
+/// 1. updates EWMAs of offered arrival rate and served throughput, and
+///    *learns* each knob's marginal gain from the last realized move
+///    (throughput ratio after a bs doubling / an added instance);
+/// 2. computes the p95-vs-deadline headroom;
+/// 3. enumerates candidate moves in a fixed order — hold, double bs,
+///    halve bs, add an instance, drop an instance — projecting each
+///    candidate's throughput (learned gains) and tail latency (knob
+///    latency multipliers);
+/// 4. when the tail already violates the deadline, takes the shrink move
+///    that keeps the most projected throughput; when demand outruns
+///    capacity and headroom allows, takes the feasible growth move
+///    maximizing projected (class-weighted) goodput; after sustained
+///    calm, gives back the cheapest knob.
+///
+/// The member's class weight is a constant factor in the score, so it
+/// never flips a single-member argmax — `resolve_policy` builds the
+/// policy with weight 1.0 — but it is part of the scoring contract so a
+/// fleet-level arbiter comparing scores *across* members weighs gold
+/// above best-effort. All arithmetic is deterministic: fixed candidate
+/// order, `total_cmp`, no randomness.
+#[derive(Debug, Clone)]
+pub struct CombinedPolicy {
+    bs: u32,
+    mtl: u32,
+    max_bs: u32,
+    max_mtl: u32,
+    /// Class weight, a constant score factor (see type docs).
+    weight: f64,
+    /// EWMA of the offered arrival rate (requests/s).
+    rate_ewma: f64,
+    /// EWMA of the served throughput (capacity proxy).
+    serve_ewma: f64,
+    /// Learned throughput multiplier of one bs doubling, clamped to
+    /// [1.0, 2.0] (doubling bs can at best double throughput).
+    gain_bs: f64,
+    /// Learned throughput multiplier of one added instance, clamped to
+    /// [1.0, 2.0].
+    gain_mt: f64,
+    /// Operating point during the window just observed (for learning).
+    last_point: (u32, u32),
+    /// Throughput of the window before that, at `last_point`'s
+    /// predecessor.
+    prev_thr: f64,
+    last_depth: usize,
+    /// Consecutive calm windows (empty queue, comfortable tail).
+    calm: u32,
+}
+
+/// Projected p95 multiplier of doubling the batch size (batch latency
+/// grows close to linearly in bs past the saturation knee, but queueing
+/// delay per request halves; 1.7 is the conservative fit).
+const LAT_BS: f64 = 1.7;
+/// Projected p95 multiplier of co-locating one more instance (SM
+/// contention, sublinear: instances time-slice).
+const LAT_MT: f64 = 1.25;
+
+impl CombinedPolicy {
+    /// Combined search up to the given knob ceilings, weight 1.0.
+    pub fn new(max_bs: u32, max_mtl: u32) -> Self {
+        Self::with_weight(max_bs, max_mtl, 1.0)
+    }
+
+    /// Combined search with an explicit class weight (see type docs).
+    pub fn with_weight(max_bs: u32, max_mtl: u32, weight: f64) -> Self {
+        assert!(max_bs >= 1 && max_mtl >= 1, "knob ceilings must be >= 1");
+        assert!(weight.is_finite() && weight > 0.0, "weight must be positive");
+        CombinedPolicy {
+            bs: 1,
+            mtl: 1,
+            max_bs,
+            max_mtl,
+            weight,
+            rate_ewma: 0.0,
+            serve_ewma: 0.0,
+            // Optimistic priors: batching starts believed slightly more
+            // efficient than multi-tenancy (the paper's Fig. 1 shape);
+            // realized moves correct both within a few windows.
+            gain_bs: 1.6,
+            gain_mt: 1.4,
+            last_point: (1, 1),
+            prev_thr: 0.0,
+            last_depth: 0,
+            calm: 0,
+        }
+    }
+
+    /// Update the learned gain for the knob the last move turned, from
+    /// the realized throughput ratio across the move.
+    fn learn(&mut self, thr_now: f64) {
+        const BETA: f64 = 0.5;
+        let (pbs, pmtl) = self.last_point;
+        if self.prev_thr > 0.0 && thr_now > 0.0 {
+            let realized = thr_now / self.prev_thr;
+            if self.bs > pbs && self.mtl == pmtl {
+                self.gain_bs = (BETA * realized + (1.0 - BETA) * self.gain_bs).clamp(1.0, 2.0);
+            } else if self.bs < pbs && self.mtl == pmtl {
+                // Shrink realizes the inverse ratio.
+                let inv = (1.0 / realized).clamp(1.0, 2.0);
+                self.gain_bs = (BETA * inv + (1.0 - BETA) * self.gain_bs).clamp(1.0, 2.0);
+            } else if self.mtl > pmtl && self.bs == pbs {
+                self.gain_mt = (BETA * realized + (1.0 - BETA) * self.gain_mt).clamp(1.0, 2.0);
+            } else if self.mtl < pmtl && self.bs == pbs {
+                let inv = (1.0 / realized).clamp(1.0, 2.0);
+                self.gain_mt = (BETA * inv + (1.0 - BETA) * self.gain_mt).clamp(1.0, 2.0);
+            }
+        }
+    }
+
+    fn set(&mut self, bs: u32, mtl: u32) -> Action {
+        self.calm = 0;
+        if (bs, mtl) == (self.bs, self.mtl) {
+            return Action::Hold;
+        }
+        self.bs = bs;
+        self.mtl = mtl;
+        Action::SetPoint { bs, mtl }
+    }
+}
+
+impl Policy for CombinedPolicy {
+    fn name(&self) -> &'static str {
+        "combined"
+    }
+
+    fn operating_point(&self) -> (u32, u32) {
+        (self.bs, self.mtl)
+    }
+
+    fn observe(&mut self, obs: &WindowObservation) -> Action {
+        const BETA: f64 = 0.5;
+        if obs.window == 0 {
+            self.rate_ewma = obs.arrival_rate;
+            self.serve_ewma = obs.throughput;
+        } else {
+            self.rate_ewma = BETA * obs.arrival_rate + (1.0 - BETA) * self.rate_ewma;
+            self.serve_ewma = BETA * obs.throughput + (1.0 - BETA) * self.serve_ewma;
+        }
+        self.learn(obs.throughput);
+        self.prev_thr = obs.throughput;
+        self.last_point = (self.bs, self.mtl);
+
+        let growing = obs.queue_depth > self.last_depth;
+        self.last_depth = obs.queue_depth;
+        let deadline = obs.slo_ms;
+        let p95 = obs.p95_ms.max(1e-3);
+
+        // Tail already violates the deadline: shrink the knob that keeps
+        // the most projected throughput (score = weight * thr / gain of
+        // the knob given back). Fixed order bs-then-mtl; strict `>` so
+        // ties shrink bs (the cheaper move — no relaunch).
+        if p95 > deadline {
+            let thr = obs.throughput.max(1e-9);
+            let mut best: Option<((u32, u32), f64)> = None;
+            if self.bs > 1 {
+                best = Some((((self.bs / 2).max(1), self.mtl), self.weight * thr / self.gain_bs));
+            }
+            if self.mtl > 1 {
+                let score = self.weight * thr / self.gain_mt;
+                if best.as_ref().map_or(true, |(_, s)| score > *s) {
+                    best = Some(((self.bs, self.mtl - 1), score));
+                }
+            }
+            return match best {
+                Some(((bs, mtl), _)) => self.set(bs, mtl),
+                None => Action::Hold, // already at (1,1): nothing to give back
+            };
+        }
+
+        // Demand signals (same proactive triad as QueuePolicy): backlog,
+        // drops of any kind, or offered rate outrunning service while
+        // the queue grows.
+        let batch = (self.bs as usize) * (self.mtl as usize);
+        let backlog = obs.queue_depth > 2 * batch;
+        let starved = obs.drops > 0 || obs.drops_deadline > 0;
+        let demand = growing && self.rate_ewma > self.serve_ewma * 1.05;
+        if backlog || starved || demand {
+            // Grow: among the candidate moves whose projected tail still
+            // fits the deadline, take the one maximizing projected
+            // class-weighted goodput (projected throughput; the
+            // feasibility gate is the goodput filter). Fixed candidate
+            // order: double bs, then add an instance; strict `>` keeps
+            // the argmax deterministic and bs-first on ties.
+            let thr = obs.throughput.max(1e-9);
+            let mut best: Option<((u32, u32), f64)> = None;
+            if self.bs * 2 <= self.max_bs && p95 * LAT_BS <= deadline {
+                best = Some(((self.bs * 2, self.mtl), self.weight * thr * self.gain_bs));
+            }
+            if self.mtl + 1 <= self.max_mtl && p95 * LAT_MT <= deadline {
+                let score = self.weight * thr * self.gain_mt;
+                if best.as_ref().map_or(true, |(_, s)| score > *s) {
+                    best = Some(((self.bs, self.mtl + 1), score));
+                }
+            }
+            if let Some(((bs, mtl), _)) = best {
+                return self.set(bs, mtl);
+            }
+            // No feasible growth: capacity is deadline-bound. If even the
+            // cheaper latency move is infeasible because bs is carrying
+            // the tail, trade bs for an instance (same throughput order,
+            // lower projected tail) — the combined move neither
+            // single-knob scaler can make.
+            if self.bs > 1 && self.mtl + 1 <= self.max_mtl && self.gain_mt >= self.gain_bs {
+                return self.set((self.bs / 2).max(1), self.mtl + 1);
+            }
+            self.calm = 0;
+            return Action::Hold;
+        }
+
+        // Calm decay: after two comfortable windows give back the knob
+        // whose learned gain is smallest (loses the least throughput).
+        if obs.queue_depth == 0 && p95 <= 0.5 * deadline {
+            self.calm += 1;
+            if self.calm >= 2 && (self.bs > 1 || self.mtl > 1) {
+                let shrink_bs = self.bs > 1 && (self.mtl == 1 || self.gain_bs <= self.gain_mt);
+                return if shrink_bs {
+                    self.set((self.bs / 2).max(1), self.mtl)
+                } else {
+                    self.set(self.bs, self.mtl - 1)
+                };
+            }
+        } else {
+            self.calm = 0;
+        }
+        Action::Hold
+    }
+}
+
+/// Class-weighted SM partition rebalancer — the §4.6 third knob, made
+/// class-aware. Identical demand model to
+/// [`DemandPartition`](super::policy::DemandPartition) (EWMA of arrival
+/// rate + backlog + drop pressure, floor-pinned waterfill, hold below a
+/// drift threshold), except each member's pressure is multiplied by its
+/// class shed-weight: under contention gold pulls SM share away from
+/// best-effort at equal offered load. With every member unclassed (all
+/// weights 1.0) it reduces exactly to the demand-only rebalancer.
+#[derive(Debug, Clone)]
+pub struct ClassPartition {
+    /// Per-member class weight (1.0 for unclassed members).
+    weights: Vec<f64>,
+    /// Smoothed weighted demand score per member.
+    score: Vec<f64>,
+    /// Minimum share any member can be squeezed to.
+    floor: f64,
+    /// Smoothing step toward the weighted-demand target, 0..1.
+    gain: f64,
+}
+
+impl ClassPartition {
+    /// Weighted rebalancer for the given per-member classes (index
+    /// aligned with the fleet's members; `None` = unclassed, weight 1).
+    pub fn new(classes: &[Option<SloClass>]) -> Self {
+        let weights =
+            classes.iter().map(|c| c.map_or(1.0, SloClass::shed_weight)).collect();
+        ClassPartition {
+            weights,
+            score: Vec::new(),
+            floor: MIN_GRANT.max(0.05),
+            gain: 0.3,
+        }
+    }
+}
+
+impl PartitionPolicy for ClassPartition {
+    fn name(&self) -> &'static str {
+        "class-share"
+    }
+
+    fn rebalance(&mut self, obs: &[WindowObservation], current: &[f64]) -> Option<Vec<f64>> {
+        if obs.len() != current.len() || obs.is_empty() || obs.len() != self.weights.len() {
+            return None;
+        }
+        if self.score.len() != obs.len() {
+            self.score = vec![1.0; obs.len()];
+        }
+        const BETA: f64 = 0.5;
+        for ((s, o), w) in self.score.iter_mut().zip(obs).zip(&self.weights) {
+            let pressure = o.arrival_rate
+                + o.queue_depth as f64
+                + 10.0 * (o.drops + o.drops_deadline) as f64;
+            *s = BETA * (w * pressure.max(1e-3)) + (1.0 - BETA) * *s;
+        }
+        let n = current.len() as f64;
+        // Floor-pinned waterfill toward the weighted-demand split (see
+        // DemandPartition for the unweighted derivation).
+        let mut target = vec![0.0; current.len()];
+        if self.floor * n > 1.0 {
+            target.fill(1.0 / n);
+        } else {
+            let mut pinned = vec![false; current.len()];
+            loop {
+                let pinned_mass = pinned.iter().filter(|&&p| p).count() as f64 * self.floor;
+                let free_score: f64 = self
+                    .score
+                    .iter()
+                    .zip(&pinned)
+                    .filter(|(_, &p)| !p)
+                    .map(|(s, _)| *s)
+                    .sum();
+                let mut changed = false;
+                for i in 0..current.len() {
+                    if pinned[i] {
+                        target[i] = self.floor;
+                        continue;
+                    }
+                    target[i] = self.score[i] / free_score * (1.0 - pinned_mass);
+                    if target[i] < self.floor {
+                        pinned[i] = true;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+        }
+        let mut next: Vec<f64> = current
+            .iter()
+            .zip(&target)
+            .map(|(c, t)| c + self.gain * (t - c))
+            .collect();
+        let nsum: f64 = next.iter().sum();
+        if nsum > 1.0 {
+            for v in &mut next {
+                *v /= nsum;
+            }
+        }
+        let drift: f64 =
+            next.iter().zip(current).map(|(a, b)| (a - b).abs()).sum::<f64>() / n;
+        if drift < 0.005 {
+            None
+        } else {
+            Some(next)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_parse_accepts_letters_and_names() {
+        for (tok, want) in [
+            ("g", SloClass::Gold),
+            ("gold", SloClass::Gold),
+            (" S ", SloClass::Silver),
+            ("silver", SloClass::Silver),
+            ("b", SloClass::BestEffort),
+            ("be", SloClass::BestEffort),
+            ("best-effort", SloClass::BestEffort),
+            ("BestEffort", SloClass::BestEffort),
+        ] {
+            assert_eq!(SloClass::parse(tok), Ok(want), "{tok:?}");
+        }
+        let err = SloClass::parse("platinum").unwrap_err();
+        assert!(err.to_string().contains("platinum"), "{err}");
+    }
+
+    #[test]
+    fn class_constants_order_the_tiers() {
+        // Deadlines tighten and weights drop monotonically down-tier;
+        // gold's multiplier is exactly 1.0 (the byte-identity anchor).
+        assert_eq!(SloClass::Gold.shed_scale(), 1.0);
+        assert!(SloClass::Gold.shed_scale() > SloClass::Silver.shed_scale());
+        assert!(SloClass::Silver.shed_scale() > SloClass::BestEffort.shed_scale());
+        assert!(SloClass::Gold.shed_weight() > SloClass::Silver.shed_weight());
+        assert!(SloClass::Silver.shed_weight() > SloClass::BestEffort.shed_weight());
+        for (i, c) in SloClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(SloClass::parse(c.letter()), Ok(*c));
+            assert_eq!(SloClass::parse(c.name()), Ok(*c));
+        }
+    }
+
+    #[test]
+    fn slo_report_absent_without_classes() {
+        assert_eq!(SloReport::from_members([(None, 10.0, 3), (None, 5.0, 0)]), None);
+        let r = SloReport::from_members([
+            (Some(SloClass::Gold), 10.0, 1),
+            (None, 99.0, 99),
+            (Some(SloClass::Gold), 2.5, 0),
+            (Some(SloClass::BestEffort), 1.0, 7),
+        ])
+        .unwrap();
+        assert_eq!(r.class(SloClass::Gold).members, 2);
+        assert_eq!(r.class(SloClass::Gold).goodput, 12.5);
+        assert_eq!(r.class(SloClass::Gold).shed, 1);
+        assert_eq!(r.class(SloClass::Silver), ClassStat::default());
+        assert_eq!(r.class(SloClass::BestEffort).shed, 7);
+        let mut merged = SloReport::default();
+        assert!(merged.is_empty());
+        merged.merge(&r);
+        merged.merge(&r);
+        assert_eq!(merged.class(SloClass::Gold).goodput, 25.0);
+        assert!(!merged.is_empty());
+    }
+
+    fn overload_obs(window: usize, p95: f64) -> WindowObservation {
+        WindowObservation {
+            window,
+            slo_ms: 100.0,
+            p95_ms: p95,
+            mean_ms: p95 * 0.6,
+            throughput: 50.0,
+            power_w: 0.0,
+            sm_util: 0.0,
+            queue_depth: 40 + 5 * window,
+            arrival_rate: 400.0,
+            drops: 2,
+            drops_deadline: 1,
+        }
+    }
+
+    #[test]
+    fn combined_policy_grows_both_knobs_under_overload() {
+        let mut p = CombinedPolicy::new(128, 10);
+        assert_eq!(p.name(), "combined");
+        assert_eq!(p.operating_point(), (1, 1));
+        for w in 0..12 {
+            p.observe(&overload_obs(w, 30.0));
+        }
+        let (bs, mtl) = p.operating_point();
+        assert!(bs > 1, "overload with headroom must grow bs (got bs={bs})");
+        assert!(mtl > 1, "overload with headroom must grow mtl (got mtl={mtl})");
+    }
+
+    #[test]
+    fn combined_policy_shrinks_on_deadline_violation() {
+        let mut p = CombinedPolicy::new(128, 10);
+        for w in 0..6 {
+            p.observe(&overload_obs(w, 30.0));
+        }
+        let before = p.operating_point();
+        assert!(before > (1, 1));
+        let a = p.observe(&overload_obs(6, 250.0)); // 2.5x the deadline
+        assert!(matches!(a, Action::SetPoint { .. }), "violation must shrink, got {a:?}");
+        let after = p.operating_point();
+        assert!(
+            after.0 < before.0 || after.1 < before.1,
+            "shrink must give back a knob: {before:?} -> {after:?}"
+        );
+    }
+
+    #[test]
+    fn combined_policy_respects_ceilings_and_holds_at_floor() {
+        let mut p = CombinedPolicy::new(2, 2);
+        for w in 0..30 {
+            p.observe(&overload_obs(w, 30.0));
+            let (bs, mtl) = p.operating_point();
+            assert!(bs <= 2 && mtl <= 2, "({bs},{mtl}) escaped the ceilings");
+        }
+        // At (1,1) a violation has nothing to give back: hold, not panic.
+        let mut q = CombinedPolicy::new(128, 10);
+        assert_eq!(q.observe(&overload_obs(0, 500.0)), Action::Hold);
+        assert_eq!(q.operating_point(), (1, 1));
+    }
+
+    #[test]
+    fn combined_policy_decays_after_calm() {
+        let mut p = CombinedPolicy::new(128, 10);
+        for w in 0..8 {
+            p.observe(&overload_obs(w, 30.0));
+        }
+        let grown = p.operating_point();
+        assert!(grown > (1, 1));
+        for w in 8..60 {
+            let mut o = overload_obs(w, 10.0);
+            o.queue_depth = 0;
+            o.arrival_rate = 1.0;
+            o.throughput = 1.0;
+            o.drops = 0;
+            o.drops_deadline = 0;
+            p.observe(&o);
+        }
+        assert_eq!(p.operating_point(), (1, 1), "calm must decay back to the floor");
+    }
+
+    #[test]
+    fn combined_policy_is_deterministic() {
+        let run = || {
+            let mut p = CombinedPolicy::new(128, 10);
+            let mut points = Vec::new();
+            for w in 0..40 {
+                let p95 = if w % 7 == 6 { 180.0 } else { 25.0 + w as f64 };
+                p.observe(&overload_obs(w, p95));
+                points.push(p.operating_point());
+            }
+            points
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn class_partition_weighs_gold_over_best_effort() {
+        let classes = [Some(SloClass::Gold), Some(SloClass::BestEffort)];
+        let mut p = ClassPartition::new(&classes);
+        assert_eq!(p.name(), "class-share");
+        let mut res = vec![0.5, 0.5];
+        // Identical offered load on both members: only the class weight
+        // differs, so gold must end with the larger share.
+        for w in 0..12 {
+            let o = overload_obs(w, 30.0);
+            if let Some(next) = p.rebalance(&[o, o], &res) {
+                res = next;
+            }
+        }
+        assert!(res[0] > res[1], "gold {} must out-share best-effort {}", res[0], res[1]);
+        assert!(res[1] >= 0.04, "best-effort squeezed below its floor: {}", res[1]);
+        assert!(res.iter().sum::<f64>() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn class_partition_unclassed_matches_demand_partition() {
+        use super::super::policy::DemandPartition;
+        let mut weighted = ClassPartition::new(&[None, None]);
+        let mut plain = DemandPartition::new();
+        let mut a = vec![0.5, 0.5];
+        let mut b = vec![0.5, 0.5];
+        for w in 0..10 {
+            let hot = overload_obs(w, 30.0);
+            let mut cold = overload_obs(w, 5.0);
+            cold.arrival_rate = 1.0;
+            cold.queue_depth = 0;
+            cold.drops = 0;
+            cold.drops_deadline = 0;
+            if let Some(next) = weighted.rebalance(&[hot, cold], &a) {
+                a = next;
+            }
+            if let Some(next) = plain.rebalance(&[hot, cold], &b) {
+                b = next;
+            }
+            assert_eq!(a, b, "window {w}: all-unclassed must mirror demand-share");
+        }
+    }
+
+    #[test]
+    fn class_partition_holds_on_bad_input() {
+        let mut p = ClassPartition::new(&[None, None]);
+        assert!(p.rebalance(&[overload_obs(0, 10.0)], &[0.5, 0.5]).is_none());
+        assert!(p.rebalance(&[], &[]).is_none());
+    }
+}

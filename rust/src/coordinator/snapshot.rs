@@ -27,6 +27,7 @@ use crate::json::Json;
 use super::cluster::ClusterOutcome;
 use super::fleet::FleetOutcome;
 use super::session::{JobOutcome, WindowRecord};
+use super::slo::{SloClass, SloReport};
 
 use std::collections::BTreeMap;
 
@@ -93,10 +94,29 @@ pub fn job_outcome_to_json(o: &JobOutcome) -> Json {
     obj(fields)
 }
 
+/// Per-class accounting, keyed by class name. Present in fleet/cluster
+/// snapshots only when the run carried SLO classes.
+fn slo_report_to_json(r: &SloReport) -> Json {
+    obj(SloClass::ALL
+        .iter()
+        .map(|&c| {
+            let s = r.class(c);
+            (
+                c.name(),
+                obj(vec![
+                    ("members", num(s.members as f64)),
+                    ("goodput", num(s.goodput)),
+                    ("shed", num(s.shed as f64)),
+                ]),
+            )
+        })
+        .collect())
+}
+
 /// Snapshot a fleet outcome (per-member snapshots + shared-GPU telemetry)
 /// as a deterministic JSON value.
 pub fn fleet_outcome_to_json(o: &FleetOutcome) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("partition", Json::Str(o.partition.to_string())),
         ("total_throughput", num(o.total_throughput)),
         ("total_goodput", num(o.total_goodput)),
@@ -121,7 +141,13 @@ pub fn fleet_outcome_to_json(o: &FleetOutcome) -> Json {
             "members",
             Json::Arr(o.members.iter().map(job_outcome_to_json).collect()),
         ),
-    ])
+    ];
+    // SLO classes only exist when some member was classed; omitting the
+    // key otherwise keeps every unclassed snapshot byte-identical.
+    if let Some(r) = &o.slo {
+        fields.push(("slo", slo_report_to_json(r)));
+    }
+    obj(fields)
 }
 
 /// Snapshot a cluster outcome: placement metadata, the assignment, and
@@ -205,6 +231,11 @@ pub fn cluster_outcome_to_json(o: &ClusterOutcome) -> Json {
             ));
         }
         fields.push(("dynamics", obj(dyn_fields)));
+    }
+    // The cluster-wide class report mirrors the per-device ones and is
+    // conditional for the identical byte-identity reason.
+    if let Some(r) = &o.slo {
+        fields.push(("slo", slo_report_to_json(r)));
     }
     obj(fields)
 }

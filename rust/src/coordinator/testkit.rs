@@ -48,8 +48,8 @@ use crate::rng::Rng;
 use crate::workload::ArrivalPattern;
 
 use super::cluster::{
-    fold_device_outcomes, timeshare_ctx, whole_desc, Assignment, BestFit, Cluster, ClusterOutcome,
-    DeviceOutcome, InterferenceAware, PlacementJob, RoundRobin,
+    fold_device_outcomes, merge_slo_reports, timeshare_ctx, whole_desc, Assignment, BestFit,
+    Cluster, ClusterOutcome, DeviceOutcome, InterferenceAware, PlacementJob, RoundRobin,
 };
 use super::dynamics::{
     blank_obs, free_mb, model_load_ms, most_free_fit, try_evacuate, ChurnSchedule, DynamicsCfg,
@@ -68,14 +68,16 @@ use super::policy::{Action, WindowObservation};
 use super::session::{
     serve_closed_window, ConfigError, JobOutcome, PolicySpec, RunConfig,
 };
+use super::slo::SloClass;
 use super::snapshot::{cluster_outcome_to_json, render};
 
 /// Scenario classes the generator cycles through (`case % NUM_CLASSES`):
 /// closed TimeShare fleet, MPS fleet, MIG fleet, closed cluster, open
-/// cluster, open cluster with churn + migration + autoscaling, and open
+/// cluster, open cluster with churn + migration + autoscaling, open
 /// cluster with fault injection (crashes, degrades, repairs, MTBF mode)
-/// interleaved with churn and autoscaling.
-pub const NUM_CLASSES: usize = 7;
+/// interleaved with churn and autoscaling, and open cluster with SLO
+/// classes (class-weighted shedding/admission and per-class accounting).
+pub const NUM_CLASSES: usize = 8;
 
 /// Human-readable name of a generator class.
 pub fn class_name(class: usize) -> &'static str {
@@ -86,7 +88,8 @@ pub fn class_name(class: usize) -> &'static str {
         3 => "cluster/closed",
         4 => "cluster/open",
         5 => "cluster/dynamics",
-        _ => "cluster/faults",
+        6 => "cluster/faults",
+        _ => "cluster/slo",
     }
 }
 
@@ -241,6 +244,9 @@ pub struct JobGene {
     /// Spatial-mode SM reservation (fleet scenarios only; the cluster
     /// builder has no such knob, and `build()` rejects it there).
     pub sm_reservation: Option<f64>,
+    /// SLO class (open-loop only; the builders reject it on closed
+    /// members, which the generator never draws).
+    pub slo: Option<SloClass>,
 }
 
 impl JobGene {
@@ -253,6 +259,7 @@ impl JobGene {
             batch_timeout_ms: None,
             shed_deadline: false,
             sm_reservation: None,
+            slo: None,
         }
     }
 }
@@ -404,6 +411,9 @@ impl Scenario {
                     if j.shed_deadline {
                         b = b.shed_deadline(true);
                     }
+                    if let Some(c) = j.slo {
+                        b = b.slo_class(c);
+                    }
                 }
                 if let Some(dy) = &self.dynamics {
                     if !dy.churn.is_empty() {
@@ -497,6 +507,9 @@ fn add_fleet_job(
     if let Some(f) = j.sm_reservation {
         b = b.sm_reservation(f);
     }
+    if let Some(c) = j.slo {
+        b = b.slo_class(c);
+    }
     Ok(b)
 }
 
@@ -529,6 +542,7 @@ fn fleet_gpu(sc: &Scenario) -> GpuSpec {
 fn wrap_fleet_outcome(fleet: super::fleet::FleetOutcome, gpu: GpuSpec, jobs: usize) -> ClusterOutcome {
     let total_throughput = fleet.total_throughput;
     let total_goodput = fleet.total_goodput;
+    let slo = fleet.slo.clone();
     ClusterOutcome {
         devices: vec![DeviceOutcome {
             device: whole_desc(gpu, 0),
@@ -540,6 +554,7 @@ fn wrap_fleet_outcome(fleet: super::fleet::FleetOutcome, gpu: GpuSpec, jobs: usi
         total_throughput,
         total_goodput,
         dynamics: None,
+        slo,
     }
 }
 
@@ -609,6 +624,7 @@ fn reference_closed_window(
         &|i, (bs, mtl)| states[i].sim.mem_demand_mb(bs, mtl),
         states.len(),
         &requested,
+        None,
         ctx.mem_capacity_mb,
         &mut ctx.admission_clamps,
     )?;
@@ -805,6 +821,7 @@ fn reference_cluster(c: Cluster<'_>) -> Result<ClusterOutcome, DeviceError> {
     };
     let total_throughput = outcomes.iter().map(|d| d.fleet.total_throughput).sum();
     let total_goodput = outcomes.iter().map(|d| d.fleet.total_goodput).sum();
+    let slo = merge_slo_reports(&outcomes);
     Ok(ClusterOutcome {
         devices: outcomes,
         placement,
@@ -812,6 +829,7 @@ fn reference_cluster(c: Cluster<'_>) -> Result<ClusterOutcome, DeviceError> {
         total_throughput,
         total_goodput,
         dynamics: None,
+        slo,
     })
 }
 
@@ -1151,10 +1169,22 @@ fn reference_dynamic<'a>(
             let members = &groups[d];
             let requested: Vec<(u32, u32)> =
                 members.iter().map(|&li| lives[li].m.policy.operating_point()).collect();
+            // Class weights rebuilt per window from the device's current
+            // residents — verbatim mirror of the dynamic fast path.
+            let weights: Option<Vec<f64>> = members
+                .iter()
+                .any(|&li| lives[li].m.slo_class.is_some())
+                .then(|| {
+                    members
+                        .iter()
+                        .map(|&li| lives[li].m.slo_class.map_or(1.0, SloClass::shed_weight))
+                        .collect()
+                });
             let pts = admit_window(
                 &|i, (bs, mtl)| lives[members[i]].m.sim.mem_demand_mb(bs, mtl),
                 members.len(),
                 &requested,
+                weights.as_deref(),
                 ctx.mem_capacity_mb,
                 &mut ctx.admission_clamps,
             )?;
@@ -1279,6 +1309,7 @@ fn reference_dynamic<'a>(
     if have_faults {
         dyn_out.faults = Some(fo);
     }
+    let slo = merge_slo_reports(&devices);
     Ok(ClusterOutcome {
         devices,
         placement,
@@ -1286,6 +1317,7 @@ fn reference_dynamic<'a>(
         total_throughput,
         total_goodput,
         dynamics: Some(dyn_out),
+        slo,
     })
 }
 
@@ -1562,11 +1594,18 @@ fn shrink_candidates(cur: &Scenario) -> Vec<Scenario> {
             cands.push(c);
         }
     }
-    // 6. Simplify policies and clear per-job knobs.
+    // 6. Simplify policies and clear per-job knobs (class assignments
+    //    first on their own — a minimal SLO counterexample should keep
+    //    the unrelated queueing knobs it does not need).
     for j in 0..cur.jobs.len() {
         if cur.jobs[j].policy != (PolicyGene::Static { bs: 1, mtl: 1 }) {
             let mut c = cur.clone();
             c.jobs[j].policy = PolicyGene::Static { bs: 1, mtl: 1 };
+            cands.push(c);
+        }
+        if cur.jobs[j].slo.is_some() {
+            let mut c = cur.clone();
+            c.jobs[j].slo = None;
             cands.push(c);
         }
         let g = &cur.jobs[j];
@@ -1574,12 +1613,14 @@ fn shrink_candidates(cur: &Scenario) -> Vec<Scenario> {
             || g.batch_timeout_ms.is_some()
             || g.shed_deadline
             || g.sm_reservation.is_some()
+            || g.slo.is_some()
         {
             let mut c = cur.clone();
             c.jobs[j].queue_capacity = None;
             c.jobs[j].batch_timeout_ms = None;
             c.jobs[j].shed_deadline = false;
             c.jobs[j].sm_reservation = None;
+            c.jobs[j].slo = None;
             cands.push(c);
         }
     }
@@ -1781,7 +1822,47 @@ fn gen_attempt(class: usize, seed: u64) -> Scenario {
             }
         }
         5 => gen_dynamics_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
-        _ => gen_faults_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
+        6 => gen_faults_attempt(&mut r, sc_seed, windows.max(4), rounds, threads),
+        _ => gen_slo_attempt(&mut r, sc_seed, windows, rounds, threads),
+    }
+}
+
+/// Class 7: open cluster with SLO classes. Most jobs carry a class
+/// (uniform over gold/silver/best-effort) and shed their deadline
+/// overruns, so class-weighted shedding AND class-weighted admission
+/// both fire; at least one job is always classed, else the scenario
+/// would degenerate to plain class 4.
+fn gen_slo_attempt(
+    r: &mut Rng,
+    sc_seed: u64,
+    windows: usize,
+    rounds: usize,
+    threads: usize,
+) -> Scenario {
+    let n_dev = 1 + r.below(3);
+    let devices: Vec<DeviceGene> =
+        (0..n_dev).map(|_| DeviceGene { gpu: gen_gpu(r), mig: None }).collect();
+    let mut jobs: Vec<JobGene> = (0..2 + r.below(3)).map(|_| gen_job(r, true)).collect();
+    for j in jobs.iter_mut() {
+        if r.chance(0.8) {
+            j.slo = Some(SloClass::ALL[r.below(3)]);
+            if r.chance(0.7) {
+                j.shed_deadline = true;
+            }
+        }
+    }
+    if jobs.iter().all(|j| j.slo.is_none()) {
+        jobs[0].slo = Some(SloClass::Gold);
+        jobs[0].shed_deadline = true;
+    }
+    Scenario {
+        seed: sc_seed,
+        windows,
+        rounds,
+        threads,
+        kind: ScenarioKind::Cluster { devices, placement: PlacementGene::RoundRobin },
+        jobs,
+        dynamics: None,
     }
 }
 
@@ -2025,7 +2106,7 @@ pub fn fallback_scenario(class: usize, seed: u64) -> Scenario {
                 mtbf: None,
             }),
         ),
-        _ => base(
+        6 => base(
             ScenarioKind::Cluster {
                 devices: vec![
                     DeviceGene { gpu: GpuName::P40, mig: None },
@@ -2057,6 +2138,36 @@ pub fn fallback_scenario(class: usize, seed: u64) -> Scenario {
                 mtbf: None,
             }),
         ),
+        _ => {
+            let mut jobs = vec![
+                JobGene::simple(
+                    1,
+                    PolicyGene::Static { bs: 2, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 40.0 },
+                ),
+                JobGene::simple(
+                    5,
+                    PolicyGene::Static { bs: 1, mtl: 1 },
+                    ArrivalGene::Poisson { rate: 40.0 },
+                ),
+                JobGene::simple(7, PolicyGene::QueueAware, ArrivalGene::Poisson { rate: 40.0 }),
+            ];
+            for (j, c) in jobs.iter_mut().zip(SloClass::ALL) {
+                j.slo = Some(c);
+                j.shed_deadline = true;
+            }
+            base(
+                ScenarioKind::Cluster {
+                    devices: vec![
+                        DeviceGene { gpu: GpuName::P40, mig: None },
+                        DeviceGene { gpu: GpuName::T4, mig: None },
+                    ],
+                    placement: PlacementGene::RoundRobin,
+                },
+                jobs,
+                None,
+            )
+        }
     }
 }
 
@@ -2122,6 +2233,9 @@ pub fn to_canon(sc: &Scenario) -> String {
         }
         if let Some(f) = j.sm_reservation {
             s.push_str(&format!(" resv={f}"));
+        }
+        if let Some(c) = j.slo {
+            s.push_str(&format!(" slo={}", c.letter()));
         }
         s.push('\n');
     }
@@ -2214,6 +2328,7 @@ fn parse_job_line(line: &str) -> Result<JobGene, String> {
             "timeout" => g.batch_timeout_ms = Some(parse_num("batch timeout", v)?),
             "shed" => g.shed_deadline = v == "1",
             "resv" => g.sm_reservation = Some(parse_num("reservation", v)?),
+            "slo" => g.slo = Some(SloClass::parse(v).map_err(|e| e.to_string())?),
             _ => return Err(format!("unknown job key: {k:?}")),
         }
     }
@@ -2563,6 +2678,26 @@ mod tests {
         assert_eq!(fo.pool_health.len(), sc.windows);
         assert!(fo.pool_health.iter().any(|&h| h < 3), "a crash window must show up");
         assert!(out.audit().is_ok(), "fault run must conserve requests: {:?}", out.audit());
+    }
+
+    #[test]
+    fn slo_fallback_reports_classes_and_round_trips() {
+        let sc = fallback_scenario(7, 5);
+        // Canon serializes the class letters and parses them back.
+        let text = to_canon(&sc);
+        assert!(text.contains(" slo=g") && text.contains(" slo=s") && text.contains(" slo=b"));
+        assert_eq!(from_canon(&text), Ok(sc.clone()));
+        // The fast engine reports one member per class, and the naive
+        // reference reproduces the class-weighted arithmetic exactly.
+        let out = run_fast(&sc).expect("slo fallback builds").expect("slo fallback runs");
+        let slo = out.slo.as_ref().expect("classed run must report slo");
+        for c in SloClass::ALL {
+            assert_eq!(slo.class(c).members, 1, "{} membership", c.name());
+        }
+        assert_eq!(check_scenario(&sc, None), Ok(()));
+        // Shrinking an SLO failure can drop the class assignments.
+        let shrunk = shrink(&sc, &mut |c| c.jobs.iter().any(|j| j.slo.is_some()));
+        assert_eq!(shrunk.jobs.iter().filter(|j| j.slo.is_some()).count(), 1);
     }
 
     #[test]

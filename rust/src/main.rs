@@ -32,7 +32,7 @@ use dnnscaler::coordinator::job::{paper_job, JobSpec, PAPER_JOBS};
 use dnnscaler::coordinator::session::{
     JobOutcome, PolicySpec, RunConfig, ServingSession, DEFAULT_BATCH_TIMEOUT_MS,
 };
-use dnnscaler::coordinator::{FaultSchedule, Fleet, Method, Profiler};
+use dnnscaler::coordinator::{FaultSchedule, Fleet, Method, Profiler, SloClass, SloReport};
 #[cfg(feature = "xla")]
 use dnnscaler::device::real::RealDevice;
 use dnnscaler::gpusim::{Dataset, GpuSim, PartitionMode, PAPER_DNNS};
@@ -61,7 +61,7 @@ COMMANDS:
   fleet    [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,.. | --trace PATH] [--shed] [--timeout-ms MS]
            [--queue-cap N] [--partition timeshare|mps|mig[:N]]
-           [--reservations F1,F2,..]
+           [--reservations F1,F2,..] [--slo-class C1,C2,..]
            Serve several jobs concurrently on ONE shared simulated P40
            (shared memory admission + SM contention). With --rates (one
            Poisson rate per member, or one rate for all) or --trace, the
@@ -71,12 +71,16 @@ COMMANDS:
            spatial capacity grants (MIG quantizes down to 1/N slices);
            --reservations pins per-member SM fractions (one value or one
            per member; members without one split the rest equally).
+           --slo-class gives members service classes (g/gold, s/silver,
+           b/best-effort; one value or one per member, needs --rates or
+           --trace): lower classes shed earlier and shrink first under
+           memory pressure, and the report gains per-class goodput/shed.
   cluster  --devices SPEC1,SPEC2,.. [--placement rr|bestfit|interference]
            [--ids 1,4,10] [--windows N] [--seed N] [--method M]
            [--rates R1,R2,..] [--shed] [--timeout-ms MS] [--queue-cap N]
            [--churn EV1,EV2,..] [--migrate POLICY[:N]] [--autoscale MIN:MAX]
            [--faults EV1,EV2,..] [--mtbf W [--mttr W]]
-           [--price P1,P2,..] [--threads N]
+           [--price P1,P2,..] [--threads N] [--slo-class C1,C2,..]
            Serve jobs across a HETEROGENEOUS pool of devices — the
            scheduling layer above one GPU. Device specs: p40 | p4 | t4,
            optionally :migN to expose the card as N MIG virtual devices
@@ -108,7 +112,9 @@ COMMANDS:
            --seed.
            --threads N shards the per-device event loops across N worker
            threads; output is byte-identical to --threads 1 (the serial
-           engine) at every N.
+           engine) at every N. --slo-class works as in fleet (needs
+           --rates): per-job service classes with class-weighted
+           shedding/admission and a per-class report line.
   fuzz     [--cases N] [--seed N]
            Differential fuzzing: N seeded random scenarios (default 200,
            seed 42) spanning fleets and clusters, open and closed
@@ -125,9 +131,11 @@ COMMANDS:
            [--method M] [open flags]
            Serve a real AOT artifact over PJRT.
 
-METHODS (--method): dnnscaler (default) | clipper | queue
+METHODS (--method): dnnscaler (default) | clipper | queue | combined
   `queue` is the queue-aware proactive scaler: it adds instances on rising
   queue depth / arrival rate / drops BEFORE p95 degrades (open loop).
+  `combined` searches batch size AND instance count jointly (the paper's
+  Batching x Multi-Tenancy question answered per window, not once).
 
 OPEN-LOOP FLAGS (job, jobs, serve):
   --open                serve open-loop instead of closed-loop
@@ -339,7 +347,8 @@ fn parse_method(flags: &Flags) -> Result<PolicySpec<'static>> {
         "dnnscaler" => Ok(PolicySpec::DnnScaler),
         "clipper" => Ok(PolicySpec::Clipper),
         "queue" => Ok(PolicySpec::QueueAware),
-        other => bail!("--method must be dnnscaler, clipper, or queue (got {other:?})"),
+        "combined" => Ok(PolicySpec::Combined),
+        other => bail!("--method must be dnnscaler, clipper, queue, or combined (got {other:?})"),
     }
 }
 
@@ -405,6 +414,7 @@ fn main() -> Result<()> {
                     "queue-cap",
                     "partition",
                     "reservations",
+                    "slo-class",
                 ],
             )?;
             cmd_fleet(&flags)
@@ -431,6 +441,7 @@ fn main() -> Result<()> {
                     "mttr",
                     "price",
                     "threads",
+                    "slo-class",
                 ],
             )?;
             cmd_cluster(&flags)
@@ -736,6 +747,13 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
     if !open && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
         bail!("--shed/--timeout-ms/--queue-cap need --rates or --trace (open-loop fleet)");
     }
+    let classes: Option<Vec<SloClass>> = match flags.get("slo-class") {
+        None => None,
+        Some(s) => Some(parse_slo_classes(s)?),
+    };
+    if classes.is_some() && !open {
+        bail!("--slo-class needs --rates or --trace (open-loop fleet)");
+    }
 
     // Spatial SM partitioning: --partition selects the mode, optional
     // --reservations pins per-member fractions (one value or one per
@@ -790,6 +808,9 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
     if let Some(rs) = &reservations {
         b = b.sm_reservations(rs);
     }
+    if let Some(cs) = &classes {
+        b = b.slo_classes(cs);
+    }
     let out = b
         .build()
         .map_err(|e| anyhow!(e.to_string()))?
@@ -842,7 +863,31 @@ fn cmd_fleet(flags: &Flags) -> Result<()> {
         let shares: Vec<String> = grants.iter().map(|g| format!("{g:.3}")).collect();
         println!("final SM grants ({}): [{}]", out.partition, shares.join(", "));
     }
+    if let Some(r) = &out.slo {
+        println!("{}", slo_line(r));
+    }
     Ok(())
+}
+
+/// Parse `--slo-class g,s,b,..` into service classes (full names work
+/// too); unknown tokens surface the typed parse error verbatim.
+fn parse_slo_classes(s: &str) -> Result<Vec<SloClass>> {
+    s.split(',')
+        .map(|tok| SloClass::parse(tok).map_err(|e| anyhow!("--slo-class: {e}")))
+        .collect()
+}
+
+/// One-line per-class goodput/shed report, printed only on classed runs
+/// so unclassed CLI output stays byte-identical.
+fn slo_line(r: &SloReport) -> String {
+    let parts: Vec<String> = SloClass::ALL
+        .iter()
+        .map(|&c| {
+            let s = r.class(c);
+            format!("{} x{} goodput {:.1} shed {}", c.name(), s.members, s.goodput, s.shed)
+        })
+        .collect();
+    format!("slo: {}", parts.join(" | "))
 }
 
 /// Parse `--placement` into the placer it names.
@@ -977,6 +1022,13 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     if rates.is_none() && (shed || flags.has("timeout-ms") || flags.has("queue-cap")) {
         bail!("--shed/--timeout-ms/--queue-cap need --rates (open-loop cluster)");
     }
+    let classes: Option<Vec<SloClass>> = match flags.get("slo-class") {
+        None => None,
+        Some(s) => Some(parse_slo_classes(s)?),
+    };
+    if classes.is_some() && rates.is_none() {
+        bail!("--slo-class needs --rates (open-loop cluster)");
+    }
     let dynamic = flags.has("churn")
         || flags.has("migrate")
         || flags.has("autoscale")
@@ -1013,6 +1065,9 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     // other count with a typed ConfigError and turns every job open-loop.
     if let Some(rs) = &rates {
         b = b.poisson_rates(rs);
+    }
+    if let Some(cs) = &classes {
+        b = b.slo_classes(cs);
     }
     // Dynamics: any of --churn/--migrate/--autoscale switches the run
     // onto the window-boundary dynamic path.
@@ -1119,6 +1174,9 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
         "cluster total {:.1} inf/s (goodput {:.1}) | assignment {:?}",
         out.total_throughput, out.total_goodput, out.assignment
     );
+    if let Some(r) = &out.slo {
+        println!("{}", slo_line(r));
+    }
     if let Some(dy) = &out.dynamics {
         println!(
             "dynamics: {} launch(es) ({} failed), {} retire(s), {} migration(s) \
@@ -1397,8 +1455,26 @@ mod tests {
             parse_method(&flags(&["--method", "clipper"])).unwrap(),
             PolicySpec::Clipper
         ));
+        assert!(matches!(
+            parse_method(&flags(&["--method", "combined"])).unwrap(),
+            PolicySpec::Combined
+        ));
         let err = parse_method(&flags(&["--method", "magic"])).unwrap_err().to_string();
         assert!(err.contains("magic"), "{err}");
+        assert!(err.contains("combined"), "{err}");
+    }
+
+    #[test]
+    fn slo_class_list_parses_letters_and_full_names() {
+        use super::parse_slo_classes;
+        use dnnscaler::coordinator::SloClass;
+        assert_eq!(
+            parse_slo_classes("g,silver, b").unwrap(),
+            vec![SloClass::Gold, SloClass::Silver, SloClass::BestEffort]
+        );
+        let err = parse_slo_classes("g,x").unwrap_err().to_string();
+        assert!(err.contains("--slo-class"), "{err}");
+        assert!(err.contains("\"x\""), "{err}");
     }
 
     #[test]

@@ -26,7 +26,7 @@ fn corpus_cases_replay_clean_and_stay_canonical() {
         .filter(|p| p.extension().is_some_and(|x| x == "case"))
         .collect();
     paths.sort();
-    assert!(paths.len() >= 9, "corpus shrank to {} cases", paths.len());
+    assert!(paths.len() >= 11, "corpus shrank to {} cases", paths.len());
 
     let regen = std::env::var_os("REGEN_FUZZ_CORPUS").is_some_and(|v| v == "1");
     for p in &paths {

@@ -114,6 +114,30 @@ faults_smoke() {
     return "$rc"
 }
 run_step "faults-smoke" faults_smoke
+# SLO smoke: an overloaded mixed-class cluster (gold/silver/best-effort,
+# combined batching+multi-tenancy search) through the CLI — the per-class
+# report line must render, and class-weighted shedding/admission must
+# keep the 4-thread run byte-identical to serial.
+slo_smoke() {
+    local serial parallel rc=0
+    serial="$(mktemp)" || return 1
+    parallel="$(mktemp)" || return 1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,t4 --ids 1,5,7 --rates 120,120,120 \
+        --windows 6 --shed --method combined --slo-class g,s,b \
+        --threads 1 >"$serial" || rc=1
+    cargo run --release --manifest-path "$manifest" -- \
+        cluster --devices p40,t4 --ids 1,5,7 --rates 120,120,120 \
+        --windows 6 --shed --method combined --slo-class g,s,b \
+        --threads 4 >"$parallel" || rc=1
+    if [ "$rc" -eq 0 ]; then
+        grep -q "slo:" "$serial" || { echo "slo-smoke: no per-class report line" >&2; rc=1; }
+        diff -u "$serial" "$parallel" || rc=1
+    fi
+    rm -f "$serial" "$parallel"
+    return "$rc"
+}
+run_step "slo-smoke" slo_smoke
 # Differential-fuzz smoke: a bounded, fixed-seed campaign through the
 # CLI (production engine vs the naive reference executor, snapshots
 # byte-identical, audits clean). The full 200-case campaign runs in the
